@@ -1,0 +1,62 @@
+//! Privacy audit: simulate a curious server colluding with γN users and
+//! measure what the paper's Theorem 2 promises — how many honest users'
+//! updates hide behind every aggregated coordinate (T), and what fraction
+//! of coordinates expose exactly one honest user (Fig. 4).
+//!
+//!     cargo run --release --example privacy_audit -- --users 100
+
+use sparsesecagg::cli::Args;
+use sparsesecagg::coordinator::Coordinator;
+use sparsesecagg::metrics::{privacy_histogram, theoretical_t, Table};
+use sparsesecagg::network::draw_dropouts;
+use sparsesecagg::protocol::Params;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let n = args.parse_flag("users", 100usize)?;
+    let d = args.parse_flag("d", 50_000usize)?;
+    let gamma = args.parse_flag("gamma", 1.0 / 3.0)?;
+    let rounds = args.parse_flag("rounds", 3u32)?;
+
+    println!("# adversary: server + {} colluding users (γ = {:.2})",
+             (gamma * n as f64) as usize, gamma);
+    println!("# what colluders learn: ONLY sums over ≥T honest users per \
+              coordinate\n");
+
+    let mut table = Table::new(
+        &format!("privacy guarantee (N={n}, d={d})"),
+        &["alpha", "theta", "T_measured", "T_theory", "min_T",
+          "revealed_%"],
+    );
+    for &theta in &[0.0, 0.1, 0.3] {
+        for &alpha in &[0.05, 0.1, 0.2, 0.4] {
+            let params = Params { n, d, alpha, theta, c: 1024.0 };
+            let mut coord = Coordinator::new_sparse(params, 99);
+            let honest = coord.honest_mask(gamma);
+            let betas = vec![1.0 / n as f64; n];
+            let ys: Vec<Vec<f32>> = vec![vec![0.01; d]; n];
+            let (mut t_sum, mut min_t, mut rev) = (0.0, u32::MAX, 0.0);
+            for r in 0..rounds {
+                let dropped = draw_dropouts(n, theta, r, 31, true);
+                coord.run_round(r, &ys, &betas, &dropped)?;
+                let s = privacy_histogram(
+                    d, coord.sparse_upload_indices().unwrap(), &honest);
+                t_sum += s.mean_t();
+                min_t = min_t.min(s.min_t());
+                rev += s.revealed_pct();
+            }
+            table.row(&[
+                format!("{alpha}"),
+                format!("{theta}"),
+                format!("{:.2}", t_sum / rounds as f64),
+                format!("{:.2}", theoretical_t(alpha, theta, gamma, n)),
+                min_t.to_string(),
+                format!("{:.3}", rev / rounds as f64),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!("reading guide: T grows ~linearly in α (Fig. 4a); the \
+              revealed-parameter % falls as α or N grows (Fig. 4b).");
+    Ok(())
+}

@@ -1,0 +1,138 @@
+"""AOT-lower every Layer-2/Layer-1 entry point to HLO text artifacts.
+
+Run once by ``make artifacts``; the Rust coordinator loads the HLO text via
+``HloModuleProto::from_text_file`` and never touches Python again.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids, which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.
+
+Outputs, per architecture A:
+  artifacts/local_step_{A}.hlo.txt   (*params, *mom, x, y, lr, beta)
+                                        -> (*params', *mom', loss)
+  artifacts/eval_{A}.hlo.txt         (*params, x, y) -> (correct, loss)
+  artifacts/quantmask_{dpad}.hlo.txt (y, rand, masksum, select, scale, c)
+                                        -> (masked u32[dpad],)
+plus ``artifacts/manifest.txt``, a line-based description of parameter
+order/shapes and artifact paths that the Rust side parses (no serde in the
+vendored crate set, so the format is deliberately trivial).
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import quantmask as qm
+
+DEFAULT_ARCHS = ("mlp", "cnn_mnist_small", "cnn_mnist", "cnn_cifar")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def dpad_of(d: int) -> int:
+    return (d + qm.BLOCK - 1) // qm.BLOCK * qm.BLOCK
+
+
+def lower_local_step(arch: model.Arch) -> str:
+    pspecs = [_spec(s) for _, s in arch.param_shapes()]
+    x = _spec((arch.batch,) + arch.input_shape)
+    y = _spec((arch.batch,), jnp.int32)
+    lr = _spec((), jnp.float32)
+    beta = _spec((), jnp.float32)
+
+    def fn(*args):
+        n = len(pspecs)
+        params, mom = args[:n], args[n:2 * n]
+        xx, yy, lr_, beta_ = args[2 * n:]
+        return model.local_step(arch, params, mom, xx, yy, lr_, beta_)
+
+    lowered = jax.jit(fn).lower(*pspecs, *pspecs, x, y, lr, beta)
+    return to_hlo_text(lowered)
+
+
+def lower_eval(arch: model.Arch) -> str:
+    pspecs = [_spec(s) for _, s in arch.param_shapes()]
+    x = _spec((arch.eval_batch,) + arch.input_shape)
+    y = _spec((arch.eval_batch,), jnp.int32)
+
+    def fn(*args):
+        params = args[:-2]
+        return model.eval_batch(arch, params, args[-2], args[-1])
+
+    lowered = jax.jit(fn).lower(*pspecs, x, y)
+    return to_hlo_text(lowered)
+
+
+def lower_quantmask(dpad: int) -> str:
+    lowered = jax.jit(qm.quantmask).lower(
+        _spec((dpad,)), _spec((dpad,)),
+        _spec((dpad,), jnp.uint32), _spec((dpad,), jnp.uint32),
+        _spec((1,)), _spec((1,)))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--archs", default=",".join(DEFAULT_ARCHS),
+                    help="comma-separated architecture names to lower")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = [a for a in args.archs.split(",") if a]
+    manifest = []
+    emitted_quantmask = set()
+    for name in names:
+        arch = model.ARCHS[name]
+        dpad = dpad_of(arch.d)
+        ls_file = f"local_step_{name}.hlo.txt"
+        ev_file = f"eval_{name}.hlo.txt"
+        qm_file = f"quantmask_{dpad}.hlo.txt"
+
+        print(f"[aot] lowering {name}: d={arch.d} dpad={dpad}")
+        with open(os.path.join(args.out, ls_file), "w") as f:
+            f.write(lower_local_step(arch))
+        with open(os.path.join(args.out, ev_file), "w") as f:
+            f.write(lower_eval(arch))
+        if dpad not in emitted_quantmask:
+            with open(os.path.join(args.out, qm_file), "w") as f:
+                f.write(lower_quantmask(dpad))
+            emitted_quantmask.add(dpad)
+
+        manifest.append(f"model {name}")
+        manifest.append(f"d {arch.d}")
+        manifest.append(f"dpad {dpad}")
+        manifest.append(f"batch {arch.batch}")
+        manifest.append(f"eval_batch {arch.eval_batch}")
+        manifest.append("input " + " ".join(str(v) for v in arch.input_shape))
+        manifest.append(f"classes {arch.classes}")
+        for pname, shape in arch.param_shapes():
+            manifest.append(
+                f"param {pname} " + " ".join(str(v) for v in shape))
+        manifest.append(f"artifact local_step {ls_file}")
+        manifest.append(f"artifact eval {ev_file}")
+        manifest.append(f"artifact quantmask {qm_file}")
+        manifest.append("end")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"[aot] wrote {len(names)} models -> {args.out}/manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

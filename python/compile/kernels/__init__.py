@@ -1,0 +1,8 @@
+"""Layer-1 Pallas kernels for SparseSecAgg.
+
+Kernels are authored for TPU tiling (VMEM blocks, MXU-shaped matmul tiles)
+but lowered with ``interpret=True`` so the emitted HLO runs on the CPU PJRT
+plugin — see DESIGN.md §Hardware-Adaptation.
+"""
+
+from . import matmul, quantmask, ref  # noqa: F401

@@ -1,0 +1,68 @@
+"""Tiled Pallas matmul with a custom VJP, used by the model's dense layers.
+
+TPU shape (DESIGN.md §Hardware-Adaptation): (128, 128) output tiles feed the
+MXU systolic array; the full K contraction stays resident in VMEM per tile
+(our dense layers have K ≤ 3200, i.e. ≤ 1.6 MiB per operand tile at f32 —
+well inside VMEM), accumulating in f32 via ``preferred_element_type``.
+
+``jax.grad`` cannot differentiate through ``pallas_call``, so the backward
+pass is supplied explicitly: dX = G·Wᵀ and dW = Xᵀ·G reuse the same kernel.
+
+Lowered with ``interpret=True`` so the HLO runs on the CPU PJRT plugin.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_M = 128
+TILE_N = 128
+
+
+def _mm_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+def _ceil_to(x, m):
+    return (x + m - 1) // m * m
+
+
+def _matmul_pallas(x, w):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    mp, np_, kp = _ceil_to(m, TILE_M), _ceil_to(n, TILE_N), _ceil_to(k, 8)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    grid = (mp // TILE_M, np_ // TILE_N)
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_M, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((kp, TILE_N), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x, w):
+    """``x @ w`` through the Pallas tile kernel (f32)."""
+    return _matmul_pallas(x, w)
+
+
+def _matmul_fwd(x, w):
+    return _matmul_pallas(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    return _matmul_pallas(g, w.T), _matmul_pallas(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,105 @@
+"""Fused stochastic-quantize + field-mask + sparsify Pallas kernel.
+
+This is the per-coordinate hot spot of SparseSecAgg (paper eqs. 15–18): for
+every gradient coordinate ℓ the client computes
+
+    x_i(ℓ) = select(ℓ) · ( φ( c · Q_c( scale · y_i(ℓ) ) ) + masksum(ℓ) ) mod q
+
+where `select` is the pairwise-sparsification pattern 1 − Π_j (1 − b_ij(ℓ))
+and `masksum` is the pre-assembled sum of the private mask and the signed
+pairwise additive masks (computed by the Rust L3 from the agreed seeds).
+
+TPU shape (DESIGN.md §Hardware-Adaptation): a pure element-wise VPU kernel.
+The flat (padded) gradient is tiled into (8, 1024) VMEM blocks — 8 sublanes
+× 8·128 lanes — streamed from HBM with double buffering. All field
+arithmetic is branch-free u32: since 2^32 ≡ 5 (mod q) for q = 2^32 − 5, a
+wrapped add is repaired by "+5 on carry, then one conditional subtract".
+No 64-bit widening is needed, which keeps the op VPU-native.
+
+Lowered with ``interpret=True`` so the HLO runs on the CPU PJRT plugin.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import QFIELD
+
+# Block shape for the element-wise sweep: 8 sublanes x 1024 lanes = 8192
+# f32/u32 elements per operand block (32 KiB), 6 operands => 192 KiB VMEM
+# per in-flight block pair; comfortably double-bufferable in 16 MiB VMEM.
+BLOCK = 8192
+_BLK2D = (8, 1024)
+
+
+def _quantmask_kernel(y_ref, rand_ref, masksum_ref, select_ref, scale_ref,
+                      c_ref, o_ref):
+    y = y_ref[...]
+    rand = rand_ref[...]
+    masksum = masksum_ref[...]
+    select = select_ref[...]
+    scale = scale_ref[0]
+    c = c_ref[0]
+
+    # --- scaled stochastic rounding, eq. (15)-(16): v = c * Q_c(scale * y)
+    # Saturate at ±2^30: correct aggregation requires N·|v| < q/2 anyway
+    # (otherwise the field sum wraps), so the clamp only bites on inputs
+    # that would already violate the protocol invariant.
+    cz = jnp.clip(y * scale * c, -1073741824.0, 1073741824.0)
+    f = jnp.floor(cz)
+    v = (f + (rand < (cz - f)).astype(jnp.float32)).astype(jnp.int32)
+
+    # --- φ embedding, eq. (17): v >= 0 -> v ; v < 0 -> q + v.
+    # Two's-complement reinterpretation gives 2^32 + v for v < 0, which is
+    # (q + v) + 5, so subtract 5 on the negative branch. Branch-free.
+    vu = v.astype(jnp.uint32)
+    phi = jnp.where(v >= 0, vu, vu - jnp.uint32(5))
+
+    # --- masked add mod q, eq. (18): (phi + masksum) mod q via the
+    # 2^32 ≡ 5 (mod q) carry repair. After a wrapped overflow the true sum
+    # is s + 2^32 ≡ s + 5; the repaired s is < 2^32 - 6 so +5 cannot wrap.
+    s = phi + masksum
+    s = s + jnp.where(s < phi, jnp.uint32(5), jnp.uint32(0))
+    s = jnp.where(s >= jnp.uint32(QFIELD), s - jnp.uint32(QFIELD), s)
+
+    # --- sparsity select (multiplicative mask aggregate)
+    o_ref[...] = select * s
+
+
+@functools.partial(jax.jit, static_argnames=())
+def quantmask(y, rand, masksum, select, scale, c):
+    """Apply the fused kernel to a flat, BLOCK-padded gradient vector.
+
+    Shapes: y, rand f32[dpad]; masksum, select u32[dpad]; scale, c f32[1].
+    dpad must be a multiple of BLOCK (= 8192). Returns u32[dpad].
+    """
+    (dpad,) = y.shape
+    assert dpad % BLOCK == 0, f"dpad={dpad} not a multiple of {BLOCK}"
+    rows = dpad // _BLK2D[1]
+    grid = (dpad // BLOCK,)
+
+    def vec_spec():
+        return pl.BlockSpec(_BLK2D, lambda i: (i, 0))
+
+    def scalar_spec():
+        return pl.BlockSpec((1,), lambda i: (0,))
+
+    out = pl.pallas_call(
+        _quantmask_kernel,
+        grid=grid,
+        in_specs=[vec_spec(), vec_spec(), vec_spec(), vec_spec(),
+                  scalar_spec(), scalar_spec()],
+        out_specs=vec_spec(),
+        out_shape=jax.ShapeDtypeStruct((rows, _BLK2D[1]), jnp.uint32),
+        interpret=True,
+    )(
+        y.reshape(rows, _BLK2D[1]),
+        rand.reshape(rows, _BLK2D[1]),
+        masksum.reshape(rows, _BLK2D[1]),
+        select.reshape(rows, _BLK2D[1]),
+        scale,
+        c,
+    )
+    return out.reshape(dpad)

@@ -1,0 +1,65 @@
+"""Pure-jnp / numpy oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest checks every Pallas kernel
+against these implementations (exact for integer outputs, allclose for
+floats). The Rust `quantize` module implements the same semantics a third
+time; the integration test `rust/tests/kernel_equivalence.rs` closes the
+triangle.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+# Largest 32-bit prime, the finite field modulus used throughout the paper
+# (Section VII sets q = 2^32 - 5).
+QFIELD = 4294967291  # 2**32 - 5
+
+
+def quantmask_ref(y, rand, masksum, select, scale, c):
+    """Reference for the fused quantize→φ→mask→select kernel (eqs. 15–18).
+
+    Arguments (1-D, same length unless scalar):
+      y        f32  local gradient values
+      rand     f32  uniforms in [0, 1) driving the stochastic rounding
+      masksum  u32  Σ of additive masks at each coordinate, already mod q
+                    (private mask + signed pairwise masks, assembled by L3)
+      select   u32  0/1 sparsification pattern (1 - Π(1 - b_ij(ℓ)))
+      scale    f32  scalar β_i / (p(1-θ))
+      c        f32  scalar quantization level
+
+    Returns u32: select * ((φ(c·Q_c(scale·y)) + masksum) mod q), with
+    φ(v) = v for v ≥ 0 and q + v for v < 0 (eq. 17).
+    """
+    y = np.asarray(y, dtype=np.float32)
+    rand = np.asarray(rand, dtype=np.float32)
+    masksum = np.asarray(masksum, dtype=np.uint32)
+    select = np.asarray(select, dtype=np.uint32)
+    # float32 pipeline parity: the kernel computes in f32, so the oracle
+    # mirrors it exactly to stay bit-identical.
+    cz = (y * np.float32(scale) * np.float32(c)).astype(np.float32)
+    cz = np.clip(cz, np.float32(-1073741824.0), np.float32(1073741824.0))
+    f = np.floor(cz)
+    v = (f + (rand < (cz - f)).astype(np.float32)).astype(np.int64)
+    phi = np.where(v >= 0, v % QFIELD, (QFIELD + (v % QFIELD)) % QFIELD)
+    s = (phi + masksum.astype(np.int64)) % QFIELD
+    return (select.astype(np.int64) * s).astype(np.uint32)
+
+
+def dequant_ref(agg, c):
+    """Reference for the server-side field→real map (eq. 23): φ⁻¹ then /c.
+
+    Elements in [0, q/2] are positive, (q/2, q) encode negatives.
+    """
+    agg = np.asarray(agg, dtype=np.uint32).astype(np.int64)
+    half = QFIELD // 2
+    signed = np.where(agg > half, agg - QFIELD, agg)
+    return (signed.astype(np.float64) / float(c)).astype(np.float32)
+
+
+def matmul_ref(x, w):
+    """Reference matmul (f32 accumulate)."""
+    return jnp.dot(
+        jnp.asarray(x, jnp.float32),
+        jnp.asarray(w, jnp.float32),
+        preferred_element_type=jnp.float32,
+    )

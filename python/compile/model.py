@@ -1,0 +1,156 @@
+"""Layer-2: federated-learning client models in JAX.
+
+Architectures follow McMahan et al. (AISTATS'17), the models the paper
+trains (Section VII): small CNNs for MNIST-shaped (28×28×1) and
+CIFAR-shaped (32×32×3) inputs, plus a small MLP and a reduced CNN used by
+the fast end-to-end examples. Dense layers go through the Layer-1 Pallas
+``matmul`` kernel so the paper's compute hot path lowers into the same HLO
+module; convolutions use ``lax.conv_general_dilated`` (XLA-native).
+
+Everything here is build-time only. ``aot.py`` lowers:
+  * ``local_step``  — one SGD+momentum minibatch step (fwd+bwd+update),
+  * ``eval_batch``  — correct-prediction count + mean loss,
+per architecture, and the Rust L3 runs the lowered HLO via PJRT.
+
+Parameters are an ordered flat tuple of arrays (the manifest records the
+order and shapes) so they cross the Rust boundary without a pytree.
+"""
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.matmul import matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    """A conv-net architecture: conv(5x5) stacks + dense head."""
+
+    name: str
+    input_shape: Tuple[int, int, int]  # H, W, C
+    convs: Tuple[Tuple[int, int], ...]  # (kernel_size, out_channels)
+    fcs: Tuple[int, ...]  # hidden dense widths
+    classes: int = 10
+    batch: int = 28  # paper Section VII: batch size 28
+    eval_batch: int = 200
+
+    def param_shapes(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        shapes = []
+        h, w, c = self.input_shape
+        for i, (k, oc) in enumerate(self.convs):
+            shapes.append((f"conv{i}_w", (k, k, c, oc)))
+            shapes.append((f"conv{i}_b", (oc,)))
+            c = oc
+            h, w = h // 2, w // 2  # SAME conv + 2x2 max pool
+        feat = h * w * c
+        for i, width in enumerate(self.fcs):
+            shapes.append((f"fc{i}_w", (feat, width)))
+            shapes.append((f"fc{i}_b", (width,)))
+            feat = width
+        shapes.append(("out_w", (feat, self.classes)))
+        shapes.append(("out_b", (self.classes,)))
+        return shapes
+
+    @property
+    def d(self) -> int:
+        """Total number of model parameters (the paper's d)."""
+        out = 0
+        for _, s in self.param_shapes():
+            n = 1
+            for dim in s:
+                n *= dim
+            out += n
+        return out
+
+
+# Architectures. `cnn_mnist` is the McMahan MNIST CNN (~1.66M params);
+# `cnn_cifar` is sized so d*4B ≈ 0.66 MB, matching the paper's Table I
+# per-round SecAgg upload; `cnn_mnist_small` / `mlp` are reduced variants
+# for the fast end-to-end examples and tests.
+ARCHS = {
+    "mlp": Arch("mlp", (28, 28, 1), (), (128,)),
+    "cnn_mnist_small": Arch("cnn_mnist_small", (28, 28, 1),
+                            ((5, 8), (5, 16)), (32,)),
+    "cnn_mnist": Arch("cnn_mnist", (28, 28, 1), ((5, 32), (5, 64)), (512,)),
+    "cnn_cifar": Arch("cnn_cifar", (32, 32, 3), ((5, 16), (5, 32)), (76,)),
+}
+
+
+def init_params(arch: Arch, key) -> List[jnp.ndarray]:
+    """Glorot-uniform init, in manifest order."""
+    params = []
+    for name, shape in arch.param_shapes():
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for dim in shape[:-1]:
+                fan_in *= dim
+            fan_out = shape[-1]
+            lim = jnp.sqrt(6.0 / (fan_in + fan_out))
+            params.append(
+                jax.random.uniform(sub, shape, jnp.float32, -lim, lim))
+    return params
+
+
+def forward(arch: Arch, params: Sequence[jnp.ndarray],
+            x: jnp.ndarray) -> jnp.ndarray:
+    """Logits for a batch x: f32[B, H, W, C] (NHWC)."""
+    idx = 0
+    h = x
+    for _ in arch.convs:
+        w, b = params[idx], params[idx + 1]
+        idx += 2
+        h = lax.conv_general_dilated(
+            h, w, window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = jax.nn.relu(h + b)
+        h = lax.reduce_window(h, -jnp.inf, lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    for _ in arch.fcs:
+        w, b = params[idx], params[idx + 1]
+        idx += 2
+        h = jax.nn.relu(matmul(h, w) + b)
+    w, b = params[idx], params[idx + 1]
+    return matmul(h, w) + b
+
+
+def loss_fn(arch: Arch, params: Sequence[jnp.ndarray], x, y) -> jnp.ndarray:
+    """Mean softmax cross-entropy; y is i32[B] class labels."""
+    logits = forward(arch, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32),
+                               axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def local_step(arch: Arch, params: Sequence[jnp.ndarray],
+               momentum: Sequence[jnp.ndarray], x, y, lr, beta):
+    """One SGD+momentum minibatch step (paper: momentum 0.5, lr 0.01).
+
+    Returns (params', momentum', loss). ``lr`` and ``beta`` are f32 scalars
+    passed at runtime so the Rust side can schedule learning rates without
+    recompiling the artifact.
+    """
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(arch, p, x, y))(list(params))
+    new_m = [beta * m + g for m, g in zip(momentum, grads)]
+    new_p = [p - lr * m for p, m in zip(params, new_m)]
+    return tuple(new_p) + tuple(new_m) + (loss,)
+
+
+def eval_batch(arch: Arch, params: Sequence[jnp.ndarray], x, y):
+    """(correct_count i32, mean loss f32) over an eval batch."""
+    logits = forward(arch, params, x)
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    correct = jnp.sum((pred == y.astype(jnp.int32)).astype(jnp.int32))
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32),
+                               axis=-1)[:, 0]
+    return correct, jnp.mean(nll)

@@ -1,0 +1,69 @@
+"""AOT smoke tests: lowering produces parseable HLO with the right entry
+signatures, and the manifest stays consistent with the models."""
+
+import os
+
+import pytest
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+from compile import aot, model
+
+
+def test_dpad_is_block_multiple():
+    from compile.kernels import quantmask as qm
+    for arch in model.ARCHS.values():
+        dpad = aot.dpad_of(arch.d)
+        assert dpad % qm.BLOCK == 0
+        assert 0 <= dpad - arch.d < qm.BLOCK
+
+
+def test_lower_quantmask_emits_hlo():
+    text = aot.lower_quantmask(8192)
+    assert "HloModule" in text
+    # six inputs (y, rand, masksum, select, scale, c)
+    assert text.count("parameter(") >= 6
+    assert "u32[8192]" in text.replace(" ", "")[:200000] or "u32" in text
+
+
+def test_lower_local_step_smallest_arch():
+    arch = model.ARCHS["mlp"]
+    text = aot.lower_local_step(arch)
+    assert "HloModule" in text
+    # params + momentum + x + y + lr + beta
+    n_inputs = 2 * len(arch.param_shapes()) + 4
+    assert text.count("parameter(") >= n_inputs
+
+
+def test_lower_eval_smallest_arch():
+    arch = model.ARCHS["mlp"]
+    text = aot.lower_eval(arch)
+    assert "HloModule" in text
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS,
+                                                    "manifest.txt")),
+                    reason="artifacts not built")
+def test_manifest_matches_archs():
+    with open(os.path.join(ARTIFACTS, "manifest.txt")) as f:
+        text = f.read()
+    for name, arch in model.ARCHS.items():
+        if f"model {name}" in text:
+            assert f"d {arch.d}" in text, f"{name}: stale manifest d"
+            for pname, shape in arch.param_shapes():
+                line = f"param {pname} " + " ".join(str(v) for v in shape)
+                assert line in text, f"{name}: missing {line}"
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS,
+                                                    "manifest.txt")),
+                    reason="artifacts not built")
+def test_artifact_files_exist():
+    base = ARTIFACTS
+    with open(os.path.join(base, "manifest.txt")) as f:
+        for line in f:
+            if line.strip().startswith("artifact "):
+                fname = line.split()[2]
+                path = os.path.join(base, fname)
+                assert os.path.exists(path), f"missing {path}"
+                assert os.path.getsize(path) > 100

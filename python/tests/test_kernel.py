@@ -1,0 +1,188 @@
+"""Pallas kernels vs pure-jnp/numpy oracles — the core L1 correctness signal.
+
+hypothesis sweeps shapes and value regimes; outputs are integer (field
+elements) so the quantmask comparison is exact, and matmul uses allclose.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as mm
+from compile.kernels import quantmask as qm
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def _mk_inputs(dpad, seed, scale, c, value_range=1.0, select_p=0.3):
+    rng = np.random.default_rng(seed)
+    y = (rng.standard_normal(dpad) * value_range).astype(np.float32)
+    rand = rng.random(dpad).astype(np.float32)
+    masksum = rng.integers(0, ref.QFIELD, dpad, dtype=np.uint64).astype(
+        np.uint32)
+    select = (rng.random(dpad) < select_p).astype(np.uint32)
+    return y, rand, masksum, select
+
+
+class TestQuantmask:
+    @pytest.mark.parametrize("dpad", [qm.BLOCK, 2 * qm.BLOCK, 4 * qm.BLOCK])
+    def test_matches_ref_exact(self, dpad):
+        y, rand, masksum, select = _mk_inputs(dpad, 1, 10.0, 1024.0)
+        scale = np.array([10.0], np.float32)
+        c = np.array([1024.0], np.float32)
+        got = np.asarray(qm.quantmask(y, rand, masksum, select, scale, c))
+        want = ref.quantmask_ref(y, rand, masksum, select, 10.0, 1024.0)
+        np.testing.assert_array_equal(got, want)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31),
+           scale=st.floats(1e-3, 1e3),
+           c=st.sampled_from([16.0, 256.0, 1024.0, 65536.0]),
+           vr=st.floats(1e-4, 50.0))
+    def test_hypothesis_sweep(self, seed, scale, c, vr):
+        dpad = qm.BLOCK
+        y, rand, masksum, select = _mk_inputs(dpad, seed, scale, c, vr)
+        got = np.asarray(qm.quantmask(
+            y, rand, masksum, select,
+            np.array([scale], np.float32), np.array([c], np.float32)))
+        want = ref.quantmask_ref(y, rand, masksum, select, scale, c)
+        np.testing.assert_array_equal(got, want)
+
+    def test_zero_select_zero_output(self):
+        dpad = qm.BLOCK
+        y, rand, masksum, _ = _mk_inputs(dpad, 2, 1.0, 1024.0)
+        select = np.zeros(dpad, np.uint32)
+        got = np.asarray(qm.quantmask(
+            y, rand, masksum, select,
+            np.array([1.0], np.float32), np.array([1024.0], np.float32)))
+        assert not got.any()
+
+    def test_outputs_in_field(self):
+        dpad = qm.BLOCK
+        y, rand, masksum, select = _mk_inputs(dpad, 3, 100.0, 65536.0, 50.0)
+        got = np.asarray(qm.quantmask(
+            y, rand, masksum, select,
+            np.array([100.0], np.float32), np.array([65536.0], np.float32)))
+        assert (got.astype(np.uint64) < ref.QFIELD).all()
+
+    def test_mask_cancellation_roundtrip(self):
+        """Two users with opposite pairwise masks: sum mod q dequantizes to
+        ~(y1 + y2) where both selected — the core SparseSecAgg identity."""
+        dpad = qm.BLOCK
+        rng = np.random.default_rng(7)
+        c = 4096.0
+        y1 = rng.standard_normal(dpad).astype(np.float32)
+        y2 = rng.standard_normal(dpad).astype(np.float32)
+        r = rng.integers(0, ref.QFIELD, dpad, dtype=np.uint64)
+        mask1 = r.astype(np.uint32)
+        mask2 = ((ref.QFIELD - r) % ref.QFIELD).astype(np.uint32)
+        select = (rng.random(dpad) < 0.5).astype(np.uint32)
+        rand1 = rng.random(dpad).astype(np.float32)
+        rand2 = rng.random(dpad).astype(np.float32)
+        one = np.array([1.0], np.float32)
+        cc = np.array([c], np.float32)
+        x1 = np.asarray(qm.quantmask(y1, rand1, mask1, select, one, cc))
+        x2 = np.asarray(qm.quantmask(y2, rand2, mask2, select, one, cc))
+        agg = ((x1.astype(np.uint64) + x2.astype(np.uint64)) %
+               ref.QFIELD).astype(np.uint32)
+        deq = ref.dequant_ref(agg, c)
+        want = (y1 + y2) * select
+        np.testing.assert_allclose(deq, want, atol=2.0 / c + 1e-6)
+
+
+class TestDequant:
+    def test_sign_roundtrip(self):
+        vals = np.array([0, 1, 5, ref.QFIELD - 1, ref.QFIELD - 1000],
+                        np.uint32)
+        got = ref.dequant_ref(vals, 1.0)
+        np.testing.assert_allclose(got, [0, 1, 5, -1, -1000])
+
+
+class TestMatmul:
+    @pytest.mark.parametrize("m,k,n", [
+        (1, 1, 1), (28, 784, 128), (128, 128, 128),
+        (28, 3136, 512), (200, 100, 10), (5, 7, 3),
+    ])
+    def test_matches_ref(self, m, k, n):
+        rng = np.random.default_rng(m * 10007 + k * 101 + n)
+        x = rng.standard_normal((m, k)).astype(np.float32)
+        w = rng.standard_normal((k, n)).astype(np.float32)
+        got = np.asarray(mm.matmul(x, w))
+        want = np.asarray(ref.matmul_ref(x, w))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(m=st.integers(1, 64), k=st.integers(1, 96), n=st.integers(1, 48),
+           seed=st.integers(0, 2**31))
+    def test_hypothesis_shapes(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal((m, k)).astype(np.float32)
+        w = rng.standard_normal((k, n)).astype(np.float32)
+        got = np.asarray(mm.matmul(x, w))
+        want = np.asarray(ref.matmul_ref(x, w))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+    def test_gradients_match_native(self):
+        import jax
+        import jax.numpy as jnp
+        rng = np.random.default_rng(4)
+        x = jnp.asarray(rng.standard_normal((8, 16)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((16, 4)).astype(np.float32))
+
+        def f_pallas(x, w):
+            return (mm.matmul(x, w) ** 2).sum()
+
+        def f_native(x, w):
+            return ((x @ w) ** 2).sum()
+
+        gx1, gw1 = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+        gx2, gw2 = jax.grad(f_native, argnums=(0, 1))(x, w)
+        np.testing.assert_allclose(np.asarray(gx1), np.asarray(gx2),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(gw1), np.asarray(gw2),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestDequantRoundtrip:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31),
+           c=st.sampled_from([256.0, 4096.0, 65536.0]))
+    def test_quantize_dequantize_within_one_step(self, seed, c):
+        """No masks, select-all: dequant(quantmask(y)) ≈ y within 1/c."""
+        dpad = qm.BLOCK
+        rng = np.random.default_rng(seed)
+        y = rng.standard_normal(dpad).astype(np.float32)
+        rand = rng.random(dpad).astype(np.float32)
+        zeros = np.zeros(dpad, np.uint32)
+        ones = np.ones(dpad, np.uint32)
+        x = np.asarray(qm.quantmask(
+            y, rand, zeros, ones,
+            np.array([1.0], np.float32), np.array([c], np.float32)))
+        back = ref.dequant_ref(x, c)
+        np.testing.assert_allclose(back, y, atol=1.5 / c)
+
+    def test_field_sum_linearity(self):
+        """Σ of masked values mod q == masked value of the Σ when masks
+        sum to zero — the additive-homomorphism the protocol rests on."""
+        dpad = qm.BLOCK
+        rng = np.random.default_rng(11)
+        c = 1024.0
+        users = 5
+        masks = rng.integers(0, ref.QFIELD, (users, dpad), dtype=np.uint64)
+        # force masks to cancel: last = -(sum of others) mod q
+        masks[-1] = (ref.QFIELD - masks[:-1].sum(axis=0) % ref.QFIELD) \
+            % ref.QFIELD
+        ones = np.ones(dpad, np.uint32)
+        agg = np.zeros(dpad, np.uint64)
+        total = np.zeros(dpad, np.float64)
+        for u in range(users):
+            y = rng.standard_normal(dpad).astype(np.float32) * 0.1
+            rand = rng.random(dpad).astype(np.float32)
+            x = np.asarray(qm.quantmask(
+                y, rand, masks[u].astype(np.uint32), ones,
+                np.array([1.0], np.float32), np.array([c], np.float32)))
+            agg = (agg + x) % ref.QFIELD
+            total += y.astype(np.float64)
+        deq = ref.dequant_ref(agg.astype(np.uint32), c)
+        np.testing.assert_allclose(deq, total, atol=users * 1.0 / c + 1e-5)

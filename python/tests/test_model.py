@@ -1,0 +1,80 @@
+"""Model-level checks: shapes, gradient sanity, one-step loss decrease."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.mark.parametrize("name", list(model.ARCHS))
+def test_param_shapes_consistent(name):
+    arch = model.ARCHS[name]
+    params = model.init_params(arch, jax.random.PRNGKey(0))
+    shapes = arch.param_shapes()
+    assert len(params) == len(shapes)
+    for p, (_, s) in zip(params, shapes):
+        assert p.shape == s
+    assert sum(int(np.prod(s)) for _, s in shapes) == arch.d
+
+
+def test_cifar_arch_matches_table1_size():
+    # Table I reports 0.66 MB per-user upload for SecAgg at 32 bits/param
+    # => d ≈ 173k. Our CIFAR arch must land in the same regime.
+    d = model.ARCHS["cnn_cifar"].d
+    assert 140_000 <= d <= 200_000, d
+
+
+def test_mnist_arch_is_mcmahan_scale():
+    assert 1_500_000 <= model.ARCHS["cnn_mnist"].d <= 1_800_000
+
+
+@pytest.mark.parametrize("name", ["mlp", "cnn_mnist_small"])
+def test_forward_and_loss_finite(name):
+    arch = model.ARCHS[name]
+    params = model.init_params(arch, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(
+        (arch.batch,) + arch.input_shape).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, arch.classes, arch.batch).astype(
+        np.int32))
+    logits = model.forward(arch, params, x)
+    assert logits.shape == (arch.batch, arch.classes)
+    loss = model.loss_fn(arch, params, x, y)
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("name", ["mlp", "cnn_mnist_small"])
+def test_local_step_reduces_loss_on_fixed_batch(name):
+    arch = model.ARCHS[name]
+    params = model.init_params(arch, jax.random.PRNGKey(2))
+    mom = [jnp.zeros_like(p) for p in params]
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(
+        (arch.batch,) + arch.input_shape).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, arch.classes, arch.batch).astype(
+        np.int32))
+    step = jax.jit(lambda p, m: model.local_step(
+        arch, p, m, x, y, jnp.float32(0.05), jnp.float32(0.5)))
+    n = len(params)
+    first_loss = None
+    for _ in range(20):
+        out = step(params, mom)
+        params, mom, loss = list(out[:n]), list(out[n:2 * n]), out[2 * n]
+        if first_loss is None:
+            first_loss = float(loss)
+    assert float(loss) < first_loss
+
+
+def test_eval_batch_counts():
+    arch = model.ARCHS["mlp"]
+    params = model.init_params(arch, jax.random.PRNGKey(3))
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal(
+        (arch.eval_batch,) + arch.input_shape).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, arch.classes, arch.eval_batch).astype(
+        np.int32))
+    correct, loss = model.eval_batch(arch, params, x, y)
+    assert 0 <= int(correct) <= arch.eval_batch
+    assert np.isfinite(float(loss))

@@ -1,0 +1,45 @@
+//! Fig. 3: CIFAR-shaped IID federated training to a target accuracy —
+//! (a) total communication, (b) accuracy vs round, (c) wall clock —
+//! SparseSecAgg (α = 0.1, θ = 0.3) vs SecAgg.
+//!
+//! Paper shape: 7.8× comm reduction, comparable convergence (SecAgg a
+//! few rounds ahead), 1.13× wall-clock speedup.
+//!
+//! Substitution scaling (DESIGN.md): CIFAR-10 → CIFAR-shaped synthetic
+//! set; N scaled from 25–100 EC2 nodes to `--users` simulated users
+//! (default 8); target re-calibrated from 55% to 93% on the easier
+//! synthetic task. Env `FULL=1` runs N=25 at the paper's round budget.
+
+use sparsesecagg::fl::experiments::{compare_protocols, render_comparison};
+use sparsesecagg::fl::{FlConfig, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    let trainer = match Trainer::load("artifacts", "cnn_cifar", false) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("SKIP bench_fig3_cifar (run `make artifacts`): {e:#}");
+            return Ok(());
+        }
+    };
+    let full = std::env::var("FULL").is_ok();
+    let target = 0.93;
+    let cfg = FlConfig {
+        model: "cnn_cifar".into(),
+        users: if full { 25 } else { 8 },
+        rounds: if full { 60 } else { 25 },
+        alpha: 0.1,
+        theta: 0.3,
+        lr: 0.01,
+        samples_per_user: 50,
+        test_samples: 400,
+        target_accuracy: Some(target),
+        ..FlConfig::default()
+    };
+    println!("# Fig. 3 reproduction — CIFAR-arch d={} users={} θ={} α={}",
+             trainer.m.d, cfg.users, cfg.theta, cfg.alpha);
+    let (spa, sec) = compare_protocols(&cfg, &trainer)?;
+    println!("{}", render_comparison("Fig. 3", &spa, &sec, Some(target)));
+    println!("paper shape to check: comm reduction ≈ 7.8x; SecAgg reaches \
+              target a few rounds earlier; wall-clock speedup ≈ 1.13x.");
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! Fig. 4 + Theorems 1–2: privacy/compression Monte Carlo, protocol only.
+//!
+//! (a) privacy guarantee T (honest users aggregated per coordinate) vs
+//!     compression ratio α for dropout rates θ ∈ {0, 0.1, 0.3, 0.5},
+//!     N = 100, γ = 1/3 adversaries — against the closed form
+//!     T = (1 − e^{−α})(1 − θ)(1 − γ)N.
+//! (b) % of parameters revealed (selected by exactly one honest user)
+//!     vs α for N ∈ {25, 50, 75, 100} — paper: 0.07% at α=0.2, N=100,
+//!     falling in both α and N.
+//! (Thm 1) measured |U_i|/d vs α — compression concentrates at p ≤ α.
+
+use sparsesecagg::coordinator::Coordinator;
+use sparsesecagg::metrics::{privacy_histogram, theoretical_t, Table};
+use sparsesecagg::network::draw_dropouts;
+use sparsesecagg::protocol::Params;
+
+fn run_sample(n: usize, d: usize, alpha: f64, theta: f64, gamma: f64,
+              rounds: u32)
+              -> anyhow::Result<(f64, f64, f64)> {
+    let params = Params { n, d, alpha, theta, c: 1024.0 };
+    let mut coord = Coordinator::new_sparse(params, 13);
+    let honest = coord.honest_mask(gamma);
+    let betas = vec![1.0 / n as f64; n];
+    let ys: Vec<Vec<f32>> = vec![vec![0.01; d]; n];
+    let (mut t_sum, mut rev_sum, mut frac_sum) = (0.0, 0.0, 0.0);
+    for r in 0..rounds {
+        let dropped = draw_dropouts(n, theta, r, 71, true);
+        let (_, ledger) = coord.run_round(r, &ys, &betas, &dropped)?;
+        let uploads = coord.sparse_upload_indices().unwrap();
+        let s = privacy_histogram(d, uploads, &honest);
+        t_sum += s.mean_t();
+        rev_sum += s.revealed_pct();
+        // Thm 1: selected fraction of the worst-case survivor.
+        let max_sel = uploads
+            .iter()
+            .flatten()
+            .map(|u| u.len())
+            .max()
+            .unwrap_or(0);
+        frac_sum += max_sel as f64 / d as f64;
+        let _ = ledger;
+    }
+    let r = rounds as f64;
+    Ok((t_sum / r, rev_sum / r, frac_sum / r))
+}
+
+fn main() -> anyhow::Result<()> {
+    let d = 40_000;
+    let gamma = 1.0 / 3.0;
+    let rounds = 3;
+
+    // ---- Fig. 4(a): T vs α for various θ, N = 100.
+    let n = 100;
+    let mut a = Table::new(
+        &format!("Fig. 4(a) — honest users per coordinate T \
+                  (N={n}, γ=1/3, d={d})"),
+        &["alpha", "θ=0 meas/theory", "θ=0.1 meas/theory",
+          "θ=0.3 meas/theory", "θ=0.5 meas/theory"],
+    );
+    for &alpha in &[0.05, 0.1, 0.2, 0.3, 0.5] {
+        let mut row = vec![format!("{alpha}")];
+        for &theta in &[0.0, 0.1, 0.3, 0.5] {
+            let (t_meas, _, _) =
+                run_sample(n, d, alpha, theta, gamma, rounds)?;
+            row.push(format!("{:.1} / {:.1}", t_meas,
+                             theoretical_t(alpha, theta, gamma, n)));
+        }
+        a.row(&row);
+    }
+    println!("{}", a.render());
+
+    // ---- Fig. 4(b): revealed % vs α for various N.
+    let mut b = Table::new(
+        &format!("Fig. 4(b) — % params revealed (exactly one honest \
+                  selector), γ=1/3, d={d}"),
+        &["alpha", "N=25", "N=50", "N=75", "N=100"],
+    );
+    for &alpha in &[0.05, 0.1, 0.2, 0.3] {
+        let mut row = vec![format!("{alpha}")];
+        for &n in &[25usize, 50, 75, 100] {
+            let (_, rev, _) = run_sample(n, d, alpha, 0.0, gamma, rounds)?;
+            row.push(format!("{rev:.3}"));
+        }
+        b.row(&row);
+    }
+    println!("{}", b.render());
+
+    // ---- Theorem 1: compression concentrates at p ≤ α.
+    let mut c = Table::new(
+        &format!("Thm 1 — measured upload fraction |U_i|/d vs α (N=100, \
+                  d={d})"),
+        &["alpha", "p (theory)", "measured max frac", "≤ α ?"],
+    );
+    for &alpha in &[0.05, 0.1, 0.2, 0.4] {
+        let params = Params { n: 100, d, alpha, theta: 0.0, c: 1024.0 };
+        let (_, _, frac) = run_sample(100, d, alpha, 0.0, gamma, 2)?;
+        c.row(&[
+            format!("{alpha}"),
+            format!("{:.4}", params.p()),
+            format!("{frac:.4}"),
+            (frac <= alpha * 1.05).to_string(),
+        ]);
+    }
+    println!("{}", c.render());
+    println!("paper shape: T linear in α with slope (1−θ)(1−γ)N; \
+              revealed-% ↓ in both α and N (0.07% @ α=0.2, N=100).");
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Fig. 6: MNIST-shaped **non-IID** training (sorted-label shards, ≤2
+//! classes per shard) to target accuracy — (a) total communication
+//! (paper: 12× reduction) and (b) wall clock (paper: 1.2× speedup),
+//! with the target lowered vs IID (the paper uses 94% vs 97%; the synthetic
+//! non-IID task plateaus near 0.69 vs 0.96 IID, so we use 65% vs 95%).
+
+use sparsesecagg::fl::experiments::{compare_protocols, render_comparison};
+use sparsesecagg::fl::{FlConfig, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    let trainer = match Trainer::load("artifacts", "cnn_mnist_small", false) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("SKIP bench_fig6 (run `make artifacts`): {e:#}");
+            return Ok(());
+        }
+    };
+    let full = std::env::var("FULL").is_ok();
+    let target = 0.65;
+    let cfg = FlConfig {
+        model: "cnn_mnist_small".into(),
+        users: if full { 25 } else { 10 },
+        rounds: if full { 80 } else { 30 },
+        alpha: 0.1,
+        theta: 0.3,
+        lr: 0.01,
+        iid: false,
+        samples_per_user: 50,
+        test_samples: 400,
+        target_accuracy: Some(target),
+        ..FlConfig::default()
+    };
+    println!("# Fig. 6 reproduction — non-IID shards, d={} users={}",
+             trainer.m.d, cfg.users);
+    let (spa, sec) = compare_protocols(&cfg, &trainer)?;
+    println!("{}", render_comparison("Fig. 6", &spa, &sec, Some(target)));
+    println!("paper shape: ~12x comm reduction and ~1.2x wall-clock \
+              speedup — both smaller than the IID case because non-IID \
+              needs more rounds, amortizing SecAgg's per-round cost less.");
+    Ok(())
+}

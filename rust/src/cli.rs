@@ -1,0 +1,99 @@
+//! Minimal CLI argument parser (no clap in the vendored crate set):
+//! `binary <subcommand> [--key value | --key=value | --flag] ...`.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: HashMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.flags.insert(stripped.to_string(), v);
+                } else {
+                    // bare flag => boolean true
+                    args.flags.insert(stripped.to_string(), "true".into());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn parse_flag<T: std::str::FromStr>(&self, key: &str, default: T)
+                                            -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(x),
+                Err(e) => bail!("--{key}={v}: {e}"),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("run --users 25 --alpha=0.1 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("users"), Some("25"));
+        assert_eq!(a.get("alpha"), Some("0.1"));
+        assert_eq!(a.get("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("inspect artifacts --all");
+        assert_eq!(a.subcommand.as_deref(), Some("inspect"));
+        assert_eq!(a.positional, vec!["artifacts"]);
+    }
+
+    #[test]
+    fn typed_flags() {
+        let a = parse("run --users 25");
+        assert_eq!(a.parse_flag("users", 10usize).unwrap(), 25);
+        assert_eq!(a.parse_flag("rounds", 30usize).unwrap(), 30);
+        let bad = parse("run --users many");
+        assert!(bad.parse_flag("users", 10usize).is_err());
+    }
+}

@@ -1,0 +1,188 @@
+//! Configuration: `key = value` files (a TOML subset — no serde in the
+//! vendored crate set) merged with `--key value` CLI overrides.
+//!
+//! Ships with presets under `configs/` (e.g. `configs/mnist_iid.cfg`);
+//! every field of [`crate::fl::FlConfig`] is addressable.
+
+use crate::coordinator::ProtocolKind;
+use crate::fl::FlConfig;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// An ordered key→value bag from file + overrides.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: HashMap<String, String>,
+}
+
+impl Config {
+    pub fn from_file(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let mut cfg = Config::default();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("{path}:{}: expected key = value",
+                                         ln + 1))?;
+            cfg.values.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(cfg)
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn merge(&mut self, other: &HashMap<String, String>) {
+        for (k, v) in other {
+            self.values.insert(k.clone(), v.clone());
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    fn parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| {
+                anyhow::anyhow!("config key {key}={v}: {e}")
+            }),
+        }
+    }
+
+    fn parse_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.values.get(key).map(|s| s.as_str()) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("config key {key}: expected bool, got {v}"),
+        }
+    }
+
+    /// Materialize an [`FlConfig`] (unknown keys are rejected to catch
+    /// typos).
+    pub fn to_fl_config(&self) -> Result<FlConfig> {
+        const KNOWN: &[&str] = &[
+            "model", "protocol", "users", "rounds", "local_epochs", "alpha",
+            "theta", "c", "lr", "momentum", "iid", "samples_per_user",
+            "test_samples", "target_accuracy", "eval_every",
+            "use_hlo_quantmask", "participation", "dp_epsilon", "dp_clip",
+            "seed", "artifacts_dir",
+        ];
+        for k in self.values.keys() {
+            if !KNOWN.contains(&k.as_str()) {
+                bail!("unknown config key: {k} (known: {KNOWN:?})");
+            }
+        }
+        let d = FlConfig::default();
+        let protocol = match self.get("protocol").unwrap_or("sparse") {
+            "sparse" | "sparsesecagg" => ProtocolKind::Sparse,
+            "secagg" | "baseline" => ProtocolKind::SecAgg,
+            other => bail!("unknown protocol {other} (sparse|secagg)"),
+        };
+        let target_accuracy = match self.get("target_accuracy") {
+            None | Some("none") => None,
+            Some(v) => Some(v.parse::<f64>()
+                .with_context(|| format!("target_accuracy={v}"))?),
+        };
+        Ok(FlConfig {
+            model: self.get("model").unwrap_or(&d.model).to_string(),
+            protocol,
+            users: self.parse("users", d.users)?,
+            rounds: self.parse("rounds", d.rounds)?,
+            local_epochs: self.parse("local_epochs", d.local_epochs)?,
+            alpha: self.parse("alpha", d.alpha)?,
+            theta: self.parse("theta", d.theta)?,
+            c: self.parse("c", d.c)?,
+            lr: self.parse("lr", d.lr)?,
+            momentum: self.parse("momentum", d.momentum)?,
+            iid: self.parse_bool("iid", d.iid)?,
+            samples_per_user: self.parse("samples_per_user",
+                                         d.samples_per_user)?,
+            test_samples: self.parse("test_samples", d.test_samples)?,
+            target_accuracy,
+            eval_every: self.parse("eval_every", d.eval_every)?,
+            use_hlo_quantmask: self.parse_bool("use_hlo_quantmask",
+                                               d.use_hlo_quantmask)?,
+            participation: self.parse("participation", d.participation)?,
+            dp_epsilon: match self.get("dp_epsilon") {
+                None | Some("none") => None,
+                Some(v) => Some(v.parse::<f64>().with_context(
+                    || format!("dp_epsilon={v}"))?),
+            },
+            dp_clip: self.parse("dp_clip", d.dp_clip)?,
+            seed: self.parse("seed", d.seed)?,
+            artifacts_dir: self
+                .get("artifacts_dir")
+                .unwrap_or(&d.artifacts_dir)
+                .to_string(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_materialize() {
+        let cfg = Config::default().to_fl_config().unwrap();
+        assert_eq!(cfg.users, 10);
+        assert_eq!(cfg.protocol, ProtocolKind::Sparse);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut c = Config::default();
+        c.set("users", "25");
+        c.set("protocol", "secagg");
+        c.set("alpha", "0.2");
+        c.set("iid", "false");
+        c.set("target_accuracy", "0.55");
+        let fl = c.to_fl_config().unwrap();
+        assert_eq!(fl.users, 25);
+        assert_eq!(fl.protocol, ProtocolKind::SecAgg);
+        assert!((fl.alpha - 0.2).abs() < 1e-12);
+        assert!(!fl.iid);
+        assert_eq!(fl.target_accuracy, Some(0.55));
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = Config::default();
+        c.set("userz", "25");
+        assert!(c.to_fl_config().is_err());
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        let mut c = Config::default();
+        c.set("users", "many");
+        assert!(c.to_fl_config().is_err());
+        let mut c = Config::default();
+        c.set("iid", "maybe");
+        assert!(c.to_fl_config().is_err());
+    }
+
+    #[test]
+    fn file_parsing_with_comments() {
+        let path = std::env::temp_dir().join("ssa_test_cfg.cfg");
+        std::fs::write(&path,
+                       "# comment\nusers = 7\nalpha=0.3 # inline\n\n")
+            .unwrap();
+        let c = Config::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.get("users"), Some("7"));
+        assert_eq!(c.get("alpha"), Some("0.3"));
+        std::fs::remove_file(&path).ok();
+    }
+}

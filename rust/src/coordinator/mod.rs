@@ -1,0 +1,450 @@
+//! Round coordinator: drives a secure-aggregation round end to end over
+//! the simulated network, with parallel client compute and byte-exact
+//! accounting.
+//!
+//! This is the L3 event loop. One process hosts the server and all N
+//! simulated users; user-side work (mask assembly, quantization, local
+//! training) runs on real threads (`std::thread::scope` — the vendored
+//! crate set has no tokio), while "wire" transfers advance the simulated
+//! clock of [`crate::network`]. Per-round output is the aggregated
+//! gradient plus a [`RoundLedger`] of bytes and time.
+
+use crate::network::{LinkModel, RoundLedger};
+use crate::protocol::messages::*;
+use crate::protocol::{secagg, sparse, wire, Params};
+use anyhow::Result;
+use std::time::Instant;
+
+/// Which protocol a cohort runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProtocolKind {
+    Sparse,
+    SecAgg,
+}
+
+enum Cohort {
+    Sparse { users: Vec<sparse::User>, server: sparse::Server },
+    SecAgg { users: Vec<secagg::User>, server: secagg::Server },
+}
+
+/// The coordinator owns a cohort (users + server) and the network model.
+pub struct Coordinator {
+    cohort: Cohort,
+    pub params: Params,
+    pub link: LinkModel,
+    /// One-time key-setup communication (AdvertiseKeys + ShareKeys).
+    pub setup_ledger: RoundLedger,
+    /// Number of worker threads for client-side compute.
+    pub threads: usize,
+}
+
+fn default_threads(n: usize) -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(n)
+        .max(1)
+}
+
+impl Coordinator {
+    /// Build a SparseSecAgg cohort and run key setup (accounted).
+    pub fn new_sparse(params: Params, entropy: u64) -> Self {
+        let (users, server) = sparse::setup(params, entropy);
+        let setup_ledger = Self::account_setup(params);
+        Coordinator {
+            cohort: Cohort::Sparse { users, server },
+            params,
+            link: LinkModel::paper_user_link(),
+            setup_ledger,
+            threads: default_threads(params.n),
+        }
+    }
+
+    /// Build a SecAgg (baseline) cohort and run key setup (accounted).
+    pub fn new_secagg(params: Params, entropy: u64) -> Self {
+        let (users, server) = secagg::setup(params, entropy);
+        let setup_ledger = Self::account_setup(params);
+        Coordinator {
+            cohort: Cohort::SecAgg { users, server },
+            params,
+            link: LinkModel::paper_user_link(),
+            setup_ledger,
+            threads: default_threads(params.n),
+        }
+    }
+
+    pub fn kind(&self) -> ProtocolKind {
+        match self.cohort {
+            Cohort::Sparse { .. } => ProtocolKind::Sparse,
+            Cohort::SecAgg { .. } => ProtocolKind::SecAgg,
+        }
+    }
+
+    /// Byte accounting for the one-time AdvertiseKeys + ShareKeys phases
+    /// (identical for both protocols: O(N) per user, the paper's
+    /// N-dependent term).
+    fn account_setup(params: Params) -> RoundLedger {
+        let n = params.n;
+        let mut ledger = RoundLedger::new(n);
+        let ad = AdvertiseKeys { id: 0, public: 0 }.wire_bytes();
+        let roster = Roster { publics: vec![0; n] }.wire_bytes();
+        let bundle = ShareBundle {
+            owner: 0,
+            dest: 1,
+            dh_share: crate::shamir::Share { x: 1, y: [0; 8] },
+            seed_share: crate::shamir::Share { x: 1, y: [0; 8] },
+        }
+        .wire_bytes();
+        for u in 0..n {
+            ledger.record_upload(u, ad + (n - 1) * bundle);
+            ledger.record_download(u, roster + (n - 1) * bundle);
+        }
+        ledger
+    }
+
+    /// Per-user ids of the honest set given γ (the first γN users are
+    /// adversarial — a fixed assignment is WLOG under the uniform model).
+    pub fn honest_mask(&self, gamma: f64) -> Vec<bool> {
+        let n = self.params.n;
+        let a = (gamma * n as f64).round() as usize;
+        (0..n).map(|i| i >= a).collect()
+    }
+
+    /// Run one aggregation round.
+    ///
+    /// `ys[i]` is user i's weighted local gradient (length d), `betas[i]`
+    /// its aggregation weight, `dropped` the users that fail before
+    /// MaskedInput. Returns the dequantized aggregate and the ledger.
+    pub fn run_round(&mut self, round: u32, ys: &[Vec<f32>], betas: &[f64],
+                     dropped: &[usize]) -> Result<(Vec<f32>, RoundLedger)> {
+        let params = self.params;
+        let n = params.n;
+        let mut ledger = RoundLedger::new(n);
+        let threads = self.threads;
+        let is_dropped =
+            |i: usize| -> bool { dropped.contains(&i) };
+
+        let (agg, upload_bytes, response_bytes) = match &mut self.cohort {
+            Cohort::Sparse { users, server } => {
+                server.begin_round();
+                // --- MaskedInput: parallel client compute.
+                let t0 = Instant::now();
+                let uploads: Vec<Option<SparseMaskedUpload>> =
+                    parallel_map(users, threads, |u| {
+                        if is_dropped(u.id) {
+                            return None;
+                        }
+                        let mut scratch = vec![0u32; params.d];
+                        let plan = u.mask_plan(round, &params, &mut scratch);
+                        Some(u.masked_upload(round, &ys[u.id], betas[u.id],
+                                             &params, plan))
+                    });
+                ledger.client_compute_s += t0.elapsed().as_secs_f64();
+
+                let mut upload_bytes = vec![0usize; n];
+                let ts = Instant::now();
+                for up in uploads.into_iter().flatten() {
+                    // Round-trip through the real wire codec: the ledger
+                    // counts encoded frame bytes, and the server decodes
+                    // what was "transmitted".
+                    let buf = wire::encode_sparse_upload(&up);
+                    debug_assert_eq!(buf.len(), up.wire_bytes());
+                    let up = wire::decode_sparse_upload(&buf)?;
+                    upload_bytes[up.id] = buf.len();
+                    server.receive_upload(up);
+                }
+                // --- Unmask.
+                let req = server.unmask_request();
+                let req_bytes = req.wire_bytes();
+                let responses: Vec<UnmaskResponse> = users
+                    .iter()
+                    .filter(|u| !is_dropped(u.id))
+                    .map(|u| u.respond_unmask(&req))
+                    .collect();
+                let response_bytes: Vec<(usize, usize)> = responses
+                    .iter()
+                    .map(|r| (r.id, r.wire_bytes()))
+                    .collect();
+                for (u, b) in &response_bytes {
+                    ledger.record_download(*u, req_bytes);
+                    ledger.record_upload(*u, *b);
+                }
+                let agg = server.finish_round(round, &responses)?;
+                ledger.server_compute_s += ts.elapsed().as_secs_f64();
+                (agg, upload_bytes, response_bytes)
+            }
+            Cohort::SecAgg { users, server } => {
+                server.begin_round();
+                let t0 = Instant::now();
+                let uploads: Vec<Option<DenseMaskedUpload>> =
+                    parallel_map(users, threads, |u| {
+                        if is_dropped(u.id) {
+                            return None;
+                        }
+                        Some(u.masked_upload(round, &ys[u.id], betas[u.id],
+                                             &params))
+                    });
+                ledger.client_compute_s += t0.elapsed().as_secs_f64();
+
+                let mut upload_bytes = vec![0usize; n];
+                let ts = Instant::now();
+                for up in uploads.into_iter().flatten() {
+                    let buf = wire::encode_dense_upload(&up);
+                    debug_assert_eq!(buf.len(), up.wire_bytes());
+                    let up = wire::decode_dense_upload(&buf)?;
+                    upload_bytes[up.id] = buf.len();
+                    server.receive_upload(up);
+                }
+                let req = server.unmask_request();
+                let req_bytes = req.wire_bytes();
+                let responses: Vec<UnmaskResponse> = users
+                    .iter()
+                    .filter(|u| !is_dropped(u.id))
+                    .map(|u| u.respond_unmask(&req))
+                    .collect();
+                let response_bytes: Vec<(usize, usize)> = responses
+                    .iter()
+                    .map(|r| (r.id, r.wire_bytes()))
+                    .collect();
+                for (u, b) in &response_bytes {
+                    ledger.record_download(*u, req_bytes);
+                    ledger.record_upload(*u, *b);
+                }
+                let agg = server.finish_round(round, &responses)?;
+                ledger.server_compute_s += ts.elapsed().as_secs_f64();
+                (agg, upload_bytes, response_bytes)
+            }
+        };
+
+        // --- wire accounting: MaskedInput uploads in parallel…
+        for (u, &b) in upload_bytes.iter().enumerate() {
+            ledger.record_upload(u, b);
+        }
+        ledger.advance_parallel_phase(&self.link, &upload_bytes);
+        // …unmask responses in parallel…
+        let resp_sizes: Vec<usize> =
+            response_bytes.iter().map(|&(_, b)| b).collect();
+        ledger.advance_parallel_phase(&self.link, &resp_sizes);
+        // …then the global-model broadcast to survivors.
+        let bcast = ModelBroadcast { d: params.d }.wire_bytes();
+        let mut bcast_sizes = Vec::new();
+        for u in 0..n {
+            if !is_dropped(u) {
+                ledger.record_download(u, bcast);
+                bcast_sizes.push(bcast);
+            }
+        }
+        ledger.advance_parallel_phase(&self.link, &bcast_sizes);
+
+        Ok((agg, ledger))
+    }
+
+    /// Like [`Self::run_round`], but MaskedInput values are computed by
+    /// the L1 HLO quantmask kernel (bit-identical to the native path;
+    /// proves the three layers compose on the hot path). Sparse cohorts
+    /// only. Kernel executions are serialized through the single PJRT
+    /// client; the per-user compute clock still models a parallel fleet
+    /// (max over users).
+    pub fn run_round_hlo(&mut self, round: u32, ys: &[Vec<f32>],
+                         betas: &[f64], dropped: &[usize],
+                         qm: &crate::runtime::QuantMask)
+                         -> Result<(Vec<f32>, RoundLedger)> {
+        let params = self.params;
+        let n = params.n;
+        let mut ledger = RoundLedger::new(n);
+        let Cohort::Sparse { users, server } = &mut self.cohort else {
+            anyhow::bail!("run_round_hlo requires a SparseSecAgg cohort");
+        };
+        server.begin_round();
+        let mut upload_bytes = vec![0usize; n];
+        let mut max_user_s = 0f64;
+        let mut scratch = vec![0u32; params.d];
+        for u in users.iter() {
+            if dropped.contains(&u.id) {
+                continue;
+            }
+            let t0 = Instant::now();
+            let plan = u.mask_plan(round, &params, &mut scratch);
+            let (y_pad, rand, masksum, select) =
+                u.kernel_inputs(round, &ys[u.id], &params, &plan, qm.dpad);
+            let dense = qm.run(&y_pad, &rand, &masksum, &select,
+                               params.scale(betas[u.id]), params.c)?;
+            let up = u.upload_from_kernel(plan, &dense, params.d);
+            max_user_s = max_user_s.max(t0.elapsed().as_secs_f64());
+            upload_bytes[up.id] = up.wire_bytes();
+            server.receive_upload(up);
+        }
+        ledger.client_compute_s += max_user_s;
+
+        let ts = Instant::now();
+        let req = server.unmask_request();
+        let req_bytes = req.wire_bytes();
+        let responses: Vec<UnmaskResponse> = users
+            .iter()
+            .filter(|u| !dropped.contains(&u.id))
+            .map(|u| u.respond_unmask(&req))
+            .collect();
+        for r in &responses {
+            ledger.record_download(r.id, req_bytes);
+            ledger.record_upload(r.id, r.wire_bytes());
+        }
+        let agg = server.finish_round(round, &responses)?;
+        ledger.server_compute_s += ts.elapsed().as_secs_f64();
+
+        for (u, &b) in upload_bytes.iter().enumerate() {
+            ledger.record_upload(u, b);
+        }
+        ledger.advance_parallel_phase(&self.link, &upload_bytes);
+        let resp_sizes: Vec<usize> =
+            responses.iter().map(|r| r.wire_bytes()).collect();
+        ledger.advance_parallel_phase(&self.link, &resp_sizes);
+        let bcast = ModelBroadcast { d: params.d }.wire_bytes();
+        let bcast_sizes: Vec<usize> = (0..n)
+            .filter(|u| !dropped.contains(u))
+            .map(|u| {
+                ledger.record_download(u, bcast);
+                bcast
+            })
+            .collect();
+        ledger.advance_parallel_phase(&self.link, &bcast_sizes);
+        Ok((agg, ledger))
+    }
+
+    /// U_i location sets received this round (None = dropped) — feeds the
+    /// privacy metrics. Empty for SecAgg cohorts (every survivor selects
+    /// everything; use [`Self::secagg_upload_indices`]).
+    pub fn sparse_upload_indices(&self) -> Option<&[Option<Vec<u32>>]> {
+        match &self.cohort {
+            Cohort::Sparse { server, .. } => Some(&server.upload_indices),
+            Cohort::SecAgg { .. } => None,
+        }
+    }
+}
+
+/// Map a slice through `f` on up to `threads` scoped threads, preserving
+/// order. The closure sees each element by reference.
+pub fn parallel_map<T: Sync, U: Send>(
+    items: &[T], threads: usize, f: impl Fn(&T) -> U + Sync) -> Vec<U> {
+    let threads = threads.clamp(1, items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let chunk = items.len().div_ceil(threads);
+    let mut out: Vec<Option<U>> = Vec::new();
+    out.resize_with(items.len(), || None);
+    let out_chunks: Vec<&mut [Option<U>]> = out.chunks_mut(chunk).collect();
+    std::thread::scope(|s| {
+        for (ins, outs) in items.chunks(chunk).zip(out_chunks) {
+            let f = &f;
+            s.spawn(move || {
+                for (i, o) in ins.iter().zip(outs.iter_mut()) {
+                    *o = Some(f(i));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|v| v.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics;
+
+    fn params(n: usize, d: usize, alpha: f64, theta: f64) -> Params {
+        Params { n, d, alpha, theta, c: 1024.0 }
+    }
+
+    fn grads(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = crate::prg::ChaCha20Rng::from_seed_u64(seed);
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.next_f32() - 0.5).collect())
+            .collect()
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let xs: Vec<usize> = (0..100).collect();
+        let ys = parallel_map(&xs, 7, |&x| x * 2);
+        assert_eq!(ys, xs.iter().map(|&x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sparse_round_through_coordinator() {
+        let p = params(8, 700, 0.3, 0.0);
+        let mut coord = Coordinator::new_sparse(p, 5);
+        let ys = grads(p.n, p.d, 1);
+        let betas = vec![1.0 / p.n as f64; p.n];
+        let (agg, ledger) = coord.run_round(0, &ys, &betas, &[]).unwrap();
+        assert_eq!(agg.len(), p.d);
+        assert!(ledger.max_up() > 0);
+        // Sparse upload must be well below dense 4d bytes.
+        assert!(ledger.max_up() < 4 * p.d);
+        assert!(ledger.wall_clock_s() > 0.0);
+    }
+
+    #[test]
+    fn secagg_round_through_coordinator() {
+        let p = params(6, 500, 1.0, 0.0);
+        let mut coord = Coordinator::new_secagg(p, 6);
+        let ys = grads(p.n, p.d, 2);
+        let betas = vec![1.0 / p.n as f64; p.n];
+        let (agg, ledger) = coord.run_round(0, &ys, &betas, &[]).unwrap();
+        assert_eq!(agg.len(), p.d);
+        // Dense upload dominates: ≥ 4d bytes.
+        assert!(ledger.max_up() >= 4 * p.d);
+    }
+
+    #[test]
+    fn sparse_and_secagg_agree_in_expectation() {
+        // Same gradients through both protocols: dequantized aggregates
+        // should approximate the same weighted sum (per-coordinate for
+        // SecAgg; on covered coordinates, scaled, for Sparse).
+        let n = 10;
+        let d = 2000;
+        let ys: Vec<Vec<f32>> = (0..n).map(|_| vec![0.5f32; d]).collect();
+        let betas = vec![1.0 / n as f64; n];
+
+        let mut sec =
+            Coordinator::new_secagg(params(n, d, 1.0, 0.0), 9);
+        let (agg_sec, _) = sec.run_round(0, &ys, &betas, &[]).unwrap();
+        let mean_sec: f64 =
+            agg_sec.iter().map(|&v| v as f64).sum::<f64>() / d as f64;
+
+        let mut spa =
+            Coordinator::new_sparse(params(n, d, 0.5, 0.0), 9);
+        let (agg_spa, _) = spa.run_round(0, &ys, &betas, &[]).unwrap();
+        let mean_spa: f64 =
+            agg_spa.iter().map(|&v| v as f64).sum::<f64>() / d as f64;
+
+        assert!((mean_sec - 0.5).abs() < 0.01, "secagg mean={mean_sec}");
+        assert!((mean_spa - 0.5).abs() < 0.05, "sparse mean={mean_spa}");
+    }
+
+    #[test]
+    fn round_with_dropouts_and_privacy_metrics() {
+        let p = params(12, 1500, 0.4, 0.25);
+        let mut coord = Coordinator::new_sparse(p, 8);
+        let ys = grads(p.n, p.d, 3);
+        let betas = vec![1.0 / p.n as f64; p.n];
+        let dropped = vec![1usize, 5, 9];
+        let (agg, _ledger) =
+            coord.run_round(2, &ys, &betas, &dropped).unwrap();
+        assert_eq!(agg.len(), p.d);
+
+        let honest = coord.honest_mask(1.0 / 3.0);
+        assert_eq!(honest.iter().filter(|&&h| !h).count(), 4);
+        let uploads = coord.sparse_upload_indices().unwrap();
+        let sample = metrics::privacy_histogram(p.d, uploads, &honest);
+        assert!(sample.mean_t() > 0.0);
+        // dropped users contributed nothing
+        assert!(uploads[1].is_none() && uploads[5].is_none());
+    }
+
+    #[test]
+    fn setup_cost_scales_with_n() {
+        let small = Coordinator::new_sparse(params(4, 100, 0.5, 0.0), 1);
+        let big = Coordinator::new_sparse(params(16, 100, 0.5, 0.0), 1);
+        assert!(big.setup_ledger.max_up() > small.setup_ledger.max_up());
+    }
+}

@@ -1,0 +1,317 @@
+//! Synthetic image datasets + federated partitioning.
+//!
+//! **Substitution (DESIGN.md §Substitutions #2):** no dataset download is
+//! possible in this environment, so MNIST / CIFAR-10 are replaced by
+//! deterministic synthetic sets with identical tensor shapes. Each class
+//! gets a smooth random prototype (low-resolution ChaCha noise,
+//! bilinearly upsampled); samples are the prototype plus per-sample
+//! Gaussian noise and a random translation. The task is hard enough that
+//! accuracy climbs over rounds and non-IID sharding hurts — the code
+//! paths and convergence *shapes* the paper measures are exercised, while
+//! absolute accuracies are re-calibrated in EXPERIMENTS.md.
+//!
+//! Partitioning follows McMahan et al. exactly (the paper's §VII): IID =
+//! shuffle and split evenly; non-IID = sort by label, cut into 300 shards
+//! of ≤ 2 classes each, deal 300/N shards per user.
+
+use crate::prg::ChaCha20Rng;
+
+/// Which synthetic family to generate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// 28×28×1, 10 classes — MNIST-shaped.
+    MnistLike,
+    /// 32×32×3, 10 classes — CIFAR-shaped (noisier, harder).
+    CifarLike,
+}
+
+impl DatasetKind {
+    pub fn shape(self) -> (usize, usize, usize) {
+        match self {
+            DatasetKind::MnistLike => (28, 28, 1),
+            DatasetKind::CifarLike => (32, 32, 3),
+        }
+    }
+
+    /// Per-sample additive noise σ.
+    fn noise(self) -> f32 {
+        match self {
+            DatasetKind::MnistLike => 0.9,
+            DatasetKind::CifarLike => 1.2,
+        }
+    }
+
+    /// Infer from a model's input shape.
+    pub fn for_input(input: &[usize]) -> Self {
+        if input.first() == Some(&32) {
+            DatasetKind::CifarLike
+        } else {
+            DatasetKind::MnistLike
+        }
+    }
+}
+
+/// A labeled image set, NHWC-flattened f32 in [-1, 1].
+pub struct Dataset {
+    pub kind: DatasetKind,
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub n: usize,
+}
+
+pub const CLASSES: usize = 10;
+const PROTO_RES: usize = 7;
+
+/// Box–Muller standard normal from two uniforms.
+fn gaussian(rng: &mut ChaCha20Rng) -> f32 {
+    let u1 = rng.next_f32().max(1e-7);
+    let u2 = rng.next_f32();
+    (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+}
+
+/// Smooth class prototypes: PROTO_RES² per-channel noise, bilinearly
+/// upsampled to (h, w).
+fn prototypes(kind: DatasetKind, seed: u64) -> Vec<Vec<f32>> {
+    let (h, w, c) = kind.shape();
+    let mut rng = ChaCha20Rng::from_seed_u64(seed ^ 0x9_0705);
+    (0..CLASSES)
+        .map(|_| {
+            let coarse: Vec<f32> = (0..PROTO_RES * PROTO_RES * c)
+                .map(|_| rng.next_f32() * 2.0 - 1.0)
+                .collect();
+            let mut img = vec![0f32; h * w * c];
+            for y in 0..h {
+                for x in 0..w {
+                    let fy = y as f32 / (h - 1) as f32 * (PROTO_RES - 1) as f32;
+                    let fx = x as f32 / (w - 1) as f32 * (PROTO_RES - 1) as f32;
+                    let (y0, x0) = (fy as usize, fx as usize);
+                    let (y1, x1) =
+                        ((y0 + 1).min(PROTO_RES - 1), (x0 + 1).min(PROTO_RES - 1));
+                    let (dy, dx) = (fy - y0 as f32, fx - x0 as f32);
+                    for ch in 0..c {
+                        let g = |yy: usize, xx: usize| {
+                            coarse[(yy * PROTO_RES + xx) * c + ch]
+                        };
+                        let v = g(y0, x0) * (1.0 - dy) * (1.0 - dx)
+                            + g(y0, x1) * (1.0 - dy) * dx
+                            + g(y1, x0) * dy * (1.0 - dx)
+                            + g(y1, x1) * dy * dx;
+                        img[(y * w + x) * c + ch] = v * 0.8;
+                    }
+                }
+            }
+            img
+        })
+        .collect()
+}
+
+impl Dataset {
+    /// Generate `n` samples deterministically from `seed` (prototypes and
+    /// samples drawn from the same family seed).
+    pub fn synthetic(kind: DatasetKind, n: usize, seed: u64) -> Dataset {
+        Self::synthetic_split(kind, n, seed, seed)
+    }
+
+    /// Generate `n` samples with the class prototypes fixed by
+    /// `proto_seed` and the per-sample noise by `sample_seed`. Train and
+    /// test splits of the *same task* share `proto_seed` and differ in
+    /// `sample_seed`.
+    pub fn synthetic_split(kind: DatasetKind, n: usize, proto_seed: u64,
+                           sample_seed: u64) -> Dataset {
+        let (h, w, c) = kind.shape();
+        let protos = prototypes(kind, proto_seed);
+        let mut rng = ChaCha20Rng::from_seed_u64(sample_seed);
+        let mut images = vec![0f32; n * h * w * c];
+        let mut labels = vec![0i32; n];
+        let noise = kind.noise();
+        for s in 0..n {
+            let label = (rng.next_u32() as usize) % CLASSES;
+            labels[s] = label as i32;
+            let proto = &protos[label];
+            // random ±2px translation
+            let sy = (rng.next_u32() % 5) as isize - 2;
+            let sx = (rng.next_u32() % 5) as isize - 2;
+            let img = &mut images[s * h * w * c..(s + 1) * h * w * c];
+            for y in 0..h as isize {
+                for x in 0..w as isize {
+                    let (py, px) = (y + sy, x + sx);
+                    for ch in 0..c {
+                        let base = if py >= 0 && py < h as isize && px >= 0
+                            && px < w as isize
+                        {
+                            proto[((py as usize) * w + px as usize) * c + ch]
+                        } else {
+                            0.0
+                        };
+                        img[(y as usize * w + x as usize) * c + ch] =
+                            (base + noise * gaussian(&mut rng)).clamp(-1.0, 1.0);
+                    }
+                }
+            }
+        }
+        Dataset { kind, images, labels, n }
+    }
+
+    pub fn sample_len(&self) -> usize {
+        let (h, w, c) = self.kind.shape();
+        h * w * c
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        let l = self.sample_len();
+        &self.images[i * l..(i + 1) * l]
+    }
+}
+
+/// A user's local dataset: indices into a shared [`Dataset`].
+#[derive(Clone, Debug)]
+pub struct UserShard {
+    pub indices: Vec<u32>,
+}
+
+/// IID partition: shuffle and deal evenly (McMahan et al. §3).
+pub fn partition_iid(n_samples: usize, n_users: usize, seed: u64)
+                     -> Vec<UserShard> {
+    let mut idx: Vec<u32> = (0..n_samples as u32).collect();
+    let mut rng = ChaCha20Rng::from_seed_u64(seed ^ 0x11D);
+    for i in (1..idx.len()).rev() {
+        let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+        idx.swap(i, j);
+    }
+    let per = n_samples / n_users;
+    (0..n_users)
+        .map(|u| UserShard { indices: idx[u * per..(u + 1) * per].to_vec() })
+        .collect()
+}
+
+/// Non-IID partition: sort by label, slice into `shards` contiguous
+/// shards (each spans ≤ 2 classes), deal `shards / n_users` shards per
+/// user at random (McMahan et al.; the paper uses 300 shards).
+pub fn partition_noniid(labels: &[i32], n_users: usize, shards: usize,
+                        seed: u64) -> Vec<UserShard> {
+    assert!(shards % n_users == 0,
+            "shards ({shards}) must divide evenly among users ({n_users})");
+    let mut idx: Vec<u32> = (0..labels.len() as u32).collect();
+    idx.sort_by_key(|&i| labels[i as usize]);
+    let shard_size = labels.len() / shards;
+    let mut shard_ids: Vec<usize> = (0..shards).collect();
+    let mut rng = ChaCha20Rng::from_seed_u64(seed ^ 0x2071D);
+    for i in (1..shard_ids.len()).rev() {
+        let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+        shard_ids.swap(i, j);
+    }
+    let per = shards / n_users;
+    (0..n_users)
+        .map(|u| {
+            let mut indices = Vec::with_capacity(per * shard_size);
+            for k in 0..per {
+                let s = shard_ids[u * per + k];
+                indices
+                    .extend_from_slice(&idx[s * shard_size..(s + 1) * shard_size]);
+            }
+            UserShard { indices }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_is_deterministic() {
+        let a = Dataset::synthetic(DatasetKind::MnistLike, 50, 7);
+        let b = Dataset::synthetic(DatasetKind::MnistLike, 50, 7);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.images, b.images);
+        let c = Dataset::synthetic(DatasetKind::MnistLike, 50, 8);
+        assert_ne!(a.images, c.images);
+    }
+
+    #[test]
+    fn shapes_and_ranges() {
+        let d = Dataset::synthetic(DatasetKind::CifarLike, 20, 1);
+        assert_eq!(d.sample_len(), 32 * 32 * 3);
+        assert_eq!(d.images.len(), 20 * 32 * 32 * 3);
+        assert!(d.images.iter().all(|&v| (-1.0..=1.0).contains(&v)));
+        assert!(d.labels.iter().all(|&l| (0..10).contains(&l)));
+    }
+
+    #[test]
+    fn all_classes_present() {
+        let d = Dataset::synthetic(DatasetKind::MnistLike, 500, 3);
+        let mut seen = [false; CLASSES];
+        for &l in &d.labels {
+            seen[l as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn classes_are_separable_by_prototype_distance() {
+        // Nearest-prototype classification must beat chance by a wide
+        // margin — guarantees the learning task is learnable.
+        let kind = DatasetKind::MnistLike;
+        let d = Dataset::synthetic(kind, 300, 9);
+        let protos = prototypes(kind, 9);
+        let mut correct = 0;
+        for s in 0..d.n {
+            let img = d.image(s);
+            let best = (0..CLASSES)
+                .min_by(|&a, &b| {
+                    let da: f32 = img.iter().zip(&protos[a])
+                        .map(|(x, p)| (x - p) * (x - p)).sum();
+                    let db: f32 = img.iter().zip(&protos[b])
+                        .map(|(x, p)| (x - p) * (x - p)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best as i32 == d.labels[s] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / d.n as f64;
+        assert!(acc > 0.6, "nearest-prototype acc={acc}");
+    }
+
+    #[test]
+    fn iid_partition_covers_evenly() {
+        let shards = partition_iid(1000, 10, 4);
+        assert_eq!(shards.len(), 10);
+        let mut all: Vec<u32> =
+            shards.iter().flat_map(|s| s.indices.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all.len(), 1000);
+        all.dedup();
+        assert_eq!(all.len(), 1000, "no index dealt twice");
+        assert!(shards.iter().all(|s| s.indices.len() == 100));
+    }
+
+    #[test]
+    fn noniid_shards_have_few_classes() {
+        // Paper scale: 300 shards over 100 users ⇒ 3 shards each, so a
+        // user sees at most ~6 classes and the label histogram is skewed.
+        let d = Dataset::synthetic(DatasetKind::MnistLike, 3000, 5);
+        let parts = partition_noniid(&d.labels, 100, 300, 5);
+        assert_eq!(parts.len(), 100);
+        for p in &parts {
+            let mut counts = [0usize; CLASSES];
+            for &i in &p.indices {
+                counts[d.labels[i as usize] as usize] += 1;
+            }
+            let max = *counts.iter().max().unwrap() as f64;
+            let total: usize = counts.iter().sum();
+            assert!(max / total as f64 > 0.2,
+                    "user shard looks too uniform: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn noniid_rejects_uneven_shards() {
+        let labels = vec![0i32; 100];
+        let r = std::panic::catch_unwind(|| {
+            partition_noniid(&labels, 7, 300, 1)
+        });
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,139 @@
+//! Diffie–Hellman key agreement for pairwise seeds (paper §V-A).
+//!
+//! Each pair of users must agree on secret seeds `s_ij` (additive mask) and
+//! the multiplicative-mask seed without the server learning them. We run
+//! textbook DH in the multiplicative group of `F_p` with the Mersenne prime
+//! `p = 2^61 − 1` and derive seeds as `SHA-256(shared ‖ "sparsesecagg" ‖
+//! pair ids)`.
+//!
+//! **Substitution note (DESIGN.md §Substitutions):** a 61-bit group is NOT
+//! cryptographically strong; the vendored crate set has no big-integer
+//! arithmetic, and the protocol logic only needs "each pair
+//! deterministically derives a shared secret unknown to other parties of
+//! the simulation". A production deployment would swap [`agree`] for
+//! X25519 — the rest of the protocol is unchanged (seeds stay 256-bit).
+
+use crate::prg::Seed;
+use sha2::{Digest, Sha256};
+
+/// Mersenne prime 2^61 − 1.
+pub const P: u64 = 2_305_843_009_213_693_951;
+/// Generator of a large subgroup of Z_p^*.
+pub const G: u64 = 7;
+
+#[inline]
+fn mulmod(a: u64, b: u64) -> u64 {
+    ((a as u128 * b as u128) % P as u128) as u64
+}
+
+/// `g^e mod p`.
+pub fn powmod(mut base: u64, mut e: u64) -> u64 {
+    base %= P;
+    let mut acc = 1u64;
+    while e > 0 {
+        if e & 1 == 1 {
+            acc = mulmod(acc, base);
+        }
+        base = mulmod(base, base);
+        e >>= 1;
+    }
+    acc
+}
+
+/// A user's DH keypair.
+#[derive(Clone, Copy, Debug)]
+pub struct KeyPair {
+    pub secret: u64,
+    pub public: u64,
+}
+
+impl KeyPair {
+    /// Deterministic keypair from an entropy word (the simulation gives
+    /// each user an independent seed).
+    pub fn generate(entropy: u64) -> Self {
+        // Hash the entropy to spread it over the exponent range.
+        let mut h = Sha256::new();
+        h.update(b"sparsesecagg-dh-keygen");
+        h.update(entropy.to_le_bytes());
+        let digest = h.finalize();
+        let mut secret =
+            u64::from_le_bytes(digest[..8].try_into().unwrap()) % (P - 2);
+        secret += 1; // in [1, p-2]
+        KeyPair { secret, public: powmod(G, secret) }
+    }
+}
+
+/// Derive the pairwise seed from my secret and the peer's public key.
+/// Symmetric: `agree(a, B, i, j, tag) == agree(b, A, i, j, tag)` as long
+/// as both sides order the pair ids canonically (done here).
+pub fn agree(my_secret: u64, their_public: u64, id_a: u32, id_b: u32,
+             tag: &str) -> Seed {
+    let shared = powmod(their_public, my_secret);
+    let (lo, hi) = if id_a < id_b { (id_a, id_b) } else { (id_b, id_a) };
+    let mut h = Sha256::new();
+    h.update(b"sparsesecagg-kdf");
+    h.update(shared.to_le_bytes());
+    h.update(lo.to_le_bytes());
+    h.update(hi.to_le_bytes());
+    h.update(tag.as_bytes());
+    let digest = h.finalize();
+    // Canonicalize so word-wise Shamir sharing over F_q round-trips.
+    Seed::from_bytes(digest.as_slice().try_into().unwrap()).canonical()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop;
+
+    #[test]
+    fn agreement_is_symmetric() {
+        prop(200, |rng| {
+            let a = KeyPair::generate(rng.next_u64());
+            let b = KeyPair::generate(rng.next_u64());
+            let s1 = agree(a.secret, b.public, 3, 7, "additive");
+            let s2 = agree(b.secret, a.public, 7, 3, "additive");
+            assert_eq!(s1, s2);
+        });
+    }
+
+    #[test]
+    fn tags_separate_streams() {
+        let a = KeyPair::generate(1);
+        let b = KeyPair::generate(2);
+        let add = agree(a.secret, b.public, 0, 1, "additive");
+        let mult = agree(a.secret, b.public, 0, 1, "multiplicative");
+        assert_ne!(add, mult);
+    }
+
+    #[test]
+    fn third_party_gets_different_seed() {
+        let a = KeyPair::generate(10);
+        let b = KeyPair::generate(11);
+        let c = KeyPair::generate(12);
+        let ab = agree(a.secret, b.public, 0, 1, "t");
+        let cb = agree(c.secret, b.public, 2, 1, "t");
+        let ca = agree(c.secret, a.public, 2, 0, "t");
+        assert_ne!(ab, cb);
+        assert_ne!(ab, ca);
+    }
+
+    #[test]
+    fn powmod_basics() {
+        assert_eq!(powmod(G, 0), 1);
+        assert_eq!(powmod(G, 1), G);
+        assert_eq!(powmod(G, 2), G * G);
+        // Fermat: g^(p-1) = 1 mod p
+        assert_eq!(powmod(G, P - 1), 1);
+    }
+
+    #[test]
+    fn distinct_entropy_distinct_keys() {
+        prop(200, |rng| {
+            let x = rng.next_u64();
+            let a = KeyPair::generate(x);
+            let b = KeyPair::generate(x.wrapping_add(1));
+            assert_ne!(a.public, b.public);
+        });
+    }
+}

@@ -1,0 +1,176 @@
+//! Finite field `F_q` arithmetic, `q = 2^32 − 5` (largest 32-bit prime,
+//! the modulus the paper fixes in §VII).
+//!
+//! Elements are `u32` in `[0, q)`. Scalar ops widen to `u64`; the
+//! vectorized paths (`vecops`) use the branch-free identity
+//! `2^32 ≡ 5 (mod q)` so hot loops stay in 32-bit lanes — the same trick
+//! the L1 Pallas kernel uses (see `python/compile/kernels/quantmask.py`).
+
+pub mod vecops;
+
+/// The field modulus, `2^32 − 5`.
+pub const Q: u32 = 4_294_967_291;
+const Q64: u64 = Q as u64;
+
+/// `(a + b) mod q`.
+#[inline(always)]
+pub fn add(a: u32, b: u32) -> u32 {
+    let s = a as u64 + b as u64;
+    if s >= Q64 { (s - Q64) as u32 } else { s as u32 }
+}
+
+/// `(a - b) mod q`.
+#[inline(always)]
+pub fn sub(a: u32, b: u32) -> u32 {
+    if a >= b { a - b } else { (a as u64 + Q64 - b as u64) as u32 }
+}
+
+/// `(a * b) mod q`.
+#[inline(always)]
+pub fn mul(a: u32, b: u32) -> u32 {
+    ((a as u64 * b as u64) % Q64) as u32
+}
+
+/// `-a mod q`.
+#[inline(always)]
+pub fn neg(a: u32) -> u32 {
+    if a == 0 { 0 } else { Q - a }
+}
+
+/// `a^e mod q` by square-and-multiply.
+pub fn pow(mut a: u32, mut e: u64) -> u32 {
+    let mut acc: u32 = 1;
+    while e > 0 {
+        if e & 1 == 1 {
+            acc = mul(acc, a);
+        }
+        a = mul(a, a);
+        e >>= 1;
+    }
+    acc
+}
+
+/// Multiplicative inverse via Fermat (`a^(q-2)`); panics on zero.
+pub fn inv(a: u32) -> u32 {
+    assert!(a != 0, "zero has no inverse in F_q");
+    pow(a, Q64 - 2)
+}
+
+/// Embed a signed integer into the field: φ(v) = v for v ≥ 0, q + v for
+/// v < 0 (paper eq. 17). `|v|` must be < q.
+#[inline(always)]
+pub fn phi(v: i64) -> u32 {
+    debug_assert!(v.unsigned_abs() < Q64);
+    if v >= 0 { v as u32 } else { (Q64 as i64 + v) as u32 }
+}
+
+/// Inverse of [`phi`]: field element → signed integer, mapping the upper
+/// half of the field to negatives (paper eq. 23).
+#[inline(always)]
+pub fn phi_inv(x: u32) -> i64 {
+    debug_assert!(x < Q);
+    if x as u64 > Q64 / 2 { x as i64 - Q64 as i64 } else { x as i64 }
+}
+
+/// Reduce an arbitrary u64 into the field.
+#[inline(always)]
+pub fn reduce64(x: u64) -> u32 {
+    (x % Q64) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop;
+
+    #[test]
+    fn constants() {
+        assert_eq!(Q as u64, (1u64 << 32) - 5);
+    }
+
+    #[test]
+    fn add_sub_roundtrip() {
+        prop(2000, |rng| {
+            let a = rng.next_u32() % Q;
+            let b = rng.next_u32() % Q;
+            assert_eq!(sub(add(a, b), b), a);
+            assert_eq!(add(sub(a, b), b), a);
+        });
+    }
+
+    #[test]
+    fn add_commutative_associative() {
+        prop(2000, |rng| {
+            let (a, b, c) =
+                (rng.next_u32() % Q, rng.next_u32() % Q, rng.next_u32() % Q);
+            assert_eq!(add(a, b), add(b, a));
+            assert_eq!(add(add(a, b), c), add(a, add(b, c)));
+        });
+    }
+
+    #[test]
+    fn mul_distributes_over_add() {
+        prop(2000, |rng| {
+            let (a, b, c) =
+                (rng.next_u32() % Q, rng.next_u32() % Q, rng.next_u32() % Q);
+            assert_eq!(mul(a, add(b, c)), add(mul(a, b), mul(a, c)));
+        });
+    }
+
+    #[test]
+    fn neg_is_additive_inverse() {
+        prop(2000, |rng| {
+            let a = rng.next_u32() % Q;
+            assert_eq!(add(a, neg(a)), 0);
+        });
+    }
+
+    #[test]
+    fn inv_is_multiplicative_inverse() {
+        prop(500, |rng| {
+            let a = 1 + rng.next_u32() % (Q - 1);
+            assert_eq!(mul(a, inv(a)), 1);
+        });
+    }
+
+    #[test]
+    fn pow_matches_repeated_mul() {
+        let a = 1234567u32;
+        let mut acc = 1u32;
+        for e in 0..20u64 {
+            assert_eq!(pow(a, e), acc);
+            acc = mul(acc, a);
+        }
+    }
+
+    #[test]
+    fn phi_roundtrip() {
+        prop(2000, |rng| {
+            let v = (rng.next_u32() as i64 % 1_000_000_007)
+                * if rng.next_u32() & 1 == 0 { 1 } else { -1 };
+            assert_eq!(phi_inv(phi(v)), v);
+        });
+        assert_eq!(phi(0), 0);
+        assert_eq!(phi(-1), Q - 1);
+        assert_eq!(phi_inv(Q - 1), -1);
+    }
+
+    #[test]
+    fn phi_is_additive_hom() {
+        // φ(a) + φ(b) ≡ φ(a + b): the property that makes masked
+        // aggregation recover signed sums.
+        prop(2000, |rng| {
+            let a = rng.next_u32() as i64 % 1_000_000 - 500_000;
+            let b = rng.next_u32() as i64 % 1_000_000 - 500_000;
+            assert_eq!(add(phi(a), phi(b)), phi(a + b));
+        });
+    }
+
+    #[test]
+    fn edge_values() {
+        assert_eq!(add(Q - 1, 1), 0);
+        assert_eq!(add(Q - 1, Q - 1), Q - 2);
+        assert_eq!(sub(0, 1), Q - 1);
+        assert_eq!(mul(Q - 1, Q - 1), 1); // (-1)^2
+    }
+}

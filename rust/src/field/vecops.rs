@@ -1,0 +1,128 @@
+//! Vectorized field operations on `&[u32]` slices — the L3 hot loops.
+//!
+//! These run once per user per round over `d`-length vectors, so they are
+//! written branch-free using `2^32 ≡ 5 (mod q)` (wrapping add, +5 carry
+//! repair, one conditional subtract) to let LLVM auto-vectorize.
+
+use super::Q;
+
+/// `acc[i] = (acc[i] + x[i]) mod q`, element-wise.
+#[inline]
+pub fn add_assign(acc: &mut [u32], x: &[u32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, &b) in acc.iter_mut().zip(x) {
+        let (mut s, carry) = a.overflowing_add(b);
+        s = s.wrapping_add(if carry { 5 } else { 0 });
+        *a = if s >= Q { s - Q } else { s };
+    }
+}
+
+/// `acc[i] = (acc[i] - x[i]) mod q`, element-wise.
+#[inline]
+pub fn sub_assign(acc: &mut [u32], x: &[u32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, &b) in acc.iter_mut().zip(x) {
+        let (mut s, borrow) = a.overflowing_sub(b);
+        // On borrow the true value is s − 2^32 ≡ s − 5 (mod q).
+        s = s.wrapping_sub(if borrow { 5 } else { 0 });
+        *a = if s >= Q { s - Q } else { s };
+    }
+}
+
+/// Sparse add: `acc[idx] += val mod q` over (index, value) pairs.
+#[inline]
+pub fn add_assign_at(acc: &mut [u32], entries: impl Iterator<Item = (u32, u32)>) {
+    for (i, v) in entries {
+        acc[i as usize] = super::add(acc[i as usize], v);
+    }
+}
+
+/// Element-wise `out[i] = (a[i] + b[i]) mod q` into a fresh vector.
+pub fn add(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut out = a.to_vec();
+    add_assign(&mut out, b);
+    out
+}
+
+/// Negate in place: `x[i] = -x[i] mod q`.
+pub fn neg_assign(x: &mut [u32]) {
+    for v in x.iter_mut() {
+        *v = if *v == 0 { 0 } else { Q - *v };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field;
+    use crate::testutil::prop;
+
+    fn rand_vec(rng: &mut crate::prg::ChaCha20Rng, n: usize) -> Vec<u32> {
+        (0..n).map(|_| rng.next_u32() % Q).collect()
+    }
+
+    #[test]
+    fn add_assign_matches_scalar() {
+        prop(200, |rng| {
+            let n = 1 + (rng.next_u32() as usize % 257);
+            let a = rand_vec(rng, n);
+            let b = rand_vec(rng, n);
+            let mut got = a.clone();
+            add_assign(&mut got, &b);
+            for i in 0..n {
+                assert_eq!(got[i], field::add(a[i], b[i]));
+            }
+        });
+    }
+
+    #[test]
+    fn sub_assign_matches_scalar() {
+        prop(200, |rng| {
+            let n = 1 + (rng.next_u32() as usize % 257);
+            let a = rand_vec(rng, n);
+            let b = rand_vec(rng, n);
+            let mut got = a.clone();
+            sub_assign(&mut got, &b);
+            for i in 0..n {
+                assert_eq!(got[i], field::sub(a[i], b[i]));
+            }
+        });
+    }
+
+    #[test]
+    fn add_then_sub_identity() {
+        prop(100, |rng| {
+            let n = 64;
+            let a = rand_vec(rng, n);
+            let b = rand_vec(rng, n);
+            let mut x = a.clone();
+            add_assign(&mut x, &b);
+            sub_assign(&mut x, &b);
+            assert_eq!(x, a);
+        });
+    }
+
+    #[test]
+    fn carry_repair_at_extremes() {
+        // Values that force the wrapping-add carry path.
+        let mut a = vec![Q - 1, Q - 1, 0, 1, Q - 2];
+        let b = vec![Q - 1, 1, 0, Q - 1, Q - 3];
+        let want: Vec<u32> = a.iter().zip(&b)
+            .map(|(&x, &y)| field::add(x, y)).collect();
+        add_assign(&mut a, &b);
+        assert_eq!(a, want);
+    }
+
+    #[test]
+    fn neg_assign_cancels() {
+        prop(100, |rng| {
+            let n = 64;
+            let a = rand_vec(rng, n);
+            let mut b = a.clone();
+            neg_assign(&mut b);
+            let mut s = a.clone();
+            add_assign(&mut s, &b);
+            assert!(s.iter().all(|&v| v == 0));
+        });
+    }
+}

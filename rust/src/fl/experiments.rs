@@ -1,0 +1,108 @@
+//! Shared experiment drivers for the paper's training figures
+//! (Figs. 3, 5, 6): run the same federated workload under SparseSecAgg
+//! and the SecAgg baseline to a target accuracy, and report the
+//! comm/wall-clock comparison rows the paper plots.
+
+use super::{run_fl, FlConfig, FlRun, Trainer};
+use crate::coordinator::ProtocolKind;
+use crate::metrics::Table;
+use anyhow::Result;
+
+/// Result of one protocol arm.
+pub struct Arm {
+    pub name: &'static str,
+    pub run: FlRun,
+}
+
+impl Arm {
+    /// Cumulative upload bytes when the target was reached (or at end).
+    pub fn comm_to_target(&self) -> usize {
+        self.run
+            .history
+            .last()
+            .map(|r| r.cum_total_up_bytes)
+            .unwrap_or(0)
+    }
+
+    pub fn time_to_target(&self) -> f64 {
+        self.run.history.last().map(|r| r.cum_sim_time_s).unwrap_or(0.0)
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.run.history.len()
+    }
+}
+
+/// Run both protocol arms on an identical workload.
+pub fn compare_protocols(cfg: &FlConfig, trainer: &Trainer)
+                         -> Result<(Arm, Arm)> {
+    let sparse = run_fl(
+        &FlConfig { protocol: ProtocolKind::Sparse, ..cfg.clone() },
+        trainer)?;
+    let secagg = run_fl(
+        &FlConfig { protocol: ProtocolKind::SecAgg, ..cfg.clone() },
+        trainer)?;
+    Ok((
+        Arm { name: "SparseSecAgg", run: sparse },
+        Arm { name: "SecAgg", run: secagg },
+    ))
+}
+
+/// The three-panel summary the paper's training figures report:
+/// (a) total comm to target, (b) accuracy-vs-round, (c) wall clock.
+pub fn render_comparison(title: &str, spa: &Arm, sec: &Arm,
+                         target: Option<f64>) -> String {
+    let mut out = String::new();
+
+    let mut a = Table::new(
+        &format!("{title} (a) — communication & (c) wall clock to \
+                  {}", match target {
+            Some(t) => format!("{:.0}% accuracy", t * 100.0),
+            None => "end of run".into(),
+        }),
+        &["protocol", "rounds", "total upload MB", "sim wall clock s",
+          "final acc"],
+    );
+    for arm in [spa, sec] {
+        a.row(&[
+            arm.name.into(),
+            format!("{}{}", arm.rounds(),
+                    if arm.run.reached_target_at.is_some() { "" }
+                    else { " (cap)" }),
+            format!("{:.2}", arm.comm_to_target() as f64 / 1e6),
+            format!("{:.1}", arm.time_to_target()),
+            format!("{:.3}", arm.run.final_accuracy),
+        ]);
+    }
+    a.row(&[
+        "reduction".into(),
+        "-".into(),
+        format!("{:.1}x", sec.comm_to_target() as f64
+                / spa.comm_to_target().max(1) as f64),
+        format!("{:.2}x", sec.time_to_target()
+                / spa.time_to_target().max(1e-9)),
+        "-".into(),
+    ]);
+    out.push_str(&a.render());
+
+    let mut b = Table::new(
+        &format!("{title} (b) — test accuracy vs round"),
+        &["round", "SparseSecAgg", "SecAgg"],
+    );
+    let rounds = spa.rounds().max(sec.rounds());
+    for r in 0..rounds {
+        let f = |arm: &Arm| {
+            arm.run
+                .history
+                .get(r)
+                .map(|x| {
+                    if x.test_acc.is_nan() { "-".into() }
+                    else { format!("{:.3}", x.test_acc) }
+                })
+                .unwrap_or_else(|| "done".into())
+        };
+        b.row(&[r.to_string(), f(spa), f(sec)]);
+    }
+    out.push_str(&b.render());
+    out
+}

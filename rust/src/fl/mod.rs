@@ -1,0 +1,262 @@
+//! Federated-learning driver: local training via the L2 HLO artifacts,
+//! secure aggregation via the L3 protocols, evaluation, and the
+//! round-by-round history that the paper's training figures are drawn
+//! from (Figs. 3, 5, 6).
+
+pub mod experiments;
+pub mod trainer;
+
+use crate::coordinator::{Coordinator, ProtocolKind};
+use crate::data::{self, Dataset, DatasetKind, UserShard};
+use crate::network::draw_dropouts;
+use crate::protocol::Params;
+use anyhow::Result;
+use std::time::Instant;
+pub use trainer::Trainer;
+
+/// Full configuration of a federated training run.
+#[derive(Clone, Debug)]
+pub struct FlConfig {
+    /// Architecture name from the manifest (`mlp`, `cnn_mnist_small`, …).
+    pub model: String,
+    pub protocol: ProtocolKind,
+    /// N users.
+    pub users: usize,
+    /// Max global rounds J/E.
+    pub rounds: usize,
+    /// Local epochs E (paper: 5).
+    pub local_epochs: usize,
+    /// Compression ratio α (paper default 0.1).
+    pub alpha: f64,
+    /// Dropout rate θ (paper stress setting 0.3).
+    pub theta: f64,
+    /// Quantization level c.
+    pub c: f32,
+    pub lr: f32,
+    /// SGD momentum (paper: 0.5).
+    pub momentum: f32,
+    /// IID vs non-IID sharding.
+    pub iid: bool,
+    pub samples_per_user: usize,
+    pub test_samples: usize,
+    /// Stop early at this test accuracy (fraction), if set.
+    pub target_accuracy: Option<f64>,
+    /// Evaluate every k rounds.
+    pub eval_every: usize,
+    /// Route MaskedInput through the L1 HLO quantmask kernel instead of
+    /// the (bit-identical) native path.
+    pub use_hlo_quantmask: bool,
+    /// Per-round client sampling fraction (paper §II: user selection is
+    /// complementary to sparsification; 1.0 = everyone participates).
+    /// Unsampled users are handled by the dropout machinery.
+    pub participation: f64,
+    /// Differential-privacy composition (§II, ref. [17]): if set, each
+    /// user clips to `dp_clip` and adds Gaussian noise calibrated to
+    /// (ε, δ=1e-5) *reduced by √T* thanks to secure aggregation.
+    pub dp_epsilon: Option<f64>,
+    pub dp_clip: f64,
+    pub seed: u64,
+    pub artifacts_dir: String,
+}
+
+impl Default for FlConfig {
+    fn default() -> Self {
+        FlConfig {
+            model: "cnn_mnist_small".into(),
+            protocol: ProtocolKind::Sparse,
+            users: 10,
+            rounds: 30,
+            local_epochs: 5,
+            alpha: 0.1,
+            theta: 0.3,
+            c: 1024.0,
+            lr: 0.01,
+            momentum: 0.5,
+            iid: true,
+            samples_per_user: 100,
+            test_samples: 400,
+            target_accuracy: None,
+            eval_every: 1,
+            use_hlo_quantmask: false,
+            participation: 1.0,
+            dp_epsilon: None,
+            dp_clip: 1.0,
+            seed: 42,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+/// One row of training history.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    pub mean_local_loss: f32,
+    /// Test accuracy (fraction); NaN on non-eval rounds.
+    pub test_acc: f64,
+    pub dropped: usize,
+    /// Worst-case per-user upload this round (Table I statistic).
+    pub max_up_bytes: usize,
+    pub total_up_bytes: usize,
+    pub cum_total_up_bytes: usize,
+    /// Simulated wall clock for this round / cumulative.
+    pub sim_time_s: f64,
+    pub cum_sim_time_s: f64,
+}
+
+/// A completed run.
+pub struct FlRun {
+    pub history: Vec<RoundRecord>,
+    pub reached_target_at: Option<usize>,
+    pub final_accuracy: f64,
+}
+
+/// Drive a full federated training run.
+pub fn run_fl(cfg: &FlConfig, trainer: &Trainer) -> Result<FlRun> {
+    let m = &trainer.m;
+    anyhow::ensure!(m.name == cfg.model, "trainer/model mismatch");
+    let kind = DatasetKind::for_input(&m.input);
+    let n = cfg.users;
+
+    // Data: equal shards => β_i = 1/N (paper §VII).
+    let train = Dataset::synthetic_split(
+        kind, cfg.samples_per_user * n, cfg.seed, cfg.seed);
+    let test = Dataset::synthetic_split(
+        kind, cfg.test_samples, cfg.seed, cfg.seed ^ 0x7e57);
+    let shards: Vec<UserShard> = if cfg.iid {
+        data::partition_iid(train.n, n, cfg.seed)
+    } else {
+        // Scale the McMahan 300-shard scheme to any N: 2 shards/user
+        // keeps the ≤2-classes-per-shard skew at every N.
+        let shards = if 300 % n == 0 { 300 } else { 2 * n };
+        data::partition_noniid(&train.labels, n, shards, cfg.seed)
+    };
+    let betas = vec![1.0 / n as f64; n];
+
+    let params = Params {
+        n,
+        d: m.d,
+        alpha: if cfg.protocol == ProtocolKind::Sparse { cfg.alpha } else { 1.0 },
+        theta: cfg.theta,
+        c: cfg.c,
+    };
+    let mut coord = match cfg.protocol {
+        ProtocolKind::Sparse => Coordinator::new_sparse(params, cfg.seed),
+        ProtocolKind::SecAgg => Coordinator::new_secagg(params, cfg.seed),
+    };
+
+    let mut global = trainer.init_params(cfg.seed ^ 0x1417);
+    let mut history = Vec::new();
+    let mut cum_bytes = 0usize;
+    let mut cum_time = 0f64;
+    let mut reached = None;
+    let mut final_acc = 0.0;
+
+    // DP noise calibration uses the Thm-2 privacy guarantee T with the
+    // conservative γ = 1/3 colluder bound.
+    let dp = cfg.dp_epsilon.map(|eps| {
+        let t_guarantee = crate::metrics::theoretical_t(
+            cfg.alpha, cfg.theta, 1.0 / 3.0, n).max(1.0);
+        (crate::protocol::dp::DpConfig {
+            epsilon: eps, delta: 1e-5, clip_norm: cfg.dp_clip,
+        }, t_guarantee)
+    });
+
+    for round in 0..cfg.rounds {
+        let mut dropped =
+            draw_dropouts(n, cfg.theta, round as u32, cfg.seed, true);
+        // Client sampling (complementary user selection, §II): unsampled
+        // users sit the round out through the dropout machinery.
+        if cfg.participation < 1.0 {
+            let mut rng = crate::prg::ChaCha20Rng::from_seed_u64(
+                cfg.seed ^ 0x5a3f ^ (round as u64) << 32);
+            for u in 0..n {
+                if !dropped.contains(&u)
+                    && (rng.next_f32() as f64) >= cfg.participation
+                    && n - dropped.len() > n / 2 + 1
+                {
+                    dropped.push(u);
+                }
+            }
+        }
+        let w_flat = trainer.flatten(&global);
+
+        // --- local training (devices run in parallel in the field: the
+        // simulated compute time is the max over users, measured).
+        let mut ys: Vec<Vec<f32>> = vec![Vec::new(); n];
+        let mut max_train_s = 0f64;
+        let mut loss_sum = 0f32;
+        let mut loss_cnt = 0usize;
+        for u in 0..n {
+            if dropped.contains(&u) {
+                ys[u] = vec![0f32; m.d];
+                continue;
+            }
+            let t0 = Instant::now();
+            let (local, loss) = trainer.local_train(
+                &global, &train, &shards[u], cfg.local_epochs, cfg.lr,
+                cfg.momentum, cfg.seed ^ ((round as u64) << 20) ^ u as u64)?;
+            max_train_s = max_train_s.max(t0.elapsed().as_secs_f64());
+            loss_sum += loss;
+            loss_cnt += 1;
+            // y_i = w_global − w_local  (Σ of lr-weighted local grads).
+            let local_flat = trainer.flatten(&local);
+            let mut y: Vec<f32> = w_flat.iter().zip(&local_flat)
+                .map(|(a, b)| a - b).collect();
+            if let Some((dp_cfg, t_guarantee)) = &dp {
+                let mut rng = crate::prg::ChaCha20Rng::from_seed_u64(
+                    cfg.seed ^ 0xd9 ^ (round as u64) << 24 ^ u as u64);
+                crate::protocol::dp::privatize(
+                    &mut y, dp_cfg, *t_guarantee, &mut rng);
+            }
+            ys[u] = y;
+        }
+
+        // --- secure aggregation round.
+        let (agg, mut ledger) = if cfg.use_hlo_quantmask {
+            coord.run_round_hlo(round as u32, &ys, &betas, &dropped,
+                                trainer.quantmask()?)?
+        } else {
+            coord.run_round(round as u32, &ys, &betas, &dropped)?
+        };
+        ledger.client_compute_s += max_train_s;
+
+        // --- global update: w ← w − Σ β_i y_i (eq. 23).
+        let mut new_flat = w_flat;
+        for (w, g) in new_flat.iter_mut().zip(&agg) {
+            *w -= g;
+        }
+        global = trainer.unflatten(&new_flat);
+
+        // --- eval + record.
+        let acc = if round % cfg.eval_every == 0 || round + 1 == cfg.rounds {
+            let (a, _l) = trainer.evaluate(&global, &test)?;
+            final_acc = a;
+            a
+        } else {
+            f64::NAN
+        };
+        cum_bytes += ledger.total_up();
+        cum_time += ledger.wall_clock_s();
+        history.push(RoundRecord {
+            round,
+            mean_local_loss: loss_sum / loss_cnt.max(1) as f32,
+            test_acc: acc,
+            dropped: dropped.len(),
+            max_up_bytes: ledger.max_up(),
+            total_up_bytes: ledger.total_up(),
+            cum_total_up_bytes: cum_bytes,
+            sim_time_s: ledger.wall_clock_s(),
+            cum_sim_time_s: cum_time,
+        });
+
+        if let Some(target) = cfg.target_accuracy {
+            if acc.is_finite() && acc >= target {
+                reached = Some(round);
+                break;
+            }
+        }
+    }
+
+    Ok(FlRun { history, reached_target_at: reached, final_accuracy: final_acc })
+}

@@ -1,0 +1,195 @@
+//! Client-side trainer backed by the L2 HLO artifacts.
+//!
+//! Loads `local_step_<model>` and `eval_<model>` once, then executes them
+//! per minibatch — Python never runs here. Parameters live as flat f32
+//! tensors in manifest order; [`Trainer::flatten`]/[`Trainer::unflatten`]
+//! move between the per-tensor and the protocol's d-vector views.
+
+use crate::data::{Dataset, UserShard};
+use crate::prg::ChaCha20Rng;
+use crate::runtime::{lit, Executable, Manifest, ModelManifest, QuantMask,
+                     Runtime};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+pub struct Trainer {
+    pub rt: Runtime,
+    local_step: Executable,
+    eval: Executable,
+    quantmask: Option<QuantMask>,
+    pub m: ModelManifest,
+}
+
+impl Trainer {
+    /// Load and compile a model's artifacts. `with_quantmask` also
+    /// compiles the L1 kernel artifact (needed for the HLO upload path).
+    pub fn load(artifacts_dir: &str, model: &str, with_quantmask: bool)
+                -> Result<Trainer> {
+        let rt = Runtime::cpu()?;
+        let manifest = Manifest::load(Path::new(artifacts_dir))?;
+        let m = manifest.model(model)?.clone();
+        let local_step = rt.load(&m.artifact_path("local_step")?)?;
+        let eval = rt.load(&m.artifact_path("eval")?)?;
+        let quantmask = if with_quantmask {
+            Some(QuantMask::load(&rt, &m)?)
+        } else {
+            None
+        };
+        Ok(Trainer { rt, local_step, eval, quantmask, m })
+    }
+
+    pub fn quantmask(&self) -> Result<&QuantMask> {
+        self.quantmask.as_ref().context(
+            "trainer loaded without the quantmask artifact \
+             (pass with_quantmask=true)")
+    }
+
+    /// Glorot-uniform init (same scheme as `model.init_params` on the
+    /// Python side), deterministic in `seed`.
+    pub fn init_params(&self, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = ChaCha20Rng::from_seed_u64(seed);
+        self.m
+            .params
+            .iter()
+            .map(|(name, shape)| {
+                let n: usize = shape.iter().product();
+                if name.ends_with("_b") {
+                    vec![0f32; n]
+                } else {
+                    let fan_in: usize =
+                        shape[..shape.len() - 1].iter().product();
+                    let fan_out = shape[shape.len() - 1];
+                    let lim =
+                        (6.0 / (fan_in + fan_out) as f32).sqrt();
+                    (0..n)
+                        .map(|_| (rng.next_f32() * 2.0 - 1.0) * lim)
+                        .collect()
+                }
+            })
+            .collect()
+    }
+
+    /// Concatenate tensors into the protocol's d-vector.
+    pub fn flatten(&self, params: &[Vec<f32>]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.m.d);
+        for p in params {
+            out.extend_from_slice(p);
+        }
+        out
+    }
+
+    /// Inverse of [`Self::flatten`].
+    pub fn unflatten(&self, flat: &[f32]) -> Vec<Vec<f32>> {
+        assert_eq!(flat.len(), self.m.d);
+        let mut out = Vec::with_capacity(self.m.params.len());
+        let mut off = 0;
+        for k in 0..self.m.params.len() {
+            let n = self.m.param_len(k);
+            out.push(flat[off..off + n].to_vec());
+            off += n;
+        }
+        out
+    }
+
+    fn param_literals(&self, params: &[Vec<f32>]) -> Result<Vec<xla::Literal>> {
+        params
+            .iter()
+            .zip(&self.m.params)
+            .map(|(p, (_, shape))| {
+                let dims: Vec<i64> =
+                    shape.iter().map(|&v| v as i64).collect();
+                lit::f32_tensor(p, &dims)
+            })
+            .collect()
+    }
+
+    /// E local epochs of SGD+momentum over the user's shard (eq. 2).
+    /// Returns (updated params, last minibatch loss).
+    pub fn local_train(&self, params: &[Vec<f32>], data: &Dataset,
+                       shard: &UserShard, epochs: usize, lr: f32,
+                       momentum: f32, seed: u64)
+                       -> Result<(Vec<Vec<f32>>, f32)> {
+        let b = self.m.batch;
+        let sample_len = data.sample_len();
+        anyhow::ensure!(!shard.indices.is_empty(), "empty shard");
+
+        let mut cur = params.to_vec();
+        let mut mom: Vec<Vec<f32>> =
+            params.iter().map(|p| vec![0f32; p.len()]).collect();
+        let mut rng = ChaCha20Rng::from_seed_u64(seed);
+        let mut order: Vec<u32> = shard.indices.clone();
+        let mut loss = 0f32;
+
+        let nk = self.m.params.len();
+        let steps_per_epoch = shard.indices.len().div_ceil(b);
+        for _e in 0..epochs {
+            // reshuffle each epoch
+            for i in (1..order.len()).rev() {
+                let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+                order.swap(i, j);
+            }
+            for s in 0..steps_per_epoch {
+                let mut x = Vec::with_capacity(b * sample_len);
+                let mut y = Vec::with_capacity(b);
+                for k in 0..b {
+                    // wrap around so every batch is full (static shapes)
+                    let idx =
+                        order[(s * b + k) % order.len()] as usize;
+                    x.extend_from_slice(data.image(idx));
+                    y.push(data.labels[idx]);
+                }
+                let mut inputs = self.param_literals(&cur)?;
+                inputs.extend(self.param_literals(&mom)?);
+                let (h, w, c) = data.kind.shape();
+                inputs.push(lit::f32_tensor(
+                    &x, &[b as i64, h as i64, w as i64, c as i64])?);
+                inputs.push(lit::i32_tensor(&y, &[b as i64])?);
+                inputs.push(lit::f32_scalar(lr));
+                inputs.push(lit::f32_scalar(momentum));
+
+                let out = self.local_step.run(&inputs)?;
+                anyhow::ensure!(out.len() == 2 * nk + 1,
+                                "local_step returned {} outputs", out.len());
+                for k in 0..nk {
+                    cur[k] = lit::to_f32(&out[k])?;
+                    mom[k] = lit::to_f32(&out[nk + k])?;
+                }
+                loss = out[2 * nk]
+                    .to_vec::<f32>()
+                    .map(|v| v[0])
+                    .unwrap_or(f32::NAN);
+            }
+        }
+        Ok((cur, loss))
+    }
+
+    /// Test accuracy + mean loss over full eval batches of `test`.
+    pub fn evaluate(&self, params: &[Vec<f32>], test: &Dataset)
+                    -> Result<(f64, f64)> {
+        let eb = self.m.eval_batch;
+        let batches = test.n / eb;
+        anyhow::ensure!(batches > 0,
+                        "test set smaller than eval_batch {eb}");
+        let sample_len = test.sample_len();
+        let (h, w, c) = test.kind.shape();
+        let mut correct = 0i64;
+        let mut loss_sum = 0f64;
+        for bidx in 0..batches {
+            let mut x = Vec::with_capacity(eb * sample_len);
+            let mut y = Vec::with_capacity(eb);
+            for k in 0..eb {
+                let idx = bidx * eb + k;
+                x.extend_from_slice(test.image(idx));
+                y.push(test.labels[idx]);
+            }
+            let mut inputs = self.param_literals(params)?;
+            inputs.push(lit::f32_tensor(
+                &x, &[eb as i64, h as i64, w as i64, c as i64])?);
+            inputs.push(lit::i32_tensor(&y, &[eb as i64])?);
+            let out = self.eval.run(&inputs)?;
+            correct += lit::to_i32(&out[0])?[0] as i64;
+            loss_sum += lit::to_f32(&out[1])?[0] as f64;
+        }
+        Ok((correct as f64 / (batches * eb) as f64, loss_sum / batches as f64))
+    }
+}

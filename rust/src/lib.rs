@@ -1,0 +1,38 @@
+//! # SparseSecAgg
+//!
+//! Production-shaped reproduction of *“Sparsified Secure Aggregation for
+//! Privacy-Preserving Federated Learning”* (Ergün, Sami, Güler, 2021).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the secure-aggregation protocol (SparseSecAgg and
+//!   the Bonawitz et al. SecAgg baseline), its cryptographic substrates
+//!   (finite field, ChaCha20 PRG, Diffie–Hellman, Shamir secret sharing),
+//!   a simulated bandwidth-limited network, the federated-learning round
+//!   driver, and all metrics.
+//! * **L2 (JAX, build time)** — client model forward/backward, lowered once
+//!   to HLO text by `python/compile/aot.py`.
+//! * **L1 (Pallas, build time)** — the fused quantize→φ→mask→select kernel
+//!   and the MXU-tiled matmul, lowered into the same HLO artifacts.
+//!
+//! At runtime Python is never on the path: [`runtime`] loads
+//! `artifacts/*.hlo.txt` through the PJRT CPU client and the coordinator
+//! drives everything from Rust.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dh;
+pub mod field;
+pub mod fl;
+pub mod masking;
+pub mod metrics;
+pub mod network;
+pub mod prg;
+pub mod protocol;
+pub mod quantize;
+pub mod runtime;
+pub mod shamir;
+pub mod sparsify;
+pub mod testutil;

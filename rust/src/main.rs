@@ -1,0 +1,202 @@
+//! `sparsesecagg` — launcher CLI for the SparseSecAgg reproduction.
+//!
+//! Subcommands:
+//!   run      — full federated training run (config file + overrides)
+//!   comm     — per-round communication measurement (Table I)
+//!   privacy  — privacy guarantee T and revealed-% (Fig. 4)
+//!   overlap  — rand-K/top-K overlap demo (Fig. 2 mechanics)
+//!   inspect  — list models/artifacts from the manifest
+//!
+//! Examples:
+//!   sparsesecagg run --config configs/mnist_iid.cfg --users 10
+//!   sparsesecagg comm --users 100 --alpha 0.1
+//!   sparsesecagg privacy --users 100 --gamma 0.333 --theta 0.3
+
+use anyhow::Result;
+use sparsesecagg::cli::Args;
+use sparsesecagg::config::Config;
+use sparsesecagg::coordinator::Coordinator;
+use sparsesecagg::fl::{run_fl, Trainer};
+use sparsesecagg::metrics::{self, fmt_bytes, Table};
+use sparsesecagg::prg::ChaCha20Rng;
+use sparsesecagg::protocol::Params;
+use sparsesecagg::runtime::Manifest;
+use sparsesecagg::sparsify;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("comm") => cmd_comm(&args),
+        Some("privacy") => cmd_privacy(&args),
+        Some("overlap") => cmd_overlap(&args),
+        Some("inspect") => cmd_inspect(&args),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand: {o}\n");
+            }
+            eprintln!(
+                "usage: sparsesecagg <run|comm|privacy|overlap|inspect> \
+                 [--key value]..."
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::default(),
+    };
+    // every other --flag overrides the config
+    let overrides: std::collections::HashMap<String, String> = args
+        .flags
+        .iter()
+        .filter(|(k, _)| k.as_str() != "config")
+        .map(|(k, v)| (k.clone(), v.clone()))
+        .collect();
+    cfg.merge(&overrides);
+    let fl = cfg.to_fl_config()?;
+    println!("# SparseSecAgg federated training");
+    println!("# {fl:?}");
+    let trainer =
+        Trainer::load(&fl.artifacts_dir, &fl.model, fl.use_hlo_quantmask)?;
+    let run = run_fl(&fl, &trainer)?;
+
+    let mut t = Table::new(
+        &format!("training history ({:?}, α={}, θ={})", fl.protocol,
+                 fl.alpha, fl.theta),
+        &["round", "loss", "test_acc", "dropped", "max_up/user",
+          "cum_up_total", "sim_s"],
+    );
+    for r in &run.history {
+        t.row(&[
+            r.round.to_string(),
+            format!("{:.4}", r.mean_local_loss),
+            if r.test_acc.is_nan() { "-".into() }
+            else { format!("{:.3}", r.test_acc) },
+            r.dropped.to_string(),
+            fmt_bytes(r.max_up_bytes),
+            fmt_bytes(r.cum_total_up_bytes),
+            format!("{:.2}", r.cum_sim_time_s),
+        ]);
+    }
+    println!("{}", t.render());
+    match run.reached_target_at {
+        Some(r) => println!("reached target accuracy at round {r}"),
+        None => println!("final accuracy: {:.3}", run.final_accuracy),
+    }
+    Ok(())
+}
+
+fn cmd_comm(args: &Args) -> Result<()> {
+    let d = args.parse_flag("d", 170_542usize)?; // CIFAR arch (Table I)
+    let alpha = args.parse_flag("alpha", 0.1f64)?;
+    let theta = args.parse_flag("theta", 0.0f64)?;
+    let users: Vec<usize> = match args.get("users") {
+        Some(v) => vec![v.parse()?],
+        None => vec![25, 50, 75, 100],
+    };
+    let mut t = Table::new(
+        &format!("per-user upload per round, d={d}, α={alpha} (cf. Table I)"),
+        &["N", "SecAgg", "SparseSecAgg", "ratio"],
+    );
+    for &n in &users {
+        let params = Params { n, d, alpha, theta, c: 1024.0 };
+        let ys: Vec<Vec<f32>> = vec![vec![0.01; d]; n];
+        let betas = vec![1.0 / n as f64; n];
+        let mut sec = Coordinator::new_secagg(params, 1);
+        let (_, l_sec) = sec.run_round(0, &ys, &betas, &[])?;
+        let mut spa = Coordinator::new_sparse(params, 1);
+        let (_, l_spa) = spa.run_round(0, &ys, &betas, &[])?;
+        t.row(&[
+            n.to_string(),
+            fmt_bytes(l_sec.max_up()),
+            fmt_bytes(l_spa.max_up()),
+            format!("{:.1}x", l_sec.max_up() as f64 / l_spa.max_up() as f64),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_privacy(args: &Args) -> Result<()> {
+    let n = args.parse_flag("users", 100usize)?;
+    let d = args.parse_flag("d", 20_000usize)?;
+    let gamma = args.parse_flag("gamma", 1.0 / 3.0)?;
+    let theta = args.parse_flag("theta", 0.3f64)?;
+    let rounds = args.parse_flag("rounds", 5u32)?;
+    let mut t = Table::new(
+        &format!("privacy vs α (N={n}, γ={gamma:.3}, θ={theta}; Fig. 4)"),
+        &["alpha", "T_measured", "T_theory", "revealed_%"],
+    );
+    for &alpha in &[0.02, 0.05, 0.1, 0.2, 0.3, 0.5] {
+        let params = Params { n, d, alpha, theta, c: 1024.0 };
+        let mut coord = Coordinator::new_sparse(params, 7);
+        let honest = coord.honest_mask(gamma);
+        let betas = vec![1.0 / n as f64; n];
+        let ys: Vec<Vec<f32>> = vec![vec![0.01; d]; n];
+        let (mut t_sum, mut rev_sum) = (0.0, 0.0);
+        for r in 0..rounds {
+            let dropped = sparsesecagg::network::draw_dropouts(
+                n, theta, r, 7, true);
+            coord.run_round(r, &ys, &betas, &dropped)?;
+            let sample = metrics::privacy_histogram(
+                d, coord.sparse_upload_indices().unwrap(), &honest);
+            t_sum += sample.mean_t();
+            rev_sum += sample.revealed_pct();
+        }
+        t.row(&[
+            format!("{alpha}"),
+            format!("{:.2}", t_sum / rounds as f64),
+            format!("{:.2}", metrics::theoretical_t(alpha, theta, gamma, n)),
+            format!("{:.3}", rev_sum / rounds as f64),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_overlap(args: &Args) -> Result<()> {
+    let n = args.parse_flag("users", 30usize)?;
+    let d = args.parse_flag("d", 28_000usize)?;
+    let k = d / 10;
+    let mut rng = ChaCha20Rng::from_seed_u64(3);
+    let sels: Vec<Vec<u32>> =
+        (0..n).map(|_| sparsify::rand_k(d, k, &mut rng)).collect();
+    let (mean, sd) = sparsify::pairwise_overlap_stats(&sels);
+    println!("rand-K overlap (N={n}, K=d/10): {mean:.1}% ± {sd:.1}% \
+              (theory: 10%)");
+    println!("(full Fig. 2 reproduction with trained gradients: \
+              cargo bench --bench bench_fig2_overlap)");
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts_dir", "artifacts");
+    let manifest = Manifest::load(std::path::Path::new(dir))?;
+    let mut t = Table::new(
+        &format!("artifacts in {dir}"),
+        &["model", "d", "dpad", "batch", "tensors", "artifacts"],
+    );
+    for m in &manifest.models {
+        t.row(&[
+            m.name.clone(),
+            m.d.to_string(),
+            m.dpad.to_string(),
+            m.batch.to_string(),
+            m.params.len().to_string(),
+            m.artifacts.len().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,427 @@
+//! Mask generation and assembly (paper §V-A, §V-C).
+//!
+//! Three mask families, all derived from seeds via the ChaCha20 PRG with
+//! domain-separated streams:
+//!   * pairwise **additive** masks `r_ij ∈ F_q^d` (eq. 11) — hide values,
+//!   * **private** masks `r_i ∈ F_q^d` (eq. 12) — protect delayed users,
+//!   * pairwise **multiplicative** masks `b_ij ∈ {0,1}^d`,
+//!     Bernoulli(α/(N−1)) per coordinate (eq. 13) — fix the shared
+//!     sparsification pattern.
+//!
+//! Masks are expanded through *compressed support-indexed streams*
+//! ([`mask_values`], [`apply_mask_values`]): the k-th keystream field
+//! element is paired with the k-th support index, so sparse masks cost
+//! O(αd/16) ChaCha blocks and dense (SecAgg) masks stream through the
+//! 4-lane block4 core (§Perf). [`IndexedMask`] — the earlier seekable
+//! per-coordinate convention — is kept as a reference/test utility.
+//! Both ends of every pair (and the server during dropout recovery) use
+//! the identical convention, so cancellation is exact.
+
+use crate::field::{self, Q};
+use crate::prg::{chacha, ChaCha20Rng, Seed};
+
+/// Domain-separation stream ids.
+pub const STREAM_ADDITIVE: u32 = 1;
+pub const STREAM_MULTIPLICATIVE: u32 = 2;
+pub const STREAM_PRIVATE: u32 = 3;
+pub const STREAM_ROUNDING: u32 = 4;
+
+/// Seekable mask stream: field element at coordinate ℓ is keystream word ℓ
+/// reduced mod q. Sequential `gather` caches the current 16-word block.
+pub struct IndexedMask {
+    key: [u32; 8],
+    nonce: [u32; 3],
+    cached_block: u32,
+    buf: [u32; 16],
+}
+
+impl IndexedMask {
+    pub fn new(seed: Seed, stream: u32, round: u32) -> Self {
+        IndexedMask {
+            key: seed.0,
+            nonce: [stream, round, 0x53_41_47_47],
+            cached_block: u32::MAX,
+            buf: [0; 16],
+        }
+    }
+
+    #[inline]
+    fn load(&mut self, block: u32) {
+        if self.cached_block != block {
+            self.buf = chacha::block(&self.key, block, &self.nonce);
+            self.cached_block = block;
+        }
+    }
+
+    /// Field element at coordinate ℓ.
+    #[inline]
+    pub fn at(&mut self, l: u32) -> u32 {
+        self.load(l / 16);
+        let w = self.buf[(l % 16) as usize];
+        if w >= Q { w - Q } else { w }
+    }
+
+    /// Raw keystream word at coordinate ℓ (no field reduction).
+    #[inline]
+    pub fn word_at(&mut self, l: u32) -> u32 {
+        self.load(l / 16);
+        self.buf[(l % 16) as usize]
+    }
+
+    /// Uniform f32 in [0, 1) at coordinate ℓ — the per-coordinate
+    /// stochastic-rounding randomness. Seekable so the sparse native path
+    /// and the dense HLO-kernel path draw *identical* values per
+    /// coordinate (required for their bit-equivalence).
+    #[inline]
+    pub fn uniform_at(&mut self, l: u32) -> f32 {
+        (self.word_at(l) >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Gather elements at (sorted or unsorted) indices.
+    pub fn gather(&mut self, indices: &[u32]) -> Vec<u32> {
+        indices.iter().map(|&l| self.at(l)).collect()
+    }
+
+    /// Dense expansion over [0, d) — used by the SecAgg baseline and by
+    /// tests that cross-check the sparse path.
+    pub fn dense(&mut self, d: usize) -> Vec<u32> {
+        (0..d as u32).map(|l| self.at(l)).collect()
+    }
+}
+
+/// Bernoulli rate for pairwise multiplicative masks: ρ = α/(N−1) (eq. 13).
+pub fn bernoulli_rate(alpha: f64, n: usize) -> f64 {
+    alpha / (n as f64 - 1.0)
+}
+
+/// Compressed (support-indexed) mask expansion — §Perf optimization.
+///
+/// The seekable [`IndexedMask`] convention costs one ChaCha block per
+/// *element* on sparse supports (densities ≪ 1/16 put every selected
+/// coordinate in its own block, wasting 15 of 16 keystream words).
+/// Since the support of every mask is known deterministically to both
+/// ends of the pair (and to the server after reconstruction), the mask
+/// values can instead be the *k-th keystream field elements* paired with
+/// the k-th support index — 16× fewer block computations, identical
+/// security (same keystream, different indexing).
+///
+/// Returns `count` sequential field elements of the (seed, stream,
+/// round) keystream.
+pub fn mask_values(seed: Seed, stream: u32, round: u32, count: usize)
+                   -> Vec<u32> {
+    let mut rng = ChaCha20Rng::new(seed, stream, round);
+    let mut out = vec![0u32; count];
+    rng.fill_field(&mut out);
+    out
+}
+
+/// Fused generate-and-accumulate: stream the (seed, stream, round)
+/// keystream field elements over `acc` in cache-sized chunks, adding
+/// (`add = true`) or subtracting mod q. Identical values to
+/// [`mask_values`] without materializing the d-length mask (§Perf: one
+/// pass, no allocation — the SecAgg dense hot loop).
+pub fn apply_mask_values(acc: &mut [u32], seed: Seed, stream: u32,
+                         round: u32, add: bool) {
+    let mut rng = ChaCha20Rng::new(seed, stream, round);
+    let mut buf = [0u32; 512];
+    let mut pos = 0;
+    while pos < acc.len() {
+        let n = (acc.len() - pos).min(512);
+        for v in buf[..n].iter_mut() {
+            *v = rng.next_field();
+        }
+        if add {
+            crate::field::vecops::add_assign(&mut acc[pos..pos + n],
+                                             &buf[..n]);
+        } else {
+            crate::field::vecops::sub_assign(&mut acc[pos..pos + n],
+                                             &buf[..n]);
+        }
+        pos += n;
+    }
+}
+
+/// `count` sequential rounding uniforms in [0, 1) — the compressed
+/// counterpart of the per-coordinate rounding stream; user-private, so
+/// only ordering consistency with the sorted support matters.
+pub fn rounding_values(seed: Seed, round: u32, count: usize) -> Vec<f32> {
+    let mut rng = ChaCha20Rng::new(seed, STREAM_ROUNDING, round);
+    let mut out = vec![0f32; count];
+    for v in out.iter_mut() {
+        *v = (rng.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32);
+    }
+    out
+}
+
+/// Support of the pairwise multiplicative mask b_ij for one round:
+/// sorted indices ℓ with b_ij(ℓ) = 1. Symmetric in (i, j) because the
+/// stream depends only on the shared seed.
+pub fn pairwise_support(mult_seed: Seed, round: u32, rho: f64, d: usize)
+                        -> Vec<u32> {
+    ChaCha20Rng::new(mult_seed, STREAM_MULTIPLICATIVE, round)
+        .bernoulli_indices(rho, d)
+}
+
+/// The signed pairwise additive-mask contribution of pair (i, j) to user
+/// i's upload: +r_ij on supp(b_ij) if i < j, −r_ij if i > j (eq. 18).
+#[inline]
+pub fn pair_sign(i: usize, j: usize) -> bool {
+    i < j // true => add, false => subtract
+}
+
+/// One user's assembled masking plan for a round (eq. 18 inputs).
+pub struct MaskPlan {
+    /// U_i: sorted union of pairwise supports (eq. 19) — the coordinates
+    /// this user uploads.
+    pub indices: Vec<u32>,
+    /// Σ of private + signed pairwise additive masks at each index of
+    /// `indices`, already reduced mod q.
+    pub masksum_at: Vec<u32>,
+}
+
+impl MaskPlan {
+    /// Densify into (select, masksum) vectors of length `dpad` for the
+    /// HLO quantmask kernel.
+    pub fn densify(&self, dpad: usize) -> (Vec<u32>, Vec<u32>) {
+        let mut select = vec![0u32; dpad];
+        let mut masksum = vec![0u32; dpad];
+        for (k, &l) in self.indices.iter().enumerate() {
+            select[l as usize] = 1;
+            masksum[l as usize] = self.masksum_at[k];
+        }
+        (select, masksum)
+    }
+}
+
+/// Pairwise context for one (i, j) pair from user i's point of view.
+pub struct PairSeeds {
+    pub peer: usize,
+    pub additive: Seed,
+    pub multiplicative: Seed,
+}
+
+/// Assemble user i's sparsification pattern and mask sums for one round.
+///
+/// Work is O(Σ_j |supp(b_ij)|) ≈ O(αd): supports are generated by
+/// geometric skipping and additive masks use the compressed
+/// support-indexed expansion ([`mask_values`]) — one ChaCha block per 16
+/// support elements instead of one per element (§Perf).
+/// `scratch` is a caller-provided dense buffer of length ≥ d (reused
+/// across users to avoid re-zeroing costs; it is returned cleaned).
+pub fn assemble(i: usize, d: usize, round: u32, rho: f64,
+                pairs: &[PairSeeds], private_seed: Seed,
+                scratch: &mut Vec<u32>) -> MaskPlan {
+    assert!(scratch.len() >= d, "scratch too small");
+    debug_assert!(scratch[..d].iter().all(|&v| v == 0));
+
+    let mut union: Vec<u32> = Vec::new();
+    for pair in pairs {
+        let support = pairwise_support(pair.multiplicative, round, rho, d);
+        if support.is_empty() {
+            continue;
+        }
+        let values =
+            mask_values(pair.additive, STREAM_ADDITIVE, round, support.len());
+        let add = pair_sign(i, pair.peer);
+        for (&l, &r) in support.iter().zip(&values) {
+            let cur = scratch[l as usize];
+            scratch[l as usize] = if add {
+                field::add(cur, r)
+            } else {
+                field::sub(cur, r)
+            };
+        }
+        union.extend_from_slice(&support);
+    }
+    union.sort_unstable();
+    union.dedup();
+
+    // Private mask r_i on the selected support (eq. 18's select·(ȳ+r_i)),
+    // compressed over the sorted union.
+    let priv_values =
+        mask_values(private_seed, STREAM_PRIVATE, round, union.len());
+    let masksum_at: Vec<u32> = union
+        .iter()
+        .zip(&priv_values)
+        .map(|(&l, &rp)| {
+            let total = field::add(scratch[l as usize], rp);
+            scratch[l as usize] = 0; // clean as we go
+            total
+        })
+        .collect();
+
+    MaskPlan { indices: union, masksum_at }
+}
+
+/// Expand the *dense* masked-sum vector the slow way — reference used by
+/// tests to validate [`assemble`]. O(N·d).
+pub fn assemble_dense_reference(i: usize, d: usize, round: u32, rho: f64,
+                                pairs: &[PairSeeds], private_seed: Seed)
+                                -> (Vec<u8>, Vec<u32>) {
+    let mut select = vec![0u8; d];
+    let mut masksum = vec![0u32; d];
+    for pair in pairs {
+        let mut rng =
+            ChaCha20Rng::new(pair.multiplicative, STREAM_MULTIPLICATIVE, round);
+        let support = rng.bernoulli_indices(rho, d);
+        let values =
+            mask_values(pair.additive, STREAM_ADDITIVE, round, support.len());
+        for (&l, &r) in support.iter().zip(&values) {
+            select[l as usize] = 1;
+            let cur = masksum[l as usize];
+            masksum[l as usize] = if pair_sign(i, pair.peer) {
+                field::add(cur, r)
+            } else {
+                field::sub(cur, r)
+            };
+        }
+    }
+    let union: Vec<usize> = (0..d).filter(|&l| select[l] != 0).collect();
+    let rp = mask_values(private_seed, STREAM_PRIVATE, round, union.len());
+    for (&l, &r) in union.iter().zip(&rp) {
+        masksum[l] = field::add(masksum[l], r);
+    }
+    (select, masksum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop;
+
+    fn seed(rng: &mut ChaCha20Rng) -> Seed {
+        let mut w = [0u32; 8];
+        for v in w.iter_mut() {
+            *v = rng.next_field();
+        }
+        Seed(w)
+    }
+
+    #[test]
+    fn indexed_mask_matches_dense() {
+        let mut rng = ChaCha20Rng::from_seed_u64(1);
+        let s = seed(&mut rng);
+        let d = 1000;
+        let mut m1 = IndexedMask::new(s, STREAM_ADDITIVE, 3);
+        let dense = m1.dense(d);
+        let mut m2 = IndexedMask::new(s, STREAM_ADDITIVE, 3);
+        // random access order
+        for &l in &[999u32, 0, 17, 500, 16, 15, 999, 31, 32] {
+            assert_eq!(m2.at(l), dense[l as usize]);
+        }
+    }
+
+    #[test]
+    fn indexed_mask_rounds_differ() {
+        let mut rng = ChaCha20Rng::from_seed_u64(2);
+        let s = seed(&mut rng);
+        let mut a = IndexedMask::new(s, STREAM_ADDITIVE, 0);
+        let mut b = IndexedMask::new(s, STREAM_ADDITIVE, 1);
+        assert_ne!(a.dense(64), b.dense(64));
+    }
+
+    #[test]
+    fn pairwise_support_is_symmetric_and_deterministic() {
+        let mut rng = ChaCha20Rng::from_seed_u64(3);
+        let s = seed(&mut rng);
+        let a = pairwise_support(s, 5, 0.01, 10_000);
+        let b = pairwise_support(s, 5, 0.01, 10_000);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn assemble_matches_dense_reference() {
+        prop(20, |rng| {
+            let d = 500 + (rng.next_u32() as usize % 500);
+            let n = 4 + (rng.next_u32() as usize % 6);
+            let i = rng.next_u32() as usize % n;
+            let rho = 0.05;
+            let pairs: Vec<PairSeeds> = (0..n)
+                .filter(|&j| j != i)
+                .map(|j| PairSeeds {
+                    peer: j,
+                    additive: seed(rng),
+                    multiplicative: seed(rng),
+                })
+                .collect();
+            let ps = seed(rng);
+            let round = rng.next_u32() % 100;
+
+            let mut scratch = vec![0u32; d];
+            let plan = assemble(i, d, round, rho, &pairs, ps, &mut scratch);
+            assert!(scratch.iter().all(|&v| v == 0), "scratch not cleaned");
+
+            let (select, masksum) =
+                assemble_dense_reference(i, d, round, rho, &pairs, ps);
+            let want_idx: Vec<u32> = (0..d as u32)
+                .filter(|&l| select[l as usize] != 0)
+                .collect();
+            assert_eq!(plan.indices, want_idx);
+            for (k, &l) in plan.indices.iter().enumerate() {
+                assert_eq!(plan.masksum_at[k], masksum[l as usize],
+                           "mismatch at l={l}");
+            }
+        });
+    }
+
+    #[test]
+    fn additive_masks_cancel_pairwise() {
+        // The core identity: user i adds r_ij on supp(b_ij), user j
+        // subtracts the same values on the same support ⇒ sum ≡ 0.
+        prop(50, |rng| {
+            let d = 2000;
+            let rho = 0.02;
+            let add_seed = seed(rng);
+            let mult_seed = seed(rng);
+            let round = 7;
+            let support = pairwise_support(mult_seed, round, rho, d);
+            let vi = mask_values(add_seed, STREAM_ADDITIVE, round,
+                                 support.len());
+            let vj = mask_values(add_seed, STREAM_ADDITIVE, round,
+                                 support.len());
+            for (ri, rj) in vi.iter().zip(&vj) {
+                assert_eq!(field::add(*ri, field::sub(0, *rj)), 0);
+            }
+            assert!(vi.iter().all(|&v| v < Q));
+        });
+    }
+
+    #[test]
+    fn densify_roundtrip() {
+        let plan = MaskPlan {
+            indices: vec![1, 5, 9],
+            masksum_at: vec![100, 200, 300],
+        };
+        let (select, masksum) = plan.densify(16);
+        assert_eq!(select.iter().sum::<u32>(), 3);
+        assert_eq!(masksum[5], 200);
+        assert_eq!(select[0], 0);
+        assert_eq!(masksum[0], 0);
+    }
+
+    #[test]
+    fn support_size_concentrates_at_p_times_d() {
+        // Thm 1 mechanics: |U_i| ≈ p·d with p = 1-(1-ρ)^(N-1).
+        let mut rng = ChaCha20Rng::from_seed_u64(9);
+        let d = 100_000;
+        let n = 20;
+        let alpha = 0.1;
+        let rho = bernoulli_rate(alpha, n);
+        let pairs: Vec<PairSeeds> = (1..n)
+            .map(|j| PairSeeds {
+                peer: j,
+                additive: seed(&mut rng),
+                multiplicative: seed(&mut rng),
+            })
+            .collect();
+        let ps = seed(&mut rng);
+        let mut scratch = vec![0u32; d];
+        let plan = assemble(0, d, 0, rho, &pairs, ps, &mut scratch);
+        let p = crate::quantize::selection_probability(alpha, n);
+        let frac = plan.indices.len() as f64 / d as f64;
+        assert!((frac - p).abs() < 0.01, "frac={frac} p={p}");
+        // Thm 1: fraction ≤ α (+ concentration slack)
+        assert!(frac <= alpha + 0.01);
+    }
+}

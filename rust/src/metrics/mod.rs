@@ -1,0 +1,197 @@
+//! Privacy and reporting metrics (paper §IV "key performance metrics").
+//!
+//! * [`privacy_histogram`] / [`PrivacySample`] — the per-coordinate count
+//!   of *honest, surviving* users whose update is aggregated there: the
+//!   paper's privacy guarantee T (Thm 2, Fig. 4(a)) and the
+//!   revealed-parameter percentage (coordinates selected by exactly one
+//!   honest user — Fig. 4(b), 5(c)).
+//! * [`Table`] — fixed-width table / CSV emitters for the bench harnesses
+//!   (no serde in the vendored crate set).
+
+/// Per-coordinate selection counts for one round.
+pub struct PrivacySample {
+    /// counts[ℓ] = number of honest surviving users with ℓ ∈ U_i.
+    pub counts: Vec<u32>,
+}
+
+/// Build the per-coordinate honest-participation histogram from the
+/// uploads' index sets. `honest[i]` marks non-adversarial users;
+/// dropped users appear as `None` in `upload_indices`.
+pub fn privacy_histogram(d: usize, upload_indices: &[Option<Vec<u32>>],
+                         honest: &[bool]) -> PrivacySample {
+    let mut counts = vec![0u32; d];
+    for (i, up) in upload_indices.iter().enumerate() {
+        if !honest[i] {
+            continue;
+        }
+        if let Some(indices) = up {
+            for &l in indices {
+                counts[l as usize] += 1;
+            }
+        }
+    }
+    PrivacySample { counts }
+}
+
+impl PrivacySample {
+    /// Mean honest users aggregated per *covered* coordinate — the
+    /// empirical T of Fig. 4(a). (Coordinates no honest user selected are
+    /// excluded: nothing of an honest user is revealed there.)
+    pub fn mean_t(&self) -> f64 {
+        let covered: Vec<u32> =
+            self.counts.iter().copied().filter(|&c| c > 0).collect();
+        if covered.is_empty() {
+            return 0.0;
+        }
+        covered.iter().map(|&c| c as f64).sum::<f64>() / covered.len() as f64
+    }
+
+    /// Minimum honest aggregation count over covered coordinates.
+    pub fn min_t(&self) -> u32 {
+        self.counts.iter().copied().filter(|&c| c > 0).min().unwrap_or(0)
+    }
+
+    /// Percentage of coordinates selected by *exactly one* honest user —
+    /// those coordinates reveal that single user's (quantized, scaled)
+    /// parameter to a curious server: Fig. 4(b)/5(c).
+    pub fn revealed_pct(&self) -> f64 {
+        let singles = self.counts.iter().filter(|&&c| c == 1).count();
+        singles as f64 / self.counts.len() as f64 * 100.0
+    }
+
+    /// Fraction of coordinates covered by at least one honest user.
+    pub fn coverage(&self) -> f64 {
+        let covered = self.counts.iter().filter(|&&c| c > 0).count();
+        covered as f64 / self.counts.len() as f64
+    }
+}
+
+/// Theoretical privacy guarantee T = (1 − e^{−α})(1 − θ)(1 − γ)N (Thm 2).
+pub fn theoretical_t(alpha: f64, theta: f64, gamma: f64, n: usize) -> f64 {
+    (1.0 - (-alpha).exp()) * (1.0 - theta) * (1.0 - gamma) * n as f64
+}
+
+/// Simple fixed-width table writer with a CSV twin, for bench output.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render as an aligned text table (what the bench harness prints).
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = format!("== {} ==\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>()
+                                 + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format bytes with binary-friendly units for reports.
+pub fn fmt_bytes(b: usize) -> String {
+    if b >= 100_000 {
+        format!("{:.2} MB", b as f64 / 1e6)
+    } else if b >= 1_000 {
+        format!("{:.1} KB", b as f64 / 1e3)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_honest_survivors_only() {
+        let uploads = vec![
+            Some(vec![0, 1, 2]), // honest
+            Some(vec![1, 2, 3]), // adversarial
+            None,                // dropped
+            Some(vec![2]),       // honest
+        ];
+        let honest = vec![true, false, true, true];
+        let s = privacy_histogram(5, &uploads, &honest);
+        assert_eq!(s.counts, vec![1, 1, 2, 0, 0]);
+        assert_eq!(s.min_t(), 1);
+        assert!((s.revealed_pct() - 40.0).abs() < 1e-9); // coords 0,1 of 5
+        assert!((s.mean_t() - 4.0 / 3.0).abs() < 1e-9);
+        assert!((s.coverage() - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn theoretical_t_matches_paper_examples() {
+        // Thm 2 at α≪1: T ≈ α(1−θ)(1−γ)N.
+        let t = theoretical_t(0.05, 0.1, 1.0 / 3.0, 100);
+        let approx = 0.05 * 0.9 * (2.0 / 3.0) * 100.0;
+        assert!((t - approx).abs() / approx < 0.05, "{t} vs {approx}");
+        // Larger α ⇒ larger T (Corollary 1).
+        assert!(theoretical_t(0.3, 0.1, 0.33, 100)
+                > theoretical_t(0.1, 0.1, 0.33, 100));
+    }
+
+    #[test]
+    fn table_renders_and_csvs() {
+        let mut t = Table::new("demo", &["N", "bytes"]);
+        t.row(&["25".into(), "0.66 MB".into()]);
+        t.row(&["100".into(), "0.08 MB".into()]);
+        let r = t.render();
+        assert!(r.contains("demo") && r.contains("0.66 MB"));
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("N,bytes"));
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(6_500), "6.5 KB");
+        assert_eq!(fmt_bytes(660_000), "0.66 MB");
+    }
+}

@@ -1,0 +1,175 @@
+//! Simulated bandwidth-limited network (DESIGN.md §Substitutions #1).
+//!
+//! The paper's testbed is Amazon EC2 m4.large instances with user links
+//! capped at 100 Mbps. This module replaces the physical wire with a
+//! deterministic cost model: every protocol message is framed
+//! ([`crate::protocol::messages`]) and its transfer time is
+//! `bytes · 8 / bandwidth + latency`. Users up/download in parallel on
+//! independent links (the EC2 topology), so a phase costs the *max* over
+//! participating users; the server's NIC can be modeled as a separate,
+//! faster link. Communication *bytes* are exact; simulated wall clock is
+//! the bandwidth-bound approximation the paper's own measurements live in.
+
+/// Link parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    /// Bits per second (paper: 100 Mbps for user links).
+    pub bandwidth_bps: f64,
+    /// One-way latency per message, seconds.
+    pub latency_s: f64,
+}
+
+impl LinkModel {
+    /// The paper's user link: 100 Mbps, 1 ms.
+    pub fn paper_user_link() -> Self {
+        LinkModel { bandwidth_bps: 100e6, latency_s: 1e-3 }
+    }
+
+    /// Seconds to move `bytes` across this link.
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        bytes as f64 * 8.0 / self.bandwidth_bps + self.latency_s
+    }
+}
+
+/// Per-round communication/timing ledger. The byte counters feed Table I
+/// and Figs. 3(a)/5(a)/6(a); the clock feeds Figs. 3(c)/5(b)/6(b).
+#[derive(Clone, Debug, Default)]
+pub struct RoundLedger {
+    /// Upload bytes per user id (user → server), all phases.
+    pub up_bytes: Vec<usize>,
+    /// Download bytes per user id (server → user), all phases.
+    pub down_bytes: Vec<usize>,
+    /// Simulated seconds spent on communication this round.
+    pub comm_time_s: f64,
+    /// Measured host seconds of client compute (max over users per phase,
+    /// i.e. users compute in parallel).
+    pub client_compute_s: f64,
+    /// Measured host seconds of server compute.
+    pub server_compute_s: f64,
+}
+
+impl RoundLedger {
+    pub fn new(n: usize) -> Self {
+        RoundLedger {
+            up_bytes: vec![0; n],
+            down_bytes: vec![0; n],
+            ..Default::default()
+        }
+    }
+
+    pub fn record_upload(&mut self, user: usize, bytes: usize) {
+        self.up_bytes[user] += bytes;
+    }
+
+    pub fn record_download(&mut self, user: usize, bytes: usize) {
+        self.down_bytes[user] += bytes;
+    }
+
+    /// Advance the simulated clock by a synchronous phase in which each
+    /// listed user moves `bytes[k]` over `link` in parallel.
+    pub fn advance_parallel_phase(&mut self, link: &LinkModel,
+                                  bytes: &[usize]) {
+        let t = bytes
+            .iter()
+            .map(|&b| link.transfer_time(b))
+            .fold(0.0f64, f64::max);
+        self.comm_time_s += t;
+    }
+
+    /// Total upload bytes across users.
+    pub fn total_up(&self) -> usize {
+        self.up_bytes.iter().sum()
+    }
+
+    /// Max per-user upload this round (the Table I statistic:
+    /// "maximum (worst case) across all users").
+    pub fn max_up(&self) -> usize {
+        self.up_bytes.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn total_down(&self) -> usize {
+        self.down_bytes.iter().sum()
+    }
+
+    /// Simulated wall-clock seconds for the round.
+    pub fn wall_clock_s(&self) -> f64 {
+        self.comm_time_s + self.client_compute_s + self.server_compute_s
+    }
+}
+
+/// Deterministic per-round dropout draw: each listed user independently
+/// drops with probability θ (paper §IV: Bernoulli, rate 0.06–0.1 real
+/// world, stress-tested at 0.3). Guarantees at least ⌊N/2⌋+1 survivors
+/// are *attempted* (protocol still fails if the draw is too harsh and
+/// `enforce_quorum` is false).
+pub fn draw_dropouts(n: usize, theta: f64, round: u32, seed: u64,
+                     enforce_quorum: bool) -> Vec<usize> {
+    let mut rng = crate::prg::ChaCha20Rng::from_seed_u64(
+        seed ^ (round as u64) << 24 ^ 0xd20_0000);
+    let mut dropped: Vec<usize> =
+        (0..n).filter(|_| (rng.next_f32() as f64) < theta).collect();
+    if enforce_quorum {
+        let quorum = n / 2 + 1;
+        while n - dropped.len() < quorum {
+            dropped.pop();
+        }
+    }
+    dropped
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_scales_linearly() {
+        let link = LinkModel::paper_user_link();
+        let t1 = link.transfer_time(1_000_000);
+        let t2 = link.transfer_time(2_000_000);
+        assert!((t2 - t1 - 0.08).abs() < 1e-9); // 1 MB at 100 Mbps = 80 ms
+    }
+
+    #[test]
+    fn secagg_upload_time_matches_paper_scale() {
+        // 0.66 MB at 100 Mbps ≈ 53 ms — the per-round upload cost that
+        // dominates SecAgg's wall clock in Fig. 3(c).
+        let link = LinkModel::paper_user_link();
+        let t = link.transfer_time(660_000);
+        assert!(t > 0.05 && t < 0.06, "t={t}");
+    }
+
+    #[test]
+    fn parallel_phase_takes_max() {
+        let link = LinkModel { bandwidth_bps: 8e6, latency_s: 0.0 };
+        let mut ledger = RoundLedger::new(3);
+        ledger.advance_parallel_phase(&link, &[1_000_000, 2_000_000, 500]);
+        assert!((ledger.comm_time_s - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dropout_rate_approximates_theta() {
+        let mut total = 0usize;
+        let rounds = 200;
+        for r in 0..rounds {
+            total += draw_dropouts(100, 0.3, r, 7, false).len();
+        }
+        let rate = total as f64 / (100 * rounds as usize) as f64;
+        assert!((rate - 0.3).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn quorum_enforcement() {
+        for r in 0..50 {
+            let dropped = draw_dropouts(10, 0.49, r, 3, true);
+            assert!(10 - dropped.len() >= 6);
+        }
+    }
+
+    #[test]
+    fn dropouts_deterministic_per_seed() {
+        assert_eq!(draw_dropouts(50, 0.2, 3, 9, false),
+                   draw_dropouts(50, 0.2, 3, 9, false));
+        assert_ne!(draw_dropouts(50, 0.2, 3, 9, false),
+                   draw_dropouts(50, 0.2, 4, 9, false));
+    }
+}

@@ -1,0 +1,164 @@
+//! ChaCha20 block function (RFC 8439), the PRG core.
+//!
+//! Implemented from scratch (the vendored crate set has no stream-cipher
+//! RNG); validated against the RFC 8439 §2.3.2 test vector. Used as the
+//! PRG of eq. (11)–(13): a 256-bit seed keys a deterministic keystream
+//! from which field elements, Bernoulli bits and uniforms are derived.
+
+const CONSTANTS: [u32; 4] = [0x6170_7865, 0x3320_646e, 0x7962_2d32, 0x6b20_6574];
+
+#[inline(always)]
+fn quarter_round(s: &mut [u32; 16], a: usize, b: usize, c: usize, d: usize) {
+    s[a] = s[a].wrapping_add(s[b]);
+    s[d] = (s[d] ^ s[a]).rotate_left(16);
+    s[c] = s[c].wrapping_add(s[d]);
+    s[b] = (s[b] ^ s[c]).rotate_left(12);
+    s[a] = s[a].wrapping_add(s[b]);
+    s[d] = (s[d] ^ s[a]).rotate_left(8);
+    s[c] = s[c].wrapping_add(s[d]);
+    s[b] = (s[b] ^ s[c]).rotate_left(7);
+}
+
+/// One ChaCha20 block: 16 output words from (key, counter, nonce).
+pub fn block(key: &[u32; 8], counter: u32, nonce: &[u32; 3]) -> [u32; 16] {
+    let mut state = [0u32; 16];
+    state[..4].copy_from_slice(&CONSTANTS);
+    state[4..12].copy_from_slice(key);
+    state[12] = counter;
+    state[13..16].copy_from_slice(nonce);
+    let initial = state;
+    for _ in 0..10 {
+        quarter_round(&mut state, 0, 4, 8, 12);
+        quarter_round(&mut state, 1, 5, 9, 13);
+        quarter_round(&mut state, 2, 6, 10, 14);
+        quarter_round(&mut state, 3, 7, 11, 15);
+        quarter_round(&mut state, 0, 5, 10, 15);
+        quarter_round(&mut state, 1, 6, 11, 12);
+        quarter_round(&mut state, 2, 7, 8, 13);
+        quarter_round(&mut state, 3, 4, 9, 14);
+    }
+    for (o, i) in state.iter_mut().zip(initial.iter()) {
+        *o = o.wrapping_add(*i);
+    }
+    state
+}
+
+/// Four consecutive ChaCha20 blocks (counters `counter..counter+4`),
+/// computed lane-parallel: the state is held as 16 arrays of 4 lanes so
+/// every quarter-round op is a 4-wide SIMD op after auto-vectorization —
+/// ~2–3× the throughput of four scalar [`block`] calls. Used by the
+/// buffered sequential streams (`ChaCha20Rng`), which feed the dense
+/// SecAgg masks and the compressed sparse mask expansion (§Perf).
+pub fn block4(key: &[u32; 8], counter: u32, nonce: &[u32; 3]) -> [u32; 64] {
+    #[inline(always)]
+    fn qr(s: &mut [[u32; 4]; 16], a: usize, b: usize, c: usize, d: usize) {
+        for l in 0..4 {
+            s[a][l] = s[a][l].wrapping_add(s[b][l]);
+        }
+        for l in 0..4 {
+            s[d][l] = (s[d][l] ^ s[a][l]).rotate_left(16);
+        }
+        for l in 0..4 {
+            s[c][l] = s[c][l].wrapping_add(s[d][l]);
+        }
+        for l in 0..4 {
+            s[b][l] = (s[b][l] ^ s[c][l]).rotate_left(12);
+        }
+        for l in 0..4 {
+            s[a][l] = s[a][l].wrapping_add(s[b][l]);
+        }
+        for l in 0..4 {
+            s[d][l] = (s[d][l] ^ s[a][l]).rotate_left(8);
+        }
+        for l in 0..4 {
+            s[c][l] = s[c][l].wrapping_add(s[d][l]);
+        }
+        for l in 0..4 {
+            s[b][l] = (s[b][l] ^ s[c][l]).rotate_left(7);
+        }
+    }
+
+    let mut state = [[0u32; 4]; 16];
+    for w in 0..4 {
+        state[w] = [CONSTANTS[w]; 4];
+    }
+    for w in 0..8 {
+        state[4 + w] = [key[w]; 4];
+    }
+    for l in 0..4u32 {
+        state[12][l as usize] = counter.wrapping_add(l);
+    }
+    for w in 0..3 {
+        state[13 + w] = [nonce[w]; 4];
+    }
+    let initial = state;
+    for _ in 0..10 {
+        qr(&mut state, 0, 4, 8, 12);
+        qr(&mut state, 1, 5, 9, 13);
+        qr(&mut state, 2, 6, 10, 14);
+        qr(&mut state, 3, 7, 11, 15);
+        qr(&mut state, 0, 5, 10, 15);
+        qr(&mut state, 1, 6, 11, 12);
+        qr(&mut state, 2, 7, 8, 13);
+        qr(&mut state, 3, 4, 9, 14);
+    }
+    let mut out = [0u32; 64];
+    for l in 0..4 {
+        for w in 0..16 {
+            out[l * 16 + w] =
+                state[w][l].wrapping_add(initial[w][l]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rfc8439_test_vector() {
+        // RFC 8439 §2.3.2.
+        let key: [u32; 8] = [
+            0x0302_0100, 0x0706_0504, 0x0b0a_0908, 0x0f0e_0d0c,
+            0x1312_1110, 0x1716_1514, 0x1b1a_1918, 0x1f1e_1d1c,
+        ];
+        let nonce: [u32; 3] = [0x0900_0000, 0x4a00_0000, 0x0000_0000];
+        let out = block(&key, 1, &nonce);
+        let expect: [u32; 16] = [
+            0xe4e7_f110, 0x1559_3bd1, 0x1fdd_0f50, 0xc471_20a3,
+            0xc7f4_d1c7, 0x0368_c033, 0x9aaa_2204, 0x4e6c_d4c3,
+            0x4664_82d2, 0x09aa_9f07, 0x05d7_c214, 0xa202_8bd9,
+            0xd19c_12b5, 0xb94e_16de, 0xe883_d0cb, 0x4e3c_50a2,
+        ];
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn block4_matches_four_scalar_blocks() {
+        let key = [0x1234_5678u32; 8];
+        let nonce = [9u32, 8, 7];
+        for &ctr in &[0u32, 1, 100, u32::MAX - 3] {
+            let wide = block4(&key, ctr, &nonce);
+            for l in 0..4u32 {
+                let one = block(&key, ctr.wrapping_add(l), &nonce);
+                assert_eq!(&wide[l as usize * 16..(l as usize + 1) * 16],
+                           &one[..], "lane {l} at counter {ctr}");
+            }
+        }
+    }
+
+    #[test]
+    fn counter_changes_block() {
+        let key = [7u32; 8];
+        let nonce = [1u32, 2, 3];
+        assert_ne!(block(&key, 0, &nonce), block(&key, 1, &nonce));
+    }
+
+    #[test]
+    fn deterministic() {
+        let key = [0xdead_beefu32; 8];
+        let nonce = [9u32, 9, 9];
+        assert_eq!(block(&key, 42, &nonce), block(&key, 42, &nonce));
+    }
+}

@@ -1,0 +1,292 @@
+//! Pseudorandom generator streams over the ChaCha20 core.
+//!
+//! This is the paper's `PRG(·)` (eqs. 11–13): each seed deterministically
+//! expands into
+//!   * field-element vectors (uniform over `F_q`, via rejection sampling —
+//!     the rejection probability is 5/2^32 ≈ 1.2e-9, so the stream is
+//!     effectively one u32 per element),
+//!   * Bernoulli(ρ) bit vectors (threshold test on a u32, i.e. the paper's
+//!     "split the PRG output domain into two intervals" construction),
+//!   * uniform f32 streams (for stochastic rounding and the simulator).
+//!
+//! Seeds are 256-bit ([`Seed`]); pairwise seeds come out of [`crate::dh`],
+//! private seeds from any entropy source. A domain-separation nonce keeps
+//! the additive-mask stream, the multiplicative-mask stream, and each
+//! round's streams independent (paper: fresh masks every round).
+
+pub mod chacha;
+
+use crate::field::Q;
+
+/// A 256-bit PRG seed.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub struct Seed(pub [u32; 8]);
+
+impl Seed {
+    pub fn from_bytes(b: &[u8; 32]) -> Self {
+        let mut w = [0u32; 8];
+        for (i, chunk) in b.chunks_exact(4).enumerate() {
+            w[i] = u32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        Seed(w)
+    }
+
+    pub fn to_bytes(self) -> [u8; 32] {
+        let mut out = [0u8; 32];
+        for (i, w) in self.0.iter().enumerate() {
+            out[i * 4..i * 4 + 4].copy_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    /// Reduce every word below q. Protocol seeds are kept *canonical*
+    /// (all words < q) from creation so that Shamir sharing — which works
+    /// word-wise over F_q — round-trips bit-exactly.
+    pub fn canonical(mut self) -> Self {
+        for v in self.0.iter_mut() {
+            if *v >= Q {
+                *v -= Q;
+            }
+        }
+        self
+    }
+
+    /// Split the seed into 8 field elements for Shamir sharing.
+    /// Requires a canonical seed (see [`Seed::canonical`]).
+    pub fn to_field_elems(self) -> [u32; 8] {
+        debug_assert!(self.0.iter().all(|&v| v < Q), "seed not canonical");
+        self.0
+    }
+}
+
+/// Buffered ChaCha20 keystream with typed draws. Refills four blocks at
+/// a time through the lane-parallel [`chacha::block4`] (§Perf).
+pub struct ChaCha20Rng {
+    key: [u32; 8],
+    nonce: [u32; 3],
+    counter: u32,
+    buf: [u32; 64],
+    pos: usize,
+}
+
+impl ChaCha20Rng {
+    /// Stream from a seed with a domain-separation nonce
+    /// (`stream` picks e.g. additive vs multiplicative, `round` the
+    /// training iteration).
+    pub fn new(seed: Seed, stream: u32, round: u32) -> Self {
+        ChaCha20Rng {
+            key: seed.0,
+            nonce: [stream, round, 0x53_41_47_47], // "SAGG"
+            counter: 0,
+            buf: [0; 64],
+            pos: 64,
+        }
+    }
+
+    /// Convenience stream keyed by a bare u64 (tests, simulators).
+    pub fn from_seed_u64(x: u64) -> Self {
+        let mut key = [0u32; 8];
+        key[0] = x as u32;
+        key[1] = (x >> 32) as u32;
+        key[2] = 0x9e37_79b9;
+        Self::new(Seed(key), 0, 0)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        if self.pos == 64 {
+            self.buf = chacha::block4(&self.key, self.counter, &self.nonce);
+            self.counter = self.counter.wrapping_add(4);
+            self.pos = 0;
+        }
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        v
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        (self.next_u32() as u64) << 32 | self.next_u32() as u64
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform field element in [0, q) by rejection sampling.
+    #[inline]
+    pub fn next_field(&mut self) -> u32 {
+        loop {
+            let v = self.next_u32();
+            if v < Q {
+                return v;
+            }
+        }
+    }
+
+    /// Fill `out` with uniform field elements — the paper's
+    /// `PRG(s) → F_q^d` expansion (eq. 11–12).
+    pub fn fill_field(&mut self, out: &mut [u32]) {
+        for v in out.iter_mut() {
+            *v = self.next_field();
+        }
+    }
+
+    /// Expand a Bernoulli(ρ) binary vector (eq. 13): element ℓ is 1 iff
+    /// the next PRG word falls in the first ρ-fraction of the domain.
+    pub fn fill_bernoulli(&mut self, rho: f64, out: &mut [u8]) {
+        let thresh = bernoulli_threshold(rho);
+        for v in out.iter_mut() {
+            *v = (self.next_u32() < thresh) as u8;
+        }
+    }
+
+    /// Indices ℓ ∈ [0, d) where a Bernoulli(ρ) draw is 1, *without*
+    /// materializing the dense vector: geometric-skip sampling. Produces
+    /// exactly the same marginal distribution as `fill_bernoulli` (though
+    /// not the same sample path) in O(ρ·d) PRG draws instead of O(d) —
+    /// the key optimization for sparse multiplicative masks (§Perf).
+    pub fn bernoulli_indices(&mut self, rho: f64, d: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity((rho * d as f64 * 1.3) as usize + 4);
+        if rho <= 0.0 {
+            return out;
+        }
+        if rho >= 1.0 {
+            return (0..d as u32).collect();
+        }
+        let ln1p = (1.0 - rho).ln();
+        let mut i: usize = 0;
+        loop {
+            // Geometric gap: floor(ln(U) / ln(1-ρ)).
+            let u = (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+            let u = u.max(f64::MIN_POSITIVE);
+            let gap = (u.ln() / ln1p) as usize;
+            i = match i.checked_add(gap) {
+                Some(v) => v,
+                None => return out,
+            };
+            if i >= d {
+                return out;
+            }
+            out.push(i as u32);
+            i += 1;
+        }
+    }
+
+    /// Fill with uniform f32 in [0, 1).
+    pub fn fill_f32(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.next_f32();
+        }
+    }
+}
+
+/// Threshold T such that P[u32 < T] = ρ.
+#[inline]
+pub fn bernoulli_threshold(rho: f64) -> u32 {
+    if rho >= 1.0 {
+        u32::MAX
+    } else if rho <= 0.0 {
+        0
+    } else {
+        (rho * 4294967296.0) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop;
+
+    #[test]
+    fn deterministic_streams() {
+        let seed = Seed([1, 2, 3, 4, 5, 6, 7, 8]);
+        let mut a = ChaCha20Rng::new(seed, 0, 0);
+        let mut b = ChaCha20Rng::new(seed, 0, 0);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn domain_separation() {
+        let seed = Seed([9; 8]);
+        let mut a = ChaCha20Rng::new(seed, 0, 0);
+        let mut b = ChaCha20Rng::new(seed, 1, 0);
+        let mut c = ChaCha20Rng::new(seed, 0, 1);
+        let (x, y, z) = (a.next_u64(), b.next_u64(), c.next_u64());
+        assert_ne!(x, y);
+        assert_ne!(x, z);
+        assert_ne!(y, z);
+    }
+
+    #[test]
+    fn field_elements_in_range() {
+        let mut rng = ChaCha20Rng::from_seed_u64(13);
+        let mut v = vec![0u32; 4096];
+        rng.fill_field(&mut v);
+        assert!(v.iter().all(|&x| x < Q));
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut rng = ChaCha20Rng::from_seed_u64(14);
+        for _ in 0..10_000 {
+            let x = rng.next_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn bernoulli_mean_matches_rho() {
+        for &rho in &[0.001, 0.01, 0.1, 0.5, 0.9] {
+            let mut rng = ChaCha20Rng::from_seed_u64(15);
+            let mut v = vec![0u8; 200_000];
+            rng.fill_bernoulli(rho, &mut v);
+            let mean =
+                v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+            assert!(
+                (mean - rho).abs() < 5.0 * (rho / v.len() as f64).sqrt() + 1e-4,
+                "rho={rho} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn bernoulli_indices_mean_matches_rho() {
+        for &rho in &[0.002, 0.05, 0.3] {
+            let d = 300_000;
+            let mut rng = ChaCha20Rng::from_seed_u64(16);
+            let idx = rng.bernoulli_indices(rho, d);
+            let mean = idx.len() as f64 / d as f64;
+            assert!(
+                (mean - rho).abs() < 6.0 * (rho / d as f64).sqrt() + 1e-4,
+                "rho={rho} mean={mean}"
+            );
+            // strictly increasing, in range
+            assert!(idx.windows(2).all(|w| w[0] < w[1]));
+            assert!(idx.iter().all(|&i| (i as usize) < d));
+        }
+    }
+
+    #[test]
+    fn bernoulli_indices_edge_cases() {
+        let mut rng = ChaCha20Rng::from_seed_u64(17);
+        assert!(rng.bernoulli_indices(0.0, 1000).is_empty());
+        assert_eq!(rng.bernoulli_indices(1.0, 5), vec![0, 1, 2, 3, 4]);
+        assert!(rng.bernoulli_indices(0.5, 0).is_empty());
+    }
+
+    #[test]
+    fn seed_bytes_roundtrip() {
+        prop(100, |rng| {
+            let mut b = [0u8; 32];
+            for v in b.iter_mut() {
+                *v = rng.next_u32() as u8;
+            }
+            assert_eq!(Seed::from_bytes(&b).to_bytes(), b);
+        });
+    }
+}

@@ -1,0 +1,152 @@
+//! Differential-privacy composition (paper §II, ref. [17]).
+//!
+//! The paper positions secure aggregation as *complementary* to DP: since
+//! a curious server only ever sees sums over ≥ T honest users (Thm 2),
+//! each user needs only `σ_total / √T` of local Gaussian noise for the
+//! *aggregate* to carry the σ_total the Gaussian mechanism demands — a
+//! √T reduction versus local DP without secure aggregation, which is the
+//! accuracy benefit ref. [17] describes. This module provides that
+//! composition: per-user clipping, the analytic Gaussian mechanism
+//! calibration, and the √T noise split, to be applied to `y_i` *before*
+//! [`crate::protocol::sparse::User::masked_upload`].
+
+use crate::prg::ChaCha20Rng;
+
+/// DP parameters for one release (one training round).
+#[derive(Clone, Copy, Debug)]
+pub struct DpConfig {
+    pub epsilon: f64,
+    pub delta: f64,
+    /// L2 clipping bound on each user's update (the query sensitivity).
+    pub clip_norm: f64,
+}
+
+impl DpConfig {
+    /// Gaussian-mechanism σ for the *aggregate*: the classic analytic
+    /// bound σ = √(2 ln(1.25/δ)) · Δ / ε (Dwork & Roth Thm A.1), with
+    /// Δ = clip_norm (one user's removal changes the sum by ≤ Δ).
+    pub fn sigma_total(&self) -> f64 {
+        assert!(self.epsilon > 0.0 && self.delta > 0.0 && self.delta < 1.0);
+        (2.0 * (1.25 / self.delta).ln()).sqrt() * self.clip_norm
+            / self.epsilon
+    }
+
+    /// Per-user σ when ≥ `t` honest users are guaranteed to be summed
+    /// behind secure aggregation (Thm 2's T): t independent Gaussians of
+    /// σ/√t sum to σ.
+    pub fn sigma_per_user(&self, t: f64) -> f64 {
+        assert!(t >= 1.0, "need at least one honest user (t={t})");
+        self.sigma_total() / t.sqrt()
+    }
+}
+
+/// Clip `y` to L2 norm ≤ `clip_norm` in place; returns the original norm.
+pub fn clip_l2(y: &mut [f32], clip_norm: f64) -> f64 {
+    let norm = y.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+        .sqrt();
+    if norm > clip_norm && norm > 0.0 {
+        let s = (clip_norm / norm) as f32;
+        for v in y.iter_mut() {
+            *v *= s;
+        }
+    }
+    norm
+}
+
+/// Add IID Gaussian noise of standard deviation `sigma` (Box–Muller over
+/// the user's own PRG stream).
+pub fn add_gaussian_noise(y: &mut [f32], sigma: f64, rng: &mut ChaCha20Rng) {
+    if sigma <= 0.0 {
+        return;
+    }
+    for v in y.iter_mut() {
+        let u1 = rng.next_f32().max(1e-7) as f64;
+        let u2 = rng.next_f32() as f64;
+        let z = (-2.0 * u1.ln()).sqrt()
+            * (2.0 * std::f64::consts::PI * u2).cos();
+        *v += (sigma * z) as f32;
+    }
+}
+
+/// Full client-side DP preprocessing for one round: clip, then add the
+/// √T-reduced noise. Call on `y_i` before quantization/masking.
+pub fn privatize(y: &mut [f32], cfg: &DpConfig, t_guarantee: f64,
+                 rng: &mut ChaCha20Rng) {
+    clip_l2(y, cfg.clip_norm);
+    add_gaussian_noise(y, cfg.sigma_per_user(t_guarantee), rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigma_calibration_matches_closed_form() {
+        let cfg = DpConfig { epsilon: 1.0, delta: 1e-5, clip_norm: 1.0 };
+        let want = (2.0f64 * (1.25f64 / 1e-5).ln()).sqrt();
+        assert!((cfg.sigma_total() - want).abs() < 1e-12);
+        // tighter ε ⇒ more noise; larger clip ⇒ more noise
+        let tight = DpConfig { epsilon: 0.5, ..cfg };
+        assert!(tight.sigma_total() > cfg.sigma_total());
+    }
+
+    #[test]
+    fn per_user_noise_shrinks_with_t() {
+        // The secure-aggregation benefit: √T less local noise.
+        let cfg = DpConfig { epsilon: 1.0, delta: 1e-5, clip_norm: 1.0 };
+        let solo = cfg.sigma_per_user(1.0);
+        let t16 = cfg.sigma_per_user(16.0);
+        assert!((solo / t16 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clip_preserves_direction_and_bounds_norm() {
+        let mut y = vec![3.0f32, 4.0]; // norm 5
+        let orig = clip_l2(&mut y, 1.0);
+        assert!((orig - 5.0).abs() < 1e-6);
+        let norm: f64 =
+            y.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5);
+        assert!((y[0] as f64 / y[1] as f64 - 0.75).abs() < 1e-5);
+        // under the bound: untouched
+        let mut z = vec![0.1f32, 0.1];
+        clip_l2(&mut z, 1.0);
+        assert_eq!(z, vec![0.1f32, 0.1]);
+    }
+
+    #[test]
+    fn noise_is_unbiased_with_correct_variance() {
+        let mut rng = ChaCha20Rng::from_seed_u64(8);
+        let n = 200_000;
+        let mut y = vec![0f32; n];
+        let sigma = 0.5;
+        add_gaussian_noise(&mut y, sigma, &mut rng);
+        let mean = y.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+        let var = y.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var.sqrt() - sigma).abs() < 0.01, "sd={}", var.sqrt());
+    }
+
+    #[test]
+    fn aggregate_noise_hits_target_sigma() {
+        // t users each adding σ/√t of noise ⇒ aggregate noise ≈ σ_total.
+        let cfg = DpConfig { epsilon: 2.0, delta: 1e-5, clip_norm: 0.1 };
+        let t = 25usize;
+        let d = 50_000;
+        let mut agg = vec![0f64; d];
+        for u in 0..t {
+            let mut rng = ChaCha20Rng::from_seed_u64(100 + u as u64);
+            let mut y = vec![0f32; d];
+            add_gaussian_noise(&mut y, cfg.sigma_per_user(t as f64),
+                               &mut rng);
+            for (a, &v) in agg.iter_mut().zip(&y) {
+                *a += v as f64;
+            }
+        }
+        let var = agg.iter().map(|&v| v * v).sum::<f64>() / d as f64;
+        let want = cfg.sigma_total();
+        assert!((var.sqrt() - want).abs() / want < 0.05,
+                "agg sd={} want={want}", var.sqrt());
+    }
+}

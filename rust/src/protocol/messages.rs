@@ -1,0 +1,197 @@
+//! Wire messages and byte-exact size accounting.
+//!
+//! The communication numbers in Table I and Figs. 3/5/6 are *measured from
+//! these frames*, not estimated: every message knows its serialized size.
+//! Conventions (paper §VII): 32 bits per model parameter, 1 bit per
+//! parameter location (a d-bit bitmap), 64-bit DH public keys,
+//! [`crate::shamir::SHARE_BYTES`]-byte Shamir shares.
+
+use crate::shamir::{Share, SHARE_BYTES};
+
+/// Per-message framing overhead (sender id + message tag + length).
+pub const FRAME_BYTES: usize = 12;
+
+/// AdvertiseKeys (user → server): one DH public key.
+#[derive(Clone, Debug)]
+pub struct AdvertiseKeys {
+    pub id: usize,
+    pub public: u64,
+}
+
+impl AdvertiseKeys {
+    pub fn wire_bytes(&self) -> usize {
+        FRAME_BYTES + 8
+    }
+}
+
+/// Roster broadcast (server → each user): everyone's public key.
+#[derive(Clone, Debug)]
+pub struct Roster {
+    pub publics: Vec<u64>,
+}
+
+impl Roster {
+    pub fn wire_bytes(&self) -> usize {
+        FRAME_BYTES + 8 * self.publics.len()
+    }
+}
+
+/// One dealt share bundle (user → server → dest user): the owner's DH
+/// secret share and private-seed share, encrypted for `dest`.
+#[derive(Clone, Debug)]
+pub struct ShareBundle {
+    pub owner: usize,
+    pub dest: usize,
+    pub dh_share: Share,
+    pub seed_share: Share,
+}
+
+impl ShareBundle {
+    pub fn wire_bytes(&self) -> usize {
+        FRAME_BYTES + 4 + 2 * SHARE_BYTES
+    }
+}
+
+/// Sparse masked upload (user → server): location bitmap + field values
+/// at the selected coordinates (SparseSecAgg MaskedInput).
+#[derive(Clone, Debug)]
+pub struct SparseMaskedUpload {
+    pub id: usize,
+    /// Sorted selected coordinates U_i. On the wire this is a d-bit
+    /// bitmap (the paper's encoding); kept as indices in memory.
+    pub indices: Vec<u32>,
+    /// Masked field values at those coordinates, same order.
+    pub values: Vec<u32>,
+    /// Model dimension (for bitmap sizing).
+    pub d: usize,
+}
+
+impl SparseMaskedUpload {
+    /// Bitmap encoding: a u32 `d` word, ⌈d/8⌉ bytes of locations and
+    /// 4 bytes per value — exactly what `wire::encode_sparse_upload`
+    /// emits.
+    pub fn wire_bytes(&self) -> usize {
+        FRAME_BYTES + 4 + self.d.div_ceil(8) + 4 * self.values.len()
+    }
+
+    /// Ablation: index-list encoding (4 bytes per location) instead of
+    /// the bitmap. Cheaper only when |U_i|/d < 1/32.
+    pub fn wire_bytes_index_list(&self) -> usize {
+        FRAME_BYTES + 8 * self.values.len()
+    }
+}
+
+/// Dense masked upload (user → server): the SecAgg baseline MaskedInput.
+#[derive(Clone, Debug)]
+pub struct DenseMaskedUpload {
+    pub id: usize,
+    pub values: Vec<u32>,
+}
+
+impl DenseMaskedUpload {
+    pub fn wire_bytes(&self) -> usize {
+        FRAME_BYTES + 4 + 4 * self.values.len()
+    }
+}
+
+/// Unmask request (server → user): ids of dropped users whose DH-secret
+/// shares are needed, and of survivors whose private-seed shares are
+/// needed.
+#[derive(Clone, Debug)]
+pub struct UnmaskRequest {
+    pub dropped: Vec<usize>,
+    pub survivors: Vec<usize>,
+}
+
+impl UnmaskRequest {
+    pub fn wire_bytes(&self) -> usize {
+        FRAME_BYTES + 8 + 4 * (self.dropped.len() + self.survivors.len())
+    }
+}
+
+/// Unmask response (user → server): the requested shares this user holds.
+#[derive(Clone, Debug)]
+pub struct UnmaskResponse {
+    pub id: usize,
+    /// (owner, share of owner's DH secret) for each dropped owner.
+    pub dh_shares: Vec<(usize, Share)>,
+    /// (owner, share of owner's private seed) for each surviving owner.
+    pub seed_shares: Vec<(usize, Share)>,
+}
+
+impl UnmaskResponse {
+    pub fn wire_bytes(&self) -> usize {
+        FRAME_BYTES + 8
+            + (4 + SHARE_BYTES) * (self.dh_shares.len() + self.seed_shares.len())
+    }
+}
+
+/// Global-model broadcast (server → each user): d dense f32 parameters.
+#[derive(Clone, Debug)]
+pub struct ModelBroadcast {
+    pub d: usize,
+}
+
+impl ModelBroadcast {
+    pub fn wire_bytes(&self) -> usize {
+        FRAME_BYTES + 4 * self.d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn share() -> Share {
+        Share { x: 1, y: [0; 8] }
+    }
+
+    #[test]
+    fn sparse_upload_bitmap_beats_secagg_at_alpha_01() {
+        // Table I regime: α=0.1 upload ≈ d·(0.1·4 + 1/8) bytes ≪ 4d.
+        let d = 170_542;
+        let k = (0.097 * d as f64) as usize;
+        let up = SparseMaskedUpload {
+            id: 0,
+            indices: vec![0; k],
+            values: vec![0; k],
+            d,
+        };
+        let dense = DenseMaskedUpload { id: 0, values: vec![0; d] };
+        let ratio = dense.wire_bytes() as f64 / up.wire_bytes() as f64;
+        assert!(ratio > 7.0 && ratio < 10.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn index_list_wins_only_when_very_sparse() {
+        let d = 100_000;
+        let sparse_k = d / 100; // 1% ≪ 1/32
+        let up = SparseMaskedUpload {
+            id: 0, indices: vec![0; sparse_k], values: vec![0; sparse_k], d,
+        };
+        assert!(up.wire_bytes_index_list() < up.wire_bytes());
+        let dense_k = d / 10; // 10% ≫ 1/32
+        let up = SparseMaskedUpload {
+            id: 0, indices: vec![0; dense_k], values: vec![0; dense_k], d,
+        };
+        assert!(up.wire_bytes_index_list() > up.wire_bytes());
+    }
+
+    #[test]
+    fn share_bundle_size_is_constant() {
+        let b = ShareBundle {
+            owner: 0, dest: 1, dh_share: share(), seed_share: share(),
+        };
+        assert_eq!(b.wire_bytes(), FRAME_BYTES + 4 + 2 * SHARE_BYTES);
+    }
+
+    #[test]
+    fn unmask_response_scales_with_requests() {
+        let r = UnmaskResponse {
+            id: 0,
+            dh_shares: vec![(1, share()), (2, share())],
+            seed_shares: vec![(3, share())],
+        };
+        assert_eq!(r.wire_bytes(), FRAME_BYTES + 8 + 3 * (4 + SHARE_BYTES));
+    }
+}

@@ -1,0 +1,111 @@
+//! Secure-aggregation protocols.
+//!
+//! * [`sparse`] — **SparseSecAgg** (Algorithm 1 of the paper): sparsified
+//!   secure aggregation via pairwise multiplicative masks.
+//! * [`secagg`] — the conventional secure-aggregation baseline of
+//!   Bonawitz et al. (CCS'17), the paper's comparison point.
+//! * [`messages`] — wire-format framing shared by both, used for the
+//!   byte-exact communication accounting behind Table I / Figs. 3, 5, 6.
+//!
+//! Both protocols follow the Bonawitz phase structure:
+//! `AdvertiseKeys → ShareKeys → MaskedInput → Unmask`. Key advertisement
+//! and share dealing run once (seeds are domain-separated per round by the
+//! PRG nonce); MaskedInput and Unmask run every round. The threat model is
+//! honest-but-curious with up to γN colluding users (§IV); shares routed
+//! through the server are modeled as encrypted blobs (byte-counted, not
+//! actually encrypted — the simulation never lets the server *read* them).
+
+pub mod dp;
+pub mod messages;
+pub mod secagg;
+pub mod sparse;
+pub mod wire;
+
+use crate::prg::Seed;
+
+/// Static protocol parameters for a deployment.
+#[derive(Clone, Copy, Debug)]
+pub struct Params {
+    /// Number of users N.
+    pub n: usize,
+    /// Model dimension d.
+    pub d: usize,
+    /// Compression ratio α ∈ (0, 1] (SparseSecAgg only; SecAgg ≡ 1).
+    pub alpha: f64,
+    /// Expected dropout rate θ ∈ [0, 0.5) used in the scaling factor.
+    pub theta: f64,
+    /// Quantization level c (eq. 15).
+    pub c: f32,
+}
+
+impl Params {
+    /// ρ = α/(N−1), the per-pair Bernoulli rate (eq. 13).
+    pub fn rho(&self) -> f64 {
+        crate::masking::bernoulli_rate(self.alpha, self.n)
+    }
+
+    /// p = 1 − (1 − ρ)^(N−1), the per-user selection probability (eq. 14).
+    pub fn p(&self) -> f64 {
+        crate::quantize::selection_probability(self.alpha, self.n)
+    }
+
+    /// Client scale factor β_i / (p(1−θ)) (§V-B).
+    pub fn scale(&self, beta_i: f64) -> f32 {
+        crate::quantize::scale_factor(beta_i, self.p(), self.theta) as f32
+    }
+
+    /// Shamir polynomial degree t = ⌊N/2⌋ (reconstruction needs t+1).
+    pub fn threshold(&self) -> usize {
+        crate::shamir::default_threshold(self.n)
+    }
+}
+
+/// Embed a 64-bit DH secret into a canonical [`Seed`] (16-bit limbs, all
+/// < q) so it can be Shamir-shared word-wise over F_q and recovered
+/// exactly.
+pub fn seed_from_u64_secret(x: u64) -> Seed {
+    Seed([
+        (x & 0xffff) as u32,
+        ((x >> 16) & 0xffff) as u32,
+        ((x >> 32) & 0xffff) as u32,
+        ((x >> 48) & 0xffff) as u32,
+        0,
+        0,
+        0,
+        0,
+    ])
+}
+
+/// Inverse of [`seed_from_u64_secret`].
+pub fn u64_secret_from_seed(s: Seed) -> u64 {
+    (s.0[0] as u64)
+        | (s.0[1] as u64) << 16
+        | (s.0[2] as u64) << 32
+        | (s.0[3] as u64) << 48
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop;
+
+    #[test]
+    fn u64_seed_roundtrip() {
+        prop(500, |rng| {
+            let x = rng.next_u64();
+            let s = seed_from_u64_secret(x);
+            assert!(s.0.iter().all(|&w| w < crate::field::Q));
+            assert_eq!(u64_secret_from_seed(s), x);
+        });
+    }
+
+    #[test]
+    fn params_derived_quantities() {
+        let p = Params { n: 100, d: 1000, alpha: 0.1, theta: 0.3, c: 1024.0 };
+        assert!((p.rho() - 0.1 / 99.0).abs() < 1e-12);
+        assert!(p.p() > 0.09 && p.p() < 0.11);
+        assert_eq!(p.threshold(), 50);
+        // β_i = 1/N; scale > β_i because p(1−θ) < 1.
+        assert!(p.scale(0.01) > 0.01);
+    }
+}

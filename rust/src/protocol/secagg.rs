@@ -1,0 +1,338 @@
+//! Conventional secure aggregation — the Bonawitz et al. (CCS'17)
+//! baseline the paper compares against (§III-B, eqs. 9–10).
+//!
+//! Identical substrates (DH, Shamir, ChaCha20 PRG, F_q) and phase
+//! structure as [`super::sparse`], but every user uploads the **entire**
+//! masked model: `x_i = Q(scale·y_i) + r_i + Σ_{j>i} r_ij − Σ_{j<i} r_ij`
+//! over all d coordinates. Per-user upload is therefore 4d bytes — the
+//! 0.66 MB/round of Table I at the CIFAR architecture.
+
+use crate::dh;
+use crate::masking::{self, STREAM_ADDITIVE, STREAM_PRIVATE};
+use crate::prg::{ChaCha20Rng, Seed};
+use crate::protocol::messages::*;
+use crate::protocol::sparse::{TAG_ADDITIVE};
+use crate::protocol::{seed_from_u64_secret, u64_secret_from_seed, Params};
+use crate::quantize;
+use crate::shamir::{self, Share};
+
+/// A SecAgg client.
+pub struct User {
+    pub id: usize,
+    n: usize,
+    keypair: dh::KeyPair,
+    private_seed: Seed,
+    roster: Vec<u64>,
+    held: Vec<Option<(Share, Share)>>,
+}
+
+impl User {
+    pub fn new(id: usize, n: usize, entropy: u64) -> Self {
+        let keypair = dh::KeyPair::generate(entropy ^ (id as u64) << 32);
+        let mut rng =
+            ChaCha20Rng::from_seed_u64(entropy.wrapping_mul(0x9e3779b97f4a7c15));
+        let mut w = [0u32; 8];
+        for v in w.iter_mut() {
+            *v = rng.next_field();
+        }
+        User {
+            id,
+            n,
+            keypair,
+            private_seed: Seed(w),
+            roster: Vec::new(),
+            held: vec![None; n],
+        }
+    }
+
+    pub fn advertise(&self) -> AdvertiseKeys {
+        AdvertiseKeys { id: self.id, public: self.keypair.public }
+    }
+
+    pub fn install_roster(&mut self, roster: &Roster) {
+        self.roster = roster.publics.clone();
+    }
+
+    pub fn deal_shares(&mut self, t: usize) -> Vec<ShareBundle> {
+        let mut entropy = ChaCha20Rng::new(self.private_seed, 0xdea1, 0);
+        let dh_shares =
+            shamir::deal(seed_from_u64_secret(self.keypair.secret), self.n,
+                         t, &mut entropy);
+        let seed_shares =
+            shamir::deal(self.private_seed, self.n, t, &mut entropy);
+        (0..self.n)
+            .map(|dest| ShareBundle {
+                owner: self.id,
+                dest,
+                dh_share: dh_shares[dest].clone(),
+                seed_share: seed_shares[dest].clone(),
+            })
+            .collect()
+    }
+
+    pub fn receive_bundle(&mut self, b: &ShareBundle) {
+        self.held[b.owner] = Some((b.dh_share.clone(), b.seed_share.clone()));
+    }
+
+    /// MaskedInput (eq. 9): dense quantize + full additive masking.
+    /// SecAgg has no sparsification, so the scale is β_i / (1 − θ).
+    /// All mask streams are sequential (block4-backed) and combined with
+    /// the vectorized field ops (§Perf).
+    pub fn masked_upload(&self, round: u32, y: &[f32], beta_i: f64,
+                         params: &Params) -> DenseMaskedUpload {
+        let d = params.d;
+        assert_eq!(y.len(), d);
+        let scale = (beta_i / (1.0 - params.theta)) as f32;
+        let rounding = masking::rounding_values(self.private_seed, round, d);
+        let priv_mask =
+            masking::mask_values(self.private_seed, STREAM_PRIVATE, round, d);
+        // Quantize + private mask.
+        let mut values: Vec<u32> = (0..d)
+            .map(|l| {
+                quantize::quantize_mask_one(
+                    y[l], rounding[l], priv_mask[l], true, scale, params.c)
+            })
+            .collect();
+        // Pairwise masks, full length, one vectorized pass per pair.
+        for j in 0..self.n {
+            if j == self.id {
+                continue;
+            }
+            let seed = dh::agree(self.keypair.secret, self.roster[j],
+                                 self.id as u32, j as u32, TAG_ADDITIVE);
+            masking::apply_mask_values(&mut values, seed, STREAM_ADDITIVE,
+                                       round, self.id < j);
+        }
+        DenseMaskedUpload { id: self.id, values }
+    }
+
+    pub fn respond_unmask(&self, req: &UnmaskRequest) -> UnmaskResponse {
+        let dh_shares = req
+            .dropped
+            .iter()
+            .filter_map(|&o| self.held[o].as_ref().map(|(d, _)| (o, d.clone())))
+            .collect();
+        let seed_shares = req
+            .survivors
+            .iter()
+            .filter_map(|&o| self.held[o].as_ref().map(|(_, s)| (o, s.clone())))
+            .collect();
+        UnmaskResponse { id: self.id, dh_shares, seed_shares }
+    }
+}
+
+/// The SecAgg server.
+pub struct Server {
+    pub params: Params,
+    roster: Vec<u64>,
+    agg: Vec<u32>,
+    received: Vec<bool>,
+    survivors: Vec<usize>,
+}
+
+impl Server {
+    pub fn new(params: Params) -> Self {
+        Server {
+            params,
+            roster: Vec::new(),
+            agg: vec![0; params.d],
+            received: vec![false; params.n],
+            survivors: Vec::new(),
+        }
+    }
+
+    pub fn collect_keys(&mut self, ads: &[AdvertiseKeys]) -> Roster {
+        let mut publics = vec![0u64; self.params.n];
+        for ad in ads {
+            publics[ad.id] = ad.public;
+        }
+        self.roster = publics.clone();
+        Roster { publics }
+    }
+
+    pub fn begin_round(&mut self) {
+        self.agg.iter_mut().for_each(|v| *v = 0);
+        self.received.iter_mut().for_each(|v| *v = false);
+        self.survivors.clear();
+    }
+
+    pub fn receive_upload(&mut self, up: DenseMaskedUpload) {
+        crate::field::vecops::add_assign(&mut self.agg, &up.values);
+        self.received[up.id] = true;
+        self.survivors.push(up.id);
+    }
+
+    pub fn unmask_request(&self) -> UnmaskRequest {
+        let dropped =
+            (0..self.params.n).filter(|&i| !self.received[i]).collect();
+        let mut survivors = self.survivors.clone();
+        survivors.sort_unstable();
+        UnmaskRequest { dropped, survivors }
+    }
+
+    /// Unmask (eq. 10) + dequantize.
+    pub fn finish_round(&mut self, round: u32, responses: &[UnmaskResponse])
+                        -> anyhow::Result<Vec<f32>> {
+        let t = self.params.threshold();
+        let req = self.unmask_request();
+
+        for &i in &req.dropped {
+            let shares: Vec<Share> = responses
+                .iter()
+                .filter_map(|r| {
+                    r.dh_shares.iter().find(|(o, _)| *o == i)
+                        .map(|(_, s)| s.clone())
+                })
+                .collect();
+            let refs: Vec<&Share> = shares.iter().collect();
+            let seed = shamir::reconstruct(&refs, t).ok_or_else(|| {
+                anyhow::anyhow!("cannot reconstruct DH secret of user {i}")
+            })?;
+            let secret_i = u64_secret_from_seed(seed);
+            for &j in &req.survivors {
+                let add_seed = dh::agree(secret_i, self.roster[j], i as u32,
+                                         j as u32, TAG_ADDITIVE);
+                masking::apply_mask_values(&mut self.agg, add_seed,
+                                           STREAM_ADDITIVE, round, j >= i);
+            }
+        }
+
+        for &j in &req.survivors {
+            let shares: Vec<Share> = responses
+                .iter()
+                .filter_map(|r| {
+                    r.seed_shares.iter().find(|(o, _)| *o == j)
+                        .map(|(_, s)| s.clone())
+                })
+                .collect();
+            let refs: Vec<&Share> = shares.iter().collect();
+            let seed = shamir::reconstruct(&refs, t).ok_or_else(|| {
+                anyhow::anyhow!("cannot reconstruct private seed of user {j}")
+            })?;
+            masking::apply_mask_values(&mut self.agg, seed, STREAM_PRIVATE,
+                                       round, false);
+        }
+
+        Ok(quantize::dequantize(&self.agg, self.params.c))
+    }
+
+    pub fn aggregate_field(&self) -> &[u32] {
+        &self.agg
+    }
+}
+
+/// Key setup for a fresh SecAgg cohort (mirrors `sparse::setup`).
+pub fn setup(params: Params, entropy: u64) -> (Vec<User>, Server) {
+    let n = params.n;
+    let mut users: Vec<User> = (0..n)
+        .map(|i| User::new(i, n, entropy.wrapping_add(i as u64 * 0x517c_c1b7)))
+        .collect();
+    let mut server = Server::new(params);
+    let ads: Vec<AdvertiseKeys> = users.iter().map(|u| u.advertise()).collect();
+    let roster = server.collect_keys(&ads);
+    for u in users.iter_mut() {
+        u.install_roster(&roster);
+    }
+    let t = params.threshold();
+    let all: Vec<Vec<ShareBundle>> =
+        users.iter_mut().map(|u| u.deal_shares(t)).collect();
+    for bundles in &all {
+        for b in bundles {
+            users[b.dest].receive_bundle(b);
+        }
+    }
+    (users, server)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field;
+
+    fn run_round(users: &[User], server: &mut Server, round: u32,
+                 ys: &[Vec<f32>], dropped: &[usize]) -> Vec<f32> {
+        let p = server.params;
+        let beta = 1.0 / p.n as f64;
+        server.begin_round();
+        for u in users {
+            if dropped.contains(&u.id) {
+                continue;
+            }
+            server.receive_upload(u.masked_upload(round, &ys[u.id], beta, &p));
+        }
+        let req = server.unmask_request();
+        let responses: Vec<UnmaskResponse> = users
+            .iter()
+            .filter(|u| !dropped.contains(&u.id))
+            .map(|u| u.respond_unmask(&req))
+            .collect();
+        server.finish_round(round, &responses).unwrap()
+    }
+
+    fn expected_field_agg(users: &[User], survivors: &[usize], round: u32,
+                          ys: &[Vec<f32>], p: &Params) -> Vec<u32> {
+        let beta = 1.0 / p.n as f64;
+        let scale = (beta / (1.0 - p.theta)) as f32;
+        let mut agg = vec![0u32; p.d];
+        for &i in survivors {
+            let rounding =
+                masking::rounding_values(users[i].private_seed, round, p.d);
+            for l in 0..p.d {
+                let v = quantize::quantize_mask_one(
+                    ys[i][l], rounding[l], 0, true, scale, p.c);
+                agg[l] = field::add(agg[l], v);
+            }
+        }
+        agg
+    }
+
+    #[test]
+    fn aggregate_exact_no_dropout() {
+        let p = Params { n: 6, d: 400, alpha: 1.0, theta: 0.0, c: 1024.0 };
+        let (users, mut server) = setup(p, 21);
+        let mut rng = ChaCha20Rng::from_seed_u64(2);
+        let ys: Vec<Vec<f32>> = (0..p.n)
+            .map(|_| (0..p.d).map(|_| rng.next_f32() - 0.5).collect())
+            .collect();
+        run_round(&users, &mut server, 1, &ys, &[]);
+        let survivors: Vec<usize> = (0..p.n).collect();
+        let want = expected_field_agg(&users, &survivors, 1, &ys, &p);
+        assert_eq!(server.aggregate_field(), &want[..]);
+    }
+
+    #[test]
+    fn aggregate_exact_with_dropout() {
+        let p = Params { n: 7, d: 300, alpha: 1.0, theta: 0.3, c: 2048.0 };
+        let (users, mut server) = setup(p, 31);
+        let mut rng = ChaCha20Rng::from_seed_u64(3);
+        let ys: Vec<Vec<f32>> = (0..p.n)
+            .map(|_| (0..p.d).map(|_| rng.next_f32() - 0.5).collect())
+            .collect();
+        let dropped = vec![1usize, 4];
+        run_round(&users, &mut server, 2, &ys, &dropped);
+        let survivors: Vec<usize> =
+            (0..p.n).filter(|i| !dropped.contains(i)).collect();
+        let want = expected_field_agg(&users, &survivors, 2, &ys, &p);
+        assert_eq!(server.aggregate_field(), &want[..]);
+    }
+
+    #[test]
+    fn dequantized_matches_weighted_sum() {
+        let p = Params { n: 5, d: 1000, alpha: 1.0, theta: 0.0, c: 65536.0 };
+        let (users, mut server) = setup(p, 41);
+        let mut rng = ChaCha20Rng::from_seed_u64(4);
+        let ys: Vec<Vec<f32>> = (0..p.n)
+            .map(|_| (0..p.d).map(|_| rng.next_f32() * 2.0 - 1.0).collect())
+            .collect();
+        let out = run_round(&users, &mut server, 0, &ys, &[]);
+        // out ≈ Σ β_i y_i within N quantization steps.
+        let beta = 1.0 / p.n as f64;
+        for l in 0..p.d {
+            let want: f64 =
+                ys.iter().map(|y| beta * y[l] as f64).sum();
+            assert!((out[l] as f64 - want).abs()
+                    < p.n as f64 / p.c as f64 + 1e-5,
+                    "l={l} got={} want={want}", out[l]);
+        }
+    }
+}

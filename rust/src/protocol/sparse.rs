@@ -1,0 +1,551 @@
+//! **SparseSecAgg** — Algorithm 1 of the paper.
+//!
+//! Per-round flow (phases; key setup is amortized across rounds because
+//! the PRG domain-separates per-round streams from fixed seeds):
+//!
+//! 1. *AdvertiseKeys / ShareKeys* (once): users exchange DH public keys
+//!    through the server and Shamir-share their DH secret and private
+//!    seed with all peers (threshold ⌊N/2⌋+1).
+//! 2. *MaskedInput* (each round): user i derives pairwise seeds, builds
+//!    the sparsification pattern `U_i = ∪_j supp(b_ij)` and the signed
+//!    mask sums, quantizes its weighted gradient, and uploads
+//!    `{x_i(ℓ)}_{ℓ∈U_i}` plus the location bitmap (eq. 18–19).
+//! 3. *Unmask* (each round): the server aggregates uploads (eq. 20),
+//!    collects shares to reconstruct the DH secrets of *dropped* users and
+//!    the private seeds of *surviving* users, removes the dangling masks
+//!    (eq. 21), and dequantizes (eq. 23).
+//!
+//! The server-side result is **exactly** `Σ_{i∈S} select_i · Q_c(scale_i ·
+//! y_i)` in the field — tests assert bit-exact equality against an
+//! unmasked recomputation, not approximate closeness.
+
+use crate::dh;
+use crate::field;
+use crate::masking::{
+    self, MaskPlan, PairSeeds, STREAM_ADDITIVE, STREAM_PRIVATE,
+};
+use crate::prg::{ChaCha20Rng, Seed};
+use crate::protocol::messages::*;
+use crate::protocol::{seed_from_u64_secret, u64_secret_from_seed, Params};
+use crate::quantize;
+use crate::shamir::{self, Share};
+
+/// Tags separating the two pairwise seed families derived from one DH
+/// agreement.
+pub const TAG_ADDITIVE: &str = "additive";
+pub const TAG_MULTIPLICATIVE: &str = "multiplicative";
+
+/// A SparseSecAgg client.
+pub struct User {
+    pub id: usize,
+    n: usize,
+    keypair: dh::KeyPair,
+    private_seed: Seed,
+    roster: Vec<u64>,
+    /// Shares this user holds, indexed by owner id.
+    held: Vec<Option<(Share, Share)>>,
+}
+
+impl User {
+    /// Create user `id` of `n` with its own entropy word.
+    pub fn new(id: usize, n: usize, entropy: u64) -> Self {
+        let keypair = dh::KeyPair::generate(entropy ^ (id as u64) << 32);
+        let mut rng =
+            ChaCha20Rng::from_seed_u64(entropy.wrapping_mul(0x9e3779b97f4a7c15));
+        let mut w = [0u32; 8];
+        for v in w.iter_mut() {
+            *v = rng.next_field();
+        }
+        User {
+            id,
+            n,
+            keypair,
+            private_seed: Seed(w),
+            roster: Vec::new(),
+            held: vec![None; n],
+        }
+    }
+
+    pub fn advertise(&self) -> AdvertiseKeys {
+        AdvertiseKeys { id: self.id, public: self.keypair.public }
+    }
+
+    pub fn install_roster(&mut self, roster: &Roster) {
+        assert_eq!(roster.publics.len(), self.n);
+        self.roster = roster.publics.clone();
+    }
+
+    /// Shamir-share this user's DH secret and private seed for all peers.
+    pub fn deal_shares(&mut self, t: usize) -> Vec<ShareBundle> {
+        let mut entropy = ChaCha20Rng::new(self.private_seed, 0xdea1, 0);
+        let dh_shares =
+            shamir::deal(seed_from_u64_secret(self.keypair.secret), self.n,
+                         t, &mut entropy);
+        let seed_shares =
+            shamir::deal(self.private_seed, self.n, t, &mut entropy);
+        (0..self.n)
+            .map(|dest| ShareBundle {
+                owner: self.id,
+                dest,
+                dh_share: dh_shares[dest].clone(),
+                seed_share: seed_shares[dest].clone(),
+            })
+            .collect()
+    }
+
+    pub fn receive_bundle(&mut self, b: &ShareBundle) {
+        assert_eq!(b.dest, self.id);
+        self.held[b.owner] = Some((b.dh_share.clone(), b.seed_share.clone()));
+    }
+
+    /// Pairwise (additive, multiplicative) seeds with peer `j`.
+    pub fn pair_seeds(&self, j: usize) -> (Seed, Seed) {
+        let pk = self.roster[j];
+        (
+            dh::agree(self.keypair.secret, pk, self.id as u32, j as u32,
+                      TAG_ADDITIVE),
+            dh::agree(self.keypair.secret, pk, self.id as u32, j as u32,
+                      TAG_MULTIPLICATIVE),
+        )
+    }
+
+    /// Build this round's mask plan (pattern + mask sums). Exposed
+    /// separately from [`Self::masked_upload`] so the coordinator can
+    /// overlap it with local training.
+    pub fn mask_plan(&self, round: u32, params: &Params,
+                     scratch: &mut Vec<u32>) -> MaskPlan {
+        let pairs: Vec<PairSeeds> = (0..self.n)
+            .filter(|&j| j != self.id)
+            .map(|j| {
+                let (additive, multiplicative) = self.pair_seeds(j);
+                PairSeeds { peer: j, additive, multiplicative }
+            })
+            .collect();
+        masking::assemble(self.id, params.d, round, params.rho(), &pairs,
+                          self.private_seed, scratch)
+    }
+
+    /// MaskedInput: quantize + mask the weighted gradient `y` on the
+    /// plan's support (eq. 18) and frame it for upload.
+    pub fn masked_upload(&self, round: u32, y: &[f32], beta_i: f64,
+                         params: &Params, plan: MaskPlan)
+                         -> SparseMaskedUpload {
+        assert_eq!(y.len(), params.d);
+        let rand_at = masking::rounding_values(self.private_seed, round,
+                                               plan.indices.len());
+        let values = quantize::quantize_mask_at(
+            y, &rand_at, &plan.masksum_at, &plan.indices,
+            params.scale(beta_i), params.c);
+        SparseMaskedUpload {
+            id: self.id,
+            indices: plan.indices,
+            values,
+            d: params.d,
+        }
+    }
+
+    /// Dense inputs for the L1 HLO quantmask kernel: `(y_pad, rand,
+    /// masksum, select)`, each of length `dpad`. Bit-equivalent to the
+    /// native path of [`Self::masked_upload`] by construction (same
+    /// compressed rounding stream, scattered onto the support).
+    pub fn kernel_inputs(&self, round: u32, y: &[f32], params: &Params,
+                         plan: &MaskPlan, dpad: usize)
+                         -> (Vec<f32>, Vec<f32>, Vec<u32>, Vec<u32>) {
+        assert!(dpad >= params.d);
+        let mut y_pad = vec![0f32; dpad];
+        y_pad[..params.d].copy_from_slice(y);
+        // Scatter the compressed rounding stream onto the selected
+        // coordinates; unselected coordinates get 0 (the kernel's select
+        // zeroes them anyway), keeping the HLO path bit-identical to the
+        // native sparse path.
+        let rand_at = masking::rounding_values(self.private_seed, round,
+                                               plan.indices.len());
+        let mut rand = vec![0f32; dpad];
+        for (&l, &r) in plan.indices.iter().zip(&rand_at) {
+            rand[l as usize] = r;
+        }
+        let (select, masksum) = plan.densify(dpad);
+        (y_pad, rand, masksum, select)
+    }
+
+    /// Assemble the upload from the kernel's dense output vector.
+    pub fn upload_from_kernel(&self, plan: MaskPlan, dense_out: &[u32],
+                              d: usize) -> SparseMaskedUpload {
+        let values: Vec<u32> = plan
+            .indices
+            .iter()
+            .map(|&l| dense_out[l as usize])
+            .collect();
+        SparseMaskedUpload { id: self.id, indices: plan.indices, values, d }
+    }
+
+    /// The stochastic-rounding uniforms this user draws for its first
+    /// `count` selected coordinates — exposed so tests and the unmasked
+    /// reference recomputation can reproduce uploads exactly.
+    pub fn rounding_uniforms(&self, round: u32, count: usize) -> Vec<f32> {
+        masking::rounding_values(self.private_seed, round, count)
+    }
+
+    /// Unmask: surrender held shares for the requested owners.
+    pub fn respond_unmask(&self, req: &UnmaskRequest) -> UnmaskResponse {
+        let dh_shares = req
+            .dropped
+            .iter()
+            .filter_map(|&o| {
+                self.held[o].as_ref().map(|(d, _)| (o, d.clone()))
+            })
+            .collect();
+        let seed_shares = req
+            .survivors
+            .iter()
+            .filter_map(|&o| {
+                self.held[o].as_ref().map(|(_, s)| (o, s.clone()))
+            })
+            .collect();
+        UnmaskResponse { id: self.id, dh_shares, seed_shares }
+    }
+}
+
+/// The SparseSecAgg server (aggregator).
+pub struct Server {
+    pub params: Params,
+    roster: Vec<u64>,
+    agg: Vec<u32>,
+    /// U_i of each received upload (needed for private-mask removal and
+    /// for the privacy metrics).
+    pub upload_indices: Vec<Option<Vec<u32>>>,
+    survivors: Vec<usize>,
+}
+
+impl Server {
+    pub fn new(params: Params) -> Self {
+        Server {
+            params,
+            roster: Vec::new(),
+            agg: vec![0u32; params.d],
+            upload_indices: vec![None; params.n],
+            survivors: Vec::new(),
+        }
+    }
+
+    /// Collect advertisements into the roster broadcast.
+    pub fn collect_keys(&mut self, ads: &[AdvertiseKeys]) -> Roster {
+        assert_eq!(ads.len(), self.params.n);
+        let mut publics = vec![0u64; self.params.n];
+        for ad in ads {
+            publics[ad.id] = ad.public;
+        }
+        self.roster = publics.clone();
+        Roster { publics }
+    }
+
+    pub fn begin_round(&mut self) {
+        self.agg.iter_mut().for_each(|v| *v = 0);
+        self.upload_indices.iter_mut().for_each(|v| *v = None);
+        self.survivors.clear();
+    }
+
+    /// Aggregate one masked upload (eq. 20).
+    pub fn receive_upload(&mut self, up: SparseMaskedUpload) {
+        for (&l, &v) in up.indices.iter().zip(&up.values) {
+            let a = &mut self.agg[l as usize];
+            *a = field::add(*a, v);
+        }
+        self.survivors.push(up.id);
+        self.upload_indices[up.id] = Some(up.indices);
+    }
+
+    /// Which shares the server must collect this round.
+    pub fn unmask_request(&self) -> UnmaskRequest {
+        let dropped: Vec<usize> = (0..self.params.n)
+            .filter(|i| self.upload_indices[*i].is_none())
+            .collect();
+        let mut survivors = self.survivors.clone();
+        survivors.sort_unstable();
+        UnmaskRequest { dropped, survivors }
+    }
+
+    /// Unmask (eq. 21) + dequantize (eq. 23). `responses` must come from
+    /// at least t+1 survivors. Returns the aggregated real-valued
+    /// gradient Σ_{i∈S} select_i · Q_c(scale_i · y_i).
+    pub fn finish_round(&mut self, round: u32,
+                        responses: &[UnmaskResponse])
+                        -> anyhow::Result<Vec<f32>> {
+        let t = self.params.threshold();
+        let req = self.unmask_request();
+
+        // --- reconstruct dropped users' DH secrets; strip the dangling
+        // pairwise masks they left in each survivor's upload.
+        for &i in &req.dropped {
+            let shares: Vec<Share> = responses
+                .iter()
+                .filter_map(|r| {
+                    r.dh_shares.iter().find(|(o, _)| *o == i)
+                        .map(|(_, s)| s.clone())
+                })
+                .collect();
+            let refs: Vec<&Share> = shares.iter().collect();
+            let seed = shamir::reconstruct(&refs, t).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "cannot reconstruct DH secret of dropped user {i}: \
+                     {} shares < threshold {}", refs.len(), t + 1)
+            })?;
+            let secret_i = u64_secret_from_seed(seed);
+            for &j in &req.survivors {
+                // Seeds must match what users i and j derived: agree() is
+                // symmetric and canonicalizes the pair ids.
+                let add_seed = dh::agree(secret_i, self.roster[j], i as u32,
+                                         j as u32, TAG_ADDITIVE);
+                let mult_seed = dh::agree(secret_i, self.roster[j], i as u32,
+                                          j as u32, TAG_MULTIPLICATIVE);
+                let support = masking::pairwise_support(
+                    mult_seed, round, self.params.rho(), self.params.d);
+                let values = masking::mask_values(
+                    add_seed, STREAM_ADDITIVE, round, support.len());
+                // Survivor j's upload carried sign(j, i); remove it.
+                let j_added = masking::pair_sign(j, i);
+                for (&l, &r) in support.iter().zip(&values) {
+                    let a = &mut self.agg[l as usize];
+                    *a = if j_added {
+                        field::sub(*a, r)
+                    } else {
+                        field::add(*a, r)
+                    };
+                }
+            }
+        }
+
+        // --- reconstruct survivors' private seeds; strip r_j on U_j.
+        for &j in &req.survivors {
+            let shares: Vec<Share> = responses
+                .iter()
+                .filter_map(|r| {
+                    r.seed_shares.iter().find(|(o, _)| *o == j)
+                        .map(|(_, s)| s.clone())
+                })
+                .collect();
+            let refs: Vec<&Share> = shares.iter().collect();
+            let seed = shamir::reconstruct(&refs, t).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "cannot reconstruct private seed of survivor {j}")
+            })?;
+            let indices = self.upload_indices[j].as_ref().unwrap();
+            let values = masking::mask_values(seed, STREAM_PRIVATE, round,
+                                              indices.len());
+            for (&l, &r) in indices.iter().zip(&values) {
+                let a = &mut self.agg[l as usize];
+                *a = field::sub(*a, r);
+            }
+        }
+
+        Ok(quantize::dequantize(&self.agg, self.params.c))
+    }
+
+    /// Field-domain aggregate (post-unmask) — used by exactness tests.
+    pub fn aggregate_field(&self) -> &[u32] {
+        &self.agg
+    }
+
+    /// Surviving user ids this round.
+    pub fn survivors(&self) -> &[usize] {
+        &self.survivors
+    }
+}
+
+/// Run key setup for a fresh cohort: advertise, roster, share dealing.
+/// Returns (users, server). Used by tests, examples and the coordinator.
+pub fn setup(params: Params, entropy: u64) -> (Vec<User>, Server) {
+    let n = params.n;
+    let mut users: Vec<User> = (0..n)
+        .map(|i| User::new(i, n, entropy.wrapping_add(i as u64 * 0x517c_c1b7)))
+        .collect();
+    let mut server = Server::new(params);
+    let ads: Vec<AdvertiseKeys> = users.iter().map(|u| u.advertise()).collect();
+    let roster = server.collect_keys(&ads);
+    for u in users.iter_mut() {
+        u.install_roster(&roster);
+    }
+    let t = params.threshold();
+    let all_bundles: Vec<Vec<ShareBundle>> =
+        users.iter_mut().map(|u| u.deal_shares(t)).collect();
+    for bundles in &all_bundles {
+        for b in bundles {
+            users[b.dest].receive_bundle(b);
+        }
+    }
+    (users, server)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(n: usize, d: usize, alpha: f64, theta: f64) -> Params {
+        Params { n, d, alpha, theta, c: 1024.0 }
+    }
+
+    /// Expected aggregate, recomputed without any masks: Σ_{i∈S}
+    /// select_i · Q_c(scale·y_i) in the field. Must match the protocol
+    /// output *exactly*.
+    fn expected_field_agg(users: &[User], survivors: &[usize], round: u32,
+                          ys: &[Vec<f32>], beta: f64, p: &Params)
+                          -> Vec<u32> {
+        let mut agg = vec![0u32; p.d];
+        let mut scratch = vec![0u32; p.d];
+        for &i in survivors {
+            let plan = users[i].mask_plan(round, p, &mut scratch);
+            let rands = users[i].rounding_uniforms(round, plan.indices.len());
+            for (&l, &r) in plan.indices.iter().zip(&rands) {
+                let v = quantize::quantize_mask_one(
+                    ys[i][l as usize], r, 0, true, p.scale(beta), p.c);
+                let a = &mut agg[l as usize];
+                *a = field::add(*a, v);
+            }
+        }
+        agg
+    }
+
+    fn run_round(users: &[User], server: &mut Server, round: u32,
+                 ys: &[Vec<f32>], dropped: &[usize]) -> Vec<f32> {
+        let p = server.params;
+        let beta = 1.0 / p.n as f64;
+        server.begin_round();
+        let mut scratch = vec![0u32; p.d];
+        for u in users {
+            if dropped.contains(&u.id) {
+                continue;
+            }
+            let plan = u.mask_plan(round, &p, &mut scratch);
+            let up = u.masked_upload(round, &ys[u.id], beta, &p, plan);
+            server.receive_upload(up);
+        }
+        let req = server.unmask_request();
+        let responses: Vec<UnmaskResponse> = users
+            .iter()
+            .filter(|u| !dropped.contains(&u.id))
+            .map(|u| u.respond_unmask(&req))
+            .collect();
+        server.finish_round(round, &responses).unwrap()
+    }
+
+    #[test]
+    fn aggregate_exact_no_dropout() {
+        let p = params(8, 600, 0.3, 0.0);
+        let (users, mut server) = setup(p, 42);
+        let mut rng = ChaCha20Rng::from_seed_u64(7);
+        let ys: Vec<Vec<f32>> = (0..p.n)
+            .map(|_| (0..p.d).map(|_| rng.next_f32() * 2.0 - 1.0).collect())
+            .collect();
+        let beta = 1.0 / p.n as f64;
+
+        run_round(&users, &mut server, 3, &ys, &[]);
+        let survivors: Vec<usize> = (0..p.n).collect();
+        let want = expected_field_agg(&users, &survivors, 3, &ys, beta, &p);
+        assert_eq!(server.aggregate_field(), &want[..],
+                   "masks did not cancel exactly");
+    }
+
+    #[test]
+    fn aggregate_exact_with_dropouts() {
+        let p = params(10, 500, 0.25, 0.3);
+        let (users, mut server) = setup(p, 99);
+        let mut rng = ChaCha20Rng::from_seed_u64(8);
+        let ys: Vec<Vec<f32>> = (0..p.n)
+            .map(|_| (0..p.d).map(|_| rng.next_f32() - 0.5).collect())
+            .collect();
+        let beta = 1.0 / p.n as f64;
+        let dropped = vec![2usize, 7];
+
+        run_round(&users, &mut server, 5, &ys, &dropped);
+        let survivors: Vec<usize> =
+            (0..p.n).filter(|i| !dropped.contains(i)).collect();
+        let want = expected_field_agg(&users, &survivors, 5, &ys, beta, &p);
+        assert_eq!(server.aggregate_field(), &want[..]);
+    }
+
+    #[test]
+    fn aggregate_unbiased_expectation() {
+        // E[dequantized aggregate] ≈ Σ_i β_i y_i (Lemma 1): with many
+        // coordinates the per-coordinate mean over selected positions,
+        // rescaled, approximates the true weighted sum.
+        let p = params(12, 4000, 0.5, 0.0);
+        let (users, mut server) = setup(p, 5);
+        let y_const = 0.8f32;
+        let ys: Vec<Vec<f32>> = (0..p.n).map(|_| vec![y_const; p.d]).collect();
+
+        let out = run_round(&users, &mut server, 0, &ys, &[]);
+        // Each coordinate: (#selectors) · scale · y / 1 after dequantize;
+        // E over coords = N·p·(β/(p·1))·y = N·β·y = y_const.
+        let mean: f64 =
+            out.iter().map(|&v| v as f64).sum::<f64>() / p.d as f64;
+        assert!((mean - y_const as f64).abs() < 0.02,
+                "mean={mean} want≈{y_const}");
+    }
+
+    #[test]
+    fn dropout_beyond_threshold_fails() {
+        let p = params(6, 100, 0.5, 0.3);
+        let (users, mut server) = setup(p, 1);
+        let ys: Vec<Vec<f32>> = (0..p.n).map(|_| vec![0.1; p.d]).collect();
+        // 4 of 6 drop => 2 survivors < t+1 = 4 responses: reconstruction
+        // must fail, not silently return garbage.
+        let dropped = vec![0usize, 1, 2, 3];
+        let beta = 1.0 / p.n as f64;
+        server.begin_round();
+        let mut scratch = vec![0u32; p.d];
+        for u in users.iter().filter(|u| !dropped.contains(&u.id)) {
+            let plan = u.mask_plan(0, &p, &mut scratch);
+            server.receive_upload(u.masked_upload(0, &ys[u.id], beta, &p, plan));
+        }
+        let req = server.unmask_request();
+        let responses: Vec<UnmaskResponse> = users
+            .iter()
+            .filter(|u| !dropped.contains(&u.id))
+            .map(|u| u.respond_unmask(&req))
+            .collect();
+        assert!(server.finish_round(0, &responses).is_err());
+    }
+
+    #[test]
+    fn rounds_use_independent_masks() {
+        // Same cohort, two rounds: uploads must differ (fresh masks).
+        let p = params(5, 300, 0.4, 0.0);
+        let (users, _server) = setup(p, 77);
+        let ys: Vec<f32> = vec![0.5; p.d];
+        let beta = 0.2;
+        let mut scratch = vec![0u32; p.d];
+        let plan0 = users[0].mask_plan(0, &p, &mut scratch);
+        let up0 = users[0].masked_upload(0, &ys, beta, &p, plan0);
+        let plan1 = users[0].mask_plan(1, &p, &mut scratch);
+        let up1 = users[0].masked_upload(1, &ys, beta, &p, plan1);
+        assert_ne!(up0.indices, up1.indices);
+    }
+
+    #[test]
+    fn upload_is_actually_sparse() {
+        // Thm 1: |U_i| ≤ α·d (1 + o(1)).
+        let p = params(30, 20_000, 0.1, 0.0);
+        let (users, _server) = setup(p, 3);
+        let mut scratch = vec![0u32; p.d];
+        let plan = users[4].mask_plan(0, &p, &mut scratch);
+        let frac = plan.indices.len() as f64 / p.d as f64;
+        assert!(frac < 0.12, "frac={frac}");
+        assert!(frac > 0.05, "frac={frac}");
+    }
+
+    #[test]
+    fn masked_upload_values_look_uniform() {
+        // Privacy smoke: masked values should be spread over the field
+        // (mean ≈ q/2), unlike raw quantized gradients which are tiny.
+        let p = params(6, 5_000, 0.5, 0.0);
+        let (users, _server) = setup(p, 11);
+        let ys: Vec<f32> = vec![0.001; p.d];
+        let mut scratch = vec![0u32; p.d];
+        let plan = users[2].mask_plan(0, &p, &mut scratch);
+        let up = users[2].masked_upload(0, &ys, 1.0 / 6.0, &p, plan);
+        let mean = up.values.iter().map(|&v| v as f64).sum::<f64>()
+            / up.values.len() as f64;
+        let half = field::Q as f64 / 2.0;
+        assert!((mean - half).abs() < half * 0.1, "mean={mean}");
+    }
+}

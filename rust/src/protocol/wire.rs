@@ -1,0 +1,419 @@
+//! Binary wire codec for protocol messages.
+//!
+//! [`super::messages`] carries the size accounting; this module makes the
+//! frames *real*: every message serializes to the exact byte layout the
+//! sizes promise (little-endian, 12-byte frame header of sender id /
+//! message tag / payload length), and round-trips losslessly. The
+//! simulated network moves these buffers, so a future swap to real
+//! sockets only replaces the transport, not the protocol.
+
+use crate::shamir::Share;
+use anyhow::{bail, ensure, Result};
+
+use super::messages::*;
+
+/// Message tags (one per frame type).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u32)]
+pub enum Tag {
+    AdvertiseKeys = 1,
+    Roster = 2,
+    ShareBundle = 3,
+    SparseMaskedUpload = 4,
+    DenseMaskedUpload = 5,
+    UnmaskRequest = 6,
+    UnmaskResponse = 7,
+}
+
+impl Tag {
+    fn from_u32(v: u32) -> Result<Tag> {
+        Ok(match v {
+            1 => Tag::AdvertiseKeys,
+            2 => Tag::Roster,
+            3 => Tag::ShareBundle,
+            4 => Tag::SparseMaskedUpload,
+            5 => Tag::DenseMaskedUpload,
+            6 => Tag::UnmaskRequest,
+            7 => Tag::UnmaskResponse,
+            other => bail!("unknown message tag {other}"),
+        })
+    }
+}
+
+/// Little-endian writer.
+struct W(Vec<u8>);
+
+impl W {
+    fn frame(sender: u32, tag: Tag) -> W {
+        let mut w = W(Vec::new());
+        w.u32(sender);
+        w.u32(tag as u32);
+        w.u32(0); // length patched in finish()
+        w
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn bytes(&mut self, b: &[u8]) {
+        self.0.extend_from_slice(b);
+    }
+
+    fn share(&mut self, s: &Share) {
+        self.u32(s.x);
+        for &y in &s.y {
+            self.u32(y);
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        let len = (self.0.len() - FRAME_BYTES) as u32;
+        self.0[8..12].copy_from_slice(&len.to_le_bytes());
+        self.0
+    }
+}
+
+/// Little-endian reader.
+struct R<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> R<'a> {
+    fn u32(&mut self) -> Result<u32> {
+        ensure!(self.pos + 4 <= self.buf.len(), "truncated frame");
+        let v = u32::from_le_bytes(
+            self.buf[self.pos..self.pos + 4].try_into().unwrap());
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        ensure!(self.pos + 8 <= self.buf.len(), "truncated frame");
+        let v = u64::from_le_bytes(
+            self.buf[self.pos..self.pos + 8].try_into().unwrap());
+        self.pos += 8;
+        Ok(v)
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.buf.len(), "truncated frame");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn share(&mut self) -> Result<Share> {
+        let x = self.u32()?;
+        let mut y = [0u32; 8];
+        for v in y.iter_mut() {
+            *v = self.u32()?;
+        }
+        Ok(Share { x, y })
+    }
+}
+
+/// Frame header: (sender, tag, payload length).
+pub fn peek_header(buf: &[u8]) -> Result<(u32, Tag, usize)> {
+    ensure!(buf.len() >= FRAME_BYTES, "frame shorter than header");
+    let mut r = R { buf, pos: 0 };
+    let sender = r.u32()?;
+    let tag = Tag::from_u32(r.u32()?)?;
+    let len = r.u32()? as usize;
+    ensure!(buf.len() == FRAME_BYTES + len,
+            "frame length mismatch: header says {len}, \
+             buffer has {}", buf.len() - FRAME_BYTES);
+    Ok((sender, tag, len))
+}
+
+// ---- encoders ---------------------------------------------------------
+
+pub fn encode_advertise(m: &AdvertiseKeys) -> Vec<u8> {
+    let mut w = W::frame(m.id as u32, Tag::AdvertiseKeys);
+    w.u64(m.public);
+    w.finish()
+}
+
+pub fn encode_roster(m: &Roster) -> Vec<u8> {
+    let mut w = W::frame(0, Tag::Roster);
+    for &p in &m.publics {
+        w.u64(p);
+    }
+    w.finish()
+}
+
+pub fn encode_share_bundle(m: &ShareBundle) -> Vec<u8> {
+    let mut w = W::frame(m.owner as u32, Tag::ShareBundle);
+    w.u32(m.dest as u32);
+    w.share(&m.dh_share);
+    w.share(&m.seed_share);
+    w.finish()
+}
+
+/// Sparse upload: d-bit location bitmap + packed u32 values — exactly the
+/// paper's "one bit per parameter location" encoding.
+pub fn encode_sparse_upload(m: &SparseMaskedUpload) -> Vec<u8> {
+    let mut w = W::frame(m.id as u32, Tag::SparseMaskedUpload);
+    w.u32(m.d as u32);
+    let mut bitmap = vec![0u8; m.d.div_ceil(8)];
+    for &l in &m.indices {
+        bitmap[(l / 8) as usize] |= 1 << (l % 8);
+    }
+    w.bytes(&bitmap);
+    for &v in &m.values {
+        w.u32(v);
+    }
+    w.finish()
+}
+
+pub fn encode_dense_upload(m: &DenseMaskedUpload) -> Vec<u8> {
+    let mut w = W::frame(m.id as u32, Tag::DenseMaskedUpload);
+    w.u32(m.values.len() as u32);
+    for &v in &m.values {
+        w.u32(v);
+    }
+    w.finish()
+}
+
+pub fn encode_unmask_request(m: &UnmaskRequest) -> Vec<u8> {
+    let mut w = W::frame(0, Tag::UnmaskRequest);
+    w.u32(m.dropped.len() as u32);
+    for &i in &m.dropped {
+        w.u32(i as u32);
+    }
+    w.u32(m.survivors.len() as u32);
+    for &i in &m.survivors {
+        w.u32(i as u32);
+    }
+    w.finish()
+}
+
+pub fn encode_unmask_response(m: &UnmaskResponse) -> Vec<u8> {
+    let mut w = W::frame(m.id as u32, Tag::UnmaskResponse);
+    w.u32(m.dh_shares.len() as u32);
+    for (owner, s) in &m.dh_shares {
+        w.u32(*owner as u32);
+        w.share(s);
+    }
+    w.u32(m.seed_shares.len() as u32);
+    for (owner, s) in &m.seed_shares {
+        w.u32(*owner as u32);
+        w.share(s);
+    }
+    w.finish()
+}
+
+// ---- decoders ---------------------------------------------------------
+
+fn payload(buf: &[u8], want: Tag) -> Result<(u32, R<'_>)> {
+    let (sender, tag, _len) = peek_header(buf)?;
+    ensure!(tag == want, "expected {want:?}, got {tag:?}");
+    Ok((sender, R { buf, pos: FRAME_BYTES }))
+}
+
+pub fn decode_advertise(buf: &[u8]) -> Result<AdvertiseKeys> {
+    let (sender, mut r) = payload(buf, Tag::AdvertiseKeys)?;
+    Ok(AdvertiseKeys { id: sender as usize, public: r.u64()? })
+}
+
+pub fn decode_roster(buf: &[u8]) -> Result<Roster> {
+    let (_, mut r) = payload(buf, Tag::Roster)?;
+    let n = (buf.len() - FRAME_BYTES) / 8;
+    let mut publics = Vec::with_capacity(n);
+    for _ in 0..n {
+        publics.push(r.u64()?);
+    }
+    Ok(Roster { publics })
+}
+
+pub fn decode_share_bundle(buf: &[u8]) -> Result<ShareBundle> {
+    let (owner, mut r) = payload(buf, Tag::ShareBundle)?;
+    Ok(ShareBundle {
+        owner: owner as usize,
+        dest: r.u32()? as usize,
+        dh_share: r.share()?,
+        seed_share: r.share()?,
+    })
+}
+
+pub fn decode_sparse_upload(buf: &[u8]) -> Result<SparseMaskedUpload> {
+    let (sender, mut r) = payload(buf, Tag::SparseMaskedUpload)?;
+    let d = r.u32()? as usize;
+    let bitmap = r.take(d.div_ceil(8))?.to_vec();
+    let mut indices = Vec::new();
+    for l in 0..d as u32 {
+        if bitmap[(l / 8) as usize] & (1 << (l % 8)) != 0 {
+            indices.push(l);
+        }
+    }
+    let mut values = Vec::with_capacity(indices.len());
+    for _ in 0..indices.len() {
+        values.push(r.u32()?);
+    }
+    ensure!(r.pos == buf.len(), "trailing bytes in sparse upload");
+    Ok(SparseMaskedUpload { id: sender as usize, indices, values, d })
+}
+
+pub fn decode_dense_upload(buf: &[u8]) -> Result<DenseMaskedUpload> {
+    let (sender, mut r) = payload(buf, Tag::DenseMaskedUpload)?;
+    let n = r.u32()? as usize;
+    let mut values = Vec::with_capacity(n);
+    for _ in 0..n {
+        values.push(r.u32()?);
+    }
+    Ok(DenseMaskedUpload { id: sender as usize, values })
+}
+
+pub fn decode_unmask_request(buf: &[u8]) -> Result<UnmaskRequest> {
+    let (_, mut r) = payload(buf, Tag::UnmaskRequest)?;
+    let nd = r.u32()? as usize;
+    let dropped = (0..nd)
+        .map(|_| r.u32().map(|v| v as usize))
+        .collect::<Result<_>>()?;
+    let ns = r.u32()? as usize;
+    let survivors = (0..ns)
+        .map(|_| r.u32().map(|v| v as usize))
+        .collect::<Result<_>>()?;
+    Ok(UnmaskRequest { dropped, survivors })
+}
+
+pub fn decode_unmask_response(buf: &[u8]) -> Result<UnmaskResponse> {
+    let (sender, mut r) = payload(buf, Tag::UnmaskResponse)?;
+    let nd = r.u32()? as usize;
+    let mut dh_shares = Vec::with_capacity(nd);
+    for _ in 0..nd {
+        let owner = r.u32()? as usize;
+        dh_shares.push((owner, r.share()?));
+    }
+    let ns = r.u32()? as usize;
+    let mut seed_shares = Vec::with_capacity(ns);
+    for _ in 0..ns {
+        let owner = r.u32()? as usize;
+        seed_shares.push((owner, r.share()?));
+    }
+    Ok(UnmaskResponse { id: sender as usize, dh_shares, seed_shares })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prg::ChaCha20Rng;
+
+    fn share(rng: &mut ChaCha20Rng) -> Share {
+        let mut y = [0u32; 8];
+        for v in y.iter_mut() {
+            *v = rng.next_field();
+        }
+        Share { x: 1 + rng.next_u32() % 100, y }
+    }
+
+    #[test]
+    fn advertise_roundtrip_and_size() {
+        let m = AdvertiseKeys { id: 7, public: 0xdead_beef_1234 };
+        let buf = encode_advertise(&m);
+        assert_eq!(buf.len(), m.wire_bytes(), "size accounting mismatch");
+        let d = decode_advertise(&buf).unwrap();
+        assert_eq!(d.id, 7);
+        assert_eq!(d.public, m.public);
+    }
+
+    #[test]
+    fn roster_roundtrip_and_size() {
+        let m = Roster { publics: vec![1, 2, 3, u64::MAX] };
+        let buf = encode_roster(&m);
+        assert_eq!(buf.len(), m.wire_bytes());
+        assert_eq!(decode_roster(&buf).unwrap().publics, m.publics);
+    }
+
+    #[test]
+    fn share_bundle_roundtrip_and_size() {
+        let mut rng = ChaCha20Rng::from_seed_u64(1);
+        let m = ShareBundle {
+            owner: 3,
+            dest: 9,
+            dh_share: share(&mut rng),
+            seed_share: share(&mut rng),
+        };
+        let buf = encode_share_bundle(&m);
+        assert_eq!(buf.len(), m.wire_bytes());
+        let d = decode_share_bundle(&buf).unwrap();
+        assert_eq!(d.owner, 3);
+        assert_eq!(d.dest, 9);
+        assert_eq!(d.dh_share, m.dh_share);
+        assert_eq!(d.seed_share, m.seed_share);
+    }
+
+    #[test]
+    fn sparse_upload_roundtrip_and_size() {
+        let mut rng = ChaCha20Rng::from_seed_u64(2);
+        let d = 1000;
+        let indices: Vec<u32> =
+            (0..d as u32).filter(|_| rng.next_f32() < 0.1).collect();
+        let values: Vec<u32> =
+            indices.iter().map(|_| rng.next_field()).collect();
+        let m = SparseMaskedUpload { id: 5, indices, values, d };
+        let buf = encode_sparse_upload(&m);
+        assert_eq!(buf.len(), m.wire_bytes(), "size accounting mismatch");
+        let out = decode_sparse_upload(&buf).unwrap();
+        assert_eq!(out.indices, m.indices);
+        assert_eq!(out.values, m.values);
+        assert_eq!(out.d, d);
+    }
+
+    #[test]
+    fn dense_upload_roundtrip() {
+        let m = DenseMaskedUpload { id: 2, values: vec![9, 8, 7] };
+        let out = decode_dense_upload(&encode_dense_upload(&m)).unwrap();
+        assert_eq!(out.values, m.values);
+    }
+
+    #[test]
+    fn unmask_messages_roundtrip() {
+        let mut rng = ChaCha20Rng::from_seed_u64(3);
+        let req = UnmaskRequest { dropped: vec![1, 4], survivors: vec![0, 2, 3] };
+        let out =
+            decode_unmask_request(&encode_unmask_request(&req)).unwrap();
+        assert_eq!(out.dropped, req.dropped);
+        assert_eq!(out.survivors, req.survivors);
+
+        let resp = UnmaskResponse {
+            id: 2,
+            dh_shares: vec![(1, share(&mut rng)), (4, share(&mut rng))],
+            seed_shares: vec![(0, share(&mut rng))],
+        };
+        let out =
+            decode_unmask_response(&encode_unmask_response(&resp)).unwrap();
+        assert_eq!(out.id, 2);
+        assert_eq!(out.dh_shares, resp.dh_shares);
+        assert_eq!(out.seed_shares, resp.seed_shares);
+    }
+
+    #[test]
+    fn corrupted_frames_rejected() {
+        let m = AdvertiseKeys { id: 1, public: 42 };
+        let mut buf = encode_advertise(&m);
+        // wrong tag
+        buf[4] = 99;
+        assert!(decode_advertise(&buf).is_err());
+        // truncated
+        let buf = encode_advertise(&m);
+        assert!(decode_advertise(&buf[..buf.len() - 2]).is_err());
+        // bad length field
+        let mut buf = encode_advertise(&m);
+        buf[8] = 200;
+        assert!(peek_header(&buf).is_err());
+    }
+
+    #[test]
+    fn wrong_tag_cross_decode_fails() {
+        let m = Roster { publics: vec![1, 2] };
+        let buf = encode_roster(&m);
+        assert!(decode_advertise(&buf).is_err());
+        assert!(decode_unmask_request(&buf).is_err());
+    }
+}

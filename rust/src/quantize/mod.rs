@@ -1,0 +1,209 @@
+//! Scaled stochastic quantization (paper §V-B, eqs. 14–17).
+//!
+//! This module is the Rust reference implementation of the fused L1 Pallas
+//! kernel (`python/compile/kernels/quantmask.py`): it must stay
+//! *bit-identical* to the kernel's f32 pipeline — the integration test
+//! `rust/tests/kernel_equivalence.rs` executes the lowered HLO artifact via
+//! PJRT and compares element-for-element against [`quantize_mask_select`].
+//! The protocol uses whichever path the config selects (`hlo` on the hot
+//! path, `native` for tiny configs and tests).
+
+use crate::field;
+
+/// `p = 1 − (1 − α/(N−1))^(N−1)` (eq. 14): probability that a given
+/// coordinate is selected by a given user.
+pub fn selection_probability(alpha: f64, n: usize) -> f64 {
+    assert!(n >= 2, "need at least 2 users");
+    let rho = alpha / (n as f64 - 1.0);
+    1.0 - (1.0 - rho).powi(n as i32 - 1)
+}
+
+/// The client-side scaling factor `β_i / (p (1 − θ))` (§V-B).
+pub fn scale_factor(beta_i: f64, p: f64, theta: f64) -> f64 {
+    beta_i / (p * (1.0 - theta))
+}
+
+/// Saturation bound on `c · scale · y` — matches the kernel's ±2^30 clamp.
+pub const CLAMP: f32 = 1_073_741_824.0;
+
+/// Fused quantize→φ→mask→select over one coordinate, f32 pipeline parity
+/// with the Pallas kernel.
+#[inline]
+pub fn quantize_mask_one(y: f32, rand: f32, masksum: u32, select: bool,
+                         scale: f32, c: f32) -> u32 {
+    if !select {
+        return 0;
+    }
+    let cz = (y * scale * c).clamp(-CLAMP, CLAMP);
+    let f = cz.floor();
+    let v = (f + if rand < (cz - f) { 1.0 } else { 0.0 }) as i64;
+    let phi = field::phi(v);
+    field::add(phi, masksum)
+}
+
+/// Vector form: `out[ℓ] = select[ℓ] · ((φ(c·Q_c(scale·y[ℓ])) + masksum[ℓ])
+/// mod q)` (eq. 18 with the additive masks pre-summed into `masksum`).
+pub fn quantize_mask_select(y: &[f32], rand: &[f32], masksum: &[u32],
+                            select: &[u8], scale: f32, c: f32) -> Vec<u32> {
+    assert_eq!(y.len(), rand.len());
+    assert_eq!(y.len(), masksum.len());
+    assert_eq!(y.len(), select.len());
+    y.iter()
+        .zip(rand)
+        .zip(masksum)
+        .zip(select)
+        .map(|(((&y, &r), &m), &s)| {
+            quantize_mask_one(y, r, m, s != 0, scale, c)
+        })
+        .collect()
+}
+
+/// Sparse form over the selected support only: for each index ℓ in
+/// `indices`, quantize `y[ℓ]` and add `masksum_at[k]`. Returns the masked
+/// field values in index order. This is the optimized hot path — O(|U_i|)
+/// instead of O(d).
+pub fn quantize_mask_at(y: &[f32], rand_at: &[f32], masksum_at: &[u32],
+                        indices: &[u32], scale: f32, c: f32) -> Vec<u32> {
+    assert_eq!(indices.len(), rand_at.len());
+    assert_eq!(indices.len(), masksum_at.len());
+    indices
+        .iter()
+        .zip(rand_at)
+        .zip(masksum_at)
+        .map(|((&i, &r), &m)| {
+            quantize_mask_one(y[i as usize], r, m, true, scale, c)
+        })
+        .collect()
+}
+
+/// Server-side inverse map (eq. 23): field → signed → real, dividing by c.
+pub fn dequantize(agg: &[u32], c: f32) -> Vec<f32> {
+    agg.iter().map(|&x| field::phi_inv(x) as f64 as f32 / c).collect()
+}
+
+/// Unquantized expectation check helper: quantization of z at level c is
+/// unbiased with variance ≤ 1/(4c²) per element ([47, Lemma 1]).
+pub fn quantize_value(z: f32, rand: f32, c: f32) -> f64 {
+    let cz = (z * c).clamp(-CLAMP, CLAMP);
+    let f = cz.floor();
+    let v = f + if rand < (cz - f) { 1.0 } else { 0.0 };
+    v as f64 / c as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::Q;
+    use crate::prg::ChaCha20Rng;
+    use crate::testutil::{prop, uniform_f32};
+
+    #[test]
+    fn p_matches_closed_form() {
+        // α → p: sanity against the paper's small-α approximation p ≈ α.
+        let p = selection_probability(0.1, 100);
+        assert!((p - 0.1).abs() < 0.01, "p={p}");
+        // α = 1, N = 2: p = 1.
+        assert!((selection_probability(1.0, 2) - 1.0).abs() < 1e-12);
+        // monotone in α
+        assert!(selection_probability(0.2, 50) > selection_probability(0.1, 50));
+    }
+
+    #[test]
+    fn quantization_is_unbiased() {
+        // E[Q_c(z)] = z (eq. 15): Monte Carlo over the rounding rand.
+        let mut rng = ChaCha20Rng::from_seed_u64(1);
+        for &c in &[16.0f32, 1024.0] {
+            for &z in &[0.37f32, -1.91, 0.0, 12.5, -0.0004] {
+                let trials = 20_000;
+                let mean: f64 = (0..trials)
+                    .map(|_| quantize_value(z, rng.next_f32(), c))
+                    .sum::<f64>()
+                    / trials as f64;
+                let tol = 3.0 / (c as f64 * (trials as f64).sqrt()) + 1e-7;
+                assert!((mean - z as f64).abs() < tol + 2e-4,
+                        "c={c} z={z} mean={mean}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantization_error_bounded() {
+        prop(2000, |rng| {
+            let c = 1024.0f32;
+            let z = uniform_f32(rng, -100.0, 100.0);
+            let qv = quantize_value(z, rng.next_f32(), c);
+            assert!((qv - z as f64).abs() <= 1.0 / c as f64 + 1e-6);
+        });
+    }
+
+    #[test]
+    fn dequantize_roundtrip() {
+        // With no masks and select-all, dequantize(quantize(y)) ≈ y.
+        let mut rng = ChaCha20Rng::from_seed_u64(2);
+        let d = 512;
+        let y: Vec<f32> =
+            (0..d).map(|_| uniform_f32(&mut rng, -5.0, 5.0)).collect();
+        let rand: Vec<f32> = (0..d).map(|_| rng.next_f32()).collect();
+        let masksum = vec![0u32; d];
+        let select = vec![1u8; d];
+        let c = 4096.0;
+        let x = quantize_mask_select(&y, &rand, &masksum, &select, 1.0, c);
+        let back = dequantize(&x, c);
+        for (a, b) in y.iter().zip(&back) {
+            assert!((a - b).abs() <= 1.5 / c, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn masked_values_live_in_field() {
+        prop(200, |rng| {
+            let y = uniform_f32(rng, -1000.0, 1000.0);
+            let m = rng.next_field();
+            let v = quantize_mask_one(y, rng.next_f32(), m, true, 3.7, 65536.0);
+            assert!(v < Q);
+        });
+    }
+
+    #[test]
+    fn unselected_coordinates_are_zero() {
+        let v = quantize_mask_one(1.5, 0.3, 12345, false, 1.0, 1024.0);
+        assert_eq!(v, 0);
+    }
+
+    #[test]
+    fn sparse_path_matches_dense() {
+        let mut rng = ChaCha20Rng::from_seed_u64(3);
+        let d = 300;
+        let y: Vec<f32> =
+            (0..d).map(|_| uniform_f32(&mut rng, -2.0, 2.0)).collect();
+        let mut select = vec![0u8; d];
+        let mut indices = Vec::new();
+        for i in 0..d {
+            if rng.next_f32() < 0.3 {
+                select[i] = 1;
+                indices.push(i as u32);
+            }
+        }
+        let rand_dense: Vec<f32> = (0..d).map(|_| rng.next_f32()).collect();
+        let mask_dense: Vec<u32> = (0..d).map(|_| rng.next_field()).collect();
+        let dense = quantize_mask_select(&y, &rand_dense, &mask_dense,
+                                         &select, 2.0, 1024.0);
+        let rand_at: Vec<f32> =
+            indices.iter().map(|&i| rand_dense[i as usize]).collect();
+        let mask_at: Vec<u32> =
+            indices.iter().map(|&i| mask_dense[i as usize]).collect();
+        let sparse =
+            quantize_mask_at(&y, &rand_at, &mask_at, &indices, 2.0, 1024.0);
+        for (k, &i) in indices.iter().enumerate() {
+            assert_eq!(sparse[k], dense[i as usize]);
+        }
+    }
+
+    #[test]
+    fn clamp_saturates_extremes() {
+        let v = quantize_mask_one(1e30, 0.5, 0, true, 1e6, 65536.0);
+        assert_eq!(v, CLAMP as i64 as u32);
+        let v = quantize_mask_one(-1e30, 0.5, 0, true, 1e6, 65536.0);
+        assert_eq!(v, field::phi(-(CLAMP as i64)));
+    }
+}

@@ -1,0 +1,217 @@
+//! Parser for `artifacts/manifest.txt` (emitted by `python/compile/aot.py`).
+//!
+//! Line-based key/value format, no serde dependency:
+//! ```text
+//! model mlp
+//! d 101770
+//! dpad 106496
+//! batch 28
+//! eval_batch 200
+//! input 28 28 1
+//! classes 10
+//! param conv0_w 5 5 1 8
+//! artifact local_step local_step_mlp.hlo.txt
+//! end
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One model's artifact description.
+#[derive(Clone, Debug, Default)]
+pub struct ModelManifest {
+    pub name: String,
+    /// Model dimension d (paper's parameter count).
+    pub d: usize,
+    /// d padded to the quantmask kernel block multiple.
+    pub dpad: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    /// Input tensor shape (H, W, C).
+    pub input: Vec<usize>,
+    pub classes: usize,
+    /// Ordered (name, shape) of every parameter tensor — defines the
+    /// flattening order used everywhere.
+    pub params: Vec<(String, Vec<usize>)>,
+    /// artifact kind (`local_step` / `eval` / `quantmask`) → file name.
+    pub artifacts: HashMap<String, String>,
+    /// Directory the artifacts live in.
+    pub dir: PathBuf,
+}
+
+impl ModelManifest {
+    /// Number of elements of parameter tensor k.
+    pub fn param_len(&self, k: usize) -> usize {
+        self.params[k].1.iter().product()
+    }
+
+    /// Offsets of each parameter tensor in the flattened d-vector.
+    pub fn param_offsets(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.params.len());
+        let mut off = 0;
+        for k in 0..self.params.len() {
+            out.push(off);
+            off += self.param_len(k);
+        }
+        out
+    }
+
+    pub fn artifact_path(&self, kind: &str) -> Result<PathBuf> {
+        let f = self
+            .artifacts
+            .get(kind)
+            .with_context(|| format!("model {} has no {kind} artifact",
+                                     self.name))?;
+        Ok(self.dir.join(f))
+    }
+}
+
+/// All models in a manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub models: Vec<ModelManifest>,
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {path:?} — run `make artifacts` first")
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut models = Vec::new();
+        let mut cur: Option<ModelManifest> = None;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let key = it.next().unwrap();
+            let rest: Vec<&str> = it.collect();
+            let ctx = || format!("manifest line {}: {line}", lineno + 1);
+            match key {
+                "model" => {
+                    if cur.is_some() {
+                        bail!("{}: nested model block", ctx());
+                    }
+                    cur = Some(ModelManifest {
+                        name: rest.first().with_context(ctx)?.to_string(),
+                        dir: dir.to_path_buf(),
+                        ..Default::default()
+                    });
+                }
+                "end" => {
+                    models.push(cur.take().with_context(ctx)?);
+                }
+                _ => {
+                    let m = cur.as_mut().with_context(ctx)?;
+                    match key {
+                        "d" => m.d = rest[0].parse().with_context(ctx)?,
+                        "dpad" => m.dpad = rest[0].parse().with_context(ctx)?,
+                        "batch" => m.batch = rest[0].parse().with_context(ctx)?,
+                        "eval_batch" => {
+                            m.eval_batch = rest[0].parse().with_context(ctx)?
+                        }
+                        "classes" => {
+                            m.classes = rest[0].parse().with_context(ctx)?
+                        }
+                        "input" => {
+                            m.input = rest
+                                .iter()
+                                .map(|v| v.parse().unwrap())
+                                .collect()
+                        }
+                        "param" => {
+                            let name = rest[0].to_string();
+                            let shape = rest[1..]
+                                .iter()
+                                .map(|v| v.parse().unwrap())
+                                .collect();
+                            m.params.push((name, shape));
+                        }
+                        "artifact" => {
+                            m.artifacts.insert(rest[0].to_string(),
+                                               rest[1].to_string());
+                        }
+                        other => bail!("{}: unknown key {other}", ctx()),
+                    }
+                }
+            }
+        }
+        if cur.is_some() {
+            bail!("manifest ended inside a model block");
+        }
+        Ok(Manifest { models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .with_context(|| {
+                let known: Vec<&str> =
+                    self.models.iter().map(|m| m.name.as_str()).collect();
+                format!("model {name} not in manifest (have {known:?})")
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+model mlp
+d 101770
+dpad 106496
+batch 28
+eval_batch 200
+input 28 28 1
+classes 10
+param fc0_w 784 128
+param fc0_b 128
+param out_w 128 10
+param out_b 10
+artifact local_step local_step_mlp.hlo.txt
+artifact eval eval_mlp.hlo.txt
+artifact quantmask quantmask_106496.hlo.txt
+end
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.models.len(), 1);
+        let mm = m.model("mlp").unwrap();
+        assert_eq!(mm.d, 101_770);
+        assert_eq!(mm.params.len(), 4);
+        assert_eq!(mm.param_len(0), 784 * 128);
+        assert_eq!(mm.param_offsets(), vec![0, 100352, 100480, 101760]);
+        assert_eq!(mm.input, vec![28, 28, 1]);
+        assert!(mm.artifact_path("eval").unwrap()
+                .ends_with("eval_mlp.hlo.txt"));
+        // d consistency
+        let total: usize = (0..mm.params.len()).map(|k| mm.param_len(k)).sum();
+        assert_eq!(total, mm.d);
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn malformed_manifest_errors() {
+        assert!(Manifest::parse("model a\nmodel b\n", Path::new("/")).is_err());
+        assert!(Manifest::parse("model a\nd 5\n", Path::new("/")).is_err());
+        assert!(Manifest::parse("model a\nbogus 1\nend\n",
+                                Path::new("/")).is_err());
+    }
+}

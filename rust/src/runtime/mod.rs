@@ -1,0 +1,140 @@
+//! PJRT runtime: load and execute the AOT-compiled HLO artifacts.
+//!
+//! This is the only place the Rust side touches XLA. Artifacts are HLO
+//! *text* (see `python/compile/aot.py` for why not serialized protos);
+//! each is compiled once per process and the `PjRtLoadedExecutable` is
+//! reused for every round — compilation never sits on the request path.
+
+pub mod manifest;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+pub use manifest::{Manifest, ModelManifest};
+
+/// A PJRT client plus executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// CPU PJRT client (the simulation substrate; see DESIGN.md
+    /// §Hardware-Adaptation for the TPU mapping).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?)
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened output tuple
+    /// (aot.py lowers everything with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {}: {e:?}", self.name))?;
+        lit.to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {}: {e:?}", self.name))
+    }
+}
+
+/// The L1 fused quantize→φ→mask→select kernel, loaded from its artifact.
+///
+/// Inputs mirror `python/compile/kernels/quantmask.py`: flat dpad-length
+/// vectors plus two 1-element scalars. Output is the masked field vector.
+pub struct QuantMask {
+    exe: Executable,
+    pub dpad: usize,
+}
+
+impl QuantMask {
+    pub fn load(rt: &Runtime, model: &ModelManifest) -> Result<Self> {
+        let exe = rt.load(&model.artifact_path("quantmask")?)?;
+        Ok(QuantMask { exe, dpad: model.dpad })
+    }
+
+    pub fn run(&self, y: &[f32], rand: &[f32], masksum: &[u32],
+               select: &[u32], scale: f32, c: f32) -> Result<Vec<u32>> {
+        let dp = self.dpad as i64;
+        anyhow::ensure!(y.len() == self.dpad, "y len {} != dpad", y.len());
+        let out = self.exe.run(&[
+            lit::f32_tensor(y, &[dp])?,
+            lit::f32_tensor(rand, &[dp])?,
+            lit::u32_tensor(masksum, &[dp])?,
+            lit::u32_tensor(select, &[dp])?,
+            lit::f32_tensor(&[scale], &[1])?,
+            lit::f32_tensor(&[c], &[1])?,
+        ])?;
+        lit::to_u32(&out[0])
+    }
+}
+
+/// Literal construction/extraction helpers (shape-aware, f32/u32/i32).
+pub mod lit {
+    use anyhow::Result;
+
+    pub fn f32_tensor(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == data.len(),
+                        "shape {dims:?} != len {}", data.len());
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+    }
+
+    pub fn u32_tensor(data: &[u32], dims: &[i64]) -> Result<xla::Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == data.len());
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+    }
+
+    pub fn i32_tensor(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == data.len());
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+    }
+
+    pub fn f32_scalar(v: f32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    pub fn to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+        l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec f32: {e:?}"))
+    }
+
+    pub fn to_u32(l: &xla::Literal) -> Result<Vec<u32>> {
+        l.to_vec::<u32>().map_err(|e| anyhow::anyhow!("to_vec u32: {e:?}"))
+    }
+
+    pub fn to_i32(l: &xla::Literal) -> Result<Vec<i32>> {
+        l.to_vec::<i32>().map_err(|e| anyhow::anyhow!("to_vec i32: {e:?}"))
+    }
+}

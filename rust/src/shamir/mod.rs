@@ -1,0 +1,201 @@
+//! Shamir ⌈N/2⌉-out-of-N secret sharing over `F_q` (paper §V-A).
+//!
+//! Each 256-bit PRG seed is split word-wise into 8 field elements; each
+//! element is embedded as the constant term of an independent random
+//! polynomial of degree t = ⌈N/2⌉ evaluated at x = 1..N (x = 0 is the
+//! secret). Any t+1 shares reconstruct via Lagrange interpolation at 0;
+//! any ≤ t shares are information-theoretically independent of the secret.
+//!
+//! Seed words ≥ q (probability 5·2^-32 per word) are reduced mod q before
+//! sharing; the owner also transmits nothing that depends on the lost
+//! ~2^-30 bits because seeds are *generated* below q in `SeedShares::deal`
+//! (rejection in the DH KDF would complicate symmetry, so reduction is
+//! applied on both the dealing and the consuming side consistently).
+
+use crate::field;
+use crate::prg::{ChaCha20Rng, Seed};
+
+/// One user's share of a 256-bit seed: the evaluation point plus 8 field
+/// elements (one per seed word).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Share {
+    pub x: u32,
+    pub y: [u32; 8],
+}
+
+/// Wire size of one share in bytes (x: u32 + 8 words).
+pub const SHARE_BYTES: usize = 4 + 8 * 4;
+
+/// Split `seed` into `n` shares with reconstruction threshold `t + 1`
+/// (i.e. polynomial degree `t`). `entropy` drives the random coefficients.
+pub fn deal(seed: Seed, n: usize, t: usize, entropy: &mut ChaCha20Rng)
+            -> Vec<Share> {
+    assert!(n >= 1 && t < n, "need t < n (t={t}, n={n})");
+    let words = seed.to_field_elems();
+    // coeffs[w][k]: coefficient of x^k for word w; k=0 is the secret.
+    let mut coeffs = vec![[0u32; 8]; t + 1];
+    coeffs[0] = words;
+    for c in coeffs.iter_mut().skip(1) {
+        for v in c.iter_mut() {
+            *v = entropy.next_field();
+        }
+    }
+    (1..=n as u32)
+        .map(|x| {
+            let mut y = [0u32; 8];
+            for w in 0..8 {
+                // Horner evaluation at x.
+                let mut acc = 0u32;
+                for k in (0..=t).rev() {
+                    acc = field::add(field::mul(acc, x), coeffs[k][w]);
+                }
+                y[w] = acc;
+            }
+            Share { x, y }
+        })
+        .collect()
+}
+
+/// Reconstruct the seed from any `t + 1` (or more) distinct shares.
+/// Returns `None` if fewer than `t + 1` shares are supplied.
+pub fn reconstruct(shares: &[&Share], t: usize) -> Option<Seed> {
+    if shares.len() < t + 1 {
+        return None;
+    }
+    let pts = &shares[..t + 1];
+    // Lagrange basis at x=0: λ_i = Π_{j≠i} x_j / (x_j − x_i).
+    let mut words = [0u32; 8];
+    for (i, si) in pts.iter().enumerate() {
+        let mut num = 1u32;
+        let mut den = 1u32;
+        for (j, sj) in pts.iter().enumerate() {
+            if i == j {
+                continue;
+            }
+            num = field::mul(num, sj.x);
+            den = field::mul(den, field::sub(sj.x, si.x));
+        }
+        let lambda = field::mul(num, field::inv(den));
+        for w in 0..8 {
+            words[w] = field::add(words[w], field::mul(lambda, si.y[w]));
+        }
+    }
+    Some(Seed(words))
+}
+
+/// Default threshold: polynomial degree ⌊N/2⌋, so ⌊N/2⌋+1 shares
+/// reconstruct and ⌊N/2⌋ reveal nothing — the paper's N/2-out-of-N scheme.
+pub fn default_threshold(n: usize) -> usize {
+    n / 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop;
+
+    fn seed_below_q(rng: &mut ChaCha20Rng) -> Seed {
+        let mut w = [0u32; 8];
+        for v in w.iter_mut() {
+            *v = rng.next_field();
+        }
+        Seed(w)
+    }
+
+    #[test]
+    fn reconstruct_from_threshold_plus_one() {
+        prop(100, |rng| {
+            let n = 3 + (rng.next_u32() as usize % 30);
+            let t = default_threshold(n);
+            let seed = seed_below_q(rng);
+            let shares = deal(seed, n, t, rng);
+            let refs: Vec<&Share> = shares.iter().take(t + 1).collect();
+            assert_eq!(reconstruct(&refs, t), Some(seed));
+        });
+    }
+
+    #[test]
+    fn reconstruct_from_any_subset() {
+        prop(50, |rng| {
+            let n = 9;
+            let t = default_threshold(n); // 4
+            let seed = seed_below_q(rng);
+            let shares = deal(seed, n, t, rng);
+            // pick t+1 random distinct shares
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in (1..n).rev() {
+                let j = rng.next_u32() as usize % (i + 1);
+                idx.swap(i, j);
+            }
+            let refs: Vec<&Share> =
+                idx[..t + 1].iter().map(|&i| &shares[i]).collect();
+            assert_eq!(reconstruct(&refs, t), Some(seed));
+        });
+    }
+
+    #[test]
+    fn too_few_shares_fail() {
+        let mut rng = ChaCha20Rng::from_seed_u64(3);
+        let seed = seed_below_q(&mut rng);
+        let t = 5;
+        let shares = deal(seed, 11, t, &mut rng);
+        let refs: Vec<&Share> = shares.iter().take(t).collect();
+        assert_eq!(reconstruct(&refs, t), None);
+    }
+
+    #[test]
+    fn extra_shares_are_consistent() {
+        let mut rng = ChaCha20Rng::from_seed_u64(4);
+        let seed = seed_below_q(&mut rng);
+        let t = 3;
+        let shares = deal(seed, 8, t, &mut rng);
+        // Different (t+1)-subsets reconstruct the same secret.
+        let a: Vec<&Share> = shares[..4].iter().collect();
+        let b: Vec<&Share> = shares[4..8].iter().collect();
+        assert_eq!(reconstruct(&a, t), reconstruct(&b, t));
+    }
+
+    #[test]
+    fn shares_differ_from_secret() {
+        // No share equals the secret itself (x=0 never dealt).
+        let mut rng = ChaCha20Rng::from_seed_u64(5);
+        let seed = seed_below_q(&mut rng);
+        let shares = deal(seed, 10, 5, &mut rng);
+        for s in &shares {
+            assert_ne!(s.y, seed.to_field_elems());
+            assert!(s.x >= 1 && s.x <= 10);
+        }
+    }
+
+    #[test]
+    fn t_shares_marginals_look_uniform() {
+        // Weak statistical check of the hiding property: with a fixed
+        // secret, a single share coordinate over many dealings is
+        // spread over the field (not clustered at the secret).
+        let mut rng = ChaCha20Rng::from_seed_u64(6);
+        let seed = Seed([42; 8]);
+        let mut low = 0usize;
+        let trials = 2000;
+        for _ in 0..trials {
+            let shares = deal(seed, 5, 2, &mut rng);
+            if (shares[0].y[0] as u64) < crate::field::Q as u64 / 2 {
+                low += 1;
+            }
+        }
+        let frac = low as f64 / trials as f64;
+        assert!((frac - 0.5).abs() < 0.05, "frac={frac}");
+    }
+
+    #[test]
+    fn n_equals_two() {
+        // Smallest network: N=2, t=1 => both shares needed.
+        let mut rng = ChaCha20Rng::from_seed_u64(7);
+        let seed = seed_below_q(&mut rng);
+        let t = default_threshold(2);
+        let shares = deal(seed, 2, t, &mut rng);
+        let both: Vec<&Share> = shares.iter().collect();
+        assert_eq!(reconstruct(&both, t), Some(seed));
+        let one: Vec<&Share> = shares.iter().take(1).collect();
+        assert_eq!(reconstruct(&one, t), None);
+    }
+}

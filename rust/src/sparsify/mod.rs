@@ -1,0 +1,146 @@
+//! Conventional gradient-sparsification baselines and overlap statistics.
+//!
+//! rand-K and top-K sparsification (paper §IV) are the techniques that
+//! *cannot* be combined with secure aggregation — Fig. 2 measures how
+//! little the selected coordinate sets of two users overlap, which is why
+//! the pairwise-agreed patterns of SparseSecAgg are needed. This module
+//! implements both baselines and the pairwise-overlap measurement that
+//! regenerates Fig. 2.
+
+use crate::prg::ChaCha20Rng;
+
+/// Select K coordinates uniformly at random (rand-K). Returns sorted
+/// indices. Uses Floyd's algorithm: O(K) memory, O(K log K) time.
+pub fn rand_k(d: usize, k: usize, rng: &mut ChaCha20Rng) -> Vec<u32> {
+    assert!(k <= d);
+    let mut chosen = std::collections::HashSet::with_capacity(k * 2);
+    let mut out = Vec::with_capacity(k);
+    for j in (d - k)..d {
+        let t = (rng.next_u64() % (j as u64 + 1)) as u32;
+        let pick = if chosen.insert(t) { t } else {
+            chosen.insert(j as u32);
+            j as u32
+        };
+        out.push(pick);
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Select the K coordinates with largest |g| (top-K). Returns sorted
+/// indices. O(d) selection via partial quickselect on magnitudes.
+pub fn top_k(grad: &[f32], k: usize) -> Vec<u32> {
+    assert!(k <= grad.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<u32> = (0..grad.len() as u32).collect();
+    let nth = k - 1;
+    idx.select_nth_unstable_by(nth, |&a, &b| {
+        grad[b as usize]
+            .abs()
+            .partial_cmp(&grad[a as usize].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut out = idx[..k].to_vec();
+    out.sort_unstable();
+    out
+}
+
+/// |A ∩ B| for two sorted index lists (merge walk).
+pub fn overlap_count(a: &[u32], b: &[u32]) -> usize {
+    let (mut i, mut j, mut n) = (0, 0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                n += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    n
+}
+
+/// Mean and standard deviation of pairwise overlap *percentage* across all
+/// user pairs: the Fig. 2 statistic. `selections[u]` is user u's sorted
+/// selected-index list; overlap % for a pair is |A∩B| / K · 100.
+pub fn pairwise_overlap_stats(selections: &[Vec<u32>]) -> (f64, f64) {
+    let n = selections.len();
+    let mut vals = Vec::with_capacity(n * (n - 1) / 2);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let k = selections[i].len().max(selections[j].len()).max(1);
+            let ov = overlap_count(&selections[i], &selections[j]);
+            vals.push(ov as f64 / k as f64 * 100.0);
+        }
+    }
+    let mean = vals.iter().sum::<f64>() / vals.len().max(1) as f64;
+    let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+        / vals.len().max(1) as f64;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop;
+
+    #[test]
+    fn rand_k_properties() {
+        prop(100, |rng| {
+            let d = 100 + rng.next_u32() as usize % 900;
+            let k = 1 + rng.next_u32() as usize % d;
+            let sel = rand_k(d, k, rng);
+            assert_eq!(sel.len(), k);
+            assert!(sel.windows(2).all(|w| w[0] < w[1]), "distinct+sorted");
+            assert!(sel.iter().all(|&i| (i as usize) < d));
+        });
+    }
+
+    #[test]
+    fn rand_k_full_selection() {
+        let mut rng = ChaCha20Rng::from_seed_u64(1);
+        let sel = rand_k(10, 10, &mut rng);
+        assert_eq!(sel, (0..10).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn top_k_picks_largest() {
+        let grad = vec![0.1f32, -5.0, 0.2, 3.0, -0.05, 4.0];
+        assert_eq!(top_k(&grad, 3), vec![1, 3, 5]);
+        assert_eq!(top_k(&grad, 1), vec![1]);
+        assert_eq!(top_k(&grad, 0), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn top_k_handles_ties() {
+        let grad = vec![1.0f32; 8];
+        let sel = top_k(&grad, 4);
+        assert_eq!(sel.len(), 4);
+        assert!(sel.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn overlap_count_basics() {
+        assert_eq!(overlap_count(&[1, 2, 3], &[2, 3, 4]), 2);
+        assert_eq!(overlap_count(&[], &[1]), 0);
+        assert_eq!(overlap_count(&[5], &[5]), 1);
+        assert_eq!(overlap_count(&[1, 3, 5], &[2, 4, 6]), 0);
+    }
+
+    #[test]
+    fn rand_k_expected_overlap_is_k_over_d() {
+        // The paper's §IV observation: independent rand-K selections
+        // overlap in ≈ K/d of their coordinates (10% for K = d/10).
+        let d = 20_000;
+        let k = d / 10;
+        let mut rng = ChaCha20Rng::from_seed_u64(2);
+        let sels: Vec<Vec<u32>> =
+            (0..8).map(|_| rand_k(d, k, &mut rng)).collect();
+        let (mean, _sd) = pairwise_overlap_stats(&sels);
+        assert!((mean - 10.0).abs() < 1.0, "mean={mean}%");
+    }
+}

@@ -1,0 +1,29 @@
+//! Property-style test driver.
+//!
+//! The vendored crate set has no `proptest`, so tests that want
+//! "N random cases over a seeded generator" use [`prop`]: it runs the
+//! closure `cases` times with independent, deterministic [`prg::ChaCha20Rng`]
+//! streams and reports the failing case seed on panic.
+
+use crate::prg::ChaCha20Rng;
+
+/// Run `f` against `cases` independent seeded RNGs. Deterministic across
+/// runs; the case index doubles as the reproduction seed.
+pub fn prop(cases: u64, mut f: impl FnMut(&mut ChaCha20Rng)) {
+    for case in 0..cases {
+        let mut rng = ChaCha20Rng::from_seed_u64(0x5eed_0000 + case);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || f(&mut rng),
+        ));
+        if let Err(e) = result {
+            eprintln!("property failed at case {case} \
+                       (seed 0x{:x})", 0x5eed_0000u64 + case);
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Uniform f32 in [lo, hi) from an RNG (for generating test vectors).
+pub fn uniform_f32(rng: &mut ChaCha20Rng, lo: f32, hi: f32) -> f32 {
+    lo + (hi - lo) * rng.next_f32()
+}

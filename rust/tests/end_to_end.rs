@@ -1,0 +1,213 @@
+//! Integration tests over the full stack: artifacts → trainer → protocol
+//! → aggregation → accuracy. Requires `make artifacts`.
+
+use sparsesecagg::coordinator::{Coordinator, ProtocolKind};
+use sparsesecagg::fl::{run_fl, FlConfig, Trainer};
+use sparsesecagg::protocol::Params;
+
+fn trainer(model: &str, with_qm: bool) -> Option<Trainer> {
+    match Trainer::load("artifacts", model, with_qm) {
+        Ok(t) => Some(t),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn federated_training_learns_with_sparse_protocol() {
+    let Some(t) = trainer("mlp", false) else { return };
+    let cfg = FlConfig {
+        model: "mlp".into(),
+        users: 6,
+        rounds: 8,
+        samples_per_user: 80,
+        test_samples: 200,
+        alpha: 0.3,
+        theta: 0.1,
+        lr: 0.05,
+        ..FlConfig::default()
+    };
+    let run = run_fl(&cfg, &t).unwrap();
+    assert_eq!(run.history.len(), 8);
+    assert!(run.final_accuracy > 0.5,
+            "accuracy after 8 rounds: {}", run.final_accuracy);
+    // Loss must drop from round 0.
+    let first = run.history.first().unwrap().mean_local_loss;
+    let last = run.history.last().unwrap().mean_local_loss;
+    assert!(last < first);
+    // Comm bytes are recorded every round and sparse (≪ 4d).
+    for r in &run.history {
+        assert!(r.max_up_bytes > 0);
+        assert!(r.max_up_bytes < 4 * t.m.d);
+    }
+}
+
+#[test]
+fn federated_training_learns_with_secagg_baseline() {
+    let Some(t) = trainer("mlp", false) else { return };
+    let cfg = FlConfig {
+        model: "mlp".into(),
+        protocol: ProtocolKind::SecAgg,
+        users: 6,
+        rounds: 6,
+        samples_per_user: 80,
+        test_samples: 200,
+        theta: 0.0,
+        lr: 0.05,
+        ..FlConfig::default()
+    };
+    let run = run_fl(&cfg, &t).unwrap();
+    assert!(run.final_accuracy > 0.5, "acc={}", run.final_accuracy);
+    // Dense uploads: ≥ 4d bytes per user per round.
+    assert!(run.history[0].max_up_bytes >= 4 * t.m.d);
+}
+
+#[test]
+fn hlo_quantmask_path_trains_identically() {
+    // Same config, HLO vs native MaskedInput: histories must agree in
+    // bytes and (bit-identical masking ⇒ identical arithmetic) accuracy.
+    let Some(t) = trainer("cnn_mnist_small", true) else { return };
+    let base = FlConfig {
+        model: "cnn_mnist_small".into(),
+        users: 4,
+        rounds: 2,
+        samples_per_user: 56,
+        test_samples: 200,
+        theta: 0.0,
+        ..FlConfig::default()
+    };
+    let native = run_fl(&base, &t).unwrap();
+    let hlo = run_fl(&FlConfig { use_hlo_quantmask: true, ..base.clone() },
+                     &t).unwrap();
+    for (a, b) in native.history.iter().zip(&hlo.history) {
+        assert_eq!(a.max_up_bytes, b.max_up_bytes);
+        assert_eq!(a.test_acc.to_bits(), b.test_acc.to_bits(),
+                   "round {}: accuracy diverged between paths", a.round);
+    }
+}
+
+#[test]
+fn noniid_training_is_harder_but_learns() {
+    let Some(t) = trainer("mlp", false) else { return };
+    let cfg = FlConfig {
+        model: "mlp".into(),
+        users: 6,
+        rounds: 8,
+        samples_per_user: 80,
+        test_samples: 200,
+        alpha: 0.3,
+        theta: 0.0,
+        lr: 0.05,
+        iid: false,
+        ..FlConfig::default()
+    };
+    let run = run_fl(&cfg, &t).unwrap();
+    assert!(run.final_accuracy > 0.3, "acc={}", run.final_accuracy);
+}
+
+#[test]
+fn target_accuracy_stops_early() {
+    let Some(t) = trainer("mlp", false) else { return };
+    let cfg = FlConfig {
+        model: "mlp".into(),
+        users: 4,
+        rounds: 30,
+        samples_per_user: 80,
+        test_samples: 200,
+        alpha: 0.5,
+        theta: 0.0,
+        lr: 0.05,
+        target_accuracy: Some(0.4),
+        ..FlConfig::default()
+    };
+    let run = run_fl(&cfg, &t).unwrap();
+    assert!(run.reached_target_at.is_some(), "never reached 40%");
+    assert!(run.history.len() < 30);
+}
+
+#[test]
+fn dp_composition_trains_with_modest_penalty() {
+    // DP extension (§II / ref. [17]): clipping + √T-reduced Gaussian
+    // noise composes with the protocol; training still learns at a
+    // loose ε, degrading gracefully vs the noiseless run.
+    let Some(t) = trainer("mlp", false) else { return };
+    let base = FlConfig {
+        model: "mlp".into(),
+        users: 8,
+        rounds: 8,
+        samples_per_user: 80,
+        test_samples: 200,
+        alpha: 0.3,
+        theta: 0.0,
+        lr: 0.05,
+        ..FlConfig::default()
+    };
+    let clean = run_fl(&base, &t).unwrap();
+    // Loose ε: per-coordinate σ_total ≈ 0.005 ≪ update scale, so
+    // training must still learn; tight ε=2 must hurt (monotone in ε).
+    let loose = run_fl(&FlConfig {
+        dp_epsilon: Some(500.0),
+        dp_clip: 0.5,
+        ..base.clone()
+    }, &t).unwrap();
+    let tight = run_fl(&FlConfig {
+        dp_epsilon: Some(2.0),
+        dp_clip: 0.5,
+        rounds: 4,
+        ..base.clone()
+    }, &t).unwrap();
+    assert!(loose.final_accuracy > 0.4,
+            "loose-ε DP run collapsed: {}", loose.final_accuracy);
+    assert!(loose.final_accuracy <= clean.final_accuracy + 0.08,
+            "noise should not help: {} vs {}",
+            loose.final_accuracy, clean.final_accuracy);
+    assert!(tight.final_accuracy < loose.final_accuracy,
+            "tight ε must cost accuracy: {} vs {}",
+            tight.final_accuracy, loose.final_accuracy);
+    assert!(tight.history.iter().all(|r| r.mean_local_loss.is_finite()));
+}
+
+#[test]
+fn client_sampling_composes_with_sparsification() {
+    let Some(t) = trainer("mlp", false) else { return };
+    let cfg = FlConfig {
+        model: "mlp".into(),
+        users: 8,
+        rounds: 8,
+        samples_per_user: 80,
+        test_samples: 200,
+        alpha: 0.3,
+        theta: 0.0,
+        lr: 0.05,
+        participation: 0.7,
+        ..FlConfig::default()
+    };
+    let run = run_fl(&cfg, &t).unwrap();
+    assert!(run.final_accuracy > 0.4, "acc={}", run.final_accuracy);
+    // some rounds must actually have sampled-out users
+    assert!(run.history.iter().any(|r| r.dropped > 0));
+}
+
+#[test]
+fn table1_regime_on_real_cifar_arch() {
+    // Table I at N=25 with the real CIFAR-architecture d: one protocol
+    // round each, compare measured per-user upload.
+    let Some(t) = trainer("cnn_cifar", false) else { return };
+    let d = t.m.d;
+    let n = 25;
+    let params = Params { n, d, alpha: 0.1, theta: 0.0, c: 1024.0 };
+    let ys: Vec<Vec<f32>> = vec![vec![0.001; d]; n];
+    let betas = vec![1.0 / n as f64; n];
+
+    let mut sec = Coordinator::new_secagg(params, 3);
+    let (_, lsec) = sec.run_round(0, &ys, &betas, &[]).unwrap();
+    let mut spa = Coordinator::new_sparse(params, 3);
+    let (_, lspa) = spa.run_round(0, &ys, &betas, &[]).unwrap();
+
+    // SecAgg ≈ 4d ≈ 0.68 MB; Sparse ≈ α·4d + d/8 ⇒ ratio ≈ 8×.
+    let ratio = lsec.max_up() as f64 / lspa.max_up() as f64;
+    assert!(lsec.max_up() >= 4 * d);
+    assert!(ratio > 6.5 && ratio < 10.0, "ratio={ratio}");
+}

@@ -1,0 +1,103 @@
+//! Closes the three-implementation triangle for the fused
+//! quantize→φ→mask→select hot path:
+//!
+//!   Pallas kernel (L1, python) ≡ pure-jnp ref (pytest) — checked in CI
+//!   lowered HLO artifact (PJRT) ≡ Rust native path    — checked HERE
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use sparsesecagg::prg::{ChaCha20Rng, Seed};
+use sparsesecagg::protocol::{sparse, Params};
+use sparsesecagg::quantize;
+use sparsesecagg::runtime::{Manifest, QuantMask, Runtime};
+use std::path::Path;
+
+fn artifacts() -> Option<Manifest> {
+    let dir = Path::new("artifacts");
+    match Manifest::load(dir) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn hlo_kernel_matches_rust_reference_bitexact() {
+    let Some(manifest) = artifacts() else { return };
+    let m = manifest.model("cnn_mnist_small").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let qm = QuantMask::load(&rt, m).unwrap();
+    let dpad = m.dpad;
+
+    let mut rng = ChaCha20Rng::from_seed_u64(2024);
+    for case in 0..3 {
+        let y: Vec<f32> =
+            (0..dpad).map(|_| rng.next_f32() * 4.0 - 2.0).collect();
+        let rand: Vec<f32> = (0..dpad).map(|_| rng.next_f32()).collect();
+        let masksum: Vec<u32> = (0..dpad).map(|_| rng.next_field()).collect();
+        let select: Vec<u32> =
+            (0..dpad).map(|_| (rng.next_f32() < 0.3) as u32).collect();
+        let scale = 0.5 + case as f32;
+        let c = 4096.0;
+
+        let hlo = qm.run(&y, &rand, &masksum, &select, scale, c).unwrap();
+
+        let select8: Vec<u8> = select.iter().map(|&v| v as u8).collect();
+        let native = quantize::quantize_mask_select(&y, &rand, &masksum,
+                                                    &select8, scale, c);
+        assert_eq!(hlo, native, "HLO kernel diverged from native (case {case})");
+    }
+}
+
+#[test]
+fn protocol_upload_identical_through_hlo_and_native() {
+    // End-to-end: a protocol user's MaskedInput must be bit-identical
+    // whether computed natively or through the L1 artifact.
+    let Some(manifest) = artifacts() else { return };
+    let m = manifest.model("cnn_mnist_small").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let qm = QuantMask::load(&rt, m).unwrap();
+
+    let params = Params { n: 6, d: m.d, alpha: 0.15, theta: 0.1, c: 1024.0 };
+    let (users, _server) = sparse::setup(params, 33);
+    let mut rng = ChaCha20Rng::from_seed_u64(9);
+    let y: Vec<f32> =
+        (0..m.d).map(|_| rng.next_f32() * 0.02 - 0.01).collect();
+    let beta = 1.0 / 6.0;
+
+    let mut scratch = vec![0u32; m.d];
+    for u in users.iter().take(3) {
+        let plan_native = u.mask_plan(4, &params, &mut scratch);
+        let native = u.masked_upload(4, &y, beta, &params, plan_native);
+
+        let plan_hlo = u.mask_plan(4, &params, &mut scratch);
+        let (y_pad, rand, masksum, select) =
+            u.kernel_inputs(4, &y, &params, &plan_hlo, m.dpad);
+        let dense = qm
+            .run(&y_pad, &rand, &masksum, &select,
+                 params.scale(beta), params.c)
+            .unwrap();
+        let hlo = u.upload_from_kernel(plan_hlo, &dense, m.d);
+
+        assert_eq!(native.indices, hlo.indices);
+        assert_eq!(native.values, hlo.values,
+                   "user {} upload differs between paths", u.id);
+    }
+}
+
+#[test]
+fn rounding_stream_is_deterministic_and_prefix_stable() {
+    // The bit-equivalence above hinges on the compressed rounding stream
+    // being identical between the sparse native path and the dense
+    // scatter: deterministic per (seed, round) and prefix-stable in count.
+    let seed = Seed([3, 1, 4, 1, 5, 9, 2, 6]);
+    let a = sparsesecagg::masking::rounding_values(seed, 7, 1000);
+    let b = sparsesecagg::masking::rounding_values(seed, 7, 1000);
+    assert_eq!(a, b);
+    let prefix = sparsesecagg::masking::rounding_values(seed, 7, 100);
+    assert_eq!(&a[..100], &prefix[..]);
+    let other_round = sparsesecagg::masking::rounding_values(seed, 8, 100);
+    assert_ne!(&a[..100], &other_round[..]);
+}

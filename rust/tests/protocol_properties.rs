@@ -1,0 +1,256 @@
+//! Property-style integration tests over the protocol (no artifacts
+//! needed): random cohort sizes, compression ratios, dropout sets —
+//! exact mask cancellation and metric invariants must hold for all.
+
+use sparsesecagg::coordinator::Coordinator;
+use sparsesecagg::field;
+use sparsesecagg::metrics;
+use sparsesecagg::network::draw_dropouts;
+use sparsesecagg::prg::ChaCha20Rng;
+use sparsesecagg::protocol::messages::UnmaskResponse;
+use sparsesecagg::protocol::{sparse, Params};
+use sparsesecagg::quantize;
+
+fn random_grads(rng: &mut ChaCha20Rng, n: usize, d: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.next_f32() * 2.0 - 1.0).collect())
+        .collect()
+}
+
+/// Protocol output must EXACTLY equal the unmasked recomputation for
+/// random (n, α, θ, dropout) draws — the core soundness property.
+#[test]
+fn sparse_aggregation_exact_over_random_configs() {
+    for case in 0..12u64 {
+        let mut rng = ChaCha20Rng::from_seed_u64(7_000 + case);
+        let n = 4 + (rng.next_u32() as usize % 12);
+        let d = 200 + (rng.next_u32() as usize % 1200);
+        let alpha = 0.05 + 0.6 * rng.next_f32() as f64;
+        let theta = 0.3 * rng.next_f32() as f64;
+        let params = Params { n, d, alpha, theta, c: 2048.0 };
+        let (users, mut server) = sparse::setup(params, 100 + case);
+        let ys = random_grads(&mut rng, n, d);
+        let beta = 1.0 / n as f64;
+
+        // random dropout set below threshold
+        let max_drop = n - (n / 2 + 1);
+        let n_drop = (rng.next_u32() as usize) % (max_drop + 1);
+        let dropped: Vec<usize> = (0..n_drop).collect();
+
+        server.begin_round();
+        let mut scratch = vec![0u32; d];
+        for u in users.iter().filter(|u| !dropped.contains(&u.id)) {
+            let plan = u.mask_plan(case as u32, &params, &mut scratch);
+            server.receive_upload(
+                u.masked_upload(case as u32, &ys[u.id], beta, &params, plan));
+        }
+        let req = server.unmask_request();
+        let responses: Vec<UnmaskResponse> = users
+            .iter()
+            .filter(|u| !dropped.contains(&u.id))
+            .map(|u| u.respond_unmask(&req))
+            .collect();
+        server.finish_round(case as u32, &responses).unwrap();
+
+        // unmasked recomputation (rounding stream via the public seekable
+        // accessor, zero masks, same quantizer)
+        let mut want = vec![0u32; d];
+        for u in users.iter().filter(|u| !dropped.contains(&u.id)) {
+            let plan = u.mask_plan(case as u32, &params, &mut scratch);
+            let rands = u.rounding_uniforms(case as u32, plan.indices.len());
+            for (&l, &r) in plan.indices.iter().zip(&rands) {
+                let v = quantize::quantize_mask_one(
+                    ys[u.id][l as usize], r, 0, true, params.scale(beta),
+                    params.c);
+                want[l as usize] = field::add(want[l as usize], v);
+            }
+        }
+        assert_eq!(server.aggregate_field(), &want[..],
+                   "case {case}: n={n} d={d} alpha={alpha:.2} drop={n_drop}");
+    }
+}
+
+/// Quorum math: with θ < 0.5 and quorum enforcement the round always
+/// completes; metrics see dropped users as None.
+#[test]
+fn rounds_complete_under_heavy_dropout() {
+    let params = Params { n: 14, d: 800, alpha: 0.25, theta: 0.45,
+                          c: 1024.0 };
+    let mut coord = Coordinator::new_sparse(params, 11);
+    let betas = vec![1.0 / 14.0; 14];
+    let mut rng = ChaCha20Rng::from_seed_u64(5);
+    let ys = random_grads(&mut rng, 14, 800);
+    for round in 0..6 {
+        let dropped = draw_dropouts(14, 0.45, round, 9, true);
+        let (agg, ledger) =
+            coord.run_round(round, &ys, &betas, &dropped).unwrap();
+        assert_eq!(agg.len(), 800);
+        let uploads = coord.sparse_upload_indices().unwrap();
+        for &i in &dropped {
+            assert!(uploads[i].is_none());
+            assert_eq!(
+                ledger.up_bytes[i], 0,
+                "dropped user {i} should upload nothing in round {round}");
+        }
+    }
+}
+
+/// Privacy trend (Thm 2 / Fig 4a): measured T grows with α and tracks
+/// the closed form within Monte-Carlo slack.
+#[test]
+fn privacy_t_tracks_theory() {
+    let n = 60;
+    let d = 30_000;
+    let gamma = 1.0 / 3.0;
+    let theta = 0.0;
+    let mut last_t = 0.0;
+    for &alpha in &[0.05, 0.15, 0.3] {
+        let params = Params { n, d, alpha, theta, c: 1024.0 };
+        let mut coord = Coordinator::new_sparse(params, 21);
+        let betas = vec![1.0 / n as f64; n];
+        let ys: Vec<Vec<f32>> = vec![vec![0.01; d]; n];
+        coord.run_round(0, &ys, &betas, &[]).unwrap();
+        let honest = coord.honest_mask(gamma);
+        let sample = metrics::privacy_histogram(
+            d, coord.sparse_upload_indices().unwrap(), &honest);
+        let t_meas = sample.mean_t();
+        let t_theory = metrics::theoretical_t(alpha, theta, gamma, n);
+        assert!(t_meas > last_t, "T not increasing in alpha");
+        // mean-T conditioned on coverage is ≥ the unconditional theory
+        // value; allow generous band.
+        assert!(t_meas > 0.6 * t_theory && t_meas < 3.0 * t_theory + 2.0,
+                "alpha={alpha}: T={t_meas} theory={t_theory}");
+        last_t = t_meas;
+    }
+}
+
+/// The private mask's purpose (paper §III-B, citing Bonawitz): if a user
+/// is *delayed* rather than dropped — its upload surfaces only after the
+/// server already reconstructed its pairwise seeds and stripped its
+/// pairwise masks — the leftover private mask r_i keeps the late upload
+/// indistinguishable from uniform, so nothing about y_i leaks.
+#[test]
+fn delayed_user_upload_stays_masked_by_private_seed() {
+    let params = Params { n: 8, d: 4_000, alpha: 0.4, theta: 0.1,
+                          c: 1024.0 };
+    let (users, mut server) = sparse::setup(params, 55);
+    let mut rng = ChaCha20Rng::from_seed_u64(66);
+    let ys = random_grads(&mut rng, 8, 4_000);
+    let beta = 1.0 / 8.0;
+    let delayed = 3usize;
+
+    // Round runs without user 3 (server treats it as dropped and
+    // reconstructs its DH secret to remove its pairwise masks).
+    server.begin_round();
+    let mut scratch = vec![0u32; params.d];
+    for u in users.iter().filter(|u| u.id != delayed) {
+        let plan = u.mask_plan(0, &params, &mut scratch);
+        server.receive_upload(u.masked_upload(0, &ys[u.id], beta, &params,
+                                              plan));
+    }
+    let req = server.unmask_request();
+    let responses: Vec<UnmaskResponse> = users
+        .iter()
+        .filter(|u| u.id != delayed)
+        .map(|u| u.respond_unmask(&req))
+        .collect();
+    server.finish_round(0, &responses).unwrap();
+
+    // The delayed upload arrives late. The server knows all of user 3's
+    // pairwise seeds by now (it reconstructed the DH secret during
+    // Unmask) — simulate the strongest curious server by subtracting
+    // every pairwise mask from the late upload. The residual is
+    // φ(ȳ_3) + r_3 and must still look uniform over the field: the
+    // private seed of a NON-survivor is never requested, so r_3 stands.
+    let plan = users[delayed].mask_plan(0, &params, &mut scratch);
+    let up = users[delayed].masked_upload(0, &ys[delayed], beta, &params,
+                                          plan);
+    let mut residual = up.values.clone();
+    for j in 0..params.n {
+        if j == delayed {
+            continue;
+        }
+        let (add_seed, mult_seed) = users[delayed].pair_seeds(j);
+        let support = sparsesecagg::masking::pairwise_support(
+            mult_seed, 0, params.rho(), params.d);
+        let values = sparsesecagg::masking::mask_values(
+            add_seed, sparsesecagg::masking::STREAM_ADDITIVE, 0,
+            support.len());
+        // subtract user 3's signed contribution at the matching
+        // positions of its upload
+        for (&l, &r) in support.iter().zip(&values) {
+            let k = up.indices.binary_search(&l).unwrap();
+            residual[k] = if sparsesecagg::masking::pair_sign(delayed, j) {
+                field::sub(residual[k], r)
+            } else {
+                field::add(residual[k], r)
+            };
+        }
+    }
+    // Statistical checks: residual ~ uniform ⇒ mean ≈ q/2 and almost no
+    // "small" values; a bare quantized gradient (what would leak without
+    // r_3) clusters entirely within ±c·|scale·y| of 0 mod q.
+    let mean = residual.iter().map(|&v| v as f64).sum::<f64>()
+        / residual.len() as f64;
+    let half = field::Q as f64 / 2.0;
+    assert!((mean - half).abs() < half * 0.1,
+            "late upload no longer uniform: mean={mean:.3e}");
+    let small = residual.iter()
+        .filter(|&&v| v < 1_000_000 || v > field::Q - 1_000_000)
+        .count() as f64 / residual.len() as f64;
+    assert!(small < 0.01, "quantized structure visible: {small}");
+}
+
+/// Wire-codec fuzz: random mutations of valid frames must decode to an
+/// error or a valid message — never panic (index bounds, allocation
+/// bombs, etc.).
+#[test]
+fn wire_codec_survives_fuzzing() {
+    use sparsesecagg::protocol::messages::SparseMaskedUpload;
+    use sparsesecagg::protocol::wire;
+    let mut rng = ChaCha20Rng::from_seed_u64(0xf022);
+    let base = SparseMaskedUpload {
+        id: 3,
+        indices: vec![1, 5, 77, 901],
+        values: vec![10, 20, 30, 40],
+        d: 1000,
+    };
+    let clean = wire::encode_sparse_upload(&base);
+    assert_eq!(wire::decode_sparse_upload(&clean).unwrap().values,
+               base.values);
+    for _ in 0..3000 {
+        let mut buf = clean.clone();
+        // 1–4 random byte mutations
+        for _ in 0..1 + rng.next_u32() % 4 {
+            let i = rng.next_u32() as usize % buf.len();
+            buf[i] ^= (rng.next_u32() % 255 + 1) as u8;
+        }
+        // also random truncation sometimes
+        if rng.next_u32() % 4 == 0 {
+            buf.truncate(rng.next_u32() as usize % (buf.len() + 1));
+        }
+        // must not panic:
+        let _ = wire::decode_sparse_upload(&buf);
+        let _ = wire::decode_dense_upload(&buf);
+        let _ = wire::decode_unmask_response(&buf);
+        let _ = wire::peek_header(&buf);
+    }
+}
+
+/// Compression (Thm 1): measured upload fraction ≈ p ≤ α.
+#[test]
+fn compression_ratio_matches_theorem_1() {
+    let n = 40;
+    let d = 60_000;
+    for &alpha in &[0.05, 0.1, 0.3] {
+        let params = Params { n, d, alpha, theta: 0.0, c: 1024.0 };
+        let (users, _server) = sparse::setup(params, 77);
+        let mut scratch = vec![0u32; d];
+        let plan = users[7].mask_plan(0, &params, &mut scratch);
+        let frac = plan.indices.len() as f64 / d as f64;
+        assert!(frac <= alpha * 1.05 + 0.003,
+                "alpha={alpha}: frac={frac} violates Thm 1");
+        assert!(frac >= params.p() * 0.9,
+                "alpha={alpha}: frac={frac} below p={}", params.p());
+    }
+}
