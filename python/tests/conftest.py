@@ -1,0 +1,6 @@
+"""Make `compile.*` importable no matter where pytest is invoked from."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))

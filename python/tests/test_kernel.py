@@ -6,6 +6,10 @@ elements) so the quantmask comparison is exact, and matmul uses allclose.
 
 import numpy as np
 import pytest
+
+# hypothesis is an optional dev dependency: skip this module (not the
+# whole suite) on environments that don't ship it.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import matmul as mm

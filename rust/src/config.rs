@@ -77,7 +77,7 @@ impl Config {
             "theta", "c", "lr", "momentum", "iid", "samples_per_user",
             "test_samples", "target_accuracy", "eval_every",
             "use_hlo_quantmask", "participation", "dp_epsilon", "dp_clip",
-            "seed", "artifacts_dir",
+            "seed", "artifacts_dir", "shard_size",
         ];
         for k in self.values.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -126,6 +126,7 @@ impl Config {
                 .get("artifacts_dir")
                 .unwrap_or(&d.artifacts_dir)
                 .to_string(),
+            shard_size: self.parse("shard_size", d.shard_size)?,
         })
     }
 }
@@ -149,12 +150,14 @@ mod tests {
         c.set("alpha", "0.2");
         c.set("iid", "false");
         c.set("target_accuracy", "0.55");
+        c.set("shard_size", "4096");
         let fl = c.to_fl_config().unwrap();
         assert_eq!(fl.users, 25);
         assert_eq!(fl.protocol, ProtocolKind::SecAgg);
         assert!((fl.alpha - 0.2).abs() < 1e-12);
         assert!(!fl.iid);
         assert_eq!(fl.target_accuracy, Some(0.55));
+        assert_eq!(fl.shard_size, 4096);
     }
 
     #[test]

@@ -8,9 +8,15 @@
 //! crate set has no tokio), while "wire" transfers advance the simulated
 //! clock of [`crate::network`]. Per-round output is the aggregated
 //! gradient plus a [`RoundLedger`] of bytes and time.
+//!
+//! The server's Unmask phase runs on the sharded streaming pipeline
+//! ([`crate::protocol::shard`]) by default — `shard_size` on
+//! [`Coordinator`] (and the `shard_size` config/CLI knob) tunes the
+//! shard width; `0` selects the bit-exact monolithic reference path.
 
 use crate::network::{LinkModel, RoundLedger};
 use crate::protocol::messages::*;
+use crate::protocol::shard::{ShardConfig, DEFAULT_SHARD_SIZE};
 use crate::protocol::{secagg, sparse, wire, Params};
 use anyhow::Result;
 use std::time::Instant;
@@ -34,8 +40,13 @@ pub struct Coordinator {
     pub link: LinkModel,
     /// One-time key-setup communication (AdvertiseKeys + ShareKeys).
     pub setup_ledger: RoundLedger,
-    /// Number of worker threads for client-side compute.
+    /// Number of worker threads for client-side compute and for the
+    /// server's sharded unmask windows.
     pub threads: usize,
+    /// Shard size (elements) for the server's streaming unmask pipeline;
+    /// `0` falls back to the monolithic path (mainly for differential
+    /// testing — both paths are bit-exact equal).
+    pub shard_size: usize,
 }
 
 fn default_threads(n: usize) -> usize {
@@ -44,6 +55,26 @@ fn default_threads(n: usize) -> usize {
         .unwrap_or(4)
         .min(n)
         .max(1)
+}
+
+/// Run the server's unmask through the sharded pipeline when a
+/// [`ShardConfig`] is selected (recording the shard stats in the
+/// ledger), else through the monolithic reference path. A macro rather
+/// than a fn so the server borrow lives in exactly one arm.
+macro_rules! finish_round_dispatch {
+    ($server:expr, $ledger:expr, $shard_cfg:expr, $round:expr,
+     $responses:expr) => {
+        match &$shard_cfg {
+            Some(cfg) => {
+                let (agg, stats) =
+                    $server.finish_round_sharded($round, $responses, cfg)?;
+                $ledger.record_unmask_shards(stats.jobs, stats.shards,
+                                             stats.peak_scratch_bytes);
+                agg
+            }
+            None => $server.finish_round($round, $responses)?,
+        }
+    };
 }
 
 impl Coordinator {
@@ -57,6 +88,7 @@ impl Coordinator {
             link: LinkModel::paper_user_link(),
             setup_ledger,
             threads: default_threads(params.n),
+            shard_size: DEFAULT_SHARD_SIZE,
         }
     }
 
@@ -70,6 +102,7 @@ impl Coordinator {
             link: LinkModel::paper_user_link(),
             setup_ledger,
             threads: default_threads(params.n),
+            shard_size: DEFAULT_SHARD_SIZE,
         }
     }
 
@@ -121,6 +154,8 @@ impl Coordinator {
         let n = params.n;
         let mut ledger = RoundLedger::new(n);
         let threads = self.threads;
+        let shard_cfg = (self.shard_size > 0)
+            .then(|| ShardConfig::new(self.shard_size, threads));
         let is_dropped =
             |i: usize| -> bool { dropped.contains(&i) };
 
@@ -169,7 +204,8 @@ impl Coordinator {
                     ledger.record_download(*u, req_bytes);
                     ledger.record_upload(*u, *b);
                 }
-                let agg = server.finish_round(round, &responses)?;
+                let agg = finish_round_dispatch!(server, ledger, shard_cfg,
+                                                 round, &responses);
                 ledger.server_compute_s += ts.elapsed().as_secs_f64();
                 (agg, upload_bytes, response_bytes)
             }
@@ -210,7 +246,8 @@ impl Coordinator {
                     ledger.record_download(*u, req_bytes);
                     ledger.record_upload(*u, *b);
                 }
-                let agg = server.finish_round(round, &responses)?;
+                let agg = finish_round_dispatch!(server, ledger, shard_cfg,
+                                                 round, &responses);
                 ledger.server_compute_s += ts.elapsed().as_secs_f64();
                 (agg, upload_bytes, response_bytes)
             }
@@ -252,6 +289,8 @@ impl Coordinator {
         let params = self.params;
         let n = params.n;
         let mut ledger = RoundLedger::new(n);
+        let shard_cfg = (self.shard_size > 0)
+            .then(|| ShardConfig::new(self.shard_size, self.threads));
         let Cohort::Sparse { users, server } = &mut self.cohort else {
             anyhow::bail!("run_round_hlo requires a SparseSecAgg cohort");
         };
@@ -288,7 +327,8 @@ impl Coordinator {
             ledger.record_download(r.id, req_bytes);
             ledger.record_upload(r.id, r.wire_bytes());
         }
-        let agg = server.finish_round(round, &responses)?;
+        let agg = finish_round_dispatch!(server, ledger, shard_cfg, round,
+                                         &responses);
         ledger.server_compute_s += ts.elapsed().as_secs_f64();
 
         for (u, &b) in upload_bytes.iter().enumerate() {
@@ -439,6 +479,24 @@ mod tests {
         assert!(sample.mean_t() > 0.0);
         // dropped users contributed nothing
         assert!(uploads[1].is_none() && uploads[5].is_none());
+    }
+
+    #[test]
+    fn sharded_and_monolithic_rounds_agree_bit_exactly() {
+        let p = params(9, 1234, 0.35, 0.2);
+        let ys = grads(p.n, p.d, 4);
+        let betas = vec![1.0 / p.n as f64; p.n];
+        let dropped = vec![0usize, 3];
+        let mut mono = Coordinator::new_sparse(p, 13);
+        mono.shard_size = 0;
+        let (agg_mono, lm) = mono.run_round(1, &ys, &betas, &dropped).unwrap();
+        let mut shr = Coordinator::new_sparse(p, 13);
+        shr.shard_size = 100; // 1234 % 100 != 0: remainder shard in play
+        let (agg_shr, ls) = shr.run_round(1, &ys, &betas, &dropped).unwrap();
+        assert_eq!(agg_mono, agg_shr);
+        assert_eq!(lm.unmask_jobs, 0, "monolithic path records no shards");
+        assert!(ls.unmask_jobs > 0 && ls.unmask_shards > 0);
+        assert!(ls.unmask_peak_scratch_bytes <= shr.threads * 100 * 8);
     }
 
     #[test]

@@ -29,6 +29,31 @@ pub fn sub_assign(acc: &mut [u32], x: &[u32]) {
     }
 }
 
+/// Signed dispatch over a contiguous shard: `acc[i] = acc[i] ± x[i] mod q`.
+/// The shard pipeline's fused apply — one branch per shard chunk, then a
+/// straight auto-vectorized pass ([`add_assign`]/[`sub_assign`]).
+#[inline]
+pub fn apply_signed(acc: &mut [u32], x: &[u32], add: bool) {
+    if add {
+        add_assign(acc, x);
+    } else {
+        sub_assign(acc, x);
+    }
+}
+
+/// Append the words `< bound` to `out`, preserving order — the shard
+/// pipeline's rejection filter (bound = q accepts all valid field
+/// elements; ~1.2e-9 of words are rejected). Branch-predictable hot loop
+/// over a contiguous shard buffer.
+#[inline]
+pub fn accept_lt(words: &[u32], bound: u32, out: &mut Vec<u32>) {
+    for &w in words {
+        if w < bound {
+            out.push(w);
+        }
+    }
+}
+
 /// Sparse add: `acc[idx] += val mod q` over (index, value) pairs.
 #[inline]
 pub fn add_assign_at(acc: &mut [u32], entries: impl Iterator<Item = (u32, u32)>) {
@@ -111,6 +136,34 @@ mod tests {
             .map(|(&x, &y)| field::add(x, y)).collect();
         add_assign(&mut a, &b);
         assert_eq!(a, want);
+    }
+
+    #[test]
+    fn apply_signed_dispatches() {
+        prop(50, |rng| {
+            let n = 32;
+            let a = rand_vec(rng, n);
+            let b = rand_vec(rng, n);
+            let mut add = a.clone();
+            apply_signed(&mut add, &b, true);
+            let mut sub = a.clone();
+            apply_signed(&mut sub, &b, false);
+            for i in 0..n {
+                assert_eq!(add[i], field::add(a[i], b[i]));
+                assert_eq!(sub[i], field::sub(a[i], b[i]));
+            }
+        });
+    }
+
+    #[test]
+    fn accept_lt_filters_in_order() {
+        let words = vec![5, Q, 0, Q - 1, 7, u32::MAX];
+        let mut out = vec![42];
+        accept_lt(&words, Q, &mut out);
+        assert_eq!(out, vec![42, 5, 0, Q - 1, 7]);
+        let mut half = Vec::new();
+        accept_lt(&words, 6, &mut half);
+        assert_eq!(half, vec![5, 0]);
     }
 
     #[test]

@@ -57,6 +57,9 @@ pub struct FlConfig {
     pub dp_clip: f64,
     pub seed: u64,
     pub artifacts_dir: String,
+    /// Shard size for the server's streaming unmask pipeline
+    /// ([`crate::protocol::shard`]); 0 = monolithic reference path.
+    pub shard_size: usize,
 }
 
 impl Default for FlConfig {
@@ -83,6 +86,7 @@ impl Default for FlConfig {
             dp_clip: 1.0,
             seed: 42,
             artifacts_dir: "artifacts".into(),
+            shard_size: crate::protocol::shard::DEFAULT_SHARD_SIZE,
         }
     }
 }
@@ -144,6 +148,7 @@ pub fn run_fl(cfg: &FlConfig, trainer: &Trainer) -> Result<FlRun> {
         ProtocolKind::Sparse => Coordinator::new_sparse(params, cfg.seed),
         ProtocolKind::SecAgg => Coordinator::new_secagg(params, cfg.seed),
     };
+    coord.shard_size = cfg.shard_size;
 
     let mut global = trainer.init_params(cfg.seed ^ 0x1417);
     let mut history = Vec::new();

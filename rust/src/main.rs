@@ -101,6 +101,10 @@ fn cmd_comm(args: &Args) -> Result<()> {
     let d = args.parse_flag("d", 170_542usize)?; // CIFAR arch (Table I)
     let alpha = args.parse_flag("alpha", 0.1f64)?;
     let theta = args.parse_flag("theta", 0.0f64)?;
+    let shard_size = args.parse_flag(
+        "shard_size",
+        sparsesecagg::protocol::shard::DEFAULT_SHARD_SIZE,
+    )?;
     let users: Vec<usize> = match args.get("users") {
         Some(v) => vec![v.parse()?],
         None => vec![25, 50, 75, 100],
@@ -114,8 +118,10 @@ fn cmd_comm(args: &Args) -> Result<()> {
         let ys: Vec<Vec<f32>> = vec![vec![0.01; d]; n];
         let betas = vec![1.0 / n as f64; n];
         let mut sec = Coordinator::new_secagg(params, 1);
+        sec.shard_size = shard_size;
         let (_, l_sec) = sec.run_round(0, &ys, &betas, &[])?;
         let mut spa = Coordinator::new_sparse(params, 1);
+        spa.shard_size = shard_size;
         let (_, l_spa) = spa.run_round(0, &ys, &betas, &[])?;
         t.row(&[
             n.to_string(),

@@ -141,6 +141,39 @@ pub fn apply_mask_values(acc: &mut [u32], seed: Seed, stream: u32,
     }
 }
 
+/// Accepted field elements among keystream **words** `[start,
+/// start+nwords)` of the (seed, stream, round) mask stream. Seeks
+/// straight to the word offset (ChaCha20 is word-addressable) instead of
+/// generating the prefix. Convenience wrapper fixing the acceptance
+/// bound at `Q`; the shard pipeline (`protocol/shard`, §Perf) calls
+/// [`mask_values_word_range_accept`] so tests can lower the bound.
+///
+/// Concatenating consecutive word ranges in order reproduces the exact
+/// [`mask_values`] element sequence: rejection sampling is a stateless
+/// per-word filter, so it commutes with splitting the word stream. What
+/// shifts is element *position* — each rejected word earlier in the
+/// stream moves later elements down by one — which the caller
+/// (`protocol/shard`) carries as a running acceptance count.
+pub fn mask_values_word_range(seed: Seed, stream: u32, round: u32,
+                              start: u64, nwords: usize) -> Vec<u32> {
+    mask_values_word_range_accept(seed, stream, round, start, nwords, Q)
+}
+
+/// [`mask_values_word_range`] with an explicit acceptance bound — test
+/// hook that makes the astronomically-rare rejection path exercisable
+/// (production code always passes `Q`).
+#[doc(hidden)]
+pub fn mask_values_word_range_accept(seed: Seed, stream: u32, round: u32,
+                                     start: u64, nwords: usize,
+                                     accept_below: u32) -> Vec<u32> {
+    let mut rng = ChaCha20Rng::new_at_word(seed, stream, round, start);
+    let mut words = vec![0u32; nwords];
+    rng.fill_raw(&mut words);
+    let mut out = Vec::with_capacity(nwords);
+    crate::field::vecops::accept_lt(&words, accept_below, &mut out);
+    out
+}
+
 /// `count` sequential rounding uniforms in [0, 1) — the compressed
 /// counterpart of the per-coordinate rounding stream; user-private, so
 /// only ordering consistency with the sorted support matters.
@@ -385,6 +418,52 @@ mod tests {
             }
             assert!(vi.iter().all(|&v| v < Q));
         });
+    }
+
+    #[test]
+    fn word_ranges_concatenate_to_mask_values() {
+        prop(30, |rng| {
+            let s = seed(rng);
+            let round = rng.next_u32() % 50;
+            let total = 200 + (rng.next_u32() as usize % 300);
+            // Reference scan of the same raw word stream (positions the
+            // identity even if a word were rejected).
+            let mut raw = ChaCha20Rng::new(s, STREAM_ADDITIVE, round);
+            let mut want = Vec::new();
+            for _ in 0..total {
+                let w = raw.next_u32();
+                if w < Q {
+                    want.push(w);
+                }
+            }
+            // Concatenate random-sized word ranges tiling [0, total).
+            let mut got = Vec::new();
+            let mut pos = 0usize;
+            while pos < total {
+                let n = 1 + (rng.next_u32() as usize % 97).min(total - pos - 1);
+                got.extend(mask_values_word_range(
+                    s, STREAM_ADDITIVE, round, pos as u64, n));
+                pos += n;
+            }
+            assert_eq!(got, want);
+            // And (modulo rejections, absent here with overwhelming
+            // probability) this is the sequential mask_values stream.
+            assert_eq!(got[..got.len().min(total - 8)],
+                       mask_values(s, STREAM_ADDITIVE, round,
+                                   got.len().min(total - 8))[..]);
+        });
+    }
+
+    #[test]
+    fn word_range_accept_bound_filters() {
+        let s = Seed([5; 8]);
+        let all = mask_values_word_range_accept(s, 1, 0, 0, 256, u32::MAX);
+        assert_eq!(all.len(), 256);
+        let half = mask_values_word_range_accept(s, 1, 0, 0, 256, 1 << 31);
+        let want: Vec<u32> =
+            all.iter().copied().filter(|&w| w < (1 << 31)).collect();
+        assert_eq!(half, want);
+        assert!(half.len() > 64 && half.len() < 192, "suspicious keystream");
     }
 
     #[test]

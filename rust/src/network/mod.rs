@@ -9,6 +9,18 @@
 //! participating users; the server's NIC can be modeled as a separate,
 //! faster link. Communication *bytes* are exact; simulated wall clock is
 //! the bandwidth-bound approximation the paper's own measurements live in.
+//!
+//! # Shard-pipeline accounting
+//!
+//! The [`RoundLedger`] also tracks the server's sharded streaming unmask
+//! ([`crate::protocol::shard`]): how many mask-stream jobs ran, how many
+//! shard expansion tasks they decomposed into, and the peak transient
+//! scratch one expansion window held. The memory model behind the last
+//! number: a window expands `threads` shards concurrently and each shard
+//! task holds at most `shard_size` raw words plus `shard_size` accepted
+//! elements, so peak scratch is ≤ `threads · shard_size · 8` bytes —
+//! independent of the model dimension `d` and of the cohort size `N`,
+//! which is what lets one aggregation server absorb fleet-scale rounds.
 
 /// Link parameters.
 #[derive(Clone, Copy, Debug)]
@@ -46,6 +58,14 @@ pub struct RoundLedger {
     pub client_compute_s: f64,
     /// Measured host seconds of server compute.
     pub server_compute_s: f64,
+    /// Mask-stream jobs the server's sharded unmask processed this round
+    /// (0 when the monolithic path ran).
+    pub unmask_jobs: usize,
+    /// Shard expansion tasks across those jobs.
+    pub unmask_shards: usize,
+    /// Peak transient scratch one expansion window held, bytes (the
+    /// O(threads·shard_size) term — see the module docs).
+    pub unmask_peak_scratch_bytes: usize,
 }
 
 impl RoundLedger {
@@ -74,6 +94,16 @@ impl RoundLedger {
             .map(|&b| link.transfer_time(b))
             .fold(0.0f64, f64::max);
         self.comm_time_s += t;
+    }
+
+    /// Record one round's sharded-unmask decomposition (accumulates
+    /// across phases; scratch peaks take the max).
+    pub fn record_unmask_shards(&mut self, jobs: usize, shards: usize,
+                                peak_scratch_bytes: usize) {
+        self.unmask_jobs += jobs;
+        self.unmask_shards += shards;
+        self.unmask_peak_scratch_bytes =
+            self.unmask_peak_scratch_bytes.max(peak_scratch_bytes);
     }
 
     /// Total upload bytes across users.
@@ -144,6 +174,16 @@ mod tests {
         let mut ledger = RoundLedger::new(3);
         ledger.advance_parallel_phase(&link, &[1_000_000, 2_000_000, 500]);
         assert!((ledger.comm_time_s - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unmask_shard_accounting_accumulates_and_peaks() {
+        let mut ledger = RoundLedger::new(2);
+        ledger.record_unmask_shards(3, 48, 1024);
+        ledger.record_unmask_shards(1, 16, 512);
+        assert_eq!(ledger.unmask_jobs, 4);
+        assert_eq!(ledger.unmask_shards, 64);
+        assert_eq!(ledger.unmask_peak_scratch_bytes, 1024);
     }
 
     #[test]

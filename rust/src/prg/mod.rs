@@ -92,6 +92,45 @@ impl ChaCha20Rng {
         Self::new(Seed(key), 0, 0)
     }
 
+    /// Stream positioned so the next draw returns keystream **word**
+    /// `word` — the shard pipeline's seek primitive (§Perf). ChaCha20 is
+    /// random-access at word granularity (word w lives in block w/16), so
+    /// seeking costs one block4 computation regardless of offset.
+    ///
+    /// Seeks address the *raw word* stream. Derived streams that consume
+    /// exactly one word per element (Bernoulli bits, rounding uniforms,
+    /// `next_f32`) inherit exact random access; the field-element stream
+    /// ([`Self::next_field`]) is rejection-sampled and therefore *not*
+    /// element-addressable — `protocol/shard` reconciles that by carrying
+    /// per-range acceptance counts (see its module docs).
+    pub fn new_at_word(seed: Seed, stream: u32, round: u32, word: u64) -> Self {
+        let mut rng = Self::new(seed, stream, round);
+        rng.seek_word(word);
+        rng
+    }
+
+    /// Reposition this stream at keystream word `word` (see
+    /// [`Self::new_at_word`]).
+    pub fn seek_word(&mut self, word: u64) {
+        // Hard assert: a silently truncated block counter would position a
+        // crypto mask stream at the wrong offset in release builds. The +4
+        // covers the refill counter past the buffered four blocks.
+        assert!(word / 16 + 4 <= u32::MAX as u64, "seek beyond 2^36 words");
+        let block = (word / 16) as u32;
+        self.buf = chacha::block4(&self.key, block, &self.nonce);
+        self.counter = block.wrapping_add(4);
+        self.pos = (word % 16) as usize;
+    }
+
+    /// Fill `out` with raw keystream words (no reduction, no rejection) —
+    /// one word per slot, so the mapping slot ↔ word index is exact and
+    /// composes with [`Self::seek_word`].
+    pub fn fill_raw(&mut self, out: &mut [u32]) {
+        for v in out.iter_mut() {
+            *v = self.next_u32();
+        }
+    }
+
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         if self.pos == 64 {
@@ -277,6 +316,44 @@ mod tests {
         assert!(rng.bernoulli_indices(0.0, 1000).is_empty());
         assert_eq!(rng.bernoulli_indices(1.0, 5), vec![0, 1, 2, 3, 4]);
         assert!(rng.bernoulli_indices(0.5, 0).is_empty());
+    }
+
+    #[test]
+    fn seek_word_matches_sequential_stream() {
+        prop(50, |rng| {
+            let mut w = [0u32; 8];
+            for v in w.iter_mut() {
+                *v = rng.next_u32();
+            }
+            let seed = Seed(w);
+            let (stream, round) = (rng.next_u32(), rng.next_u32());
+            // Reference: draw 300 words sequentially.
+            let mut seq = ChaCha20Rng::new(seed, stream, round);
+            let mut want = vec![0u32; 300];
+            seq.fill_raw(&mut want);
+            // Seek to a random offset and continue; must match exactly,
+            // including across the 16-word block and 64-word buffer
+            // boundaries.
+            let off = (rng.next_u32() as usize) % 280;
+            let mut jumped =
+                ChaCha20Rng::new_at_word(seed, stream, round, off as u64);
+            for (k, &expect) in want[off..].iter().enumerate() {
+                assert_eq!(jumped.next_u32(), expect, "offset {off} + {k}");
+            }
+        });
+    }
+
+    #[test]
+    fn seek_word_is_reusable_and_rewindable() {
+        let seed = Seed([3; 8]);
+        let mut a = ChaCha20Rng::new(seed, 1, 2);
+        let mut want = vec![0u32; 128];
+        a.fill_raw(&mut want);
+        let mut b = ChaCha20Rng::new(seed, 1, 2);
+        for &off in &[100u64, 0, 64, 63, 17, 16, 15, 127] {
+            b.seek_word(off);
+            assert_eq!(b.next_u32(), want[off as usize], "offset {off}");
+        }
     }
 
     #[test]

@@ -6,6 +6,8 @@
 //!   Bonawitz et al. (CCS'17), the paper's comparison point.
 //! * [`messages`] — wire-format framing shared by both, used for the
 //!   byte-exact communication accounting behind Table I / Figs. 3, 5, 6.
+//! * [`shard`] — the sharded streaming unmask pipeline both servers run
+//!   their Unmask hot path on (bit-exact to the monolithic path).
 //!
 //! Both protocols follow the Bonawitz phase structure:
 //! `AdvertiseKeys → ShareKeys → MaskedInput → Unmask`. Key advertisement
@@ -18,6 +20,7 @@
 pub mod dp;
 pub mod messages;
 pub mod secagg;
+pub mod shard;
 pub mod sparse;
 pub mod wire;
 

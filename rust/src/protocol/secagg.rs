@@ -11,7 +11,8 @@ use crate::dh;
 use crate::masking::{self, STREAM_ADDITIVE, STREAM_PRIVATE};
 use crate::prg::{ChaCha20Rng, Seed};
 use crate::protocol::messages::*;
-use crate::protocol::sparse::{TAG_ADDITIVE};
+use crate::protocol::shard::{self, MaskJob, ShardConfig, ShardStats};
+use crate::protocol::sparse::TAG_ADDITIVE;
 use crate::protocol::{seed_from_u64_secret, u64_secret_from_seed, Params};
 use crate::quantize;
 use crate::shamir::{self, Share};
@@ -170,13 +171,25 @@ impl Server {
         UnmaskRequest { dropped, survivors }
     }
 
-    /// Unmask (eq. 10) + dequantize.
-    pub fn finish_round(&mut self, round: u32, responses: &[UnmaskResponse])
-                        -> anyhow::Result<Vec<f32>> {
-        let t = self.params.threshold();
-        let req = self.unmask_request();
+    /// Reconstruct the mask-removal jobs for eq. 10 — one dense additive
+    /// job per dropped×survivor pair (undoing the sign survivor `j`
+    /// applied toward dropped `i`) and one dense private-mask removal per
+    /// survivor — feeding each job to `sink` as soon as it is built (jobs
+    /// are seed-sized, nothing d-length is ever materialized here).
+    /// Shared by the monolithic and sharded unmask paths; takes fields
+    /// explicitly so callers can hold `agg` mutably in the sink.
+    fn for_each_unmask_job(
+        params: &Params, roster: &[u64], received: &[bool], round: u32,
+        responses: &[UnmaskResponse], mut sink: impl FnMut(MaskJob),
+    ) -> anyhow::Result<()> {
+        let t = params.threshold();
+        // Same sets unmask_request() derives.
+        let dropped: Vec<usize> =
+            (0..params.n).filter(|&i| !received[i]).collect();
+        let survivors: Vec<usize> =
+            (0..params.n).filter(|&i| received[i]).collect();
 
-        for &i in &req.dropped {
+        for &i in &dropped {
             let shares: Vec<Share> = responses
                 .iter()
                 .filter_map(|r| {
@@ -189,15 +202,19 @@ impl Server {
                 anyhow::anyhow!("cannot reconstruct DH secret of user {i}")
             })?;
             let secret_i = u64_secret_from_seed(seed);
-            for &j in &req.survivors {
-                let add_seed = dh::agree(secret_i, self.roster[j], i as u32,
+            for &j in &survivors {
+                let add_seed = dh::agree(secret_i, roster[j], i as u32,
                                          j as u32, TAG_ADDITIVE);
-                masking::apply_mask_values(&mut self.agg, add_seed,
-                                           STREAM_ADDITIVE, round, j >= i);
+                sink(MaskJob::Dense {
+                    seed: add_seed,
+                    stream: STREAM_ADDITIVE,
+                    round,
+                    add: j >= i,
+                });
             }
         }
 
-        for &j in &req.survivors {
+        for &j in &survivors {
             let shares: Vec<Share> = responses
                 .iter()
                 .filter_map(|r| {
@@ -209,11 +226,41 @@ impl Server {
             let seed = shamir::reconstruct(&refs, t).ok_or_else(|| {
                 anyhow::anyhow!("cannot reconstruct private seed of user {j}")
             })?;
-            masking::apply_mask_values(&mut self.agg, seed, STREAM_PRIVATE,
-                                       round, false);
+            sink(MaskJob::Dense {
+                seed,
+                stream: STREAM_PRIVATE,
+                round,
+                add: false,
+            });
         }
+        Ok(())
+    }
 
+    /// Unmask (eq. 10) + dequantize — monolithic reference path (one
+    /// sequential stream per mask).
+    pub fn finish_round(&mut self, round: u32, responses: &[UnmaskResponse])
+                        -> anyhow::Result<Vec<f32>> {
+        let Server { params, roster, received, agg, .. } = self;
+        Self::for_each_unmask_job(
+            params, roster, received, round, responses,
+            |job| shard::apply_job_monolithic(agg, &job))?;
         Ok(quantize::dequantize(&self.agg, self.params.c))
+    }
+
+    /// Unmask through the sharded streaming pipeline — bit-exact to
+    /// [`Self::finish_round`] (differential property tests pin this
+    /// down), O(threads·shard) transient memory, shard-parallel.
+    pub fn finish_round_sharded(&mut self, round: u32,
+                                responses: &[UnmaskResponse],
+                                cfg: &ShardConfig)
+                                -> anyhow::Result<(Vec<f32>, ShardStats)> {
+        let Server { params, roster, received, agg, .. } = self;
+        let mut stats = ShardStats::default();
+        Self::for_each_unmask_job(
+            params, roster, received, round, responses,
+            |job| stats.merge(shard::apply_jobs_sharded(
+                agg, std::slice::from_ref(&job), cfg)))?;
+        Ok((quantize::dequantize(&self.agg, self.params.c), stats))
     }
 
     pub fn aggregate_field(&self) -> &[u32] {

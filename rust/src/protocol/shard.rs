@@ -1,0 +1,357 @@
+//! Sharded streaming unmask pipeline — the server-side hot path.
+//!
+//! The monolithic unmask walks one full-length mask stream at a time:
+//! every dropped×survivor pairwise mask and every survivor private mask
+//! is expanded over all `d` coordinates on a single thread. This module
+//! restructures *where* that work happens without touching the
+//! cryptography: the model dimension is split into fixed-size shards and
+//! each mask stream is expanded per-shard, in parallel, by seeking the
+//! ChaCha20 keystream straight to the shard's word offset
+//! ([`crate::prg::ChaCha20Rng::seek_word`]).
+//!
+//! # Exactness under rejection sampling
+//!
+//! Field elements are rejection-sampled from the word stream (a word is
+//! rejected with probability 5/2^32), so the field stream is not
+//! element-addressable: element `k` only coincides with word `k` when no
+//! earlier word was rejected. The pipeline stays **bit-exact** anyway:
+//!
+//! 1. shard `s` of a stream of `L` elements expands the *word* range
+//!    `[s·shard, (s+1)·shard)` (clipped to `L`) and keeps the accepted
+//!    words — an order-preserving split of the monolithic scan;
+//! 2. shards apply in order while a running acceptance count carries the
+//!    element offset, so a rejection in shard `s` shifts shards `> s`
+//!    down by exactly one, as in the sequential scan;
+//! 3. any tail deficit (total accepted < `L`) is completed sequentially
+//!    from word `L` — precisely the words the monolithic scan would have
+//!    consumed next.
+//!
+//! # Memory model
+//!
+//! Expansion runs in *windows* of `threads` shards: peak transient
+//! scratch is O(threads · shard_size) words, independent of `d` and of
+//! the number of users — the fleet-scale knob. The aggregate itself
+//! stays a single `d` vector; shard application is a contiguous
+//! vectorized pass ([`crate::field::vecops::apply_signed`]) for dense
+//! masks and an index-bucketed scatter for sparse ones.
+
+use crate::coordinator::parallel_map;
+use crate::field::{self, vecops, Q};
+use crate::masking;
+use crate::prg::{ChaCha20Rng, Seed};
+
+/// Default shard size (elements): 64K words = 256 KiB per shard buffer,
+/// large enough to amortize seeks, small enough that a full window of
+/// per-thread buffers stays cache/RAM-friendly at any `d`.
+pub const DEFAULT_SHARD_SIZE: usize = 1 << 16;
+
+/// Shard-pipeline tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardConfig {
+    /// Elements per shard (≥ 1). `d % shard_size != 0` is fine — the last
+    /// shard is short.
+    pub shard_size: usize,
+    /// Worker threads per expansion window (≥ 1).
+    pub threads: usize,
+}
+
+impl ShardConfig {
+    pub fn new(shard_size: usize, threads: usize) -> Self {
+        ShardConfig {
+            shard_size: shard_size.max(1),
+            threads: threads.max(1),
+        }
+    }
+}
+
+/// One pending mask-stream application produced by unmask reconstruction.
+#[derive(Clone, Debug)]
+pub enum MaskJob {
+    /// Full-length mask over coordinates `0..d` (SecAgg): stream element
+    /// `k` applies at coordinate `k`.
+    Dense {
+        seed: Seed,
+        stream: u32,
+        round: u32,
+        /// `true` ⇒ add the mask into the aggregate, else subtract.
+        add: bool,
+    },
+    /// Compressed support-indexed mask (SparseSecAgg): stream element `k`
+    /// applies at coordinate `indices[k]` (sorted).
+    Indexed {
+        seed: Seed,
+        stream: u32,
+        round: u32,
+        add: bool,
+        indices: Vec<u32>,
+    },
+}
+
+/// Per-round pipeline accounting, surfaced through the network ledger.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Mask streams processed.
+    pub jobs: usize,
+    /// Shard expansion tasks processed across all jobs.
+    pub shards: usize,
+    /// Peak transient scratch held by one expansion window, bytes — the
+    /// O(threads · shard_size) term.
+    pub peak_scratch_bytes: usize,
+    /// Elements completed through the sequential rejection tail (expected
+    /// ~0: a word is rejected with probability 5/2^32).
+    pub rejection_carries: usize,
+}
+
+impl ShardStats {
+    /// Fold another batch's stats in (sums counters, maxes the scratch
+    /// peak) — used by callers that stream jobs through the pipeline one
+    /// at a time instead of materializing a job list.
+    pub fn merge(&mut self, other: ShardStats) {
+        self.jobs += other.jobs;
+        self.shards += other.shards;
+        self.peak_scratch_bytes =
+            self.peak_scratch_bytes.max(other.peak_scratch_bytes);
+        self.rejection_carries += other.rejection_carries;
+    }
+}
+
+/// Apply every job to `agg` through the sharded pipeline. Bit-exact to
+/// applying the same jobs via [`apply_job_monolithic`]: per coordinate
+/// both paths add/subtract the same field elements, and `F_q` addition is
+/// exactly associative and commutative.
+pub fn apply_jobs_sharded(agg: &mut [u32], jobs: &[MaskJob],
+                          cfg: &ShardConfig) -> ShardStats {
+    let mut stats = ShardStats::default();
+    for job in jobs {
+        let s = match job {
+            MaskJob::Dense { seed, stream, round, add } => {
+                apply_stream(agg, *seed, *stream, *round, *add, None, cfg, Q)
+            }
+            MaskJob::Indexed { seed, stream, round, add, indices } => {
+                apply_stream(agg, *seed, *stream, *round, *add,
+                             Some(indices.as_slice()), cfg, Q)
+            }
+        };
+        stats.merge(s);
+    }
+    stats
+}
+
+/// Reference path: apply one job exactly as the legacy monolithic unmask
+/// did (sequential stream, no sharding). Kept as the differential-test
+/// anchor and the `shard_size = 0` escape hatch.
+pub fn apply_job_monolithic(agg: &mut [u32], job: &MaskJob) {
+    match job {
+        MaskJob::Dense { seed, stream, round, add } => {
+            masking::apply_mask_values(agg, *seed, *stream, *round, *add);
+        }
+        MaskJob::Indexed { seed, stream, round, add, indices } => {
+            let values =
+                masking::mask_values(*seed, *stream, *round, indices.len());
+            apply_chunk(agg, Some(indices.as_slice()), 0, &values, *add);
+        }
+    }
+}
+
+/// Expose [`apply_stream`] with an explicit acceptance bound so
+/// integration tests can drive the rejection-carry machinery hard
+/// (production callers always use bound `Q` via [`apply_jobs_sharded`]).
+#[doc(hidden)]
+pub fn apply_stream_for_test(agg: &mut [u32], seed: Seed, stream: u32,
+                             round: u32, add: bool, coords: Option<&[u32]>,
+                             cfg: &ShardConfig, accept_below: u32)
+                             -> ShardStats {
+    apply_stream(agg, seed, stream, round, add, coords, cfg, accept_below)
+}
+
+/// Sharded application of one mask stream (see module docs for the
+/// exactness argument). `coords = None` means dense (coordinate =
+/// element index); otherwise element `k` lands on `coords[k]`.
+fn apply_stream(agg: &mut [u32], seed: Seed, stream: u32, round: u32,
+                add: bool, coords: Option<&[u32]>, cfg: &ShardConfig,
+                accept_below: u32) -> ShardStats {
+    let len = coords.map_or(agg.len(), |c| c.len());
+    let mut stats = ShardStats { jobs: 1, ..Default::default() };
+    if len == 0 {
+        return stats;
+    }
+
+    let shard = cfg.shard_size;
+    let nshards = len.div_ceil(shard);
+    let window = cfg.threads;
+
+    let mut elem = 0usize; // next stream element to apply
+    let mut first = 0usize; // first shard of the current window
+    while first < nshards {
+        let last = (first + window).min(nshards);
+        let ranges: Vec<(u64, usize)> = (first..last)
+            .map(|k| {
+                let lo = k * shard;
+                let hi = ((k + 1) * shard).min(len);
+                (lo as u64, hi - lo)
+            })
+            .collect();
+        // Parallel: seek to each shard's word offset and expand.
+        // (`accept_below` is always Q outside tests, making this exactly
+        // `masking::mask_values_word_range`.)
+        let chunks: Vec<Vec<u32>> =
+            parallel_map(&ranges, cfg.threads, |&(w0, n)| {
+                masking::mask_values_word_range_accept(
+                    seed, stream, round, w0, n, accept_below)
+            });
+        let scratch: usize = ranges.iter().map(|&(_, n)| n * 8).sum();
+        stats.peak_scratch_bytes = stats.peak_scratch_bytes.max(scratch);
+        stats.shards += ranges.len();
+        // Sequential: apply in shard order, carrying the element offset
+        // (cheap next to the ChaCha expansion above).
+        for vals in &chunks {
+            apply_chunk(agg, coords, elem, vals, add);
+            elem += vals.len();
+        }
+        first = last;
+    }
+
+    // Rejections leave a deficit; finish from word `len` — exactly the
+    // words the monolithic scan would consume after its first `len`.
+    if elem < len {
+        stats.rejection_carries += len - elem;
+        let mut rng = ChaCha20Rng::new_at_word(seed, stream, round, len as u64);
+        let mut tail = Vec::with_capacity(len - elem);
+        while elem + tail.len() < len {
+            let w = rng.next_u32();
+            if w < accept_below {
+                tail.push(w);
+            }
+        }
+        apply_chunk(agg, coords, elem, &tail, add);
+    }
+    stats
+}
+
+/// Apply `vals` (stream elements `elem..elem+vals.len()`) to `agg`.
+fn apply_chunk(agg: &mut [u32], coords: Option<&[u32]>, elem: usize,
+               vals: &[u32], add: bool) {
+    match coords {
+        None => {
+            vecops::apply_signed(&mut agg[elem..elem + vals.len()], vals, add);
+        }
+        Some(idx) => {
+            for (k, &v) in vals.iter().enumerate() {
+                let l = idx[elem + k] as usize;
+                agg[l] = if add {
+                    field::add(agg[l], v)
+                } else {
+                    field::sub(agg[l], v)
+                };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masking::{STREAM_ADDITIVE, STREAM_PRIVATE};
+    use crate::testutil::prop;
+
+    fn seed(rng: &mut ChaCha20Rng) -> Seed {
+        let mut w = [0u32; 8];
+        for v in w.iter_mut() {
+            *v = rng.next_field();
+        }
+        Seed(w)
+    }
+
+    fn sorted_support(rng: &mut ChaCha20Rng, d: usize, p: f32) -> Vec<u32> {
+        (0..d as u32).filter(|_| rng.next_f32() < p).collect()
+    }
+
+    #[test]
+    fn sharded_matches_monolithic_random_job_mixes() {
+        prop(40, |rng| {
+            let d = 16 + (rng.next_u32() as usize % 700);
+            let shard_size = 1 + (rng.next_u32() as usize % 150);
+            let threads = 1 + (rng.next_u32() as usize % 5);
+            let cfg = ShardConfig::new(shard_size, threads);
+            let njobs = 1 + (rng.next_u32() as usize % 6);
+            let jobs: Vec<MaskJob> = (0..njobs)
+                .map(|_| {
+                    let s = seed(rng);
+                    let add = rng.next_u32() & 1 == 0;
+                    let round = rng.next_u32() % 9;
+                    if rng.next_u32() & 1 == 0 {
+                        MaskJob::Dense {
+                            seed: s, stream: STREAM_ADDITIVE, round, add,
+                        }
+                    } else {
+                        MaskJob::Indexed {
+                            seed: s,
+                            stream: STREAM_PRIVATE,
+                            round,
+                            add,
+                            indices: sorted_support(rng, d, 0.2),
+                        }
+                    }
+                })
+                .collect();
+            let base: Vec<u32> = (0..d).map(|_| rng.next_field()).collect();
+
+            let mut mono = base.clone();
+            for job in &jobs {
+                apply_job_monolithic(&mut mono, job);
+            }
+            let mut sharded = base;
+            let stats = apply_jobs_sharded(&mut sharded, &jobs, &cfg);
+            assert_eq!(sharded, mono,
+                       "d={d} shard={shard_size} threads={threads}");
+            assert_eq!(stats.jobs, njobs);
+        });
+    }
+
+    #[test]
+    fn empty_support_and_empty_agg_are_noops() {
+        let cfg = ShardConfig::new(8, 2);
+        let job = MaskJob::Indexed {
+            seed: Seed([1; 8]),
+            stream: STREAM_PRIVATE,
+            round: 0,
+            add: true,
+            indices: vec![],
+        };
+        let mut agg = vec![7u32; 10];
+        apply_jobs_sharded(&mut agg, &[job], &cfg);
+        assert_eq!(agg, vec![7u32; 10]);
+        let mut empty: Vec<u32> = vec![];
+        apply_jobs_sharded(
+            &mut empty,
+            &[MaskJob::Dense {
+                seed: Seed([2; 8]),
+                stream: STREAM_ADDITIVE,
+                round: 0,
+                add: true,
+            }],
+            &cfg,
+        );
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn scratch_is_bounded_by_window_not_d() {
+        let d = 10_000;
+        let cfg = ShardConfig::new(64, 3);
+        let mut agg = vec![0u32; d];
+        let stats = apply_jobs_sharded(
+            &mut agg,
+            &[MaskJob::Dense {
+                seed: Seed([9; 8]),
+                stream: STREAM_ADDITIVE,
+                round: 1,
+                add: true,
+            }],
+            &cfg,
+        );
+        assert_eq!(stats.shards, d.div_ceil(64));
+        assert!(stats.peak_scratch_bytes <= 3 * 64 * 8);
+        assert_eq!(stats.rejection_carries, 0);
+    }
+}

@@ -18,6 +18,29 @@
 //! The server-side result is **exactly** `Σ_{i∈S} select_i · Q_c(scale_i ·
 //! y_i)` in the field — tests assert bit-exact equality against an
 //! unmasked recomputation, not approximate closeness.
+//!
+//! # Sharded streaming unmask
+//!
+//! The Unmask phase reduces to a stream of mask-stream applications
+//! (built by `for_each_unmask_job`, one job alive at a time): per
+//! dropped user i and survivor j, the signed additive mask `r_ij` on the
+//! regenerated support `supp(b_ij)`, and per survivor j, the private mask
+//! `r_j` on the uploaded `U_j`. Two equivalent executors consume that
+//! stream:
+//!
+//! * [`Server::finish_round`] — monolithic: each stream expanded
+//!   sequentially end to end (the reference semantics);
+//! * [`Server::finish_round_sharded`] — the [`crate::protocol::shard`]
+//!   pipeline: the model dimension is cut into `shard_size` shards, each
+//!   stream's shard is expanded independently by **seeking** the ChaCha20
+//!   keystream to the shard's word offset, windows of `threads` shards
+//!   run in parallel, and per-shard acceptance counts carry the exact
+//!   rejection-sampling alignment. Peak transient memory is
+//!   O(threads·shard_size) instead of O(d) per stream, and the expansion
+//!   (the dominant cost) parallelizes. Output is bit-exact equal to the
+//!   monolithic path — `tests/shard_equivalence.rs` drives both executors
+//!   over random cohorts, dropouts and non-divisible `d % shard_size`
+//!   and asserts field-level equality.
 
 use crate::dh;
 use crate::field;
@@ -26,6 +49,7 @@ use crate::masking::{
 };
 use crate::prg::{ChaCha20Rng, Seed};
 use crate::protocol::messages::*;
+use crate::protocol::shard::{self, MaskJob, ShardConfig, ShardStats};
 use crate::protocol::{seed_from_u64_secret, u64_secret_from_seed, Params};
 use crate::quantize;
 use crate::shamir::{self, Share};
@@ -265,18 +289,32 @@ impl Server {
         UnmaskRequest { dropped, survivors }
     }
 
-    /// Unmask (eq. 21) + dequantize (eq. 23). `responses` must come from
-    /// at least t+1 survivors. Returns the aggregated real-valued
-    /// gradient Σ_{i∈S} select_i · Q_c(scale_i · y_i).
-    pub fn finish_round(&mut self, round: u32,
-                        responses: &[UnmaskResponse])
-                        -> anyhow::Result<Vec<f32>> {
-        let t = self.params.threshold();
-        let req = self.unmask_request();
+    /// Reconstruct the mask-removal jobs for eq. 21 — one support-indexed
+    /// additive job per dropped×survivor pair (the support is regenerated
+    /// from the reconstructed multiplicative seed) and one per-survivor
+    /// private-mask removal (on its uploaded U_j) — feeding each job to
+    /// `sink` as soon as it is built, so only ONE support (O(ρd)) is
+    /// alive at a time regardless of cohort size. Shared by the
+    /// monolithic and sharded unmask paths. Takes fields explicitly so
+    /// callers can hold `agg` mutably in the sink.
+    fn for_each_unmask_job(
+        params: &Params, roster: &[u64],
+        upload_indices: &[Option<Vec<u32>>], round: u32,
+        responses: &[UnmaskResponse], mut sink: impl FnMut(MaskJob),
+    ) -> anyhow::Result<()> {
+        let t = params.threshold();
+        // Same sets unmask_request() derives: dropped = never uploaded,
+        // survivors = uploaded, ascending ids.
+        let dropped: Vec<usize> = (0..params.n)
+            .filter(|&i| upload_indices[i].is_none())
+            .collect();
+        let survivors: Vec<usize> = (0..params.n)
+            .filter(|&i| upload_indices[i].is_some())
+            .collect();
 
-        // --- reconstruct dropped users' DH secrets; strip the dangling
+        // --- reconstruct dropped users' DH secrets; the dangling
         // pairwise masks they left in each survivor's upload.
-        for &i in &req.dropped {
+        for &i in &dropped {
             let shares: Vec<Share> = responses
                 .iter()
                 .filter_map(|r| {
@@ -291,32 +329,30 @@ impl Server {
                      {} shares < threshold {}", refs.len(), t + 1)
             })?;
             let secret_i = u64_secret_from_seed(seed);
-            for &j in &req.survivors {
+            for &j in &survivors {
                 // Seeds must match what users i and j derived: agree() is
                 // symmetric and canonicalizes the pair ids.
-                let add_seed = dh::agree(secret_i, self.roster[j], i as u32,
+                let add_seed = dh::agree(secret_i, roster[j], i as u32,
                                          j as u32, TAG_ADDITIVE);
-                let mult_seed = dh::agree(secret_i, self.roster[j], i as u32,
+                let mult_seed = dh::agree(secret_i, roster[j], i as u32,
                                           j as u32, TAG_MULTIPLICATIVE);
                 let support = masking::pairwise_support(
-                    mult_seed, round, self.params.rho(), self.params.d);
-                let values = masking::mask_values(
-                    add_seed, STREAM_ADDITIVE, round, support.len());
-                // Survivor j's upload carried sign(j, i); remove it.
-                let j_added = masking::pair_sign(j, i);
-                for (&l, &r) in support.iter().zip(&values) {
-                    let a = &mut self.agg[l as usize];
-                    *a = if j_added {
-                        field::sub(*a, r)
-                    } else {
-                        field::add(*a, r)
-                    };
-                }
+                    mult_seed, round, params.rho(), params.d);
+                // Survivor j's upload carried sign(j, i); removal applies
+                // the opposite sign on the same support.
+                sink(MaskJob::Indexed {
+                    seed: add_seed,
+                    stream: STREAM_ADDITIVE,
+                    round,
+                    add: !masking::pair_sign(j, i),
+                    indices: support,
+                });
             }
         }
 
-        // --- reconstruct survivors' private seeds; strip r_j on U_j.
-        for &j in &req.survivors {
+        // --- reconstruct survivors' private seeds; r_j is stripped on
+        // the uploaded support U_j.
+        for &j in &survivors {
             let shares: Vec<Share> = responses
                 .iter()
                 .filter_map(|r| {
@@ -329,16 +365,50 @@ impl Server {
                 anyhow::anyhow!(
                     "cannot reconstruct private seed of survivor {j}")
             })?;
-            let indices = self.upload_indices[j].as_ref().unwrap();
-            let values = masking::mask_values(seed, STREAM_PRIVATE, round,
-                                              indices.len());
-            for (&l, &r) in indices.iter().zip(&values) {
-                let a = &mut self.agg[l as usize];
-                *a = field::sub(*a, r);
-            }
+            // The copy of U_j keeps MaskJob lifetime-free; with jobs
+            // streamed one at a time only a single O(ρd) support is ever
+            // alive, and the memcpy is noise next to expanding the same
+            // number of ChaCha words.
+            sink(MaskJob::Indexed {
+                seed,
+                stream: STREAM_PRIVATE,
+                round,
+                add: false,
+                indices: upload_indices[j].as_ref().unwrap().clone(),
+            });
         }
+        Ok(())
+    }
 
+    /// Unmask (eq. 21) + dequantize (eq. 23). `responses` must come from
+    /// at least t+1 survivors. Returns the aggregated real-valued
+    /// gradient Σ_{i∈S} select_i · Q_c(scale_i · y_i). Monolithic
+    /// reference path (one sequential stream per mask).
+    pub fn finish_round(&mut self, round: u32,
+                        responses: &[UnmaskResponse])
+                        -> anyhow::Result<Vec<f32>> {
+        let Server { params, roster, upload_indices, agg, .. } = self;
+        Self::for_each_unmask_job(
+            params, roster, upload_indices, round, responses,
+            |job| shard::apply_job_monolithic(agg, &job))?;
         Ok(quantize::dequantize(&self.agg, self.params.c))
+    }
+
+    /// Unmask through the sharded streaming pipeline — bit-exact to
+    /// [`Self::finish_round`] (differential property tests pin this
+    /// down), shard-parallel, O(threads·shard + ρd) transient memory
+    /// (one expansion window plus the single in-flight support).
+    pub fn finish_round_sharded(&mut self, round: u32,
+                                responses: &[UnmaskResponse],
+                                cfg: &ShardConfig)
+                                -> anyhow::Result<(Vec<f32>, ShardStats)> {
+        let Server { params, roster, upload_indices, agg, .. } = self;
+        let mut stats = ShardStats::default();
+        Self::for_each_unmask_job(
+            params, roster, upload_indices, round, responses,
+            |job| stats.merge(shard::apply_jobs_sharded(
+                agg, std::slice::from_ref(&job), cfg)))?;
+        Ok((quantize::dequantize(&self.agg, self.params.c), stats))
     }
 
     /// Field-domain aggregate (post-unmask) — used by exactness tests.

@@ -7,7 +7,7 @@
 //! simulated network moves these buffers, so a future swap to real
 //! sockets only replaces the transport, not the protocol.
 
-use crate::shamir::Share;
+use crate::shamir::{Share, SHARE_BYTES};
 use anyhow::{bail, ensure, Result};
 
 use super::messages::*;
@@ -115,6 +115,20 @@ impl<'a> R<'a> {
             *v = self.u32()?;
         }
         Ok(Share { x, y })
+    }
+
+    /// Validate a count field against the bytes actually remaining
+    /// (`elem_bytes` per element) *before* any allocation sized by it —
+    /// a malformed frame must produce an error, never a multi-gigabyte
+    /// `Vec::with_capacity`.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        ensure!(
+            n.saturating_mul(elem_bytes) <= self.buf.len() - self.pos,
+            "count {n} overruns frame ({} bytes left)",
+            self.buf.len() - self.pos
+        );
+        Ok(n)
     }
 }
 
@@ -261,7 +275,7 @@ pub fn decode_sparse_upload(buf: &[u8]) -> Result<SparseMaskedUpload> {
 
 pub fn decode_dense_upload(buf: &[u8]) -> Result<DenseMaskedUpload> {
     let (sender, mut r) = payload(buf, Tag::DenseMaskedUpload)?;
-    let n = r.u32()? as usize;
+    let n = r.count(4)?;
     let mut values = Vec::with_capacity(n);
     for _ in 0..n {
         values.push(r.u32()?);
@@ -271,11 +285,11 @@ pub fn decode_dense_upload(buf: &[u8]) -> Result<DenseMaskedUpload> {
 
 pub fn decode_unmask_request(buf: &[u8]) -> Result<UnmaskRequest> {
     let (_, mut r) = payload(buf, Tag::UnmaskRequest)?;
-    let nd = r.u32()? as usize;
+    let nd = r.count(4)?;
     let dropped = (0..nd)
         .map(|_| r.u32().map(|v| v as usize))
         .collect::<Result<_>>()?;
-    let ns = r.u32()? as usize;
+    let ns = r.count(4)?;
     let survivors = (0..ns)
         .map(|_| r.u32().map(|v| v as usize))
         .collect::<Result<_>>()?;
@@ -284,13 +298,13 @@ pub fn decode_unmask_request(buf: &[u8]) -> Result<UnmaskRequest> {
 
 pub fn decode_unmask_response(buf: &[u8]) -> Result<UnmaskResponse> {
     let (sender, mut r) = payload(buf, Tag::UnmaskResponse)?;
-    let nd = r.u32()? as usize;
+    let nd = r.count(4 + SHARE_BYTES)?;
     let mut dh_shares = Vec::with_capacity(nd);
     for _ in 0..nd {
         let owner = r.u32()? as usize;
         dh_shares.push((owner, r.share()?));
     }
-    let ns = r.u32()? as usize;
+    let ns = r.count(4 + SHARE_BYTES)?;
     let mut seed_shares = Vec::with_capacity(ns);
     for _ in 0..ns {
         let owner = r.u32()? as usize;

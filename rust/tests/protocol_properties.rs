@@ -8,8 +8,9 @@ use sparsesecagg::metrics;
 use sparsesecagg::network::draw_dropouts;
 use sparsesecagg::prg::ChaCha20Rng;
 use sparsesecagg::protocol::messages::UnmaskResponse;
-use sparsesecagg::protocol::{sparse, Params};
+use sparsesecagg::protocol::{secagg, sparse, Params};
 use sparsesecagg::quantize;
+use sparsesecagg::testutil::prop;
 
 fn random_grads(rng: &mut ChaCha20Rng, n: usize, d: usize) -> Vec<Vec<f32>> {
     (0..n)
@@ -235,6 +236,160 @@ fn wire_codec_survives_fuzzing() {
         let _ = wire::decode_unmask_response(&buf);
         let _ = wire::peek_header(&buf);
     }
+}
+
+/// Random split of the users who sit a round out into the two failure
+/// phases the protocol distinguishes: `phase1` never upload (true
+/// dropouts — their DH secrets get reconstructed), `phase2` upload but
+/// never answer the unmask request (delayed users — their private seeds
+/// get reconstructed from others' shares). Exactly `n - phase1 - phase2`
+/// responders remain.
+fn storm_split(rng: &mut ChaCha20Rng, n: usize, responders: usize)
+               -> (Vec<usize>, Vec<usize>, Vec<usize>) {
+    let total_out = n - responders;
+    let phase1 = rng.next_u32() as usize % (total_out + 1);
+    let mut ids: Vec<usize> = (0..n).collect();
+    for i in (1..n).rev() {
+        let j = (rng.next_u32() as usize) % (i + 1);
+        ids.swap(i, j);
+    }
+    let p1 = ids[..phase1].to_vec();
+    let p2 = ids[phase1..total_out].to_vec();
+    let resp = ids[total_out..].to_vec();
+    (p1, p2, resp)
+}
+
+/// Dropout storm, SparseSecAgg: random per-phase dropout patterns down to
+/// exactly ⌊N/2⌋+1 responders must recover the round — bit-exactly — and
+/// one responder fewer must fail cleanly with an error (never garbage).
+#[test]
+fn dropout_storm_at_threshold_sparse() {
+    prop(15, |rng| {
+        let n = 5 + (rng.next_u32() as usize % 8);
+        let d = 150 + (rng.next_u32() as usize % 400);
+        let alpha = 0.2 + 0.5 * rng.next_f32() as f64;
+        let params = Params { n, d, alpha, theta: 0.3, c: 1024.0 };
+        let (users, mut server) =
+            sparse::setup(params, 3_000 + rng.next_u32() as u64);
+        let quorum = n / 2 + 1; // = t + 1
+        let (p1, _p2, responders) = storm_split(rng, n, quorum);
+        let ys = random_grads(rng, n, d);
+        let beta = 1.0 / n as f64;
+
+        // --- at threshold: recovery succeeds and is exact.
+        server.begin_round();
+        let mut scratch = vec![0u32; d];
+        for u in users.iter().filter(|u| !p1.contains(&u.id)) {
+            let plan = u.mask_plan(0, &params, &mut scratch);
+            server.receive_upload(
+                u.masked_upload(0, &ys[u.id], beta, &params, plan));
+        }
+        let req = server.unmask_request();
+        let responses: Vec<UnmaskResponse> = users
+            .iter()
+            .filter(|u| responders.contains(&u.id))
+            .map(|u| u.respond_unmask(&req))
+            .collect();
+        assert_eq!(responses.len(), quorum);
+        server.finish_round(0, &responses).unwrap_or_else(|e| {
+            panic!("threshold recovery failed (n={n}, |p1|={}, \
+                    responders={quorum}): {e:#}", p1.len())
+        });
+        // Exactness: every uploader (responding or delayed) contributes.
+        let mut want = vec![0u32; d];
+        for u in users.iter().filter(|u| !p1.contains(&u.id)) {
+            let plan = u.mask_plan(0, &params, &mut scratch);
+            let rands = u.rounding_uniforms(0, plan.indices.len());
+            for (&l, &r) in plan.indices.iter().zip(&rands) {
+                let v = quantize::quantize_mask_one(
+                    ys[u.id][l as usize], r, 0, true, params.scale(beta),
+                    params.c);
+                want[l as usize] = field::add(want[l as usize], v);
+            }
+        }
+        assert_eq!(server.aggregate_field(), &want[..]);
+
+        // --- one responder below threshold: clean failure.
+        server.begin_round();
+        for u in users.iter().filter(|u| !p1.contains(&u.id)) {
+            let plan = u.mask_plan(1, &params, &mut scratch);
+            server.receive_upload(
+                u.masked_upload(1, &ys[u.id], beta, &params, plan));
+        }
+        let req = server.unmask_request();
+        let starved: Vec<UnmaskResponse> = users
+            .iter()
+            .filter(|u| responders[1..].contains(&u.id))
+            .map(|u| u.respond_unmask(&req))
+            .collect();
+        assert_eq!(starved.len(), quorum - 1);
+        assert!(server.finish_round(1, &starved).is_err(),
+                "recovery below threshold must fail (n={n})");
+    });
+}
+
+/// Dropout storm, SecAgg baseline: same phase machinery, same threshold
+/// boundary. (The private trainer state needed for a bit-exact
+/// recomputation is deliberately not exposed by `secagg::User`, so
+/// success is checked through the dequantized weighted sum, which the
+/// exact mask cancellation makes deterministic within quantization
+/// error.)
+#[test]
+fn dropout_storm_at_threshold_secagg() {
+    prop(15, |rng| {
+        let n = 5 + (rng.next_u32() as usize % 7);
+        let d = 100 + (rng.next_u32() as usize % 300);
+        let params = Params { n, d, alpha: 1.0, theta: 0.3, c: 65536.0 };
+        let (users, mut server) =
+            secagg::setup(params, 7_000 + rng.next_u32() as u64);
+        let quorum = n / 2 + 1;
+        let (p1, _p2, responders) = storm_split(rng, n, quorum);
+        let ys = random_grads(rng, n, d);
+        let beta = 1.0 / n as f64;
+
+        server.begin_round();
+        for u in users.iter().filter(|u| !p1.contains(&u.id)) {
+            server.receive_upload(
+                u.masked_upload(0, &ys[u.id], beta, &params));
+        }
+        let req = server.unmask_request();
+        let responses: Vec<UnmaskResponse> = users
+            .iter()
+            .filter(|u| responders.contains(&u.id))
+            .map(|u| u.respond_unmask(&req))
+            .collect();
+        assert_eq!(responses.len(), quorum);
+        let out = server.finish_round(0, &responses).unwrap_or_else(|e| {
+            panic!("threshold recovery failed (n={n}): {e:#}")
+        });
+        // Masks cancelled ⇒ dequantized ≈ Σ_uploaders scale·β·y within
+        // one quantization step per uploader.
+        let scale = 1.0 / (1.0 - params.theta);
+        for l in (0..d).step_by(17) {
+            let uploaders =
+                users.iter().filter(|u| !p1.contains(&u.id));
+            let want: f64 = uploaders
+                .map(|u| beta * scale * ys[u.id][l] as f64)
+                .sum();
+            assert!((out[l] as f64 - want).abs()
+                        < n as f64 / params.c as f64 + 1e-4,
+                    "l={l} got={} want={want}", out[l]);
+        }
+
+        // One fewer responder: must fail, not return garbage.
+        server.begin_round();
+        for u in users.iter().filter(|u| !p1.contains(&u.id)) {
+            server.receive_upload(
+                u.masked_upload(1, &ys[u.id], beta, &params));
+        }
+        let req = server.unmask_request();
+        let starved: Vec<UnmaskResponse> = users
+            .iter()
+            .filter(|u| responders[1..].contains(&u.id))
+            .map(|u| u.respond_unmask(&req))
+            .collect();
+        assert!(server.finish_round(1, &starved).is_err());
+    });
 }
 
 /// Compression (Thm 1): measured upload fraction ≈ p ≤ α.

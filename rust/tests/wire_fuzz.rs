@@ -1,0 +1,165 @@
+//! Wire-codec fuzzing and round-trip identity, over every frame type in
+//! `protocol/messages.rs` that has a codec (`ModelBroadcast` is
+//! accounting-only — it carries no payload to encode). Three layers:
+//!
+//! 1. encode∘decode identity on randomized well-formed messages;
+//! 2. seeded pure-random byte buffers through every decoder — must
+//!    return an error or a value, never panic or blow up allocation;
+//! 3. random buffers behind a *valid* header (correct tag + patched
+//!    length), which drive the payload parsers much deeper than layer 2.
+
+use sparsesecagg::prg::ChaCha20Rng;
+use sparsesecagg::protocol::messages::*;
+use sparsesecagg::protocol::wire;
+use sparsesecagg::shamir::Share;
+use sparsesecagg::testutil::prop;
+
+fn rand_share(rng: &mut ChaCha20Rng) -> Share {
+    let mut y = [0u32; 8];
+    for v in y.iter_mut() {
+        *v = rng.next_field();
+    }
+    Share { x: 1 + rng.next_u32() % 255, y }
+}
+
+#[test]
+fn encode_decode_identity_all_message_types() {
+    prop(50, |rng| {
+        let n = 2 + (rng.next_u32() as usize % 30);
+
+        let ad = AdvertiseKeys {
+            id: rng.next_u32() as usize % n,
+            public: rng.next_u64(),
+        };
+        let got = wire::decode_advertise(&wire::encode_advertise(&ad)).unwrap();
+        assert_eq!((got.id, got.public), (ad.id, ad.public));
+
+        let roster = Roster {
+            publics: (0..n).map(|_| rng.next_u64()).collect(),
+        };
+        let got = wire::decode_roster(&wire::encode_roster(&roster)).unwrap();
+        assert_eq!(got.publics, roster.publics);
+
+        let bundle = ShareBundle {
+            owner: rng.next_u32() as usize % n,
+            dest: rng.next_u32() as usize % n,
+            dh_share: rand_share(rng),
+            seed_share: rand_share(rng),
+        };
+        let got = wire::decode_share_bundle(
+            &wire::encode_share_bundle(&bundle)).unwrap();
+        assert_eq!(got.owner, bundle.owner);
+        assert_eq!(got.dest, bundle.dest);
+        assert_eq!(got.dh_share, bundle.dh_share);
+        assert_eq!(got.seed_share, bundle.seed_share);
+
+        let d = 16 + (rng.next_u32() as usize % 2000);
+        let indices: Vec<u32> =
+            (0..d as u32).filter(|_| rng.next_f32() < 0.15).collect();
+        let sparse = SparseMaskedUpload {
+            id: rng.next_u32() as usize % n,
+            values: indices.iter().map(|_| rng.next_field()).collect(),
+            indices,
+            d,
+        };
+        let buf = wire::encode_sparse_upload(&sparse);
+        assert_eq!(buf.len(), sparse.wire_bytes());
+        let got = wire::decode_sparse_upload(&buf).unwrap();
+        assert_eq!(got.indices, sparse.indices);
+        assert_eq!(got.values, sparse.values);
+        assert_eq!(got.d, sparse.d);
+
+        let dense = DenseMaskedUpload {
+            id: rng.next_u32() as usize % n,
+            values: (0..1 + rng.next_u32() as usize % 500)
+                .map(|_| rng.next_field())
+                .collect(),
+        };
+        let buf = wire::encode_dense_upload(&dense);
+        assert_eq!(buf.len(), dense.wire_bytes());
+        let got = wire::decode_dense_upload(&buf).unwrap();
+        assert_eq!(got.values, dense.values);
+
+        let req = UnmaskRequest {
+            dropped: (0..rng.next_u32() as usize % 6).collect(),
+            survivors: (0..1 + rng.next_u32() as usize % 12).collect(),
+        };
+        let buf = wire::encode_unmask_request(&req);
+        assert_eq!(buf.len(), req.wire_bytes());
+        let got = wire::decode_unmask_request(&buf).unwrap();
+        assert_eq!(got.dropped, req.dropped);
+        assert_eq!(got.survivors, req.survivors);
+
+        let resp = UnmaskResponse {
+            id: rng.next_u32() as usize % n,
+            dh_shares: (0..rng.next_u32() as usize % 5)
+                .map(|o| (o, rand_share(rng)))
+                .collect(),
+            seed_shares: (0..rng.next_u32() as usize % 5)
+                .map(|o| (o, rand_share(rng)))
+                .collect(),
+        };
+        let buf = wire::encode_unmask_response(&resp);
+        assert_eq!(buf.len(), resp.wire_bytes());
+        let got = wire::decode_unmask_response(&buf).unwrap();
+        assert_eq!(got.id, resp.id);
+        assert_eq!(got.dh_shares, resp.dh_shares);
+        assert_eq!(got.seed_shares, resp.seed_shares);
+    });
+}
+
+fn run_all_decoders(buf: &[u8]) {
+    let _ = wire::peek_header(buf);
+    let _ = wire::decode_advertise(buf);
+    let _ = wire::decode_roster(buf);
+    let _ = wire::decode_share_bundle(buf);
+    let _ = wire::decode_sparse_upload(buf);
+    let _ = wire::decode_dense_upload(buf);
+    let _ = wire::decode_unmask_request(buf);
+    let _ = wire::decode_unmask_response(buf);
+}
+
+#[test]
+fn random_bytes_never_panic_any_decoder() {
+    let mut rng = ChaCha20Rng::from_seed_u64(0xfa22);
+    for _ in 0..2000 {
+        let len = (rng.next_u32() as usize) % 600;
+        let buf: Vec<u8> =
+            (0..len).map(|_| rng.next_u32() as u8).collect();
+        run_all_decoders(&buf);
+    }
+}
+
+#[test]
+fn valid_header_garbage_payload_never_panics() {
+    let mut rng = ChaCha20Rng::from_seed_u64(0xfa23);
+    for round in 0..3000 {
+        let tag = 1 + round % 8; // includes one invalid tag value (8)
+        let len = (rng.next_u32() as usize) % 300;
+        let mut buf = Vec::with_capacity(12 + len);
+        buf.extend_from_slice(&(rng.next_u32() % 64).to_le_bytes());
+        buf.extend_from_slice(&(tag as u32).to_le_bytes());
+        buf.extend_from_slice(&(len as u32).to_le_bytes());
+        for _ in 0..len {
+            buf.push(rng.next_u32() as u8);
+        }
+        run_all_decoders(&buf);
+    }
+}
+
+/// Hostile count fields must error out, not allocate gigabytes: a dense
+/// upload whose header claims 2^32−1 values in a 20-byte payload.
+#[test]
+fn hostile_counts_rejected_without_allocation() {
+    for tag in [5u32, 6, 7] {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&tag.to_le_bytes());
+        buf.extend_from_slice(&20u32.to_le_bytes());
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 16]);
+        assert!(wire::decode_dense_upload(&buf).is_err());
+        assert!(wire::decode_unmask_request(&buf).is_err());
+        assert!(wire::decode_unmask_response(&buf).is_err());
+    }
+}

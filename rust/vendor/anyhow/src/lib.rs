@@ -1,0 +1,165 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! Implements exactly the API subset this workspace uses — `Error`,
+//! `Result`, the `anyhow!` / `bail!` / `ensure!` macros and the
+//! `Context` extension trait — so the tree builds fully offline. Error
+//! values carry a message plus a context chain; `{:#}` renders the chain
+//! outermost-first, matching anyhow's alternate formatting.
+
+use std::fmt;
+
+/// A string-backed error with a context chain. Like `anyhow::Error`, it
+/// deliberately does **not** implement `std::error::Error`, which is what
+/// lets the blanket `From<E: std::error::Error>` conversion exist.
+pub struct Error {
+    /// Root cause message first, then each added context in order.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    fn push_context(mut self, c: String) -> Error {
+        self.chain.push(c);
+        self
+    }
+
+    /// Outermost (most recently added) message.
+    fn outer(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // "outer: ...: root", anyhow's `{:#}` chain rendering.
+            for (k, msg) in self.chain.iter().rev().enumerate() {
+                if k > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{msg}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.outer())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:#}")
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Drop-in for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attaching extension, implemented for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+        -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().push_context(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+            -> Result<T, Error> {
+        self.map_err(|e| e.into().push_context(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+            -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// `bail!` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let v: u32 = s.parse().context("parsing u32")?;
+        ensure!(v < 100, "{v} out of range");
+        Ok(v)
+    }
+
+    #[test]
+    fn conversion_and_context_chain() {
+        let e = parse("zzz").unwrap_err();
+        assert_eq!(format!("{e}"), "parsing u32");
+        assert!(format!("{e:#}").starts_with("parsing u32: "));
+        assert!(parse("7").is_ok());
+        let e = parse("200").unwrap_err();
+        assert_eq!(format!("{e}"), "200 out of range");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let none: Option<u32> = None;
+        assert!(none.context("missing").is_err());
+        let e: Error = anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+        fn f() -> Result<()> {
+            bail!("boom");
+        }
+        assert_eq!(f().unwrap_err().to_string(), "boom");
+    }
+}
