@@ -2,7 +2,15 @@
 //! check (server O(dN²)-bounded, user O(N + d)). Custom harness (no
 //! criterion in the vendored crate set): median of R repetitions after
 //! warmup, reported with throughput where meaningful.
+//!
+//! The executor A/B section (windowed vs work-stealing vs monolithic)
+//! also emits machine-readable results to `BENCH_round.json` at the
+//! repository root — the perf trajectory future PRs append to. With
+//! `BENCH_SMOKE=1` in the environment the binary runs *only* that
+//! section at reduced sizes with a single iteration, asserting
+//! bit-equality of all three engines and writing no JSON — the CI gate.
 
+use sparsesecagg::exec::{jobs as exec_jobs, Executor};
 use sparsesecagg::field::vecops;
 use sparsesecagg::masking::{self, PairSeeds, STREAM_ADDITIVE};
 use sparsesecagg::metrics::Table;
@@ -36,7 +44,187 @@ fn seed(x: u64) -> Seed {
     Seed(w)
 }
 
+/// One A/B/C measurement of the executor section.
+struct ExecRow {
+    name: &'static str,
+    jobs: usize,
+    d: usize,
+    shard: usize,
+    mono_ms: f64,
+    win_ms: f64,
+    steal_ms: f64,
+    steals: usize,
+    tier2: usize,
+    win_peak: usize,
+    steal_peak: usize,
+}
+
+fn write_bench_json(rows: &[ExecRow], threads: usize)
+                    -> std::io::Result<()> {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    s.push_str("{\n  \"bench\": \"bench_micro/two-tier-executor\",\n");
+    let _ = writeln!(s, "  \"threads\": {threads},");
+    s.push_str("  \"cases\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = writeln!(
+            s,
+            "    {{\"name\": \"{}\", \"jobs\": {}, \"d\": {}, \
+             \"shard_size\": {}, \"monolithic_ms\": {:.3}, \
+             \"windowed_ms\": {:.3}, \"stealing_ms\": {:.3}, \
+             \"stealing_speedup_vs_windowed\": {:.3}, \"steals\": {}, \
+             \"tier2_tasks\": {}, \"peak_scratch_windowed_bytes\": {}, \
+             \"peak_scratch_stealing_bytes\": {}}}{}",
+            r.name, r.jobs, r.d, r.shard, r.mono_ms, r.win_ms, r.steal_ms,
+            r.win_ms / r.steal_ms.max(1e-9), r.steals, r.tier2, r.win_peak,
+            r.steal_peak,
+            if i + 1 == rows.len() { "" } else { "," },
+        );
+    }
+    s.push_str("  ]\n}\n");
+    // `cargo bench` runs from the package root (rust/); the trajectory
+    // file lives at the repository root next to ROADMAP.md.
+    let path = if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_round.json"
+    } else {
+        "BENCH_round.json"
+    };
+    std::fs::write(path, s)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// Windowed vs work-stealing vs monolithic over the regimes PR 2 is
+/// about: many short sparse streams (the windowed pipeline's worst case
+/// — every stream is a single shard, so windows degenerate to serial
+/// execution) and a mixed dense+sparse round. All three engines must be
+/// bit-exact equal; in smoke mode that equality is the whole point.
+fn exec_bench(smoke: bool) -> anyhow::Result<()> {
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4);
+    let exec = Executor::new(threads);
+    let reps = if smoke { 1 } else { 5 };
+
+    // (name, d, dense jobs, sparse jobs, sparse support fraction):
+    // sparse supports ≈ frac·d ≈ 2^12 elements — the αd ≪ d regime.
+    let cases: &[(&'static str, usize, usize, usize, f64)] = if smoke {
+        &[("many-short-sparse", 1 << 12, 0, 16, 0.0625),
+          ("mixed-dense-sparse", 1 << 14, 1, 8, 0.0625)]
+    } else {
+        &[("many-short-sparse", 1 << 16, 0, 256, 0.0625),
+          ("mixed-dense-sparse", 1 << 20, 4, 128, 0.0039)]
+    };
+
+    let mut rows: Vec<ExecRow> = Vec::new();
+    let mut t = Table::new(
+        &format!("two-tier executor A/B — threads={threads}, median of \
+                  {reps}"),
+        &["case", "jobs", "monolithic", "windowed", "stealing",
+          "steal speedup", "steals", "peak scratch"],
+    );
+    for &(name, d, ndense, nsparse, frac) in cases {
+        let mut rng = ChaCha20Rng::from_seed_u64(0xbe7c_0001);
+        let mut jobs: Vec<MaskJob> = Vec::new();
+        for k in 0..ndense {
+            jobs.push(MaskJob::Dense {
+                seed: seed(20_000 + k as u64),
+                stream: masking::STREAM_PRIVATE,
+                round: 0,
+                add: false,
+            });
+        }
+        for k in 0..nsparse {
+            jobs.push(MaskJob::Indexed {
+                seed: seed(30_000 + k as u64),
+                stream: masking::STREAM_ADDITIVE,
+                round: 0,
+                add: k % 2 == 0,
+                indices: rng.bernoulli_indices(frac, d),
+            });
+        }
+        // Smoke shrinks the shard so the tier-2 fan-out path (word-offset
+        // seeking, in-order cursor, acceptance carry) is actually
+        // exercised at the reduced d — with the default 2^16 shard every
+        // smoke job would be a tier-1 leaf and the gate would be hollow.
+        let shard_size =
+            if smoke { 1 << 10 } else { shard::DEFAULT_SHARD_SIZE };
+        let cfg = ShardConfig::new(shard_size, threads);
+
+        // Identical application counts on every path (warmup + reps), so
+        // the accumulated aggregates stay comparable bit-for-bit.
+        let mut agg_mono = vec![0u32; d];
+        let dt_mono = median_time(reps, || {
+            for job in &jobs {
+                shard::apply_job_monolithic(&mut agg_mono, job);
+            }
+        });
+        let mut agg_win = vec![0u32; d];
+        let mut win_stats = shard::ShardStats::default();
+        let dt_win = median_time(reps, || {
+            win_stats = shard::apply_jobs_sharded(&mut agg_win, &jobs, &cfg);
+        });
+        let mut agg_steal = vec![0u32; d];
+        let mut steal_stats = shard::ShardStats::default();
+        let dt_steal = median_time(reps, || {
+            steal_stats =
+                exec_jobs::apply_jobs_stealing(&mut agg_steal, &jobs, &cfg,
+                                               &exec);
+        });
+        assert_eq!(agg_mono, agg_win,
+                   "{name}: windowed diverged from monolithic");
+        assert_eq!(agg_mono, agg_steal,
+                   "{name}: work-stealing diverged from monolithic");
+
+        t.row(&[
+            name.into(),
+            jobs.len().to_string(),
+            format!("{:.2} ms", dt_mono * 1e3),
+            format!("{:.2} ms", dt_win * 1e3),
+            format!("{:.2} ms", dt_steal * 1e3),
+            format!("{:.2}x", dt_win / dt_steal.max(1e-9)),
+            steal_stats.steals.to_string(),
+            format!("{} KiB", steal_stats.peak_scratch_bytes / 1024),
+        ]);
+        rows.push(ExecRow {
+            name,
+            jobs: jobs.len(),
+            d,
+            shard: cfg.shard_size,
+            mono_ms: dt_mono * 1e3,
+            win_ms: dt_win * 1e3,
+            steal_ms: dt_steal * 1e3,
+            steals: steal_stats.steals,
+            tier2: steal_stats.shards,
+            win_peak: win_stats.peak_scratch_bytes,
+            steal_peak: steal_stats.peak_scratch_bytes,
+        });
+    }
+    println!("{}", t.render());
+    if smoke {
+        println!("BENCH_SMOKE: bit-equality of all three engines asserted \
+                  over {} cases; timings/JSON skipped", rows.len());
+    } else {
+        if let Some(r) = rows.iter().find(|r| r.name == "many-short-sparse") {
+            if threads >= 2 && r.steal_ms >= r.win_ms {
+                eprintln!("WARNING: work-stealing not faster than windowed \
+                           on many-short-sparse ({:.2} ms vs {:.2} ms)",
+                          r.steal_ms, r.win_ms);
+            }
+        }
+        write_bench_json(&rows, threads)
+            .map_err(|e| anyhow::anyhow!("writing BENCH_round.json: {e}"))?;
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("BENCH_SMOKE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    if smoke {
+        return exec_bench(true);
+    }
     let mut t = Table::new(
         "microbenchmarks (median)",
         &["op", "size", "time", "throughput"],
@@ -237,5 +425,8 @@ fn main() -> anyhow::Result<()> {
         bytes / (1024.0 * 1024.0),
         stats.jobs, stats.shards, stats.rejection_carries
     );
+
+    // ---- Two-tier executor A/B (+ BENCH_round.json emission).
+    exec_bench(false)?;
     Ok(())
 }

@@ -77,7 +77,7 @@ impl Config {
             "theta", "c", "lr", "momentum", "iid", "samples_per_user",
             "test_samples", "target_accuracy", "eval_every",
             "use_hlo_quantmask", "participation", "dp_epsilon", "dp_clip",
-            "seed", "artifacts_dir", "shard_size",
+            "seed", "artifacts_dir", "shard_size", "threads", "executor",
         ];
         for k in self.values.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -127,6 +127,8 @@ impl Config {
                 .unwrap_or(&d.artifacts_dir)
                 .to_string(),
             shard_size: self.parse("shard_size", d.shard_size)?,
+            threads: self.parse("threads", d.threads)?,
+            exec_mode: self.parse("executor", d.exec_mode)?,
         })
     }
 }
@@ -151,6 +153,8 @@ mod tests {
         c.set("iid", "false");
         c.set("target_accuracy", "0.55");
         c.set("shard_size", "4096");
+        c.set("threads", "6");
+        c.set("executor", "windowed");
         let fl = c.to_fl_config().unwrap();
         assert_eq!(fl.users, 25);
         assert_eq!(fl.protocol, ProtocolKind::SecAgg);
@@ -158,6 +162,18 @@ mod tests {
         assert!(!fl.iid);
         assert_eq!(fl.target_accuracy, Some(0.55));
         assert_eq!(fl.shard_size, 4096);
+        assert_eq!(fl.threads, 6);
+        assert_eq!(fl.exec_mode, crate::exec::ExecMode::Windowed);
+    }
+
+    #[test]
+    fn executor_knob_defaults_and_rejects_garbage() {
+        let fl = Config::default().to_fl_config().unwrap();
+        assert_eq!(fl.exec_mode, crate::exec::ExecMode::Stealing);
+        assert_eq!(fl.threads, 0);
+        let mut c = Config::default();
+        c.set("executor", "quantum");
+        assert!(c.to_fl_config().is_err());
     }
 
     #[test]

@@ -3,17 +3,24 @@
 //! accounting.
 //!
 //! This is the L3 event loop. One process hosts the server and all N
-//! simulated users; user-side work (mask assembly, quantization, local
-//! training) runs on real threads (`std::thread::scope` — the vendored
-//! crate set has no tokio), while "wire" transfers advance the simulated
-//! clock of [`crate::network`]. Per-round output is the aggregated
-//! gradient plus a [`RoundLedger`] of bytes and time.
+//! simulated users; the round-hot compute of *both* sides — per-user
+//! mask assembly / quantize / mask on the client side, mask-stream
+//! expansion on the server side — feeds one persistent two-tier
+//! work-stealing executor ([`crate::exec`]), so a round is pipelined end
+//! to end through a single scheduler with per-worker reused scratch
+//! arenas and no per-phase thread churn. "Wire" transfers advance the
+//! simulated clock of [`crate::network`]. Per-round output is the
+//! aggregated gradient plus a [`RoundLedger`] of bytes, time, and
+//! scheduling stats (per-tier task counts, steals, peak scratch).
 //!
-//! The server's Unmask phase runs on the sharded streaming pipeline
-//! ([`crate::protocol::shard`]) by default — `shard_size` on
-//! [`Coordinator`] (and the `shard_size` config/CLI knob) tunes the
-//! shard width; `0` selects the bit-exact monolithic reference path.
+//! The server's Unmask phase executor is selectable ([`ExecMode`], the
+//! `executor` config/CLI knob): `stealing` (default) runs mask streams
+//! as tier-1 jobs with tier-2 shard splitting, `windowed` is PR 1's
+//! window-barrier shard pipeline kept as the bounded-memory reference,
+//! and `monolithic` (also selected by `shard_size = 0`) is the
+//! sequential reference path. All three are bit-exact equal.
 
+use crate::exec::{ExecMode, Executor};
 use crate::network::{LinkModel, RoundLedger};
 use crate::protocol::messages::*;
 use crate::protocol::shard::{ShardConfig, DEFAULT_SHARD_SIZE};
@@ -33,20 +40,26 @@ enum Cohort {
     SecAgg { users: Vec<secagg::User>, server: secagg::Server },
 }
 
-/// The coordinator owns a cohort (users + server) and the network model.
+/// The coordinator owns a cohort (users + server), the network model,
+/// and the persistent executor the round's compute runs on.
 pub struct Coordinator {
     cohort: Cohort,
     pub params: Params,
     pub link: LinkModel,
     /// One-time key-setup communication (AdvertiseKeys + ShareKeys).
     pub setup_ledger: RoundLedger,
-    /// Number of worker threads for client-side compute and for the
-    /// server's sharded unmask windows.
+    /// Number of executor workers for round-hot compute (client tier-1
+    /// tasks and the server's unmask). The pool is (re)built lazily when
+    /// this changes between rounds.
     pub threads: usize,
-    /// Shard size (elements) for the server's streaming unmask pipeline;
-    /// `0` falls back to the monolithic path (mainly for differential
-    /// testing — both paths are bit-exact equal).
+    /// Shard size (elements) for the server's streaming unmask; `0`
+    /// falls back to the monolithic path (mainly for differential
+    /// testing — all paths are bit-exact equal).
     pub shard_size: usize,
+    /// Unmask engine selection (see [`ExecMode`]).
+    pub exec_mode: ExecMode,
+    /// Lazily-built persistent worker pool, reused across rounds.
+    exec: Option<Executor>,
 }
 
 fn default_threads(n: usize) -> usize {
@@ -57,22 +70,26 @@ fn default_threads(n: usize) -> usize {
         .max(1)
 }
 
-/// Run the server's unmask through the sharded pipeline when a
-/// [`ShardConfig`] is selected (recording the shard stats in the
-/// ledger), else through the monolithic reference path. A macro rather
-/// than a fn so the server borrow lives in exactly one arm.
+/// Run the server's unmask through the selected engine, recording the
+/// scheduling stats in the ledger. A macro rather than a fn so the
+/// server borrow lives in exactly one arm.
 macro_rules! finish_round_dispatch {
-    ($server:expr, $ledger:expr, $shard_cfg:expr, $round:expr,
-     $responses:expr) => {
-        match &$shard_cfg {
-            Some(cfg) => {
-                let (agg, stats) =
-                    $server.finish_round_sharded($round, $responses, cfg)?;
-                $ledger.record_unmask_shards(stats.jobs, stats.shards,
-                                             stats.peak_scratch_bytes);
+    ($server:expr, $ledger:expr, $shard_cfg:expr, $mode:expr, $exec:expr,
+     $round:expr, $responses:expr) => {
+        match ($shard_cfg, $mode) {
+            (Some(cfg), ExecMode::Stealing) => {
+                let (agg, stats) = $server.finish_round_stealing(
+                    $round, $responses, &cfg, $exec)?;
+                $ledger.record_unmask(&stats);
                 agg
             }
-            None => $server.finish_round($round, $responses)?,
+            (Some(cfg), _) => {
+                let (agg, stats) =
+                    $server.finish_round_sharded($round, $responses, &cfg)?;
+                $ledger.record_unmask(&stats);
+                agg
+            }
+            (None, _) => $server.finish_round($round, $responses)?,
         }
     };
 }
@@ -89,6 +106,8 @@ impl Coordinator {
             setup_ledger,
             threads: default_threads(params.n),
             shard_size: DEFAULT_SHARD_SIZE,
+            exec_mode: ExecMode::Stealing,
+            exec: None,
         }
     }
 
@@ -103,6 +122,8 @@ impl Coordinator {
             setup_ledger,
             threads: default_threads(params.n),
             shard_size: DEFAULT_SHARD_SIZE,
+            exec_mode: ExecMode::Stealing,
+            exec: None,
         }
     }
 
@@ -110,6 +131,16 @@ impl Coordinator {
         match self.cohort {
             Cohort::Sparse { .. } => ProtocolKind::Sparse,
             Cohort::SecAgg { .. } => ProtocolKind::SecAgg,
+        }
+    }
+
+    /// (Re)build the persistent pool if `threads` changed since the last
+    /// round. Workers persist across rounds — tier-1/tier-2 tasks of
+    /// every phase land on the same deques.
+    fn ensure_executor(&mut self) {
+        let want = self.threads.max(1);
+        if self.exec.as_ref().map_or(true, |e| e.threads() != want) {
+            self.exec = Some(Executor::new(want));
         }
     }
 
@@ -143,6 +174,15 @@ impl Coordinator {
         (0..n).map(|i| i >= a).collect()
     }
 
+    /// Effective unmask engine for the current knob settings.
+    fn effective_mode(&self) -> ExecMode {
+        if self.shard_size == 0 {
+            ExecMode::Monolithic
+        } else {
+            self.exec_mode
+        }
+    }
+
     /// Run one aggregation round.
     ///
     /// `ys[i]` is user i's weighted local gradient (length d), `betas[i]`
@@ -153,28 +193,40 @@ impl Coordinator {
         let params = self.params;
         let n = params.n;
         let mut ledger = RoundLedger::new(n);
-        let threads = self.threads;
-        let shard_cfg = (self.shard_size > 0)
+        let threads = self.threads.max(1);
+        self.ensure_executor();
+        let mode = self.effective_mode();
+        let shard_cfg = (mode != ExecMode::Monolithic)
             .then(|| ShardConfig::new(self.shard_size, threads));
         let is_dropped =
             |i: usize| -> bool { dropped.contains(&i) };
+        let Coordinator { cohort, exec, .. } = &mut *self;
+        let exec = exec.as_ref().expect("executor initialized");
 
-        let (agg, upload_bytes, response_bytes) = match &mut self.cohort {
+        let (agg, upload_bytes, response_bytes) = match cohort {
             Cohort::Sparse { users, server } => {
                 server.begin_round();
-                // --- MaskedInput: parallel client compute.
+                // --- MaskedInput: one tier-1 executor task per user;
+                // mask assembly runs on the worker's kept-zeroed arena.
                 let t0 = Instant::now();
-                let uploads: Vec<Option<SparseMaskedUpload>> =
-                    parallel_map(users, threads, |u| {
+                let mut uploads: Vec<Option<SparseMaskedUpload>> = Vec::new();
+                uploads.resize_with(users.len(), || None);
+                let ((), cstats) = exec.scope(|scope| {
+                    for (u, slot) in users.iter().zip(uploads.iter_mut()) {
                         if is_dropped(u.id) {
-                            return None;
+                            continue;
                         }
-                        let mut scratch = vec![0u32; params.d];
-                        let plan = u.mask_plan(round, &params, &mut scratch);
-                        Some(u.masked_upload(round, &ys[u.id], betas[u.id],
-                                             &params, plan))
-                    });
+                        scope.spawn(move |_, scratch| {
+                            let plan = u.mask_plan(round, &params,
+                                                   scratch.zeroed(params.d));
+                            *slot = Some(u.masked_upload(
+                                round, &ys[u.id], betas[u.id], &params,
+                                plan));
+                        });
+                    }
+                });
                 ledger.client_compute_s += t0.elapsed().as_secs_f64();
+                ledger.record_client_phase(cstats.tasks, cstats.steals);
 
                 let mut upload_bytes = vec![0usize; n];
                 let ts = Instant::now();
@@ -205,22 +257,29 @@ impl Coordinator {
                     ledger.record_upload(*u, *b);
                 }
                 let agg = finish_round_dispatch!(server, ledger, shard_cfg,
-                                                 round, &responses);
+                                                 mode, exec, round,
+                                                 &responses);
                 ledger.server_compute_s += ts.elapsed().as_secs_f64();
                 (agg, upload_bytes, response_bytes)
             }
             Cohort::SecAgg { users, server } => {
                 server.begin_round();
                 let t0 = Instant::now();
-                let uploads: Vec<Option<DenseMaskedUpload>> =
-                    parallel_map(users, threads, |u| {
+                let mut uploads: Vec<Option<DenseMaskedUpload>> = Vec::new();
+                uploads.resize_with(users.len(), || None);
+                let ((), cstats) = exec.scope(|scope| {
+                    for (u, slot) in users.iter().zip(uploads.iter_mut()) {
                         if is_dropped(u.id) {
-                            return None;
+                            continue;
                         }
-                        Some(u.masked_upload(round, &ys[u.id], betas[u.id],
-                                             &params))
-                    });
+                        scope.spawn(move |_, _| {
+                            *slot = Some(u.masked_upload(
+                                round, &ys[u.id], betas[u.id], &params));
+                        });
+                    }
+                });
                 ledger.client_compute_s += t0.elapsed().as_secs_f64();
+                ledger.record_client_phase(cstats.tasks, cstats.steals);
 
                 let mut upload_bytes = vec![0usize; n];
                 let ts = Instant::now();
@@ -247,7 +306,8 @@ impl Coordinator {
                     ledger.record_upload(*u, *b);
                 }
                 let agg = finish_round_dispatch!(server, ledger, shard_cfg,
-                                                 round, &responses);
+                                                 mode, exec, round,
+                                                 &responses);
                 ledger.server_compute_s += ts.elapsed().as_secs_f64();
                 (agg, upload_bytes, response_bytes)
             }
@@ -281,7 +341,8 @@ impl Coordinator {
     /// proves the three layers compose on the hot path). Sparse cohorts
     /// only. Kernel executions are serialized through the single PJRT
     /// client; the per-user compute clock still models a parallel fleet
-    /// (max over users).
+    /// (max over users). The Unmask phase runs on the same executor
+    /// dispatch as [`Self::run_round`].
     pub fn run_round_hlo(&mut self, round: u32, ys: &[Vec<f32>],
                          betas: &[f64], dropped: &[usize],
                          qm: &crate::runtime::QuantMask)
@@ -289,9 +350,14 @@ impl Coordinator {
         let params = self.params;
         let n = params.n;
         let mut ledger = RoundLedger::new(n);
-        let shard_cfg = (self.shard_size > 0)
-            .then(|| ShardConfig::new(self.shard_size, self.threads));
-        let Cohort::Sparse { users, server } = &mut self.cohort else {
+        let threads = self.threads.max(1);
+        self.ensure_executor();
+        let mode = self.effective_mode();
+        let shard_cfg = (mode != ExecMode::Monolithic)
+            .then(|| ShardConfig::new(self.shard_size, threads));
+        let Coordinator { cohort, exec, .. } = &mut *self;
+        let exec = exec.as_ref().expect("executor initialized");
+        let Cohort::Sparse { users, server } = cohort else {
             anyhow::bail!("run_round_hlo requires a SparseSecAgg cohort");
         };
         server.begin_round();
@@ -327,8 +393,8 @@ impl Coordinator {
             ledger.record_download(r.id, req_bytes);
             ledger.record_upload(r.id, r.wire_bytes());
         }
-        let agg = finish_round_dispatch!(server, ledger, shard_cfg, round,
-                                         &responses);
+        let agg = finish_round_dispatch!(server, ledger, shard_cfg, mode,
+                                         exec, round, &responses);
         ledger.server_compute_s += ts.elapsed().as_secs_f64();
 
         for (u, &b) in upload_bytes.iter().enumerate() {
@@ -363,6 +429,10 @@ impl Coordinator {
 
 /// Map a slice through `f` on up to `threads` scoped threads, preserving
 /// order. The closure sees each element by reference.
+///
+/// This is the legacy window-parallel primitive — still the engine of
+/// the `windowed` reference unmask path ([`crate::protocol::shard`]);
+/// round-hot scheduling now goes through [`crate::exec`].
 pub fn parallel_map<T: Sync, U: Send>(
     items: &[T], threads: usize, f: impl Fn(&T) -> U + Sync) -> Vec<U> {
     let threads = threads.clamp(1, items.len().max(1));
@@ -421,6 +491,8 @@ mod tests {
         // Sparse upload must be well below dense 4d bytes.
         assert!(ledger.max_up() < 4 * p.d);
         assert!(ledger.wall_clock_s() > 0.0);
+        // Every surviving user ran as a tier-1 executor task.
+        assert_eq!(ledger.client_tasks, p.n);
     }
 
     #[test]
@@ -433,6 +505,7 @@ mod tests {
         assert_eq!(agg.len(), p.d);
         // Dense upload dominates: ≥ 4d bytes.
         assert!(ledger.max_up() >= 4 * p.d);
+        assert_eq!(ledger.client_tasks, p.n);
     }
 
     #[test]
@@ -468,9 +541,10 @@ mod tests {
         let ys = grads(p.n, p.d, 3);
         let betas = vec![1.0 / p.n as f64; p.n];
         let dropped = vec![1usize, 5, 9];
-        let (agg, _ledger) =
+        let (agg, ledger) =
             coord.run_round(2, &ys, &betas, &dropped).unwrap();
         assert_eq!(agg.len(), p.d);
+        assert_eq!(ledger.client_tasks, p.n - dropped.len());
 
         let honest = coord.honest_mask(1.0 / 3.0);
         assert_eq!(honest.iter().filter(|&&h| !h).count(), 4);
@@ -492,11 +566,54 @@ mod tests {
         let (agg_mono, lm) = mono.run_round(1, &ys, &betas, &dropped).unwrap();
         let mut shr = Coordinator::new_sparse(p, 13);
         shr.shard_size = 100; // 1234 % 100 != 0: remainder shard in play
+        shr.exec_mode = ExecMode::Windowed; // the provable-bound reference
         let (agg_shr, ls) = shr.run_round(1, &ys, &betas, &dropped).unwrap();
         assert_eq!(agg_mono, agg_shr);
         assert_eq!(lm.unmask_jobs, 0, "monolithic path records no shards");
         assert!(ls.unmask_jobs > 0 && ls.unmask_shards > 0);
         assert!(ls.unmask_peak_scratch_bytes <= shr.threads * 100 * 8);
+        assert_eq!(ls.unmask_steals, 0, "windowed path never steals");
+    }
+
+    #[test]
+    fn stealing_rounds_match_monolithic_across_thread_counts() {
+        let p = params(9, 1100, 0.35, 0.2);
+        let ys = grads(p.n, p.d, 11);
+        let betas = vec![1.0 / p.n as f64; p.n];
+        let dropped = vec![2usize, 6];
+        let mut mono = Coordinator::new_sparse(p, 21);
+        mono.shard_size = 0;
+        let (agg_mono, _) = mono.run_round(1, &ys, &betas, &dropped).unwrap();
+        for threads in [1usize, 2, 3, 5, 8] {
+            let mut st = Coordinator::new_sparse(p, 21);
+            st.threads = threads;
+            st.shard_size = 128; // 1100 % 128 != 0: remainder shards
+            st.exec_mode = ExecMode::Stealing;
+            let (agg, ledger) =
+                st.run_round(1, &ys, &betas, &dropped).unwrap();
+            assert_eq!(agg, agg_mono, "threads={threads}");
+            assert!(ledger.unmask_jobs > 0 && ledger.unmask_shards > 0);
+            assert_eq!(ledger.client_tasks, p.n - dropped.len());
+        }
+    }
+
+    #[test]
+    fn executor_is_reused_and_rebuilt_on_thread_change() {
+        let p = params(6, 300, 0.4, 0.0);
+        let mut coord = Coordinator::new_sparse(p, 17);
+        let ys = grads(p.n, p.d, 5);
+        let betas = vec![1.0 / p.n as f64; p.n];
+        // Explicit non-default counts so both the build and the rebuild
+        // branch of ensure_executor run on any host core count.
+        coord.threads = 1;
+        let (a0, _) = coord.run_round(0, &ys, &betas, &[]).unwrap();
+        let (a0b, _) = coord.run_round(0, &ys, &betas, &[]).unwrap();
+        coord.threads = 3;
+        let (a1, _) = coord.run_round(0, &ys, &betas, &[]).unwrap();
+        // Same round, reused then rebuilt pool: output is
+        // scheduling-invariant.
+        assert_eq!(a0, a0b);
+        assert_eq!(a0, a1);
     }
 
     #[test]

@@ -1,0 +1,399 @@
+//! Two-tier mask-stream consumption on the work-stealing executor.
+//!
+//! Tier 1 schedules whole mask streams ([`MaskJob`]s) as units; a stream
+//! longer than `shard_size` fans out into tier-2 shard tasks, each
+//! seeking the ChaCha20 keystream straight to its word offset (PR 1's
+//! primitive). Output is **bit-exact** equal to the monolithic scan
+//! regardless of steal order:
+//!
+//! * *within a job*, expanded chunks are applied strictly in shard order
+//!   by an in-order cursor that carries the running acceptance count, so
+//!   a rejection-sampled word in shard `s` shifts shards `> s` down by
+//!   exactly one, as in the sequential scan; any tail deficit completes
+//!   sequentially from word `len` — the same words the monolithic scan
+//!   would consume next;
+//! * *across jobs*, applications interleave arbitrarily under the
+//!   aggregate lock, but `F_q` addition is exactly associative and
+//!   commutative, so per coordinate both paths add/subtract the same
+//!   multiset of field elements.
+//!
+//! Chunks do not wait for the whole job: every task that stores a chunk
+//! drains the job's ready prefix immediately, so expanded-but-unapplied
+//! memory stays near the in-flight task count rather than the job
+//! length. Raw-word buffers come from the per-worker arena; what the
+//! pipeline actually held at its high-water mark — in-flight raw words
+//! plus stored chunks — is measured and reported as
+//! [`ShardStats::peak_scratch_bytes`] (true accounting under stealing,
+//! not the windowed-path bound).
+
+use crate::exec::{Executor, Scope, WorkerScratch};
+use crate::field::{vecops, Q};
+use crate::prg::{ChaCha20Rng, Seed};
+use crate::protocol::shard::{apply_chunk, apply_rejection_tail, MaskJob,
+                             ShardConfig, ShardStats};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// High-water gauge for transient pipeline memory.
+#[derive(Default)]
+struct Gauge {
+    live: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl Gauge {
+    fn add(&self, bytes: usize) {
+        let now = self.live.fetch_add(bytes, Ordering::SeqCst) + bytes;
+        self.peak.fetch_max(now, Ordering::SeqCst);
+    }
+
+    fn sub(&self, bytes: usize) {
+        self.live.fetch_sub(bytes, Ordering::SeqCst);
+    }
+}
+
+/// Everything the spawned tasks share for one `apply_jobs_stealing` call.
+struct Ctx<'a> {
+    agg: Mutex<&'a mut [u32]>,
+    agg_len: usize,
+    gauge: Gauge,
+    tier2: AtomicUsize,
+    carries: AtomicUsize,
+}
+
+/// In-order apply cursor of one fanned-out job.
+struct Cursor {
+    /// Next chunk index to apply.
+    next: usize,
+    /// Stream-element offset the next chunk applies at (the acceptance
+    /// carry).
+    elem: usize,
+    tail_done: bool,
+}
+
+struct JobState {
+    nchunks: usize,
+    len: usize,
+    /// Each slot written once by its expansion task, taken once by the
+    /// in-order drain.
+    chunks: Vec<Mutex<Option<Vec<u32>>>>,
+    cursor: Mutex<Cursor>,
+}
+
+/// Apply every job to `agg` through the two-tier work-stealing executor.
+/// Bit-exact to [`crate::protocol::shard::apply_job_monolithic`] over the
+/// same jobs (module docs give the argument).
+pub fn apply_jobs_stealing(agg: &mut [u32], jobs: &[MaskJob],
+                           cfg: &ShardConfig, exec: &Executor) -> ShardStats {
+    apply_jobs_stealing_accept(agg, jobs, cfg, exec, Q)
+}
+
+/// [`apply_jobs_stealing`] with an explicit acceptance bound — test hook
+/// that makes the astronomically-rare rejection-carry path exercisable
+/// under real stealing (production callers always pass `Q`).
+#[doc(hidden)]
+pub fn apply_jobs_stealing_accept(agg: &mut [u32], jobs: &[MaskJob],
+                                  cfg: &ShardConfig, exec: &Executor,
+                                  accept_below: u32) -> ShardStats {
+    let ctx = Ctx {
+        agg_len: agg.len(),
+        agg: Mutex::new(agg),
+        gauge: Gauge::default(),
+        tier2: AtomicUsize::new(0),
+        carries: AtomicUsize::new(0),
+    };
+    let shard = cfg.shard_size;
+    let (_, xstats) = exec.scope(|scope| {
+        for job in jobs {
+            let ctx = &ctx;
+            scope.spawn(move |scope, scratch| {
+                run_job(scope, scratch, job, ctx, shard, accept_below);
+            });
+        }
+    });
+    ShardStats {
+        jobs: jobs.len(),
+        shards: ctx.tier2.load(Ordering::SeqCst),
+        peak_scratch_bytes: ctx.gauge.peak.load(Ordering::SeqCst),
+        rejection_carries: ctx.carries.load(Ordering::SeqCst),
+        steals: xstats.steals,
+    }
+}
+
+fn job_fields(job: &MaskJob) -> (Seed, u32, u32, bool, Option<&[u32]>) {
+    match job {
+        MaskJob::Dense { seed, stream, round, add } => {
+            (*seed, *stream, *round, *add, None)
+        }
+        MaskJob::Indexed { seed, stream, round, add, indices } => {
+            (*seed, *stream, *round, *add, Some(indices.as_slice()))
+        }
+    }
+}
+
+/// Expand keystream words `[w0, w0+n)` into accepted field elements,
+/// using the worker's arena for the raw words.
+fn expand_words(scratch: &mut WorkerScratch, seed: Seed, stream: u32,
+                round: u32, w0: u64, n: usize, accept_below: u32)
+                -> Vec<u32> {
+    let words = scratch.words(n);
+    let mut rng = ChaCha20Rng::new_at_word(seed, stream, round, w0);
+    rng.fill_raw(words);
+    let mut out = Vec::with_capacity(n);
+    vecops::accept_lt(words, accept_below, &mut out);
+    out
+}
+
+/// Tier-1 body: run one mask stream, fanning out to tier-2 shard tasks
+/// when it is longer than `shard`.
+fn run_job<'env, 'a: 'env>(scope: &Scope<'env>, scratch: &mut WorkerScratch,
+                           job: &'env MaskJob, ctx: &'env Ctx<'a>,
+                           shard: usize, accept_below: u32) {
+    let (seed, stream, round, add, coords) = job_fields(job);
+    let len = coords.map_or(ctx.agg_len, |c| c.len());
+    if len == 0 {
+        return;
+    }
+
+    if len <= shard {
+        // Tier-1 leaf: one seek-free expansion, apply, done. Raw words
+        // and accepted elements (8 B/word total) are both live until the
+        // apply completes.
+        ctx.tier2.fetch_add(1, Ordering::SeqCst);
+        ctx.gauge.add(len * 8);
+        let vals = expand_words(scratch, seed, stream, round, 0, len,
+                                accept_below);
+        {
+            let mut guard = ctx.agg.lock().unwrap();
+            let a = &mut **guard;
+            apply_chunk(a, coords, 0, &vals, add);
+            if vals.len() < len {
+                ctx.carries.fetch_add(len - vals.len(), Ordering::SeqCst);
+                apply_rejection_tail(a, coords, vals.len(), len, seed,
+                                     stream, round, add, accept_below);
+            }
+        }
+        ctx.gauge.sub(len * 8);
+        return;
+    }
+
+    // Tier-2 fan-out: seekable shard tasks, pushed LIFO onto this
+    // worker's own deque (idle workers steal from the front).
+    let nchunks = len.div_ceil(shard);
+    ctx.tier2.fetch_add(nchunks, Ordering::SeqCst);
+    let state = Arc::new(JobState {
+        nchunks,
+        len,
+        chunks: (0..nchunks).map(|_| Mutex::new(None)).collect(),
+        cursor: Mutex::new(Cursor { next: 0, elem: 0, tail_done: false }),
+    });
+    // Spawn in REVERSE index order: the owning worker pops its own deque
+    // LIFO, so it expands chunk 0 first and the in-order applier drains
+    // as it goes; stealers take from the FIFO front — the highest-index
+    // chunks — so out-of-order float is bounded by the number of steals,
+    // not the stream length.
+    for k in (0..nchunks).rev() {
+        let state = state.clone();
+        scope.spawn(move |_, scratch| {
+            let lo = k * shard;
+            let hi = ((k + 1) * shard).min(len);
+            let n = hi - lo;
+            // In flight: raw words + accepted output (8 B/word)…
+            ctx.gauge.add(n * 8);
+            let vals = expand_words(scratch, seed, stream, round, lo as u64,
+                                    n, accept_below);
+            ctx.gauge.sub(n * 8);
+            // …then only the stored chunk floats until the in-order
+            // applier consumes it.
+            ctx.gauge.add(vals.len() * 4);
+            *state.chunks[k].lock().unwrap() = Some(vals);
+            drain_ready(&state, ctx, coords, seed, stream, round, add,
+                        accept_below);
+        });
+    }
+}
+
+/// Apply the job's ready chunk prefix in shard order, carrying the
+/// element offset; the drain that consumes the final chunk also runs the
+/// rejection tail. Every chunk-storing task calls this with a *blocking*
+/// cursor lock, so the store of the last missing chunk is always
+/// followed by a drain that sees it — no chunk can be orphaned.
+#[allow(clippy::too_many_arguments)]
+fn drain_ready(state: &JobState, ctx: &Ctx<'_>, coords: Option<&[u32]>,
+               seed: Seed, stream: u32, round: u32, add: bool,
+               accept_below: u32) {
+    let mut cur = state.cursor.lock().unwrap();
+    while cur.next < state.nchunks {
+        let taken = state.chunks[cur.next].lock().unwrap().take();
+        let Some(vals) = taken else {
+            return; // not expanded yet — a later store will drain it
+        };
+        {
+            let mut guard = ctx.agg.lock().unwrap();
+            let a = &mut **guard;
+            apply_chunk(a, coords, cur.elem, &vals, add);
+        }
+        ctx.gauge.sub(vals.len() * 4);
+        cur.elem += vals.len();
+        cur.next += 1;
+    }
+    if !cur.tail_done {
+        cur.tail_done = true;
+        if cur.elem < state.len {
+            ctx.carries
+                .fetch_add(state.len - cur.elem, Ordering::SeqCst);
+            let mut guard = ctx.agg.lock().unwrap();
+            let a = &mut **guard;
+            apply_rejection_tail(a, coords, cur.elem, state.len, seed,
+                                 stream, round, add, accept_below);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masking::{STREAM_ADDITIVE, STREAM_PRIVATE};
+    use crate::protocol::shard::apply_job_monolithic;
+    use crate::testutil::prop;
+
+    fn seed(rng: &mut ChaCha20Rng) -> Seed {
+        let mut w = [0u32; 8];
+        for v in w.iter_mut() {
+            *v = rng.next_field();
+        }
+        Seed(w)
+    }
+
+    #[test]
+    fn stealing_matches_monolithic_on_random_mixes() {
+        let exec2 = Executor::new(2);
+        let exec5 = Executor::new(5);
+        prop(25, |rng| {
+            let exec = if rng.next_u32() & 1 == 0 { &exec2 } else { &exec5 };
+            let d = 16 + (rng.next_u32() as usize % 600);
+            let cfg = ShardConfig::new(1 + (rng.next_u32() as usize % 120),
+                                       exec.threads());
+            let njobs = 1 + (rng.next_u32() as usize % 7);
+            let jobs: Vec<MaskJob> = (0..njobs)
+                .map(|_| {
+                    let s = seed(rng);
+                    let add = rng.next_u32() & 1 == 0;
+                    let round = rng.next_u32() % 9;
+                    if rng.next_u32() & 1 == 0 {
+                        MaskJob::Dense {
+                            seed: s, stream: STREAM_ADDITIVE, round, add,
+                        }
+                    } else {
+                        MaskJob::Indexed {
+                            seed: s,
+                            stream: STREAM_PRIVATE,
+                            round,
+                            add,
+                            indices: (0..d as u32)
+                                .filter(|_| rng.next_f32() < 0.2)
+                                .collect(),
+                        }
+                    }
+                })
+                .collect();
+            let base: Vec<u32> = (0..d).map(|_| rng.next_field()).collect();
+
+            let mut mono = base.clone();
+            for job in &jobs {
+                apply_job_monolithic(&mut mono, job);
+            }
+            let mut stolen = base;
+            let stats = apply_jobs_stealing(&mut stolen, &jobs, &cfg, exec);
+            assert_eq!(stolen, mono, "threads={} cfg={cfg:?}", exec.threads());
+            assert_eq!(stats.jobs, njobs);
+            // Tier-2 count is exact: ceil(len/shard) per non-empty job.
+            let want_shards: usize = jobs
+                .iter()
+                .map(|j| match j {
+                    MaskJob::Dense { .. } => d.div_ceil(cfg.shard_size),
+                    MaskJob::Indexed { indices, .. } if indices.is_empty() =>
+                        0,
+                    MaskJob::Indexed { indices, .. } =>
+                        indices.len().div_ceil(cfg.shard_size),
+                })
+                .sum();
+            assert_eq!(stats.shards, want_shards);
+        });
+    }
+
+    #[test]
+    fn empty_jobs_and_empty_agg_are_noops() {
+        let exec = Executor::new(2);
+        let cfg = ShardConfig::new(8, 2);
+        let mut agg = vec![5u32; 9];
+        let stats = apply_jobs_stealing(
+            &mut agg,
+            &[MaskJob::Indexed {
+                seed: Seed([1; 8]),
+                stream: STREAM_PRIVATE,
+                round: 0,
+                add: true,
+                indices: vec![],
+            }],
+            &cfg,
+            &exec,
+        );
+        assert_eq!(agg, vec![5u32; 9]);
+        assert_eq!(stats.jobs, 1);
+        let mut empty: Vec<u32> = vec![];
+        apply_jobs_stealing(
+            &mut empty,
+            &[MaskJob::Dense {
+                seed: Seed([2; 8]),
+                stream: STREAM_ADDITIVE,
+                round: 0,
+                add: true,
+            }],
+            &cfg,
+            &exec,
+        );
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn forced_rejections_carry_exactly_under_stealing() {
+        let exec = Executor::new(4);
+        prop(20, |rng| {
+            // d ≥ 100 makes "zero rejections in the first d words"
+            // vanishingly unlikely (≤ 0.75^100) for every seeded case.
+            let d = 100 + (rng.next_u32() as usize % 300);
+            let cfg = ShardConfig::new(1 + (rng.next_u32() as usize % 40), 4);
+            let accept = (1u32 << 30) + rng.next_u32() % (1u32 << 31);
+            let s = seed(rng);
+            let add = rng.next_u32() & 1 == 0;
+            let job = MaskJob::Dense {
+                seed: s, stream: STREAM_ADDITIVE, round: 3, add,
+            };
+            let base: Vec<u32> = (0..d).map(|_| rng.next_field()).collect();
+
+            // Sequential rejection-sampling reference.
+            let mut want = base.clone();
+            let mut src = ChaCha20Rng::new(s, STREAM_ADDITIVE, 3);
+            let mut k = 0usize;
+            while k < d {
+                let w = src.next_u32();
+                if w >= accept {
+                    continue;
+                }
+                want[k] = if add {
+                    crate::field::add(want[k], w)
+                } else {
+                    crate::field::sub(want[k], w)
+                };
+                k += 1;
+            }
+
+            let mut got = base;
+            let stats = apply_jobs_stealing_accept(
+                &mut got, std::slice::from_ref(&job), &cfg, &exec, accept);
+            assert_eq!(got, want, "d={d} accept={accept:#x}");
+            assert!(stats.rejection_carries > 0, "carry path not exercised");
+        });
+    }
+}

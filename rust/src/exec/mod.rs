@@ -1,0 +1,526 @@
+//! Persistent two-tier work-stealing executor — the round-hot scheduler.
+//!
+//! PR 1's shard pipeline parallelized *within* one mask stream with a
+//! thread barrier per window: a round made of many short sparse streams
+//! (the common SparseSecAgg regime, |stream| ≈ αd ≪ d) degenerated to
+//! near-serial execution, and every window paid a spawn/join. This module
+//! replaces that with one persistent scheduler that both tiers of the
+//! system feed:
+//!
+//! * **tier 1** — whole units of round work: one task per mask stream
+//!   ([`crate::protocol::shard::MaskJob`]) on the server side, one task
+//!   per simulated user (mask assembly + quantize + mask) on the client
+//!   side;
+//! * **tier 2** — streams longer than `shard_size` adaptively split into
+//!   seekable shard tasks (ChaCha20 word-offset seeking, PR 1's
+//!   acceptance-carry keeps output bit-exact regardless of steal order —
+//!   see [`jobs`]).
+//!
+//! # Scheduling
+//!
+//! `threads` workers are spawned **once** per [`Executor`] and reused
+//! for every phase of every round — no per-window spawn/join. Each
+//! worker owns a deque: it pushes tasks it spawns to the back and pops
+//! from the back (LIFO — depth-first, cache-hot: a worker finishes the
+//! shards of the stream it opened before taking new streams), while idle
+//! workers steal from the *front* of other deques (FIFO — oldest, i.e.
+//! coarsest, work first). External submissions are distributed
+//! round-robin. Steals and task counts are tallied per scope and
+//! surfaced through [`ExecStats`] into the round ledger.
+//!
+//! # Memory model
+//!
+//! Each worker carries a [`WorkerScratch`] arena reused across tasks:
+//! a raw-keystream word buffer (grows to at most one shard) and a
+//! kept-zeroed dense accumulator for client mask assembly. Per-window
+//! allocation from PR 1 is gone; steady-state allocation per expansion
+//! task is just the accepted-element chunk that is handed to the
+//! in-order applier. True transient usage under stealing is *measured*
+//! (not assumed) by [`jobs`] and reported as `peak_scratch_bytes`.
+//!
+//! # Borrowed tasks
+//!
+//! [`Executor::scope`] lets tasks borrow stack data of the caller
+//! (`'env` closures), like `std::thread::scope` but on the persistent
+//! pool. Soundness rests on one invariant, upheld in exactly one place:
+//! `scope` does not return — even if the scope closure panics — until
+//! the pending-task count has drained to zero, and a task's count is
+//! only released after the task (or its panic handler) has finished
+//! running. Worker panics are captured and re-raised on the scoping
+//! thread.
+
+pub mod jobs;
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Which engine the server's unmask (and the round hot path generally)
+/// runs on. `Monolithic` and `Windowed` are the bit-exact reference
+/// executors kept for differential testing and A/B benchmarking.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// One sequential stream at a time (PR 0 semantics).
+    Monolithic,
+    /// PR 1's windowed shard pipeline: parallel within a stream, thread
+    /// barrier per window.
+    Windowed,
+    /// The two-tier work-stealing executor (default).
+    Stealing,
+}
+
+impl std::str::FromStr for ExecMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "stealing" | "steal" => Ok(ExecMode::Stealing),
+            "windowed" | "window" => Ok(ExecMode::Windowed),
+            "monolithic" | "mono" => Ok(ExecMode::Monolithic),
+            other => Err(format!(
+                "unknown executor {other} (stealing|windowed|monolithic)")),
+        }
+    }
+}
+
+/// Per-worker reusable scratch arenas (never shared between workers, so
+/// access is contention-free).
+pub struct WorkerScratch {
+    /// Raw keystream word buffer for shard expansion — contents are
+    /// garbage between uses; grows to the largest single expansion (≤ one
+    /// shard) and stays.
+    words: Vec<u32>,
+    /// Dense accumulator for client mask assembly. Invariant: all zeros
+    /// between tasks ([`crate::masking::assemble`] returns it cleaned).
+    zeroed: Vec<u32>,
+}
+
+impl WorkerScratch {
+    fn new() -> Self {
+        WorkerScratch { words: Vec::new(), zeroed: Vec::new() }
+    }
+
+    /// A word buffer of exactly `n` slots (arena-backed, garbage values).
+    pub fn words(&mut self, n: usize) -> &mut [u32] {
+        if self.words.len() < n {
+            self.words.resize(n, 0);
+        }
+        &mut self.words[..n]
+    }
+
+    /// The kept-zeroed dense buffer, grown to at least `n` slots. The
+    /// caller must hand it back all-zero (mask assembly's contract).
+    pub fn zeroed(&mut self, n: usize) -> &mut Vec<u32> {
+        if self.zeroed.len() < n {
+            self.zeroed.resize(n, 0);
+        }
+        &mut self.zeroed
+    }
+
+    /// Arena bytes currently retained by this worker.
+    pub fn retained_bytes(&self) -> usize {
+        (self.words.capacity() + self.zeroed.capacity()) * 4
+    }
+
+    /// After a task panic the arenas may be mid-write; drop them so the
+    /// zeroed-invariant cannot leak into later tasks.
+    fn reset_after_panic(&mut self) {
+        self.words = Vec::new();
+        self.zeroed = Vec::new();
+    }
+}
+
+/// Scope-level scheduling counters (deltas over one [`Executor::scope`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExecStats {
+    /// Tasks executed (both tiers).
+    pub tasks: usize,
+    /// Tasks a worker popped from another worker's deque.
+    pub steals: usize,
+}
+
+/// A task as stored in the deques. The `'static` here is a lie told by
+/// [`Scope::spawn`]'s transmute; see the module docs for the invariant
+/// that makes it sound.
+type Task = Box<dyn FnOnce(&Scope<'static>, &mut WorkerScratch) + Send + 'static>;
+
+thread_local! {
+    /// (address of the owning pool's `Shared`, worker index) — lets
+    /// `Scope::spawn` push to the *current* worker's own deque so tier-2
+    /// tasks land LIFO behind their parent.
+    static WORKER: Cell<(usize, usize)> = Cell::new((0, usize::MAX));
+}
+
+struct Shared {
+    /// One deque per worker.
+    queues: Vec<Mutex<VecDeque<Task>>>,
+    /// Round-robin cursor for external (non-worker) submissions.
+    rr: AtomicUsize,
+    /// Tasks submitted but not yet finished (incremented before push).
+    pending: AtomicUsize,
+    /// Monotonic counters; scopes report deltas.
+    tasks: AtomicUsize,
+    steals: AtomicUsize,
+    /// Workers currently blocked (or committing to block) on `work_cv` —
+    /// lets `submit` skip the global lock + notify when everyone is busy.
+    sleepers: AtomicUsize,
+    shutdown: AtomicBool,
+    /// Worker sleep/wake. Workers re-check queue emptiness holding this
+    /// lock before waiting; submitters push first, then lock+notify — the
+    /// standard pairing that rules out lost wakeups.
+    work: Mutex<()>,
+    work_cv: Condvar,
+    /// Scope-completion signal (pending == 0).
+    idle: Mutex<()>,
+    idle_cv: Condvar,
+    /// First panic payload from any task, re-raised by the scope.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl Shared {
+    fn submit(&self, task: Task) {
+        let own = WORKER.with(|w| {
+            let (addr, idx) = w.get();
+            if addr == self as *const Shared as usize { idx } else { usize::MAX }
+        });
+        let i = if own != usize::MAX {
+            own
+        } else {
+            self.rr.fetch_add(1, Ordering::Relaxed) % self.queues.len()
+        };
+        self.queues[i].lock().unwrap().push_back(task);
+        // Wake at most one sleeper, and only if anyone might be asleep —
+        // the common all-workers-busy case stays lock-free here. The
+        // pairing that rules out a lost wakeup: a worker publishes
+        // itself in `sleepers` *before* re-checking the deques, so
+        // either this load sees it (we notify) or the worker's re-check
+        // sees the task pushed above (it never sleeps). Taking `work`
+        // before notifying orders the notification after the sleeper's
+        // wait-release of that same lock.
+        if self.sleepers.load(Ordering::SeqCst) > 0 {
+            drop(self.work.lock().unwrap());
+            self.work_cv.notify_one();
+        }
+    }
+
+    /// Own deque from the back (LIFO), then steal others' fronts (FIFO).
+    fn find_task(&self, me: usize) -> Option<Task> {
+        if let Some(t) = self.queues[me].lock().unwrap().pop_back() {
+            return Some(t);
+        }
+        let n = self.queues.len();
+        for k in 1..n {
+            let j = (me + k) % n;
+            if let Some(t) = self.queues[j].lock().unwrap().pop_front() {
+                self.steals.fetch_add(1, Ordering::Relaxed);
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    fn has_any_task(&self) -> bool {
+        self.queues.iter().any(|q| !q.lock().unwrap().is_empty())
+    }
+
+    fn task_done(&self) {
+        if self.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
+            drop(self.idle.lock().unwrap());
+            self.idle_cv.notify_all();
+        }
+    }
+
+    fn wait_idle(&self) {
+        let mut g = self.idle.lock().unwrap();
+        while self.pending.load(Ordering::SeqCst) != 0 {
+            g = self.idle_cv.wait(g).unwrap();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, me: usize) {
+    WORKER.with(|w| w.set((Arc::as_ptr(&shared) as usize, me)));
+    let scope: Scope<'static> = Scope {
+        shared: shared.clone(),
+        threads: shared.queues.len(),
+        env: PhantomData,
+    };
+    let mut scratch = WorkerScratch::new();
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        if let Some(task) = shared.find_task(me) {
+            shared.tasks.fetch_add(1, Ordering::Relaxed);
+            let result = panic::catch_unwind(AssertUnwindSafe(|| {
+                task(&scope, &mut scratch)
+            }));
+            if let Err(e) = result {
+                scratch.reset_after_panic();
+                let mut slot = shared.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(e);
+                }
+            }
+            shared.task_done();
+            continue;
+        }
+        let guard = shared.work.lock().unwrap();
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        // Publish intent to sleep BEFORE the final emptiness check (the
+        // submit-side pairing; see `Shared::submit`).
+        shared.sleepers.fetch_add(1, Ordering::SeqCst);
+        if shared.has_any_task() {
+            shared.sleepers.fetch_sub(1, Ordering::SeqCst);
+            continue;
+        }
+        // Wakeups re-enter the outer loop, which re-polls the deques.
+        let unused = shared.work_cv.wait(guard).unwrap();
+        drop(unused);
+        shared.sleepers.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Spawn handle passed to every task and to the [`Executor::scope`]
+/// closure; tasks use it to spawn further `'env` tasks (tier-1 streams
+/// spawning their tier-2 shards).
+pub struct Scope<'env> {
+    shared: Arc<Shared>,
+    threads: usize,
+    /// Invariant in `'env` — a scope must not be coerced to a longer
+    /// environment.
+    env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'env> Scope<'env> {
+    /// Queue `f` on the pool. May be called from inside a running task
+    /// (lands on that worker's own deque) or from the scoping thread
+    /// (round-robin). `f` may borrow anything that outlives the
+    /// enclosing [`Executor::scope`] call.
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce(&Scope<'env>, &mut WorkerScratch) + Send + 'env,
+    {
+        // Count before publishing so `pending` can never dip to zero
+        // while this task is queued or running.
+        self.shared.pending.fetch_add(1, Ordering::SeqCst);
+        let task: Box<dyn FnOnce(&Scope<'env>, &mut WorkerScratch) + Send + 'env> =
+            Box::new(f);
+        // SAFETY: the only consumer of `Task` is a worker, and every
+        // worker finishes (or abandons via the panic handler) the task —
+        // decrementing `pending` — before `Executor::scope` can return.
+        // `scope` waits for pending == 0 on all paths, including a panic
+        // in the scope closure itself, so no `'env` borrow outlives its
+        // referent. The transmute only erases lifetimes; the fat-pointer
+        // layout of `Box<dyn FnOnce(..)>` is lifetime-independent.
+        let task: Task = unsafe { std::mem::transmute(task) };
+        self.shared.submit(task);
+    }
+
+    /// Worker count of the pool behind this scope.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+/// The persistent pool. Workers are spawned at construction and joined
+/// on drop; every phase of every round reuses them through
+/// [`Executor::scope`].
+pub struct Executor {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl Executor {
+    pub fn new(threads: usize) -> Executor {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queues: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
+            rr: AtomicUsize::new(0),
+            pending: AtomicUsize::new(0),
+            tasks: AtomicUsize::new(0),
+            steals: AtomicUsize::new(0),
+            sleepers: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            work: Mutex::new(()),
+            work_cv: Condvar::new(),
+            idle: Mutex::new(()),
+            idle_cv: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        let handles = (0..threads)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("exec-{i}"))
+                    .spawn(move || worker_loop(sh, i))
+                    .expect("spawn executor worker")
+            })
+            .collect();
+        Executor { shared, handles, threads }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run a fan-out phase: `f` (and the tasks it spawns, recursively)
+    /// may borrow the caller's stack; returns only after every spawned
+    /// task has finished, re-raising the first task panic if any.
+    /// Returns `f`'s value plus the scheduling stats of the phase.
+    ///
+    /// Stats are deltas of pool-global counters — run phases one at a
+    /// time per pool (the coordinator does) for them to be meaningful.
+    pub fn scope<'env, F, R>(&self, f: F) -> (R, ExecStats)
+    where
+        F: FnOnce(&Scope<'env>) -> R,
+    {
+        let tasks0 = self.shared.tasks.load(Ordering::Relaxed);
+        let steals0 = self.shared.steals.load(Ordering::Relaxed);
+        let scope: Scope<'env> = Scope {
+            shared: self.shared.clone(),
+            threads: self.threads,
+            env: PhantomData,
+        };
+        // The wait below is the soundness linchpin: it must run even if
+        // `f` unwinds, or in-flight tasks could outlive `'env` borrows.
+        let out = panic::catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        self.shared.wait_idle();
+        if let Some(e) = self.shared.panic.lock().unwrap().take() {
+            panic::resume_unwind(e);
+        }
+        let stats = ExecStats {
+            tasks: self.shared.tasks.load(Ordering::Relaxed) - tasks0,
+            steals: self.shared.steals.load(Ordering::Relaxed) - steals0,
+        };
+        match out {
+            Ok(r) => (r, stats),
+            Err(e) => panic::resume_unwind(e),
+        }
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        drop(self.shared.work.lock().unwrap());
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn scope_runs_every_task_with_borrowed_data() {
+        let exec = Executor::new(4);
+        let mut out = vec![0u64; 257];
+        let (_, stats) = exec.scope(|scope| {
+            for (i, slot) in out.iter_mut().enumerate() {
+                scope.spawn(move |_, _| *slot = (i as u64) * 3 + 1);
+            }
+        });
+        assert!(out.iter().enumerate().all(|(i, &v)| v == (i as u64) * 3 + 1));
+        assert_eq!(stats.tasks, 257);
+    }
+
+    #[test]
+    fn tasks_can_spawn_subtasks() {
+        let exec = Executor::new(3);
+        let sum = AtomicU64::new(0);
+        let (_, stats) = exec.scope(|scope| {
+            for _ in 0..8 {
+                let sum = &sum;
+                scope.spawn(move |scope, _| {
+                    for _ in 0..16 {
+                        scope.spawn(move |_, _| {
+                            sum.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 128);
+        assert_eq!(stats.tasks, 8 + 128);
+    }
+
+    #[test]
+    fn pool_survives_across_scopes_and_single_thread_works() {
+        let exec = Executor::new(1);
+        for round in 0..5u64 {
+            let hit = AtomicU64::new(0);
+            exec.scope(|scope| {
+                for _ in 0..10 {
+                    let hit = &hit;
+                    scope.spawn(move |_, _| {
+                        hit.fetch_add(round + 1, Ordering::Relaxed);
+                    });
+                }
+            });
+            assert_eq!(hit.load(Ordering::Relaxed), 10 * (round + 1));
+        }
+    }
+
+    #[test]
+    fn scratch_arenas_are_reused_and_zeroed_stays_zero() {
+        let exec = Executor::new(1);
+        exec.scope(|scope| {
+            scope.spawn(|_, scratch| {
+                let w = scratch.words(100);
+                w.iter_mut().for_each(|v| *v = 7);
+                let z = scratch.zeroed(64);
+                assert!(z[..64].iter().all(|&v| v == 0));
+                // simulate assemble's use-then-clean contract
+                z[3] = 9;
+                z[3] = 0;
+            });
+        });
+        exec.scope(|scope| {
+            scope.spawn(|_, scratch| {
+                // words() is garbage (reused); zeroed() must still be zero.
+                assert!(scratch.zeroed(64)[..64].iter().all(|&v| v == 0));
+                assert!(scratch.retained_bytes() >= 100 * 4);
+            });
+        });
+    }
+
+    #[test]
+    fn task_panic_propagates_to_scope_caller() {
+        let exec = Executor::new(2);
+        let hit = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            exec.scope(|scope| {
+                scope.spawn(|_, _| panic!("boom in worker"));
+            });
+        }));
+        assert!(hit.is_err());
+        // pool is still usable afterwards
+        let done = AtomicU64::new(0);
+        exec.scope(|scope| {
+            let done = &done;
+            scope.spawn(move |_, _| {
+                done.store(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(done.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn exec_mode_parses() {
+        assert_eq!("stealing".parse::<ExecMode>().unwrap(), ExecMode::Stealing);
+        assert_eq!("windowed".parse::<ExecMode>().unwrap(), ExecMode::Windowed);
+        assert_eq!("mono".parse::<ExecMode>().unwrap(), ExecMode::Monolithic);
+        assert!("threads".parse::<ExecMode>().is_err());
+    }
+}

@@ -60,6 +60,14 @@ pub struct FlConfig {
     /// Shard size for the server's streaming unmask pipeline
     /// ([`crate::protocol::shard`]); 0 = monolithic reference path.
     pub shard_size: usize,
+    /// Executor worker threads for round-hot compute (client tier-1
+    /// tasks + server unmask); 0 = auto (available parallelism, capped
+    /// at N).
+    pub threads: usize,
+    /// Round-hot execution engine ([`crate::exec::ExecMode`]): the
+    /// work-stealing executor (default), the windowed shard pipeline, or
+    /// the monolithic reference.
+    pub exec_mode: crate::exec::ExecMode,
 }
 
 impl Default for FlConfig {
@@ -87,6 +95,8 @@ impl Default for FlConfig {
             seed: 42,
             artifacts_dir: "artifacts".into(),
             shard_size: crate::protocol::shard::DEFAULT_SHARD_SIZE,
+            threads: 0,
+            exec_mode: crate::exec::ExecMode::Stealing,
         }
     }
 }
@@ -149,6 +159,10 @@ pub fn run_fl(cfg: &FlConfig, trainer: &Trainer) -> Result<FlRun> {
         ProtocolKind::SecAgg => Coordinator::new_secagg(params, cfg.seed),
     };
     coord.shard_size = cfg.shard_size;
+    coord.exec_mode = cfg.exec_mode;
+    if cfg.threads > 0 {
+        coord.threads = cfg.threads;
+    }
 
     let mut global = trainer.init_params(cfg.seed ^ 0x1417);
     let mut history = Vec::new();

@@ -24,6 +24,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod dh;
+pub mod exec;
 pub mod field;
 pub mod fl;
 pub mod masking;

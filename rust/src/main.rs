@@ -9,7 +9,8 @@
 //!
 //! Examples:
 //!   sparsesecagg run --config configs/mnist_iid.cfg --users 10
-//!   sparsesecagg comm --users 100 --alpha 0.1
+//!   sparsesecagg run --threads 8 --executor stealing
+//!   sparsesecagg comm --users 100 --alpha 0.1 --executor windowed
 //!   sparsesecagg privacy --users 100 --gamma 0.333 --theta 0.3
 
 use anyhow::Result;
@@ -105,6 +106,11 @@ fn cmd_comm(args: &Args) -> Result<()> {
         "shard_size",
         sparsesecagg::protocol::shard::DEFAULT_SHARD_SIZE,
     )?;
+    let threads = args.parse_flag("threads", 0usize)?;
+    let exec_mode: sparsesecagg::exec::ExecMode = args
+        .get_or("executor", "stealing")
+        .parse()
+        .map_err(|e: String| anyhow::anyhow!(e))?;
     let users: Vec<usize> = match args.get("users") {
         Some(v) => vec![v.parse()?],
         None => vec![25, 50, 75, 100],
@@ -119,9 +125,17 @@ fn cmd_comm(args: &Args) -> Result<()> {
         let betas = vec![1.0 / n as f64; n];
         let mut sec = Coordinator::new_secagg(params, 1);
         sec.shard_size = shard_size;
+        sec.exec_mode = exec_mode;
+        if threads > 0 {
+            sec.threads = threads;
+        }
         let (_, l_sec) = sec.run_round(0, &ys, &betas, &[])?;
         let mut spa = Coordinator::new_sparse(params, 1);
         spa.shard_size = shard_size;
+        spa.exec_mode = exec_mode;
+        if threads > 0 {
+            spa.threads = threads;
+        }
         let (_, l_spa) = spa.run_round(0, &ys, &betas, &[])?;
         t.row(&[
             n.to_string(),

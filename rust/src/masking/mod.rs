@@ -127,9 +127,10 @@ pub fn apply_mask_values(acc: &mut [u32], seed: Seed, stream: u32,
     let mut pos = 0;
     while pos < acc.len() {
         let n = (acc.len() - pos).min(512);
-        for v in buf[..n].iter_mut() {
-            *v = rng.next_field();
-        }
+        // Bulk expansion (bit-identical to an element-wise next_field
+        // loop): lets the block4 4-lane refills feed the dense hot loop
+        // in whole buffered runs instead of one call per element.
+        rng.fill_field(&mut buf[..n]);
         if add {
             crate::field::vecops::add_assign(&mut acc[pos..pos + n],
                                              &buf[..n]);
@@ -202,6 +203,43 @@ pub fn pair_sign(i: usize, j: usize) -> bool {
     i < j // true => add, false => subtract
 }
 
+/// Sorted, deduplicated union of sorted ascending index lists — a k-way
+/// heap merge, O(Σ|lists| · log k). Replaces the concatenate +
+/// `sort_unstable` + `dedup` union of [`assemble`], which re-sorted
+/// already-sorted supports at O(Nαd · log(Nαd)) per user per round
+/// (§Perf).
+pub fn merge_sorted_unions(lists: &[Vec<u32>]) -> Vec<u32> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    if lists.len() == 1 {
+        let mut out = lists[0].clone();
+        out.dedup();
+        return out;
+    }
+    // Ties between lists break on list index — irrelevant for the
+    // deduplicated output, but keeps the pop order total.
+    let mut heap: BinaryHeap<Reverse<(u32, usize)>> = lists
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| !l.is_empty())
+        .map(|(k, l)| Reverse((l[0], k)))
+        .collect();
+    let mut pos = vec![1usize; lists.len()];
+    // Disjoint inputs (the common case at small ρ) union to Σ|lists|.
+    let total: usize = lists.iter().map(|l| l.len()).sum();
+    let mut out: Vec<u32> = Vec::with_capacity(total);
+    while let Some(Reverse((v, k))) = heap.pop() {
+        if out.last() != Some(&v) {
+            out.push(v);
+        }
+        if pos[k] < lists[k].len() {
+            heap.push(Reverse((lists[k][pos[k]], k)));
+            pos[k] += 1;
+        }
+    }
+    out
+}
+
 /// One user's assembled masking plan for a round (eq. 18 inputs).
 pub struct MaskPlan {
     /// U_i: sorted union of pairwise supports (eq. 19) — the coordinates
@@ -247,7 +285,7 @@ pub fn assemble(i: usize, d: usize, round: u32, rho: f64,
     assert!(scratch.len() >= d, "scratch too small");
     debug_assert!(scratch[..d].iter().all(|&v| v == 0));
 
-    let mut union: Vec<u32> = Vec::new();
+    let mut supports: Vec<Vec<u32>> = Vec::with_capacity(pairs.len());
     for pair in pairs {
         let support = pairwise_support(pair.multiplicative, round, rho, d);
         if support.is_empty() {
@@ -264,10 +302,16 @@ pub fn assemble(i: usize, d: usize, round: u32, rho: f64,
                 field::sub(cur, r)
             };
         }
-        union.extend_from_slice(&support);
+        supports.push(support);
     }
-    union.sort_unstable();
-    union.dedup();
+    // U_i (eq. 19) as a k-way merge of the per-pair sorted supports —
+    // no re-sort of already-sorted input (§Perf). A lone support (n = 2
+    // cohorts) is already the union: take it by move, no copy.
+    let union = if supports.len() == 1 {
+        supports.pop().unwrap()
+    } else {
+        merge_sorted_unions(&supports)
+    };
 
     // Private mask r_i on the selected support (eq. 18's select·(ȳ+r_i)),
     // compressed over the sorted union.
@@ -361,6 +405,38 @@ mod tests {
         let b = pairwise_support(s, 5, 0.01, 10_000);
         assert_eq!(a, b);
         assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn merge_sorted_unions_matches_sort_dedup() {
+        prop(100, |rng| {
+            let k = rng.next_u32() as usize % 9;
+            let lists: Vec<Vec<u32>> = (0..k)
+                .map(|_| {
+                    let len = rng.next_u32() as usize % 40;
+                    let mut l: Vec<u32> =
+                        (0..len).map(|_| rng.next_u32() % 128).collect();
+                    l.sort_unstable();
+                    l.dedup();
+                    l
+                })
+                .collect();
+            let mut want: Vec<u32> =
+                lists.iter().flatten().copied().collect();
+            want.sort_unstable();
+            want.dedup();
+            assert_eq!(merge_sorted_unions(&lists), want, "k={k}");
+        });
+    }
+
+    #[test]
+    fn merge_sorted_unions_edge_cases() {
+        assert!(merge_sorted_unions(&[]).is_empty());
+        assert_eq!(merge_sorted_unions(&[vec![3, 7, 9]]), vec![3, 7, 9]);
+        assert_eq!(
+            merge_sorted_unions(&[vec![], vec![1, 2], vec![2, 5], vec![]]),
+            vec![1, 2, 5]
+        );
     }
 
     #[test]

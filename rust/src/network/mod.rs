@@ -10,17 +10,30 @@
 //! faster link. Communication *bytes* are exact; simulated wall clock is
 //! the bandwidth-bound approximation the paper's own measurements live in.
 //!
-//! # Shard-pipeline accounting
+//! # Two-tier executor accounting
 //!
-//! The [`RoundLedger`] also tracks the server's sharded streaming unmask
-//! ([`crate::protocol::shard`]): how many mask-stream jobs ran, how many
-//! shard expansion tasks they decomposed into, and the peak transient
-//! scratch one expansion window held. The memory model behind the last
-//! number: a window expands `threads` shards concurrently and each shard
-//! task holds at most `shard_size` raw words plus `shard_size` accepted
-//! elements, so peak scratch is ≤ `threads · shard_size · 8` bytes —
-//! independent of the model dimension `d` and of the cohort size `N`,
-//! which is what lets one aggregation server absorb fleet-scale rounds.
+//! The [`RoundLedger`] also tracks how the round's hot compute was
+//! scheduled. Both ends of a round feed one persistent work-stealing
+//! executor ([`crate::exec`]): the client phase runs one **tier-1** task
+//! per simulated user (mask assembly + quantize + mask, on per-worker
+//! reused scratch arenas), and the server's unmask runs one tier-1 task
+//! per mask stream, with streams longer than `shard_size` split into
+//! seekable **tier-2** shard tasks. The ledger records, per phase, the
+//! task counts of each tier, how many tasks were *stolen* (executed by a
+//! worker other than the one whose deque they were pushed to — the
+//! load-balancing signal), and the peak transient scratch.
+//!
+//! The memory model behind the scratch number changed in the move from
+//! the windowed pipeline to the executor: instead of a per-window
+//! allocation bounded by construction at `threads · shard_size · 8`
+//! bytes, each worker *retains* an arena of at most one shard of raw
+//! words (plus the client-phase dense buffer), and expanded-but-unapplied
+//! chunks float between expansion and the in-order applier. The reported
+//! peak is the **measured** high-water mark of that float — still
+//! independent of the model dimension `d` and cohort size `N` in
+//! steady state, which is what lets one aggregation server absorb
+//! fleet-scale rounds, but now an observation rather than an assumption
+//! (the windowed reference path keeps the provable bound).
 
 /// Link parameters.
 #[derive(Clone, Copy, Debug)]
@@ -58,14 +71,22 @@ pub struct RoundLedger {
     pub client_compute_s: f64,
     /// Measured host seconds of server compute.
     pub server_compute_s: f64,
-    /// Mask-stream jobs the server's sharded unmask processed this round
-    /// (0 when the monolithic path ran).
+    /// Mask-stream jobs (tier-1 tasks) the server's unmask processed
+    /// this round (0 when the monolithic path ran).
     pub unmask_jobs: usize,
-    /// Shard expansion tasks across those jobs.
+    /// Shard expansion tasks (tier-2) across those jobs.
     pub unmask_shards: usize,
-    /// Peak transient scratch one expansion window held, bytes (the
-    /// O(threads·shard_size) term — see the module docs).
+    /// Peak transient unmask scratch, bytes (windowed: the
+    /// O(threads·shard_size) bound; stealing: the measured high-water
+    /// mark — see the module docs).
     pub unmask_peak_scratch_bytes: usize,
+    /// Unmask tasks executed by a worker that stole them from another
+    /// worker's deque (0 on the windowed/monolithic paths).
+    pub unmask_steals: usize,
+    /// Client-phase tier-1 tasks (one per simulated surviving user).
+    pub client_tasks: usize,
+    /// Client-phase tasks executed via stealing.
+    pub client_steals: usize,
 }
 
 impl RoundLedger {
@@ -96,14 +117,24 @@ impl RoundLedger {
         self.comm_time_s += t;
     }
 
-    /// Record one round's sharded-unmask decomposition (accumulates
-    /// across phases; scratch peaks take the max).
-    pub fn record_unmask_shards(&mut self, jobs: usize, shards: usize,
-                                peak_scratch_bytes: usize) {
-        self.unmask_jobs += jobs;
-        self.unmask_shards += shards;
+    /// Record one round's unmask decomposition (accumulates across
+    /// phases; scratch peaks take the max). Works for both the windowed
+    /// and the work-stealing executor — the stats struct carries the
+    /// per-tier task counts and steal count either way.
+    pub fn record_unmask(&mut self,
+                         stats: &crate::protocol::shard::ShardStats) {
+        self.unmask_jobs += stats.jobs;
+        self.unmask_shards += stats.shards;
+        self.unmask_steals += stats.steals;
         self.unmask_peak_scratch_bytes =
-            self.unmask_peak_scratch_bytes.max(peak_scratch_bytes);
+            self.unmask_peak_scratch_bytes.max(stats.peak_scratch_bytes);
+    }
+
+    /// Record the client-phase scheduling outcome (tier-1 user tasks and
+    /// how many of them were stolen).
+    pub fn record_client_phase(&mut self, tasks: usize, steals: usize) {
+        self.client_tasks += tasks;
+        self.client_steals += steals;
     }
 
     /// Total upload bytes across users.
@@ -178,12 +209,24 @@ mod tests {
 
     #[test]
     fn unmask_shard_accounting_accumulates_and_peaks() {
+        use crate::protocol::shard::ShardStats;
         let mut ledger = RoundLedger::new(2);
-        ledger.record_unmask_shards(3, 48, 1024);
-        ledger.record_unmask_shards(1, 16, 512);
+        ledger.record_unmask(&ShardStats {
+            jobs: 3, shards: 48, peak_scratch_bytes: 1024,
+            rejection_carries: 0, steals: 5,
+        });
+        ledger.record_unmask(&ShardStats {
+            jobs: 1, shards: 16, peak_scratch_bytes: 512,
+            rejection_carries: 0, steals: 2,
+        });
         assert_eq!(ledger.unmask_jobs, 4);
         assert_eq!(ledger.unmask_shards, 64);
+        assert_eq!(ledger.unmask_steals, 7);
         assert_eq!(ledger.unmask_peak_scratch_bytes, 1024);
+        ledger.record_client_phase(10, 3);
+        ledger.record_client_phase(8, 0);
+        assert_eq!(ledger.client_tasks, 18);
+        assert_eq!(ledger.client_steals, 3);
     }
 
     #[test]

@@ -124,19 +124,37 @@ impl ChaCha20Rng {
 
     /// Fill `out` with raw keystream words (no reduction, no rejection) —
     /// one word per slot, so the mapping slot ↔ word index is exact and
-    /// composes with [`Self::seek_word`].
+    /// composes with [`Self::seek_word`]. Consumes the buffered blocks in
+    /// whole-run `copy_from_slice` strides (this is the word source under
+    /// every tier-2 shard expansion, §Perf); bit-identical to repeated
+    /// [`Self::next_u32`].
     pub fn fill_raw(&mut self, out: &mut [u32]) {
-        for v in out.iter_mut() {
-            *v = self.next_u32();
+        let mut k = 0;
+        while k < out.len() {
+            if self.pos == 64 {
+                self.refill();
+            }
+            let n = (out.len() - k).min(64 - self.pos);
+            out[k..k + n].copy_from_slice(&self.buf[self.pos..self.pos + n]);
+            self.pos += n;
+            k += n;
         }
+    }
+
+    /// Refill the 64-word buffer with the next four blocks — the single
+    /// copy of the block4 + counter-advance sequence shared by the
+    /// scalar and bulk draw paths (so they cannot drift apart).
+    #[inline]
+    fn refill(&mut self) {
+        self.buf = chacha::block4(&self.key, self.counter, &self.nonce);
+        self.counter = self.counter.wrapping_add(4);
+        self.pos = 0;
     }
 
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         if self.pos == 64 {
-            self.buf = chacha::block4(&self.key, self.counter, &self.nonce);
-            self.counter = self.counter.wrapping_add(4);
-            self.pos = 0;
+            self.refill();
         }
         let v = self.buf[self.pos];
         self.pos += 1;
@@ -167,9 +185,43 @@ impl ChaCha20Rng {
 
     /// Fill `out` with uniform field elements — the paper's
     /// `PRG(s) → F_q^d` expansion (eq. 11–12).
+    ///
+    /// Bit-identical to repeated [`Self::next_field`] (same sequential
+    /// word scan, same rejection filter) but consumed in whole buffered
+    /// runs: the per-element refill check and buffer indexing disappear
+    /// from the hot loop, so the block4 4-lane refills feed a tight
+    /// accept-and-store pass (§Perf — this is what the dense mask hot
+    /// loops sit on).
     pub fn fill_field(&mut self, out: &mut [u32]) {
-        for v in out.iter_mut() {
-            *v = self.next_field();
+        let mut k = 0;
+        while k < out.len() {
+            if self.pos == 64 {
+                self.refill();
+            }
+            let avail = 64 - self.pos;
+            if out.len() - k >= avail {
+                // Bulk: the whole buffered run is needed — scan it in one
+                // pass. Even with every word accepted, k stays in bounds.
+                for i in self.pos..64 {
+                    let w = self.buf[i];
+                    if w < Q {
+                        out[k] = w;
+                        k += 1;
+                    }
+                }
+                self.pos = 64;
+            } else {
+                // Tail: element-at-a-time up to the exact count, leaving
+                // the remaining buffered words for the next draw.
+                while k < out.len() && self.pos < 64 {
+                    let w = self.buf[self.pos];
+                    self.pos += 1;
+                    if w < Q {
+                        out[k] = w;
+                        k += 1;
+                    }
+                }
+            }
         }
     }
 
@@ -259,6 +311,33 @@ mod tests {
         assert_ne!(x, y);
         assert_ne!(x, z);
         assert_ne!(y, z);
+    }
+
+    #[test]
+    fn fill_field_bulk_matches_next_field_scan() {
+        // The bulk path must be bit-identical to the scalar rejection
+        // scan — same accepted elements AND same stream position after —
+        // across random lengths and arbitrary buffer offsets.
+        prop(60, |rng| {
+            let mut w = [0u32; 8];
+            for v in w.iter_mut() {
+                *v = rng.next_u32();
+            }
+            let seed = Seed(w);
+            let n = (rng.next_u32() as usize) % 400;
+            let pre = (rng.next_u32() as usize) % 70; // desync buffer pos
+            let mut a = ChaCha20Rng::new(seed, 7, 3);
+            let mut b = ChaCha20Rng::new(seed, 7, 3);
+            for _ in 0..pre {
+                a.next_u32();
+                b.next_u32();
+            }
+            let mut bulk = vec![0u32; n];
+            a.fill_field(&mut bulk);
+            let scalar: Vec<u32> = (0..n).map(|_| b.next_field()).collect();
+            assert_eq!(bulk, scalar, "n={n} pre={pre}");
+            assert_eq!(a.next_u32(), b.next_u32(), "stream desynced");
+        });
     }
 
     #[test]

@@ -263,6 +263,27 @@ impl Server {
         Ok((quantize::dequantize(&self.agg, self.params.c), stats))
     }
 
+    /// Unmask through the two-tier work-stealing executor
+    /// ([`crate::exec`]): each dense mask stream is a tier-1 job, split
+    /// into seekable tier-2 shard tasks when longer than
+    /// `cfg.shard_size`. Bit-exact to [`Self::finish_round`]. Jobs here
+    /// are seed-sized (all dense), so materializing the list is O(N²)
+    /// seeds.
+    pub fn finish_round_stealing(&mut self, round: u32,
+                                 responses: &[UnmaskResponse],
+                                 cfg: &ShardConfig,
+                                 exec: &crate::exec::Executor)
+                                 -> anyhow::Result<(Vec<f32>, ShardStats)> {
+        let Server { params, roster, received, agg, .. } = self;
+        let mut jobs: Vec<MaskJob> = Vec::new();
+        Self::for_each_unmask_job(
+            params, roster, received, round, responses,
+            |job| jobs.push(job))?;
+        let stats = crate::exec::jobs::apply_jobs_stealing(agg, &jobs, cfg,
+                                                           exec);
+        Ok((quantize::dequantize(&self.agg, self.params.c), stats))
+    }
+
     pub fn aggregate_field(&self) -> &[u32] {
         &self.agg
     }

@@ -34,6 +34,28 @@
 //! stays a single `d` vector; shard application is a contiguous
 //! vectorized pass ([`crate::field::vecops::apply_signed`]) for dense
 //! masks and an index-bucketed scatter for sparse ones.
+//!
+//! # Two-tier execution
+//!
+//! This module defines the *decomposition* — [`MaskJob`]s, word-range
+//! shard splitting, the acceptance carry — and two of the three engines
+//! that consume it:
+//!
+//! * [`apply_job_monolithic`] — one sequential stream at a time, the
+//!   differential-test anchor;
+//! * [`apply_jobs_sharded`] — the windowed pipeline above: parallel
+//!   *within* a stream, a thread barrier per window of `threads` shards.
+//!   Kept as the bounded-memory reference executor (its scratch bound is
+//!   provable, not just measured);
+//! * [`crate::exec::jobs::apply_jobs_stealing`] — the production engine:
+//!   a persistent work-stealing pool schedules whole streams as tier-1
+//!   tasks and splits streams longer than `shard_size` into seekable
+//!   tier-2 shard tasks, so rounds made of many short sparse streams
+//!   parallelize across *jobs* instead of degenerating to serial windows.
+//!
+//! All three are bit-exact interchangeable: per-job application is
+//! in-order with the acceptance carry, and cross-job interleaving
+//! commutes in `F_q`. `tests/shard_equivalence.rs` pins all pairs.
 
 use crate::coordinator::parallel_map;
 use crate::field::{self, vecops, Q};
@@ -90,16 +112,22 @@ pub enum MaskJob {
 /// Per-round pipeline accounting, surfaced through the network ledger.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ShardStats {
-    /// Mask streams processed.
+    /// Mask streams processed (tier-1 task count).
     pub jobs: usize,
-    /// Shard expansion tasks processed across all jobs.
+    /// Shard expansion tasks processed across all jobs (tier-2 task
+    /// count; a stream shorter than `shard_size` counts as one).
     pub shards: usize,
-    /// Peak transient scratch held by one expansion window, bytes — the
-    /// O(threads · shard_size) term.
+    /// Peak transient scratch, bytes. Windowed path: held by one
+    /// expansion window — the O(threads · shard_size) term. Stealing
+    /// path: measured high-water mark of in-flight raw words plus
+    /// expanded-but-unapplied chunks.
     pub peak_scratch_bytes: usize,
     /// Elements completed through the sequential rejection tail (expected
     /// ~0: a word is rejected with probability 5/2^32).
     pub rejection_carries: usize,
+    /// Tasks executed by a worker that stole them from another worker's
+    /// deque (always 0 on the windowed path).
+    pub steals: usize,
 }
 
 impl ShardStats {
@@ -112,6 +140,7 @@ impl ShardStats {
         self.peak_scratch_bytes =
             self.peak_scratch_bytes.max(other.peak_scratch_bytes);
         self.rejection_carries += other.rejection_carries;
+        self.steals += other.steals;
     }
 }
 
@@ -215,22 +244,37 @@ fn apply_stream(agg: &mut [u32], seed: Seed, stream: u32, round: u32,
     // words the monolithic scan would consume after its first `len`.
     if elem < len {
         stats.rejection_carries += len - elem;
-        let mut rng = ChaCha20Rng::new_at_word(seed, stream, round, len as u64);
-        let mut tail = Vec::with_capacity(len - elem);
-        while elem + tail.len() < len {
-            let w = rng.next_u32();
-            if w < accept_below {
-                tail.push(w);
-            }
-        }
-        apply_chunk(agg, coords, elem, &tail, add);
+        apply_rejection_tail(agg, coords, elem, len, seed, stream, round,
+                             add, accept_below);
     }
     stats
 }
 
+/// Complete a rejection deficit sequentially from word `len` — exactly
+/// the words the monolithic scan would consume after its first `len`.
+/// The single copy of the carry-tail logic, shared by the windowed
+/// pipeline above and the work-stealing engine
+/// ([`crate::exec::jobs`]) so the two cannot drift apart.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn apply_rejection_tail(agg: &mut [u32], coords: Option<&[u32]>,
+                                   elem: usize, len: usize, seed: Seed,
+                                   stream: u32, round: u32, add: bool,
+                                   accept_below: u32) {
+    let mut rng = ChaCha20Rng::new_at_word(seed, stream, round, len as u64);
+    let mut tail = Vec::with_capacity(len - elem);
+    while elem + tail.len() < len {
+        let w = rng.next_u32();
+        if w < accept_below {
+            tail.push(w);
+        }
+    }
+    apply_chunk(agg, coords, elem, &tail, add);
+}
+
 /// Apply `vals` (stream elements `elem..elem+vals.len()`) to `agg`.
-fn apply_chunk(agg: &mut [u32], coords: Option<&[u32]>, elem: usize,
-               vals: &[u32], add: bool) {
+/// Shared by all three executors (monolithic, windowed, work-stealing).
+pub(crate) fn apply_chunk(agg: &mut [u32], coords: Option<&[u32]>,
+                          elem: usize, vals: &[u32], add: bool) {
     match coords {
         None => {
             vecops::apply_signed(&mut agg[elem..elem + vals.len()], vals, add);

@@ -25,7 +25,7 @@
 //! (built by `for_each_unmask_job`, one job alive at a time): per
 //! dropped user i and survivor j, the signed additive mask `r_ij` on the
 //! regenerated support `supp(b_ij)`, and per survivor j, the private mask
-//! `r_j` on the uploaded `U_j`. Two equivalent executors consume that
+//! `r_j` on the uploaded `U_j`. Three equivalent executors consume that
 //! stream:
 //!
 //! * [`Server::finish_round`] — monolithic: each stream expanded
@@ -37,10 +37,17 @@
 //!   run in parallel, and per-shard acceptance counts carry the exact
 //!   rejection-sampling alignment. Peak transient memory is
 //!   O(threads·shard_size) instead of O(d) per stream, and the expansion
-//!   (the dominant cost) parallelizes. Output is bit-exact equal to the
-//!   monolithic path — `tests/shard_equivalence.rs` drives both executors
-//!   over random cohorts, dropouts and non-divisible `d % shard_size`
-//!   and asserts field-level equality.
+//!   (the dominant cost) parallelizes within a stream;
+//! * [`Server::finish_round_stealing`] — the production engine
+//!   ([`crate::exec`]): every stream is a tier-1 job on a persistent
+//!   work-stealing pool, with > shard_size streams splitting into tier-2
+//!   seekable shard tasks, so a round of many short sparse streams
+//!   parallelizes across jobs instead of degenerating to serial windows.
+//!
+//! Output of all three is bit-exact equal — `tests/shard_equivalence.rs`
+//! drives every pair over random cohorts, dropouts, non-divisible
+//! `d % shard_size` and worker counts 1..8 and asserts field-level
+//! equality.
 
 use crate::dh;
 use crate::field;
@@ -408,6 +415,31 @@ impl Server {
             params, roster, upload_indices, round, responses,
             |job| stats.merge(shard::apply_jobs_sharded(
                 agg, std::slice::from_ref(&job), cfg)))?;
+        Ok((quantize::dequantize(&self.agg, self.params.c), stats))
+    }
+
+    /// Unmask through the two-tier work-stealing executor
+    /// ([`crate::exec`]): every mask stream is a tier-1 job scheduled
+    /// across the pool at once — rounds with many short sparse streams
+    /// parallelize across *jobs* instead of inside each one — and
+    /// streams longer than `cfg.shard_size` split further into seekable
+    /// tier-2 shard tasks. Bit-exact to [`Self::finish_round`]. Unlike
+    /// the streamed windowed path the whole job list is materialized
+    /// (that is what job-level parallelism schedules over); the supports
+    /// are compressed (O(ρd) per pair), so this is O(N²ρd) seed-and-index
+    /// metadata, not O(N·d) mask data.
+    pub fn finish_round_stealing(&mut self, round: u32,
+                                 responses: &[UnmaskResponse],
+                                 cfg: &ShardConfig,
+                                 exec: &crate::exec::Executor)
+                                 -> anyhow::Result<(Vec<f32>, ShardStats)> {
+        let Server { params, roster, upload_indices, agg, .. } = self;
+        let mut jobs: Vec<MaskJob> = Vec::new();
+        Self::for_each_unmask_job(
+            params, roster, upload_indices, round, responses,
+            |job| jobs.push(job))?;
+        let stats = crate::exec::jobs::apply_jobs_stealing(agg, &jobs, cfg,
+                                                           exec);
         Ok((quantize::dequantize(&self.agg, self.params.c), stats))
     }
 

@@ -1,17 +1,27 @@
-//! Differential equivalence of the sharded streaming unmask pipeline
-//! against the monolithic reference path, over full protocol rounds:
-//! random `N`, `d`, `alpha`, dropout sets, shard sizes (including
+//! Differential equivalence of every unmask executor against the
+//! monolithic reference path, over full protocol rounds: random `N`,
+//! `d`, `alpha`, dropout sets, shard sizes (including
 //! `d % shard_size != 0` remainders and shard_size > d), and — through a
 //! lowered acceptance bound — the rejection-sampling carry logic that
 //! real keystreams only exercise with probability ~1.2e-9 per word.
 //!
-//! Together the property tests here run > 100 seeded cases; every one
+//! Two engines are pinned against the monolithic anchor:
+//!
+//! * the **windowed** shard pipeline (PR 1's bounded-memory reference);
+//! * the **work-stealing** two-tier executor — the scheduler-determinism
+//!   suite: output must be bit-exact across random worker counts (1..8),
+//!   shard sizes, and forced uneven stealing (one long dense stream
+//!   plus many short sparse streams — the mix where steal order varies
+//!   most between runs).
+//!
+//! Together the property tests here run > 150 seeded cases; every one
 //! asserts **bit-exact** field-level equality, not approximate closeness.
 
+use sparsesecagg::exec::{jobs as exec_jobs, Executor};
 use sparsesecagg::field;
 use sparsesecagg::prg::{ChaCha20Rng, Seed};
 use sparsesecagg::protocol::messages::UnmaskResponse;
-use sparsesecagg::protocol::shard::{self, ShardConfig};
+use sparsesecagg::protocol::shard::{self, MaskJob, ShardConfig};
 use sparsesecagg::protocol::{secagg, sparse, Params};
 use sparsesecagg::testutil::prop;
 
@@ -214,6 +224,231 @@ fn rejection_carries_stay_bit_exact() {
             assert!(stats.rejection_carries > 0,
                     "expected rejection carries at accept={accept:#x}");
         }
+    });
+}
+
+/// Scheduler determinism, full protocol rounds: the work-stealing
+/// executor must produce the bit-exact monolithic aggregate whatever the
+/// worker count (1..8), shard size, or steal interleaving. Covers both
+/// executor consumers — the client phase (per-user tier-1 tasks on
+/// worker arenas) runs inside `run_round`-equivalent server feeding.
+#[test]
+fn sparse_round_stealing_equals_monolithic() {
+    prop(25, |rng| {
+        let n = 4 + (rng.next_u32() as usize % 8);
+        let d = 100 + (rng.next_u32() as usize % 900);
+        let alpha = 0.05 + 0.6 * rng.next_f32() as f64;
+        let theta = 0.3 * rng.next_f32() as f64;
+        let params = Params { n, d, alpha, theta, c: 2048.0 };
+        let entropy = 4_000 + rng.next_u32() as u64;
+        let round = rng.next_u32() % 50;
+        let threads = 1 + (rng.next_u32() as usize % 8);
+        let exec = Executor::new(threads);
+        let cfg = ShardConfig::new(random_shard_size(rng, d), threads);
+
+        let (users, mut mono) = sparse::setup(params, entropy);
+        let mut stolen = sparse::Server::new(params);
+        let ads: Vec<_> = users.iter().map(|u| u.advertise()).collect();
+        stolen.collect_keys(&ads);
+
+        let ys = random_grads(rng, n, d);
+        let beta = 1.0 / n as f64;
+        let dropped = random_dropouts(rng, n);
+
+        mono.begin_round();
+        stolen.begin_round();
+        let mut scratch = vec![0u32; d];
+        for u in users.iter().filter(|u| !dropped.contains(&u.id)) {
+            let plan = u.mask_plan(round, &params, &mut scratch);
+            let up = u.masked_upload(round, &ys[u.id], beta, &params, plan);
+            mono.receive_upload(up.clone());
+            stolen.receive_upload(up);
+        }
+        let req = mono.unmask_request();
+        let responses: Vec<UnmaskResponse> = users
+            .iter()
+            .filter(|u| !dropped.contains(&u.id))
+            .map(|u| u.respond_unmask(&req))
+            .collect();
+
+        let out_mono = mono.finish_round(round, &responses).unwrap();
+        let (out_stolen, stats) = stolen
+            .finish_round_stealing(round, &responses, &cfg, &exec)
+            .unwrap();
+
+        assert_eq!(mono.aggregate_field(), stolen.aggregate_field(),
+                   "field aggregate diverged: n={n} d={d} alpha={alpha:.2} \
+                    shard={} threads={threads} dropped={dropped:?}",
+                   cfg.shard_size);
+        assert_eq!(out_mono, out_stolen, "dequantized output diverged");
+        assert!(stats.jobs > 0);
+    });
+}
+
+#[test]
+fn secagg_round_stealing_equals_monolithic() {
+    prop(20, |rng| {
+        let n = 4 + (rng.next_u32() as usize % 7);
+        let d = 64 + (rng.next_u32() as usize % 700);
+        let theta = 0.3 * rng.next_f32() as f64;
+        let params = Params { n, d, alpha: 1.0, theta, c: 1024.0 };
+        let entropy = 7_000 + rng.next_u32() as u64;
+        let round = rng.next_u32() % 50;
+        let threads = 1 + (rng.next_u32() as usize % 8);
+        let exec = Executor::new(threads);
+        let cfg = ShardConfig::new(random_shard_size(rng, d), threads);
+
+        let (users, mut mono) = secagg::setup(params, entropy);
+        let mut stolen = secagg::Server::new(params);
+        let ads: Vec<_> = users.iter().map(|u| u.advertise()).collect();
+        stolen.collect_keys(&ads);
+
+        let ys = random_grads(rng, n, d);
+        let beta = 1.0 / n as f64;
+        let dropped = random_dropouts(rng, n);
+
+        mono.begin_round();
+        stolen.begin_round();
+        for u in users.iter().filter(|u| !dropped.contains(&u.id)) {
+            let up = u.masked_upload(round, &ys[u.id], beta, &params);
+            mono.receive_upload(up.clone());
+            stolen.receive_upload(up);
+        }
+        let req = mono.unmask_request();
+        let responses: Vec<UnmaskResponse> = users
+            .iter()
+            .filter(|u| !dropped.contains(&u.id))
+            .map(|u| u.respond_unmask(&req))
+            .collect();
+
+        let out_mono = mono.finish_round(round, &responses).unwrap();
+        let (out_stolen, _stats) = stolen
+            .finish_round_stealing(round, &responses, &cfg, &exec)
+            .unwrap();
+
+        assert_eq!(mono.aggregate_field(), stolen.aggregate_field(),
+                   "n={n} d={d} threads={threads} dropped={dropped:?}");
+        assert_eq!(out_mono, out_stolen);
+    });
+}
+
+/// Forced uneven stealing: one long dense stream (splits into many
+/// tier-2 shard tasks) plus many short sparse streams (tier-1 leaves).
+/// Whichever worker opens the dense stream floods its own deque while
+/// the short jobs sit on others' — maximum steal-order variance. The
+/// result must stay bit-exact at every worker count.
+#[test]
+fn stealing_uneven_mix_long_dense_plus_short_sparse_is_bit_exact() {
+    let d = 40_000usize;
+    let mut rng = ChaCha20Rng::from_seed_u64(0xfeed_1234);
+    let mut jobs: Vec<MaskJob> = vec![MaskJob::Dense {
+        seed: rand_seed(&mut rng),
+        stream: 1,
+        round: 2,
+        add: true,
+    }];
+    for _ in 0..48 {
+        // short sparse streams: ~0.5% of d each
+        let indices: Vec<u32> = (0..d as u32)
+            .filter(|_| rng.next_f32() < 0.005)
+            .collect();
+        jobs.push(MaskJob::Indexed {
+            seed: rand_seed(&mut rng),
+            stream: 3,
+            round: 2,
+            add: rng.next_u32() & 1 == 0,
+            indices,
+        });
+    }
+    let base: Vec<u32> = (0..d).map(|_| rng.next_field()).collect();
+    let mut mono = base.clone();
+    for job in &jobs {
+        shard::apply_job_monolithic(&mut mono, job);
+    }
+    for threads in 1..=8usize {
+        let exec = Executor::new(threads);
+        let cfg = ShardConfig::new(1 << 12, threads);
+        let mut stolen = base.clone();
+        let stats = exec_jobs::apply_jobs_stealing(&mut stolen, &jobs, &cfg,
+                                                   &exec);
+        assert_eq!(stolen, mono, "threads={threads}");
+        assert_eq!(stats.jobs, jobs.len());
+        // dense stream alone contributes ceil(40000/4096) tier-2 tasks
+        assert!(stats.shards >= jobs.len() + 9);
+        assert_eq!(stats.rejection_carries, 0);
+    }
+}
+
+/// Rejection carries under real stealing: lowered acceptance bound so
+/// every shard boundary misaligns, across executors of 1..6 workers,
+/// with dense and sparse jobs in the same batch.
+#[test]
+fn stealing_rejection_carries_stay_bit_exact() {
+    prop(18, |rng| {
+        let d = 120 + (rng.next_u32() as usize % 400);
+        let threads = 1 + (rng.next_u32() as usize % 6);
+        let exec = Executor::new(threads);
+        let cfg = ShardConfig::new(1 + (rng.next_u32() as usize % 50),
+                                   threads);
+        let accept = (1u32 << 30) + rng.next_u32() % (1u32 << 31);
+        let njobs = 1 + (rng.next_u32() as usize % 4);
+        let jobs: Vec<MaskJob> = (0..njobs)
+            .map(|j| {
+                let seed = rand_seed(rng);
+                let add = rng.next_u32() & 1 == 0;
+                // Job 0 is always dense: at d ≥ 120 words and ≤ 75%
+                // acceptance, a zero-rejection stream is ~impossible, so
+                // the carries > 0 assertion below cannot flake.
+                if j == 0 || rng.next_u32() & 1 == 0 {
+                    MaskJob::Dense { seed, stream: 2, round: 5, add }
+                } else {
+                    MaskJob::Indexed {
+                        seed,
+                        stream: 2,
+                        round: 5,
+                        add,
+                        indices: (0..d as u32)
+                            .filter(|_| rng.next_f32() < 0.3)
+                            .collect(),
+                    }
+                }
+            })
+            .collect();
+        let base: Vec<u32> = (0..d).map(|_| rng.next_field()).collect();
+
+        // Sequential rejection-sampling reference, one job at a time.
+        let mut want = base.clone();
+        for job in &jobs {
+            let (seed, coords, add) = match job {
+                MaskJob::Dense { seed, add, .. } => (*seed, None, *add),
+                MaskJob::Indexed { seed, add, indices, .. } => {
+                    (*seed, Some(indices), *add)
+                }
+            };
+            let len = coords.map_or(d, |c| c.len());
+            let mut src = ChaCha20Rng::new(seed, 2, 5);
+            let mut k = 0usize;
+            while k < len {
+                let w = src.next_u32();
+                if w >= accept {
+                    continue;
+                }
+                let l = coords.map_or(k, |c| c[k] as usize);
+                want[l] = if add {
+                    field::add(want[l], w)
+                } else {
+                    field::sub(want[l], w)
+                };
+                k += 1;
+            }
+        }
+
+        let mut got = base;
+        let stats = exec_jobs::apply_jobs_stealing_accept(
+            &mut got, &jobs, &cfg, &exec, accept);
+        assert_eq!(got, want, "d={d} threads={threads} accept={accept:#x}");
+        assert!(stats.rejection_carries > 0,
+                "carry machinery must have run at accept={accept:#x}");
     });
 }
 
