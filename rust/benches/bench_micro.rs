@@ -89,9 +89,49 @@ fn write_bench_json(rows: &[ExecRow], threads: usize)
     } else {
         "BENCH_round.json"
     };
+    // Trajectory guard: never clobber real measurements with
+    // schema-only zeros (a toolchain-less container run, or a broken
+    // clock). "Real" = any strictly positive ms field in the existing
+    // file; "zeros" = every timing in the new rows is 0.
+    let new_all_zero = rows.iter().all(|r| {
+        r.mono_ms == 0.0 && r.win_ms == 0.0 && r.steal_ms == 0.0
+    });
+    if new_all_zero {
+        if let Ok(existing) = std::fs::read_to_string(path) {
+            if json_has_nonzero_ms(&existing) {
+                println!(
+                    "refusing to overwrite {path}: it holds non-zero \
+                     measurements and the new results are schema-only \
+                     zeros"
+                );
+                return Ok(());
+            }
+        }
+    }
     std::fs::write(path, s)?;
     println!("wrote {path}");
     Ok(())
+}
+
+/// Does the existing trajectory JSON carry any strictly positive
+/// `*_ms` measurement? (Hand-rolled scan — no serde in the vendored
+/// crate set; the file is machine-written by this bench, so the
+/// `"key": value` shape is stable.)
+fn json_has_nonzero_ms(text: &str) -> bool {
+    let mut rest = text;
+    while let Some(k) = rest.find("_ms\":") {
+        let tail = &rest[k + 5..];
+        let num: String = tail
+            .chars()
+            .skip_while(|c| c.is_whitespace())
+            .take_while(|c| c.is_ascii_digit() || *c == '.' || *c == '-')
+            .collect();
+        if num.parse::<f64>().map(|v| v > 0.0).unwrap_or(false) {
+            return true;
+        }
+        rest = tail;
+    }
+    false
 }
 
 /// Windowed vs work-stealing vs monolithic over the regimes PR 2 is

@@ -1,0 +1,363 @@
+//! Byzantine traffic generator — the adversarial side of the frame-level
+//! round driver.
+//!
+//! A configurable fraction of the cohort is byzantine: those users never
+//! contribute an honest upload; instead the [`Adversary`] injects frames
+//! from a seeded, deterministic attack catalog into the round's
+//! [`crate::transport::Transport`] — replays, sender spoofing, wrong
+//! dimensions, bitmap/values mismatches, hostile count fields, garbage
+//! payloads, unknown tags, truncations, phase-confused uploads, replayed
+//! responses, and forged share responses. Every catalog entry is
+//! *detectably* invalid, so a hardened server must reject each one with
+//! a typed [`crate::protocol::IngestError`] and finish the round
+//! **bit-exactly** equal to the same round with the byzantine users
+//! simply dropped (`tests/adversarial.rs` pins this for both protocols
+//! and all three unmask executors). What a server cannot detect —
+//! well-formed uploads carrying lies — is outside secure aggregation's
+//! contract; forged share *values* behind valid evaluation points are
+//! caught at reconstruction whenever the response set carries
+//! redundancy (> t+1 distinct shares) and fail the round cleanly
+//! instead (at exact quorum they are information-theoretically
+//! undetectable — see [`crate::shamir::reconstruct`]).
+
+use crate::coordinator::ProtocolKind;
+use crate::prg::ChaCha20Rng;
+use crate::protocol::messages::*;
+use crate::protocol::wire::{self, Tag};
+use crate::protocol::Params;
+use crate::shamir::Share;
+use crate::transport::Transport;
+
+/// One entry of the byzantine catalog.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Attack {
+    /// Re-send an honest user's captured upload frame verbatim
+    /// (network-level replay → `DuplicateUpload`).
+    ReplayUpload,
+    /// Re-send an honest frame from the byzantine's own endpoint
+    /// (header id ≠ transport endpoint → `SpoofedSender`).
+    SpoofUpload,
+    /// Well-formed upload with a foreign model dimension
+    /// (→ `WrongDimension`).
+    WrongDimension,
+    /// Sparse bitmap popcount disagreeing with the values region — raw
+    /// bytes, unrepresentable through the encoder (→ `Malformed`).
+    LengthMismatch,
+    /// Count/dimension field claiming far more elements than the
+    /// payload holds (→ `Malformed`, without the allocation).
+    OversizedCount,
+    /// Random bytes behind a valid header (→ `Malformed`).
+    GarbagePayload,
+    /// Unknown message tag (→ `Malformed`).
+    UnknownTag,
+    /// Frame cut short mid-payload (→ `Malformed` length mismatch).
+    Truncated,
+    /// Well-formed upload injected during the Unmask phase
+    /// (→ `WrongPhase`).
+    PhaseConfusion,
+    /// Re-send an honest user's unmask response verbatim
+    /// (→ `DuplicateResponse`).
+    ReplayResponse,
+    /// Unsolicited response carrying shares at the wrong evaluation
+    /// point for requested owners (→ `UnsolicitedResponse`).
+    ForgedShares,
+}
+
+/// Every attack, in catalog order. Upload-phase entries first, then the
+/// Unmask-phase entries.
+pub const FULL_CATALOG: &[Attack] = &[
+    Attack::ReplayUpload,
+    Attack::SpoofUpload,
+    Attack::WrongDimension,
+    Attack::LengthMismatch,
+    Attack::OversizedCount,
+    Attack::GarbagePayload,
+    Attack::UnknownTag,
+    Attack::Truncated,
+    Attack::PhaseConfusion,
+    Attack::ReplayResponse,
+    Attack::ForgedShares,
+];
+
+impl Attack {
+    /// Does this entry fire during the MaskedInput phase (as opposed to
+    /// the Unmask phase)?
+    fn in_upload_phase(self) -> bool {
+        !matches!(
+            self,
+            Attack::PhaseConfusion | Attack::ReplayResponse
+                | Attack::ForgedShares
+        )
+    }
+}
+
+/// Seeded byzantine frame generator. The first `⌊frac·n⌋` user ids are
+/// byzantine (fixed-prefix assignment is WLOG under the uniform model,
+/// mirroring [`crate::coordinator::Coordinator::honest_mask`]; floor,
+/// so an accepted `frac < 0.5` can never round up to a quorum-breaking
+/// exact half). Each byzantine user cycles deterministically through
+/// `catalog`.
+pub struct Adversary {
+    pub frac: f64,
+    pub seed: u64,
+    pub catalog: Vec<Attack>,
+    /// Frames injected so far (across phases and rounds) — lets tests
+    /// assert the attack surface was actually exercised.
+    pub injected: usize,
+    /// Rotation cursor into `catalog`.
+    cursor: usize,
+}
+
+impl Adversary {
+    /// Full-catalog adversary.
+    pub fn new(frac: f64, seed: u64) -> Self {
+        Self::with_catalog(frac, seed, FULL_CATALOG)
+    }
+
+    pub fn with_catalog(frac: f64, seed: u64, catalog: &[Attack]) -> Self {
+        assert!(!catalog.is_empty(), "adversary needs at least one attack");
+        Adversary {
+            frac,
+            seed,
+            catalog: catalog.to_vec(),
+            injected: 0,
+            cursor: 0,
+        }
+    }
+
+    /// `mask[i]` ⇔ user `i` is byzantine.
+    pub fn byzantine_set(&self, n: usize) -> Vec<bool> {
+        let a = (self.frac * n as f64).floor() as usize;
+        (0..n).map(|i| i < a).collect()
+    }
+
+    fn rng(&self, id: usize, salt: u64) -> ChaCha20Rng {
+        ChaCha20Rng::from_seed_u64(
+            self.seed ^ salt ^ (id as u64) << 16,
+        )
+    }
+
+    fn next_attack(&mut self) -> Attack {
+        let a = self.catalog[self.cursor % self.catalog.len()];
+        self.cursor += 1;
+        a
+    }
+
+    /// Inject the upload-phase slice of the catalog: one attack frame
+    /// per byzantine user, after the honest frames are already queued.
+    /// `honest` is the captured honest traffic `(endpoint, frame)` —
+    /// replay/spoof material.
+    pub fn inject_uploads(&mut self, bus: &mut dyn Transport,
+                          params: &Params, kind: ProtocolKind,
+                          honest: &[(usize, Vec<u8>)]) {
+        let byz = self.byzantine_set(params.n);
+        for id in 0..params.n {
+            if !byz[id] {
+                continue;
+            }
+            let attack = self.next_attack();
+            if !attack.in_upload_phase() {
+                continue; // fires in inject_responses instead
+            }
+            self.emit_upload_attack(bus, params, kind, id, attack, honest);
+        }
+    }
+
+    /// Inject the Unmask-phase slice of the catalog (same per-user
+    /// rotation; upload-phase entries assigned here fall back to a
+    /// phase-confused upload, which is exactly what a straggling
+    /// attacker looks like).
+    pub fn inject_responses(&mut self, bus: &mut dyn Transport,
+                            params: &Params, kind: ProtocolKind,
+                            req: &UnmaskRequest,
+                            honest: &[(usize, Vec<u8>)]) {
+        let byz = self.byzantine_set(params.n);
+        for id in 0..params.n {
+            if !byz[id] {
+                continue;
+            }
+            match self.next_attack() {
+                Attack::ReplayResponse => {
+                    if let Some((from, buf)) = honest.first() {
+                        bus.to_server(*from, buf.clone());
+                        self.injected += 1;
+                    }
+                }
+                Attack::ForgedShares => {
+                    // Shares for genuinely requested owners, but from an
+                    // unsolicited sender and at a wrong evaluation point.
+                    let share = |owner: usize| {
+                        (owner, Share { x: id as u32 + 2, y: [1u32; 8] })
+                    };
+                    let resp = UnmaskResponse {
+                        id,
+                        dh_shares: req.dropped.iter().take(2).copied()
+                            .map(share).collect(),
+                        seed_shares: req.survivors.iter().take(2).copied()
+                            .map(share).collect(),
+                    };
+                    bus.to_server(id, wire::encode_unmask_response(&resp));
+                    self.injected += 1;
+                }
+                // PhaseConfusion proper, plus any upload-phase entry
+                // landing in this phase: a valid-shaped upload frame
+                // arriving after uploads closed.
+                _ => {
+                    let buf = self.valid_shaped_upload(params, kind, id);
+                    bus.to_server(id, buf);
+                    self.injected += 1;
+                }
+            }
+        }
+    }
+
+    /// A decodable upload frame (right `d`, sorted in-range support,
+    /// field-range values) from byzantine `id` — only the *phase* makes
+    /// it invalid.
+    fn valid_shaped_upload(&self, params: &Params, kind: ProtocolKind,
+                           id: usize) -> Vec<u8> {
+        match kind {
+            ProtocolKind::Sparse => {
+                wire::encode_sparse_upload(&SparseMaskedUpload {
+                    id,
+                    indices: vec![0, 1],
+                    values: vec![1, 2],
+                    d: params.d,
+                })
+            }
+            ProtocolKind::SecAgg => {
+                wire::encode_dense_upload(&DenseMaskedUpload {
+                    id,
+                    values: vec![1u32; params.d],
+                })
+            }
+        }
+    }
+
+    fn emit_upload_attack(&mut self, bus: &mut dyn Transport,
+                          params: &Params, kind: ProtocolKind, id: usize,
+                          attack: Attack, honest: &[(usize, Vec<u8>)]) {
+        let upload_tag = match kind {
+            ProtocolKind::Sparse => Tag::SparseMaskedUpload as u32,
+            ProtocolKind::SecAgg => Tag::DenseMaskedUpload as u32,
+        };
+        let frame: Option<(usize, Vec<u8>)> = match attack {
+            Attack::ReplayUpload => {
+                honest.first().map(|(from, buf)| (*from, buf.clone()))
+            }
+            Attack::SpoofUpload => {
+                // Header still claims the honest sender; the byzantine
+                // endpoint submits it.
+                honest.first().map(|(_, buf)| (id, buf.clone()))
+            }
+            Attack::WrongDimension => Some((id, match kind {
+                ProtocolKind::Sparse => {
+                    wire::encode_sparse_upload(&SparseMaskedUpload {
+                        id,
+                        indices: vec![0, 1],
+                        values: vec![1, 2],
+                        d: params.d + 1,
+                    })
+                }
+                ProtocolKind::SecAgg => {
+                    wire::encode_dense_upload(&DenseMaskedUpload {
+                        id,
+                        values: vec![1u32; params.d - 1],
+                    })
+                }
+            })),
+            Attack::LengthMismatch => {
+                // Sparse-style frame claiming a 2-bit support but
+                // carrying one value. (Sent against either server: the
+                // SecAgg server rejects the tag itself.)
+                let mut payload = Vec::new();
+                payload.extend_from_slice(&16u32.to_le_bytes()); // d = 16
+                payload.extend_from_slice(&[0b0000_0011, 0]); // popcount 2
+                payload.extend_from_slice(&7u32.to_le_bytes()); // 1 value
+                Some((id, raw_frame(id as u32,
+                                    Tag::SparseMaskedUpload as u32,
+                                    &payload)))
+            }
+            Attack::OversizedCount => {
+                // Dimension/count field of u32::MAX over a 16-byte body.
+                let mut payload = Vec::new();
+                payload.extend_from_slice(&u32::MAX.to_le_bytes());
+                payload.extend_from_slice(&[0u8; 12]);
+                Some((id, raw_frame(id as u32, upload_tag, &payload)))
+            }
+            Attack::GarbagePayload => {
+                let mut rng = self.rng(id, 0x6a5b);
+                let len = 8 + (rng.next_u32() as usize % 64);
+                let payload: Vec<u8> =
+                    (0..len).map(|_| rng.next_u32() as u8).collect();
+                Some((id, raw_frame(id as u32, upload_tag, &payload)))
+            }
+            Attack::UnknownTag => {
+                Some((id, raw_frame(id as u32, 0xbad_7a6, &[0u8; 8])))
+            }
+            Attack::Truncated => {
+                let mut buf = self.valid_shaped_upload(params, kind, id);
+                buf.truncate(buf.len().saturating_sub(3));
+                Some((id, buf))
+            }
+            // Unmask-phase entries never reach here.
+            Attack::PhaseConfusion | Attack::ReplayResponse
+            | Attack::ForgedShares => None,
+        };
+        if let Some((from, buf)) = frame {
+            bus.to_server(from, buf);
+            self.injected += 1;
+        }
+    }
+}
+
+/// Hand-build a frame with a *consistent* header around an arbitrary
+/// payload — the encoder refuses to produce most hostile shapes, the
+/// adversary does not.
+fn raw_frame(sender: u32, tag: u32, payload: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(FRAME_BYTES + payload.len());
+    buf.extend_from_slice(&sender.to_le_bytes());
+    buf.extend_from_slice(&tag.to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(payload);
+    buf
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::InMemoryBus;
+
+    #[test]
+    fn byzantine_set_matches_fraction() {
+        let a = Adversary::new(0.25, 1);
+        let m = a.byzantine_set(8);
+        assert_eq!(m.iter().filter(|&&b| b).count(), 2);
+        assert!(m[0] && m[1] && !m[2]);
+        assert_eq!(Adversary::new(0.0, 1).byzantine_set(8),
+                   vec![false; 8]);
+    }
+
+    #[test]
+    fn injection_is_deterministic() {
+        let params = Params { n: 8, d: 64, alpha: 0.5, theta: 0.0,
+                              c: 1024.0 };
+        let honest = vec![(3usize, raw_frame(3, 4, &[0u8; 4]))];
+        let mut frames = |seed: u64| {
+            let mut adv = Adversary::new(0.5, seed);
+            let mut bus = InMemoryBus::new(params.n);
+            adv.inject_uploads(&mut bus, &params, ProtocolKind::Sparse,
+                               &honest);
+            let mut out = Vec::new();
+            while let Some(f) = bus.server_recv() {
+                out.push(f);
+            }
+            (out, adv.injected)
+        };
+        let (a, ia) = frames(7);
+        let (b, ib) = frames(7);
+        assert_eq!(a, b);
+        assert_eq!(ia, ib);
+        assert!(ia > 0);
+    }
+}

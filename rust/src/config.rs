@@ -78,6 +78,7 @@ impl Config {
             "test_samples", "target_accuracy", "eval_every",
             "use_hlo_quantmask", "participation", "dp_epsilon", "dp_clip",
             "seed", "artifacts_dir", "shard_size", "threads", "executor",
+            "byzantine",
         ];
         for k in self.values.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -129,6 +130,15 @@ impl Config {
             shard_size: self.parse("shard_size", d.shard_size)?,
             threads: self.parse("threads", d.threads)?,
             exec_mode: self.parse("executor", d.exec_mode)?,
+            byzantine: {
+                let b: f64 = self.parse("byzantine", d.byzantine)?;
+                if !(0.0..0.5).contains(&b) {
+                    bail!("config key byzantine={b}: want fraction in \
+                           [0, 0.5) (a byzantine majority cannot be \
+                           survived)");
+                }
+                b
+            },
         })
     }
 }
@@ -173,6 +183,21 @@ mod tests {
         assert_eq!(fl.threads, 0);
         let mut c = Config::default();
         c.set("executor", "quantum");
+        assert!(c.to_fl_config().is_err());
+    }
+
+    #[test]
+    fn byzantine_knob_parses_and_bounds() {
+        let fl = Config::default().to_fl_config().unwrap();
+        assert_eq!(fl.byzantine, 0.0);
+        let mut c = Config::default();
+        c.set("byzantine", "0.2");
+        assert_eq!(c.to_fl_config().unwrap().byzantine, 0.2);
+        let mut c = Config::default();
+        c.set("byzantine", "0.5"); // byzantine majority: rejected
+        assert!(c.to_fl_config().is_err());
+        let mut c = Config::default();
+        c.set("byzantine", "-0.1");
         assert!(c.to_fl_config().is_err());
     }
 

@@ -19,12 +19,30 @@
 //! window-barrier shard pipeline kept as the bounded-memory reference,
 //! and `monolithic` (also selected by `shard_size = 0`) is the
 //! sequential reference path. All three are bit-exact equal.
+//!
+//! # Frame-level round driver
+//!
+//! Every phase — AdvertiseKeys, Roster, ShareKeys at setup;
+//! MaskedInput, UnmaskRequest/Response each round — moves as encoded
+//! [`crate::protocol::wire`] frames over a [`Transport`] (an in-memory
+//! byte bus by default; sockets would replace only that). The server
+//! side consumes frames through its validating ingest state machine
+//! (`ingest_frame` → `try_receive_upload`/`try_receive_response`), so
+//! hostile traffic — injectable via
+//! [`Coordinator::run_round_adversarial`] and a
+//! [`crate::adversary::Adversary`] — is rejected with typed errors and
+//! counted in the ledger instead of panicking or corrupting the
+//! aggregate. The pre-refactor struct-passing driver survives as
+//! [`Coordinator::run_round_structs`]; a differential test pins the
+//! frame-driven honest round bit-exact against it.
 
+use crate::adversary::Adversary;
 use crate::exec::{ExecMode, Executor};
 use crate::network::{LinkModel, RoundLedger};
 use crate::protocol::messages::*;
 use crate::protocol::shard::{ShardConfig, DEFAULT_SHARD_SIZE};
 use crate::protocol::{secagg, sparse, wire, Params};
+use crate::transport::{InMemoryBus, Transport};
 use anyhow::Result;
 use std::time::Instant;
 
@@ -60,6 +78,8 @@ pub struct Coordinator {
     pub exec_mode: ExecMode,
     /// Lazily-built persistent worker pool, reused across rounds.
     exec: Option<Executor>,
+    /// The byte bus every protocol frame travels on (setup and rounds).
+    bus: Box<dyn Transport>,
 }
 
 fn default_threads(n: usize) -> usize {
@@ -95,35 +115,185 @@ macro_rules! finish_round_dispatch {
 }
 
 impl Coordinator {
-    /// Build a SparseSecAgg cohort and run key setup (accounted).
+    /// Build a SparseSecAgg cohort on an in-memory byte bus and run key
+    /// setup through it.
     pub fn new_sparse(params: Params, entropy: u64) -> Self {
-        let (users, server) = sparse::setup(params, entropy);
-        let setup_ledger = Self::account_setup(params);
+        Self::new_sparse_on(params, entropy,
+                            Box::new(InMemoryBus::new(params.n)))
+    }
+
+    /// Build a SecAgg (baseline) cohort on an in-memory byte bus and
+    /// run key setup through it.
+    pub fn new_secagg(params: Params, entropy: u64) -> Self {
+        Self::new_secagg_on(params, entropy,
+                            Box::new(InMemoryBus::new(params.n)))
+    }
+
+    /// [`Self::new_sparse`] on a caller-supplied transport. The one-time
+    /// AdvertiseKeys / Roster / ShareKeys phases run as encoded frames
+    /// over it, byte-accounted from the actual buffers. The cohort this
+    /// produces is state-identical to [`sparse::setup`] with the same
+    /// entropy (same users, same dealt shares) — only the plumbing
+    /// differs.
+    pub fn new_sparse_on(params: Params, entropy: u64,
+                         mut bus: Box<dyn Transport>) -> Self {
+        let n = params.n;
+        let mut users: Vec<sparse::User> = (0..n)
+            .map(|i| sparse::User::new(
+                i, n, entropy.wrapping_add(i as u64 * 0x517c_c1b7)))
+            .collect();
+        let mut server = sparse::Server::new(params);
+        let mut ledger = RoundLedger::new(n);
+
+        // --- AdvertiseKeys: every user frames its public key up.
+        for u in &users {
+            let buf = wire::encode_advertise(&u.advertise());
+            ledger.record_upload(u.id, buf.len());
+            bus.to_server(u.id, buf);
+        }
+        let mut ads: Vec<AdvertiseKeys> = Vec::with_capacity(n);
+        while let Some((from, buf)) = bus.server_recv() {
+            let ad = wire::decode_advertise(&buf)
+                .expect("local setup traffic decodes");
+            debug_assert_eq!(ad.id, from);
+            ads.push(ad);
+        }
+
+        // --- Roster broadcast back down.
+        let roster = server.collect_keys(&ads);
+        let rbuf = wire::encode_roster(&roster);
+        debug_assert_eq!(rbuf.len(), roster.wire_bytes());
+        for u in 0..n {
+            ledger.record_download(u, rbuf.len());
+            bus.to_client(u, rbuf.clone());
+        }
+        for u in users.iter_mut() {
+            let buf = bus.client_recv(u.id).expect("roster frame queued");
+            u.install_roster(&wire::decode_roster(&buf)
+                .expect("local setup traffic decodes"));
+        }
+
+        // --- ShareKeys: each bundle is framed to the server, which
+        // routes it to its destination by envelope (the share payload is
+        // modeled as encrypted for `dest`). The self-bundle never
+        // crosses the wire.
+        let t = params.threshold();
+        for i in 0..n {
+            let bundles = users[i].deal_shares(t);
+            for b in bundles {
+                if b.dest == i {
+                    users[i].receive_bundle(&b);
+                    continue;
+                }
+                let buf = wire::encode_share_bundle(&b);
+                ledger.record_upload(i, buf.len());
+                bus.to_server(i, buf);
+            }
+        }
+        while let Some((from, buf)) = bus.server_recv() {
+            let b = wire::decode_share_bundle(&buf)
+                .expect("local setup traffic decodes");
+            debug_assert_eq!(b.owner, from);
+            ledger.record_download(b.dest, buf.len());
+            bus.to_client(b.dest, buf);
+        }
+        for u in users.iter_mut() {
+            while let Some(buf) = bus.client_recv(u.id) {
+                let b = wire::decode_share_bundle(&buf)
+                    .expect("local setup traffic decodes");
+                u.receive_bundle(&b);
+            }
+        }
+
         Coordinator {
             cohort: Cohort::Sparse { users, server },
             params,
             link: LinkModel::paper_user_link(),
-            setup_ledger,
+            setup_ledger: ledger,
             threads: default_threads(params.n),
             shard_size: DEFAULT_SHARD_SIZE,
             exec_mode: ExecMode::Stealing,
             exec: None,
+            bus,
         }
     }
 
-    /// Build a SecAgg (baseline) cohort and run key setup (accounted).
-    pub fn new_secagg(params: Params, entropy: u64) -> Self {
-        let (users, server) = secagg::setup(params, entropy);
-        let setup_ledger = Self::account_setup(params);
+    /// [`Self::new_secagg`] on a caller-supplied transport (same framed
+    /// setup as [`Self::new_sparse_on`]).
+    pub fn new_secagg_on(params: Params, entropy: u64,
+                         mut bus: Box<dyn Transport>) -> Self {
+        let n = params.n;
+        let mut users: Vec<secagg::User> = (0..n)
+            .map(|i| secagg::User::new(
+                i, n, entropy.wrapping_add(i as u64 * 0x517c_c1b7)))
+            .collect();
+        let mut server = secagg::Server::new(params);
+        let mut ledger = RoundLedger::new(n);
+
+        for u in &users {
+            let buf = wire::encode_advertise(&u.advertise());
+            ledger.record_upload(u.id, buf.len());
+            bus.to_server(u.id, buf);
+        }
+        let mut ads: Vec<AdvertiseKeys> = Vec::with_capacity(n);
+        while let Some((from, buf)) = bus.server_recv() {
+            let ad = wire::decode_advertise(&buf)
+                .expect("local setup traffic decodes");
+            debug_assert_eq!(ad.id, from);
+            ads.push(ad);
+        }
+
+        let roster = server.collect_keys(&ads);
+        let rbuf = wire::encode_roster(&roster);
+        debug_assert_eq!(rbuf.len(), roster.wire_bytes());
+        for u in 0..n {
+            ledger.record_download(u, rbuf.len());
+            bus.to_client(u, rbuf.clone());
+        }
+        for u in users.iter_mut() {
+            let buf = bus.client_recv(u.id).expect("roster frame queued");
+            u.install_roster(&wire::decode_roster(&buf)
+                .expect("local setup traffic decodes"));
+        }
+
+        let t = params.threshold();
+        for i in 0..n {
+            let bundles = users[i].deal_shares(t);
+            for b in bundles {
+                if b.dest == i {
+                    users[i].receive_bundle(&b);
+                    continue;
+                }
+                let buf = wire::encode_share_bundle(&b);
+                ledger.record_upload(i, buf.len());
+                bus.to_server(i, buf);
+            }
+        }
+        while let Some((from, buf)) = bus.server_recv() {
+            let b = wire::decode_share_bundle(&buf)
+                .expect("local setup traffic decodes");
+            debug_assert_eq!(b.owner, from);
+            ledger.record_download(b.dest, buf.len());
+            bus.to_client(b.dest, buf);
+        }
+        for u in users.iter_mut() {
+            while let Some(buf) = bus.client_recv(u.id) {
+                let b = wire::decode_share_bundle(&buf)
+                    .expect("local setup traffic decodes");
+                u.receive_bundle(&b);
+            }
+        }
+
         Coordinator {
             cohort: Cohort::SecAgg { users, server },
             params,
             link: LinkModel::paper_user_link(),
-            setup_ledger,
+            setup_ledger: ledger,
             threads: default_threads(params.n),
             shard_size: DEFAULT_SHARD_SIZE,
             exec_mode: ExecMode::Stealing,
             exec: None,
+            bus,
         }
     }
 
@@ -144,28 +314,6 @@ impl Coordinator {
         }
     }
 
-    /// Byte accounting for the one-time AdvertiseKeys + ShareKeys phases
-    /// (identical for both protocols: O(N) per user, the paper's
-    /// N-dependent term).
-    fn account_setup(params: Params) -> RoundLedger {
-        let n = params.n;
-        let mut ledger = RoundLedger::new(n);
-        let ad = AdvertiseKeys { id: 0, public: 0 }.wire_bytes();
-        let roster = Roster { publics: vec![0; n] }.wire_bytes();
-        let bundle = ShareBundle {
-            owner: 0,
-            dest: 1,
-            dh_share: crate::shamir::Share { x: 1, y: [0; 8] },
-            seed_share: crate::shamir::Share { x: 1, y: [0; 8] },
-        }
-        .wire_bytes();
-        for u in 0..n {
-            ledger.record_upload(u, ad + (n - 1) * bundle);
-            ledger.record_download(u, roster + (n - 1) * bundle);
-        }
-        ledger
-    }
-
     /// Per-user ids of the honest set given γ (the first γN users are
     /// adversarial — a fixed assignment is WLOG under the uniform model).
     pub fn honest_mask(&self, gamma: f64) -> Vec<bool> {
@@ -183,13 +331,247 @@ impl Coordinator {
         }
     }
 
-    /// Run one aggregation round.
+    /// Run one aggregation round, frame-driven: every message crosses
+    /// the [`Transport`] as an encoded wire frame and the server ingests
+    /// through its validating state machine.
     ///
     /// `ys[i]` is user i's weighted local gradient (length d), `betas[i]`
     /// its aggregation weight, `dropped` the users that fail before
     /// MaskedInput. Returns the dequantized aggregate and the ledger.
     pub fn run_round(&mut self, round: u32, ys: &[Vec<f32>], betas: &[f64],
                      dropped: &[usize]) -> Result<(Vec<f32>, RoundLedger)> {
+        self.run_round_frames(round, ys, betas, dropped, None)
+    }
+
+    /// [`Self::run_round`] under attack: `adv`'s byzantine users send no
+    /// honest uploads; instead the adversary injects its frame catalog
+    /// into both phases. Every injection the server detects is dropped
+    /// and counted ([`RoundLedger::rejected_frames`]); a surviving round
+    /// is bit-exact equal to the same round with the byzantine users in
+    /// `dropped`, and an unrecoverable one (quorum lost, poisoned
+    /// reconstruction) fails with a clean error — never a panic, never a
+    /// silently wrong aggregate.
+    pub fn run_round_adversarial(&mut self, round: u32, ys: &[Vec<f32>],
+                                 betas: &[f64], dropped: &[usize],
+                                 adv: &mut Adversary)
+                                 -> Result<(Vec<f32>, RoundLedger)> {
+        self.run_round_frames(round, ys, betas, dropped, Some(adv))
+    }
+
+    fn run_round_frames(&mut self, round: u32, ys: &[Vec<f32>],
+                        betas: &[f64], dropped: &[usize],
+                        mut adv: Option<&mut Adversary>)
+                        -> Result<(Vec<f32>, RoundLedger)> {
+        let params = self.params;
+        let n = params.n;
+        let kind = self.kind();
+        let mut ledger = RoundLedger::new(n);
+        let threads = self.threads.max(1);
+        self.ensure_executor();
+        let mode = self.effective_mode();
+        let shard_cfg = (mode != ExecMode::Monolithic)
+            .then(|| ShardConfig::new(self.shard_size, threads));
+        let byz = match &adv {
+            Some(a) => a.byzantine_set(n),
+            None => vec![false; n],
+        };
+        let active: Vec<bool> = (0..n)
+            .map(|i| !dropped.contains(&i) && !byz[i])
+            .collect();
+        let Coordinator { cohort, exec, bus, .. } = &mut *self;
+        let exec = exec.as_ref().expect("executor initialized");
+        let bus: &mut dyn Transport = bus.as_mut();
+
+        let (agg, upload_bytes, resp_sizes) = match cohort {
+            Cohort::Sparse { users, server } => {
+                server.begin_round();
+                // --- MaskedInput compute: one tier-1 executor task per
+                // active user, on the worker's kept-zeroed arena.
+                let t0 = Instant::now();
+                let (uploads, cstats) = compute_sparse_uploads(
+                    users, exec, params, round, ys, betas, &active);
+                ledger.client_compute_s += t0.elapsed().as_secs_f64();
+                ledger.record_client_phase(cstats.tasks, cstats.steals);
+
+                // --- MaskedInput frames onto the transport. The
+                // `honest` capture (replay/spoof material for the
+                // adversary) is only copied when there IS an adversary —
+                // the honest path moves each frame exactly once.
+                let ts = Instant::now();
+                let capture = adv.is_some();
+                let mut honest: Vec<(usize, Vec<u8>)> = Vec::new();
+                for up in uploads.into_iter().flatten() {
+                    let buf = wire::encode_sparse_upload(&up);
+                    debug_assert_eq!(buf.len(), up.wire_bytes());
+                    if capture {
+                        honest.push((up.id, buf.clone()));
+                    }
+                    bus.to_server(up.id, buf);
+                }
+                if let Some(a) = adv.as_deref_mut() {
+                    a.inject_uploads(bus, &params, kind, &honest);
+                }
+                // --- Server ingest: validate every inbound frame.
+                // Rejected frames are dropped but still billed to the
+                // endpoint that sent them.
+                let mut upload_bytes = vec![0usize; n];
+                while let Some((from, buf)) = bus.server_recv() {
+                    if from < n {
+                        upload_bytes[from] += buf.len();
+                    }
+                    if let Err(e) = server.ingest_frame(from, &buf) {
+                        ledger.record_reject(&e);
+                    }
+                }
+                // --- Unmask: close uploads, poll accepted survivors.
+                server.close_uploads();
+                let req = server.unmask_request();
+                let req_buf = wire::encode_unmask_request(&req);
+                debug_assert_eq!(req_buf.len(), req.wire_bytes());
+                for &j in &req.survivors {
+                    bus.to_client(j, req_buf.clone());
+                }
+                let mut honest_resp: Vec<(usize, Vec<u8>)> = Vec::new();
+                for u in users.iter() {
+                    while let Some(fbuf) = bus.client_recv(u.id) {
+                        ledger.record_download(u.id, fbuf.len());
+                        let req = wire::decode_unmask_request(&fbuf)?;
+                        let resp = u.respond_unmask(&req);
+                        let out = wire::encode_unmask_response(&resp);
+                        debug_assert_eq!(out.len(), resp.wire_bytes());
+                        if capture {
+                            honest_resp.push((u.id, out.clone()));
+                        }
+                        bus.to_server(u.id, out);
+                    }
+                }
+                if let Some(a) = adv.as_deref_mut() {
+                    a.inject_responses(bus, &params, kind, &req,
+                                       &honest_resp);
+                }
+                let mut resp_sizes: Vec<usize> = Vec::new();
+                while let Some((from, buf)) = bus.server_recv() {
+                    resp_sizes.push(buf.len());
+                    if from < n {
+                        ledger.record_upload(from, buf.len());
+                    }
+                    if let Err(e) = server.ingest_frame(from, &buf) {
+                        ledger.record_reject(&e);
+                    }
+                }
+                // --- finish_round* consumes only validated state.
+                let responses = server.take_responses();
+                let agg = finish_round_dispatch!(server, ledger, shard_cfg,
+                                                 mode, exec, round,
+                                                 &responses);
+                ledger.server_compute_s += ts.elapsed().as_secs_f64();
+                (agg, upload_bytes, resp_sizes)
+            }
+            Cohort::SecAgg { users, server } => {
+                server.begin_round();
+                let t0 = Instant::now();
+                let (uploads, cstats) = compute_secagg_uploads(
+                    users, exec, params, round, ys, betas, &active);
+                ledger.client_compute_s += t0.elapsed().as_secs_f64();
+                ledger.record_client_phase(cstats.tasks, cstats.steals);
+
+                let ts = Instant::now();
+                let capture = adv.is_some();
+                let mut honest: Vec<(usize, Vec<u8>)> = Vec::new();
+                for up in uploads.into_iter().flatten() {
+                    let buf = wire::encode_dense_upload(&up);
+                    debug_assert_eq!(buf.len(), up.wire_bytes());
+                    if capture {
+                        honest.push((up.id, buf.clone()));
+                    }
+                    bus.to_server(up.id, buf);
+                }
+                if let Some(a) = adv.as_deref_mut() {
+                    a.inject_uploads(bus, &params, kind, &honest);
+                }
+                let mut upload_bytes = vec![0usize; n];
+                while let Some((from, buf)) = bus.server_recv() {
+                    if from < n {
+                        upload_bytes[from] += buf.len();
+                    }
+                    if let Err(e) = server.ingest_frame(from, &buf) {
+                        ledger.record_reject(&e);
+                    }
+                }
+                server.close_uploads();
+                let req = server.unmask_request();
+                let req_buf = wire::encode_unmask_request(&req);
+                debug_assert_eq!(req_buf.len(), req.wire_bytes());
+                for &j in &req.survivors {
+                    bus.to_client(j, req_buf.clone());
+                }
+                let mut honest_resp: Vec<(usize, Vec<u8>)> = Vec::new();
+                for u in users.iter() {
+                    while let Some(fbuf) = bus.client_recv(u.id) {
+                        ledger.record_download(u.id, fbuf.len());
+                        let req = wire::decode_unmask_request(&fbuf)?;
+                        let resp = u.respond_unmask(&req);
+                        let out = wire::encode_unmask_response(&resp);
+                        debug_assert_eq!(out.len(), resp.wire_bytes());
+                        if capture {
+                            honest_resp.push((u.id, out.clone()));
+                        }
+                        bus.to_server(u.id, out);
+                    }
+                }
+                if let Some(a) = adv.as_deref_mut() {
+                    a.inject_responses(bus, &params, kind, &req,
+                                       &honest_resp);
+                }
+                let mut resp_sizes: Vec<usize> = Vec::new();
+                while let Some((from, buf)) = bus.server_recv() {
+                    resp_sizes.push(buf.len());
+                    if from < n {
+                        ledger.record_upload(from, buf.len());
+                    }
+                    if let Err(e) = server.ingest_frame(from, &buf) {
+                        ledger.record_reject(&e);
+                    }
+                }
+                let responses = server.take_responses();
+                let agg = finish_round_dispatch!(server, ledger, shard_cfg,
+                                                 mode, exec, round,
+                                                 &responses);
+                ledger.server_compute_s += ts.elapsed().as_secs_f64();
+                (agg, upload_bytes, resp_sizes)
+            }
+        };
+
+        // --- wire accounting: MaskedInput uploads in parallel…
+        for (u, &b) in upload_bytes.iter().enumerate() {
+            ledger.record_upload(u, b);
+        }
+        ledger.advance_parallel_phase(&self.link, &upload_bytes);
+        // …unmask responses in parallel…
+        ledger.advance_parallel_phase(&self.link, &resp_sizes);
+        // …then the global-model broadcast to survivors.
+        let bcast = ModelBroadcast { d: params.d }.wire_bytes();
+        let mut bcast_sizes = Vec::new();
+        for u in 0..n {
+            if active[u] {
+                ledger.record_download(u, bcast);
+                bcast_sizes.push(bcast);
+            }
+        }
+        ledger.advance_parallel_phase(&self.link, &bcast_sizes);
+
+        Ok((agg, ledger))
+    }
+
+    /// The pre-refactor struct-passing round driver, kept verbatim as
+    /// the differential anchor for the frame path: same compute, same
+    /// accounting, but messages are handed across as structs (only the
+    /// upload leg round-trips the codec, as before the refactor).
+    /// `frame_driver_matches_struct_reference_bit_exactly` pins
+    /// [`Self::run_round`] against this.
+    pub fn run_round_structs(&mut self, round: u32, ys: &[Vec<f32>],
+                             betas: &[f64], dropped: &[usize])
+                             -> Result<(Vec<f32>, RoundLedger)> {
         let params = self.params;
         let n = params.n;
         let mut ledger = RoundLedger::new(n);
@@ -198,33 +580,17 @@ impl Coordinator {
         let mode = self.effective_mode();
         let shard_cfg = (mode != ExecMode::Monolithic)
             .then(|| ShardConfig::new(self.shard_size, threads));
-        let is_dropped =
-            |i: usize| -> bool { dropped.contains(&i) };
+        let active: Vec<bool> =
+            (0..n).map(|i| !dropped.contains(&i)).collect();
         let Coordinator { cohort, exec, .. } = &mut *self;
         let exec = exec.as_ref().expect("executor initialized");
 
         let (agg, upload_bytes, response_bytes) = match cohort {
             Cohort::Sparse { users, server } => {
                 server.begin_round();
-                // --- MaskedInput: one tier-1 executor task per user;
-                // mask assembly runs on the worker's kept-zeroed arena.
                 let t0 = Instant::now();
-                let mut uploads: Vec<Option<SparseMaskedUpload>> = Vec::new();
-                uploads.resize_with(users.len(), || None);
-                let ((), cstats) = exec.scope(|scope| {
-                    for (u, slot) in users.iter().zip(uploads.iter_mut()) {
-                        if is_dropped(u.id) {
-                            continue;
-                        }
-                        scope.spawn(move |_, scratch| {
-                            let plan = u.mask_plan(round, &params,
-                                                   scratch.zeroed(params.d));
-                            *slot = Some(u.masked_upload(
-                                round, &ys[u.id], betas[u.id], &params,
-                                plan));
-                        });
-                    }
-                });
+                let (uploads, cstats) = compute_sparse_uploads(
+                    users, exec, params, round, ys, betas, &active);
                 ledger.client_compute_s += t0.elapsed().as_secs_f64();
                 ledger.record_client_phase(cstats.tasks, cstats.steals);
 
@@ -245,7 +611,7 @@ impl Coordinator {
                 let req_bytes = req.wire_bytes();
                 let responses: Vec<UnmaskResponse> = users
                     .iter()
-                    .filter(|u| !is_dropped(u.id))
+                    .filter(|u| active[u.id])
                     .map(|u| u.respond_unmask(&req))
                     .collect();
                 let response_bytes: Vec<(usize, usize)> = responses
@@ -265,19 +631,8 @@ impl Coordinator {
             Cohort::SecAgg { users, server } => {
                 server.begin_round();
                 let t0 = Instant::now();
-                let mut uploads: Vec<Option<DenseMaskedUpload>> = Vec::new();
-                uploads.resize_with(users.len(), || None);
-                let ((), cstats) = exec.scope(|scope| {
-                    for (u, slot) in users.iter().zip(uploads.iter_mut()) {
-                        if is_dropped(u.id) {
-                            continue;
-                        }
-                        scope.spawn(move |_, _| {
-                            *slot = Some(u.masked_upload(
-                                round, &ys[u.id], betas[u.id], &params));
-                        });
-                    }
-                });
+                let (uploads, cstats) = compute_secagg_uploads(
+                    users, exec, params, round, ys, betas, &active);
                 ledger.client_compute_s += t0.elapsed().as_secs_f64();
                 ledger.record_client_phase(cstats.tasks, cstats.steals);
 
@@ -294,7 +649,7 @@ impl Coordinator {
                 let req_bytes = req.wire_bytes();
                 let responses: Vec<UnmaskResponse> = users
                     .iter()
-                    .filter(|u| !is_dropped(u.id))
+                    .filter(|u| active[u.id])
                     .map(|u| u.respond_unmask(&req))
                     .collect();
                 let response_bytes: Vec<(usize, usize)> = responses
@@ -326,7 +681,7 @@ impl Coordinator {
         let bcast = ModelBroadcast { d: params.d }.wire_bytes();
         let mut bcast_sizes = Vec::new();
         for u in 0..n {
-            if !is_dropped(u) {
+            if active[u] {
                 ledger.record_download(u, bcast);
                 bcast_sizes.push(bcast);
             }
@@ -342,7 +697,9 @@ impl Coordinator {
     /// only. Kernel executions are serialized through the single PJRT
     /// client; the per-user compute clock still models a parallel fleet
     /// (max over users). The Unmask phase runs on the same executor
-    /// dispatch as [`Self::run_round`].
+    /// dispatch as [`Self::run_round`]. Uploads are handed across as
+    /// structs (like [`Self::run_round_structs`]): the PJRT runtime is
+    /// trusted in-process compute, not untrusted traffic.
     pub fn run_round_hlo(&mut self, round: u32, ys: &[Vec<f32>],
                          betas: &[f64], dropped: &[usize],
                          qm: &crate::runtime::QuantMask)
@@ -425,6 +782,55 @@ impl Coordinator {
             Cohort::SecAgg { .. } => None,
         }
     }
+}
+
+/// Client MaskedInput compute for a sparse cohort: one tier-1 executor
+/// task per active user, mask assembly on the worker's kept-zeroed
+/// arena. Returns per-user uploads (`None` = inactive this round) plus
+/// the scope's scheduling stats. Shared by the frame-driven and the
+/// struct-reference round drivers so the differential test compares
+/// plumbing, not compute.
+fn compute_sparse_uploads(
+    users: &[sparse::User], exec: &Executor, params: Params, round: u32,
+    ys: &[Vec<f32>], betas: &[f64], active: &[bool],
+) -> (Vec<Option<SparseMaskedUpload>>, crate::exec::ExecStats) {
+    let mut uploads: Vec<Option<SparseMaskedUpload>> = Vec::new();
+    uploads.resize_with(users.len(), || None);
+    let ((), stats) = exec.scope(|scope| {
+        for (u, slot) in users.iter().zip(uploads.iter_mut()) {
+            if !active[u.id] {
+                continue;
+            }
+            scope.spawn(move |_, scratch| {
+                let plan =
+                    u.mask_plan(round, &params, scratch.zeroed(params.d));
+                *slot = Some(u.masked_upload(round, &ys[u.id],
+                                             betas[u.id], &params, plan));
+            });
+        }
+    });
+    (uploads, stats)
+}
+
+/// SecAgg twin of [`compute_sparse_uploads`].
+fn compute_secagg_uploads(
+    users: &[secagg::User], exec: &Executor, params: Params, round: u32,
+    ys: &[Vec<f32>], betas: &[f64], active: &[bool],
+) -> (Vec<Option<DenseMaskedUpload>>, crate::exec::ExecStats) {
+    let mut uploads: Vec<Option<DenseMaskedUpload>> = Vec::new();
+    uploads.resize_with(users.len(), || None);
+    let ((), stats) = exec.scope(|scope| {
+        for (u, slot) in users.iter().zip(uploads.iter_mut()) {
+            if !active[u.id] {
+                continue;
+            }
+            scope.spawn(move |_, _| {
+                *slot = Some(u.masked_upload(round, &ys[u.id],
+                                             betas[u.id], &params));
+            });
+        }
+    });
+    (uploads, stats)
 }
 
 /// Map a slice through `f` on up to `threads` scoped threads, preserving
@@ -621,5 +1027,81 @@ mod tests {
         let small = Coordinator::new_sparse(params(4, 100, 0.5, 0.0), 1);
         let big = Coordinator::new_sparse(params(16, 100, 0.5, 0.0), 1);
         assert!(big.setup_ledger.max_up() > small.setup_ledger.max_up());
+    }
+
+    /// Frame-driven setup moves real encoded bytes: per-user totals must
+    /// equal the analytic accounting (advertise + roster + 2(N−1)
+    /// bundles split up/down) the old side-accounting promised.
+    #[test]
+    fn framed_setup_byte_accounting_is_exact() {
+        let p = params(7, 50, 0.5, 0.0);
+        let coord = Coordinator::new_sparse(p, 3);
+        let ad = AdvertiseKeys { id: 0, public: 0 }.wire_bytes();
+        let roster = Roster { publics: vec![0; p.n] }.wire_bytes();
+        let bundle = ShareBundle {
+            owner: 0,
+            dest: 1,
+            dh_share: crate::shamir::Share { x: 1, y: [0; 8] },
+            seed_share: crate::shamir::Share { x: 1, y: [0; 8] },
+        }
+        .wire_bytes();
+        for u in 0..p.n {
+            assert_eq!(coord.setup_ledger.up_bytes[u],
+                       ad + (p.n - 1) * bundle);
+            assert_eq!(coord.setup_ledger.down_bytes[u],
+                       roster + (p.n - 1) * bundle);
+        }
+    }
+
+    /// The differential pin of the tentpole refactor: the frame-driven
+    /// honest round must be bit-exact equal to the pre-refactor
+    /// struct-passing driver — same aggregate, same per-user bytes,
+    /// same simulated clock — for both protocols.
+    #[test]
+    fn frame_driver_matches_struct_reference_bit_exactly() {
+        for secagg in [false, true] {
+            let p = if secagg {
+                params(9, 700, 1.0, 0.2)
+            } else {
+                params(9, 700, 0.35, 0.2)
+            };
+            let ys = grads(p.n, p.d, 21);
+            let betas = vec![1.0 / p.n as f64; p.n];
+            let dropped = vec![1usize, 4];
+            let mk = |e| if secagg {
+                Coordinator::new_secagg(p, e)
+            } else {
+                Coordinator::new_sparse(p, e)
+            };
+            let mut frames = mk(33);
+            let (agg_f, lf) =
+                frames.run_round(2, &ys, &betas, &dropped).unwrap();
+            let mut structs = mk(33);
+            let (agg_s, ls) =
+                structs.run_round_structs(2, &ys, &betas, &dropped).unwrap();
+            assert_eq!(agg_f, agg_s, "secagg={secagg}");
+            assert_eq!(lf.up_bytes, ls.up_bytes);
+            assert_eq!(lf.down_bytes, ls.down_bytes);
+            assert_eq!(lf.client_tasks, ls.client_tasks);
+            assert_eq!(lf.rejected_frames, 0);
+            assert!((lf.comm_time_s - ls.comm_time_s).abs() < 1e-12,
+                    "clock drift: {} vs {}", lf.comm_time_s,
+                    ls.comm_time_s);
+        }
+    }
+
+    /// Multi-round reuse of one bus: queues must drain completely every
+    /// round (no stale frames leaking across rounds).
+    #[test]
+    fn frame_rounds_are_reentrant() {
+        let p = params(6, 300, 0.4, 0.0);
+        let mut coord = Coordinator::new_sparse(p, 9);
+        let ys = grads(p.n, p.d, 6);
+        let betas = vec![1.0 / p.n as f64; p.n];
+        let (a0, _) = coord.run_round(0, &ys, &betas, &[]).unwrap();
+        let (a0b, _) = coord.run_round(0, &ys, &betas, &[]).unwrap();
+        let (a1, _) = coord.run_round(1, &ys, &betas, &[2]).unwrap();
+        assert_eq!(a0, a0b, "same round must reproduce exactly");
+        assert_eq!(a1.len(), p.d);
     }
 }

@@ -68,6 +68,12 @@ pub struct FlConfig {
     /// work-stealing executor (default), the windowed shard pipeline, or
     /// the monolithic reference.
     pub exec_mode: crate::exec::ExecMode,
+    /// Byzantine fraction ∈ [0, 0.5): that share of the cohort attacks
+    /// every round (hostile frames from the
+    /// [`crate::adversary::Adversary`] catalog instead of honest
+    /// uploads). The hardened ingest treats them as dropped; training
+    /// proceeds on the honest survivors. 0 = everyone honest.
+    pub byzantine: f64,
 }
 
 impl Default for FlConfig {
@@ -97,6 +103,7 @@ impl Default for FlConfig {
             shard_size: crate::protocol::shard::DEFAULT_SHARD_SIZE,
             threads: 0,
             exec_mode: crate::exec::ExecMode::Stealing,
+            byzantine: 0.0,
         }
     }
 }
@@ -171,6 +178,21 @@ pub fn run_fl(cfg: &FlConfig, trainer: &Trainer) -> Result<FlRun> {
     let mut reached = None;
     let mut final_acc = 0.0;
 
+    // One adversary for the whole run, so the catalog rotation carries
+    // across rounds — every attack kind fires over a training run, not
+    // just the first few entries. The HLO round driver hands uploads
+    // across as trusted structs, so the two knobs cannot compose —
+    // refuse loudly rather than silently running an honest round.
+    anyhow::ensure!(
+        !(cfg.byzantine > 0.0 && cfg.use_hlo_quantmask),
+        "byzantine > 0 requires the frame-driven round driver; it is \
+         incompatible with use_hlo_quantmask"
+    );
+    let mut adversary = (cfg.byzantine > 0.0).then(|| {
+        crate::adversary::Adversary::new(cfg.byzantine,
+                                         cfg.seed ^ 0xbad_f00d)
+    });
+
     // DP noise calibration uses the Thm-2 privacy guarantee T with the
     // conservative γ = 1/3 colluder bound.
     let dp = cfg.dp_epsilon.map(|eps| {
@@ -235,6 +257,12 @@ pub fn run_fl(cfg: &FlConfig, trainer: &Trainer) -> Result<FlRun> {
         let (agg, mut ledger) = if cfg.use_hlo_quantmask {
             coord.run_round_hlo(round as u32, &ys, &betas, &dropped,
                                 trainer.quantmask()?)?
+        } else if let Some(adv) = adversary.as_mut() {
+            // Hostile-cohort training: byzantine users inject catalog
+            // frames instead of honest uploads; the hardened ingest
+            // sheds them and the round proceeds on honest survivors.
+            coord.run_round_adversarial(round as u32, &ys, &betas,
+                                        &dropped, adv)?
         } else {
             coord.run_round(round as u32, &ys, &betas, &dropped)?
         };

@@ -19,6 +19,7 @@
 //! `artifacts/*.hlo.txt` through the PJRT CPU client and the coordinator
 //! drives everything from Rust.
 
+pub mod adversary;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
@@ -37,3 +38,4 @@ pub mod runtime;
 pub mod shamir;
 pub mod sparsify;
 pub mod testutil;
+pub mod transport;

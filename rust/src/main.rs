@@ -10,6 +10,7 @@
 //! Examples:
 //!   sparsesecagg run --config configs/mnist_iid.cfg --users 10
 //!   sparsesecagg run --threads 8 --executor stealing
+//!   sparsesecagg run --byzantine 0.2   # hostile-cohort robustness demo
 //!   sparsesecagg comm --users 100 --alpha 0.1 --executor windowed
 //!   sparsesecagg privacy --users 100 --gamma 0.333 --theta 0.3
 

@@ -2,13 +2,35 @@
 //!
 //! The paper's testbed is Amazon EC2 m4.large instances with user links
 //! capped at 100 Mbps. This module replaces the physical wire with a
-//! deterministic cost model: every protocol message is framed
-//! ([`crate::protocol::messages`]) and its transfer time is
+//! deterministic cost model: every protocol message travels as an
+//! encoded [`crate::protocol::wire`] frame over the
+//! [`crate::transport`] byte bus, and its transfer time is
 //! `bytes · 8 / bandwidth + latency`. Users up/download in parallel on
 //! independent links (the EC2 topology), so a phase costs the *max* over
 //! participating users; the server's NIC can be modeled as a separate,
-//! faster link. Communication *bytes* are exact; simulated wall clock is
-//! the bandwidth-bound approximation the paper's own measurements live in.
+//! faster link. Communication *bytes* are measured from the actual
+//! encoded frames; simulated wall clock is the bandwidth-bound
+//! approximation the paper's own measurements live in.
+//!
+//! # Threat model at the ledger
+//!
+//! The network layer itself validates nothing — by design. Any endpoint
+//! can put any bytes on the bus (the transport only vouches for the
+//! submitting endpoint's identity), and the servers' fallible ingest
+//! layer decides frame by frame: accepted traffic lands in protocol
+//! state, rejected traffic is dropped with a typed
+//! [`crate::protocol::IngestError`]. The ledger records both — rejected
+//! frames still consumed their sender's bandwidth
+//! ([`RoundLedger::rejected_frames`] counts them, and their bytes stay
+//! in the per-user totals), which is exactly how a DoS shows up in a
+//! real deployment: as spent bandwidth, not as corrupted aggregates.
+//! What the server *accepts* is what secure aggregation itself
+//! guarantees nothing about beyond the paper's honest-but-curious
+//! analysis: a syntactically valid upload with dishonest values shifts
+//! the sum and is invisible by construction (individual updates are
+//! hidden). Everything detectable — replays, duplicates, spoofed
+//! senders, wrong dimensions, phase confusion, forged share geometry —
+//! is rejected before it can touch the aggregate.
 //!
 //! # Two-tier executor accounting
 //!
@@ -87,6 +109,11 @@ pub struct RoundLedger {
     pub client_tasks: usize,
     /// Client-phase tasks executed via stealing.
     pub client_steals: usize,
+    /// Inbound frames the server's ingest layer rejected this round
+    /// (malformed, replayed, spoofed, phase-confused, …). Their bytes
+    /// remain in the per-user totals: hostile traffic costs bandwidth
+    /// even when it cannot corrupt state.
+    pub rejected_frames: usize,
 }
 
 impl RoundLedger {
@@ -135,6 +162,12 @@ impl RoundLedger {
     pub fn record_client_phase(&mut self, tasks: usize, steals: usize) {
         self.client_tasks += tasks;
         self.client_steals += steals;
+    }
+
+    /// Record one rejected inbound frame. Takes the typed error so the
+    /// signature stays stable when per-kind taxonomy lands.
+    pub fn record_reject(&mut self, _err: &crate::protocol::IngestError) {
+        self.rejected_frames += 1;
     }
 
     /// Total upload bytes across users.

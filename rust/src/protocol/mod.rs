@@ -16,6 +16,12 @@
 //! honest-but-curious with up to γN colluding users (§IV); shares routed
 //! through the server are modeled as encrypted blobs (byte-counted, not
 //! actually encrypted — the simulation never lets the server *read* them).
+//!
+//! On top of that, the ingest path is hardened against actively
+//! *malformed* traffic: both servers run a validating state machine
+//! ([`RoundPhase`], `try_receive_upload` / `try_receive_response` /
+//! `ingest_frame`) that rejects hostile frames with typed
+//! [`IngestError`]s — see the threat model in [`wire`].
 
 pub mod dp;
 pub mod messages;
@@ -25,6 +31,136 @@ pub mod sparse;
 pub mod wire;
 
 use crate::prg::Seed;
+use std::fmt;
+
+/// Where a server is inside one aggregation round. Frames are only legal
+/// in their own phase; the ingest layer rejects stragglers and
+/// phase-confusion injections with [`IngestError::WrongPhase`] instead
+/// of letting them corrupt state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundPhase {
+    /// Accepting MaskedInput uploads.
+    Collecting,
+    /// Uploads closed; accepting unmask responses.
+    Unmasking,
+}
+
+impl RoundPhase {
+    pub fn name(self) -> &'static str {
+        match self {
+            RoundPhase::Collecting => "Collecting",
+            RoundPhase::Unmasking => "Unmasking",
+        }
+    }
+}
+
+/// Typed rejection from the servers' untrusted-ingest layer
+/// (`try_receive_upload` / `try_receive_response` / `ingest_frame`).
+///
+/// Every variant is a *detected* protocol violation: the offending frame
+/// is dropped without touching the aggregate or the response set, so a
+/// hostile client can deny only its own contribution. What the server
+/// cannot detect (a well-formed upload whose masked values encode a lie)
+/// is exactly what secure aggregation never promised to catch — see the
+/// threat model in [`wire`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum IngestError {
+    /// Frame failed wire decoding (bad header, truncation, hostile
+    /// counts, codec-level inconsistencies).
+    Malformed(String),
+    /// Frame-header sender differs from the transport endpoint that
+    /// submitted the frame.
+    SpoofedSender { claimed: usize, endpoint: usize },
+    /// Message type this server never accepts on its ingest path.
+    UnexpectedTag(String),
+    /// Message type is valid but illegal in the current round phase
+    /// (late upload, early response, phase-confusion injection).
+    WrongPhase { msg: &'static str, phase: &'static str },
+    /// Sender id outside the cohort.
+    UnknownSender { id: usize, n: usize },
+    /// A second upload from an id that already uploaded this round
+    /// (replay or equivocation) — accepting it would double-count.
+    DuplicateUpload { id: usize },
+    /// Upload dimension does not match the deployment's `d`.
+    WrongDimension { got: usize, want: usize },
+    /// Sparse upload with `values.len() != indices.len()`.
+    LengthMismatch { indices: usize, values: usize },
+    /// Sparse upload index `>= d`.
+    IndexOutOfRange { index: u32, d: usize },
+    /// Sparse upload support is not strictly increasing (duplicates
+    /// would double-add into one coordinate).
+    UnsortedIndices { id: usize },
+    /// A carried field element `>= q`.
+    ValueOutOfField { value: u32 },
+    /// A second unmask response from the same id (replay).
+    DuplicateResponse { id: usize },
+    /// Unmask response from an id the server never solicited (it is not
+    /// a survivor of this round).
+    UnsolicitedResponse { id: usize },
+    /// Share for an owner the server did not request (wrong set, or
+    /// outside the cohort), or the same owner twice in one response.
+    ForeignShare { owner: usize },
+    /// Share evaluated at an x that is not the sender's dealt point
+    /// (user `i` only ever holds shares at `x = i + 1`).
+    WrongEvaluationPoint { got: u32, want: u32 },
+}
+
+impl fmt::Display for IngestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use IngestError::*;
+        match self {
+            Malformed(m) => write!(f, "malformed frame: {m}"),
+            SpoofedSender { claimed, endpoint } => write!(
+                f,
+                "spoofed sender: header claims {claimed}, endpoint is \
+                 {endpoint}"
+            ),
+            UnexpectedTag(t) => write!(f, "unexpected message tag {t}"),
+            WrongPhase { msg, phase } => {
+                write!(f, "{msg} is illegal in phase {phase}")
+            }
+            UnknownSender { id, n } => {
+                write!(f, "unknown sender {id} (cohort size {n})")
+            }
+            DuplicateUpload { id } => {
+                write!(f, "duplicate upload from user {id}")
+            }
+            WrongDimension { got, want } => {
+                write!(f, "upload dimension {got}, deployment wants {want}")
+            }
+            LengthMismatch { indices, values } => write!(
+                f,
+                "{indices} indices but {values} values in sparse upload"
+            ),
+            IndexOutOfRange { index, d } => {
+                write!(f, "upload index {index} out of range (d = {d})")
+            }
+            UnsortedIndices { id } => write!(
+                f,
+                "upload support from user {id} is not strictly increasing"
+            ),
+            ValueOutOfField { value } => {
+                write!(f, "value {value} is not a field element (>= q)")
+            }
+            DuplicateResponse { id } => {
+                write!(f, "duplicate unmask response from user {id}")
+            }
+            UnsolicitedResponse { id } => {
+                write!(f, "unsolicited unmask response from user {id}")
+            }
+            ForeignShare { owner } => {
+                write!(f, "share for unrequested owner {owner}")
+            }
+            WrongEvaluationPoint { got, want } => write!(
+                f,
+                "share evaluated at x = {got}, sender's dealt point is \
+                 {want}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for IngestError {}
 
 /// Static protocol parameters for a deployment.
 #[derive(Clone, Copy, Debug)]

@@ -13,7 +13,10 @@ use crate::prg::{ChaCha20Rng, Seed};
 use crate::protocol::messages::*;
 use crate::protocol::shard::{self, MaskJob, ShardConfig, ShardStats};
 use crate::protocol::sparse::TAG_ADDITIVE;
-use crate::protocol::{seed_from_u64_secret, u64_secret_from_seed, Params};
+use crate::protocol::{
+    seed_from_u64_secret, u64_secret_from_seed, wire, IngestError, Params,
+    RoundPhase,
+};
 use crate::quantize;
 use crate::shamir::{self, Share};
 
@@ -122,13 +125,20 @@ impl User {
     }
 }
 
-/// The SecAgg server.
+/// The SecAgg server. Same validating-ingest state machine as
+/// [`crate::protocol::sparse::Server`]: untrusted traffic enters through
+/// [`Server::ingest_frame`] / [`Server::try_receive_upload`] /
+/// [`Server::try_receive_response`] and is rejected with typed
+/// [`IngestError`]s before any state is touched.
 pub struct Server {
     pub params: Params,
     roster: Vec<u64>,
     agg: Vec<u32>,
     received: Vec<bool>,
     survivors: Vec<usize>,
+    phase: RoundPhase,
+    responded: Vec<bool>,
+    pending: Vec<UnmaskResponse>,
 }
 
 impl Server {
@@ -139,6 +149,9 @@ impl Server {
             agg: vec![0; params.d],
             received: vec![false; params.n],
             survivors: Vec::new(),
+            phase: RoundPhase::Collecting,
+            responded: vec![false; params.n],
+            pending: Vec::new(),
         }
     }
 
@@ -155,12 +168,144 @@ impl Server {
         self.agg.iter_mut().for_each(|v| *v = 0);
         self.received.iter_mut().for_each(|v| *v = false);
         self.survivors.clear();
+        self.phase = RoundPhase::Collecting;
+        self.responded.iter_mut().for_each(|v| *v = false);
+        self.pending.clear();
     }
 
-    pub fn receive_upload(&mut self, up: DenseMaskedUpload) {
+    /// Validate and aggregate one dense masked upload from untrusted
+    /// traffic: duplicate ids cannot double-count, a wrong-length vector
+    /// (SecAgg's analog of wrong-`d`) cannot partially add, out-of-field
+    /// words are rejected.
+    pub fn try_receive_upload(&mut self, up: DenseMaskedUpload)
+                              -> Result<(), IngestError> {
+        if self.phase != RoundPhase::Collecting {
+            return Err(IngestError::WrongPhase {
+                msg: "masked upload",
+                phase: self.phase.name(),
+            });
+        }
+        if up.id >= self.params.n {
+            return Err(IngestError::UnknownSender {
+                id: up.id,
+                n: self.params.n,
+            });
+        }
+        if self.received[up.id] {
+            return Err(IngestError::DuplicateUpload { id: up.id });
+        }
+        if up.values.len() != self.params.d {
+            return Err(IngestError::WrongDimension {
+                got: up.values.len(),
+                want: self.params.d,
+            });
+        }
+        if let Some(&v) = up.values.iter().find(|&&v| v >= crate::field::Q) {
+            return Err(IngestError::ValueOutOfField { value: v });
+        }
         crate::field::vecops::add_assign(&mut self.agg, &up.values);
         self.received[up.id] = true;
         self.survivors.push(up.id);
+        Ok(())
+    }
+
+    /// Trusted-path upload: panics with the typed error where
+    /// [`Server::try_receive_upload`] would reject.
+    pub fn receive_upload(&mut self, up: DenseMaskedUpload) {
+        if let Err(e) = self.try_receive_upload(up) {
+            panic!("invalid upload on trusted path: {e}");
+        }
+    }
+
+    /// Close the MaskedInput phase: further uploads are
+    /// [`IngestError::WrongPhase`].
+    pub fn close_uploads(&mut self) {
+        self.phase = RoundPhase::Unmasking;
+    }
+
+    /// Validate and buffer one unmask response (same contract as
+    /// [`crate::protocol::sparse::Server::try_receive_response`]).
+    pub fn try_receive_response(&mut self, r: UnmaskResponse)
+                                -> Result<(), IngestError> {
+        if self.phase != RoundPhase::Unmasking {
+            return Err(IngestError::WrongPhase {
+                msg: "unmask response",
+                phase: self.phase.name(),
+            });
+        }
+        if r.id >= self.params.n {
+            return Err(IngestError::UnknownSender {
+                id: r.id,
+                n: self.params.n,
+            });
+        }
+        if !self.received[r.id] {
+            return Err(IngestError::UnsolicitedResponse { id: r.id });
+        }
+        if self.responded[r.id] {
+            return Err(IngestError::DuplicateResponse { id: r.id });
+        }
+        let want_x = r.id as u32 + 1;
+        let check = |shares: &[(usize, Share)], owner_dropped: bool|
+                     -> Result<(), IngestError> {
+            for (k, (owner, s)) in shares.iter().enumerate() {
+                let requested = *owner < self.params.n
+                    && self.received[*owner] != owner_dropped;
+                if !requested
+                    || shares[..k].iter().any(|(o, _)| o == owner)
+                {
+                    return Err(IngestError::ForeignShare { owner: *owner });
+                }
+                if s.x != want_x {
+                    return Err(IngestError::WrongEvaluationPoint {
+                        got: s.x,
+                        want: want_x,
+                    });
+                }
+                if let Some(&y) =
+                    s.y.iter().find(|&&y| y >= crate::field::Q)
+                {
+                    return Err(IngestError::ValueOutOfField { value: y });
+                }
+            }
+            Ok(())
+        };
+        check(&r.dh_shares, true)?;
+        check(&r.seed_shares, false)?;
+        self.responded[r.id] = true;
+        self.pending.push(r);
+        Ok(())
+    }
+
+    /// Drain the validated responses buffered by
+    /// [`Server::try_receive_response`].
+    pub fn take_responses(&mut self) -> Vec<UnmaskResponse> {
+        std::mem::take(&mut self.pending)
+    }
+
+    /// Frame-level ingest (see
+    /// [`crate::protocol::sparse::Server::ingest_frame`]).
+    pub fn ingest_frame(&mut self, from: usize, buf: &[u8])
+                        -> Result<(), IngestError> {
+        let malformed = |e: anyhow::Error| IngestError::Malformed(e.to_string());
+        let (sender, tag, _len) = wire::peek_header(buf).map_err(malformed)?;
+        if sender as usize != from {
+            return Err(IngestError::SpoofedSender {
+                claimed: sender as usize,
+                endpoint: from,
+            });
+        }
+        match tag {
+            wire::Tag::DenseMaskedUpload => {
+                let up = wire::decode_dense_upload(buf).map_err(malformed)?;
+                self.try_receive_upload(up)
+            }
+            wire::Tag::UnmaskResponse => {
+                let r = wire::decode_unmask_response(buf).map_err(malformed)?;
+                self.try_receive_response(r)
+            }
+            other => Err(IngestError::UnexpectedTag(format!("{other:?}"))),
+        }
     }
 
     pub fn unmask_request(&self) -> UnmaskRequest {
@@ -382,6 +527,64 @@ mod tests {
             (0..p.n).filter(|i| !dropped.contains(i)).collect();
         let want = expected_field_agg(&users, &survivors, 2, &ys, &p);
         assert_eq!(server.aggregate_field(), &want[..]);
+    }
+
+    #[test]
+    fn ingest_rejects_hostile_uploads_and_responses() {
+        use crate::protocol::IngestError;
+        let p = Params { n: 5, d: 200, alpha: 1.0, theta: 0.0, c: 1024.0 };
+        let (users, mut server) = setup(p, 51);
+        let ys: Vec<f32> = vec![0.1; p.d];
+        server.begin_round();
+        let up = users[0].masked_upload(0, &ys, 0.2, &p);
+
+        // Wrong length (SecAgg's wrong-d), unknown id, out-of-field.
+        let mut bad = DenseMaskedUpload { id: 0, values: up.values.clone() };
+        bad.values.pop();
+        assert!(matches!(server.try_receive_upload(bad),
+                         Err(IngestError::WrongDimension { .. })));
+        let bad = DenseMaskedUpload { id: 9, values: up.values.clone() };
+        assert!(matches!(server.try_receive_upload(bad),
+                         Err(IngestError::UnknownSender { .. })));
+        let mut bad = DenseMaskedUpload { id: 0, values: up.values.clone() };
+        bad.values[7] = field::Q;
+        assert!(matches!(server.try_receive_upload(bad),
+                         Err(IngestError::ValueOutOfField { .. })));
+        assert!(server.aggregate_field().iter().all(|&v| v == 0));
+
+        // Accept, then refuse the replay without double-counting.
+        server.try_receive_upload(up.clone()).unwrap();
+        let snapshot = server.aggregate_field().to_vec();
+        assert!(matches!(server.try_receive_upload(up),
+                         Err(IngestError::DuplicateUpload { .. })));
+        assert_eq!(server.aggregate_field(), &snapshot[..]);
+
+        // Remaining users upload; phase machine gates responses.
+        for u in users.iter().skip(1) {
+            server.receive_upload(u.masked_upload(0, &ys, 0.2, &p));
+        }
+        let req = server.unmask_request();
+        let honest: Vec<UnmaskResponse> =
+            users.iter().map(|u| u.respond_unmask(&req)).collect();
+        assert!(matches!(server.try_receive_response(honest[0].clone()),
+                         Err(IngestError::WrongPhase { .. })));
+        server.close_uploads();
+        server.try_receive_response(honest[0].clone()).unwrap();
+        assert!(matches!(server.try_receive_response(honest[0].clone()),
+                         Err(IngestError::DuplicateResponse { .. })));
+        let mut wrong_x = honest[1].clone();
+        for (_, s) in wrong_x.seed_shares.iter_mut() {
+            s.x = 5;
+        }
+        assert!(matches!(
+            server.try_receive_response(wrong_x),
+            Err(IngestError::WrongEvaluationPoint { .. })));
+        for r in honest.into_iter().skip(1) {
+            server.try_receive_response(r).unwrap();
+        }
+        let responses = server.take_responses();
+        assert_eq!(responses.len(), p.n);
+        assert!(server.finish_round(0, &responses).is_ok());
     }
 
     #[test]

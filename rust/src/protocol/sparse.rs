@@ -57,7 +57,10 @@ use crate::masking::{
 use crate::prg::{ChaCha20Rng, Seed};
 use crate::protocol::messages::*;
 use crate::protocol::shard::{self, MaskJob, ShardConfig, ShardStats};
-use crate::protocol::{seed_from_u64_secret, u64_secret_from_seed, Params};
+use crate::protocol::{
+    seed_from_u64_secret, u64_secret_from_seed, wire, IngestError, Params,
+    RoundPhase,
+};
 use crate::quantize;
 use crate::shamir::{self, Share};
 
@@ -238,6 +241,15 @@ impl User {
 }
 
 /// The SparseSecAgg server (aggregator).
+///
+/// Ingest is a validating state machine: frames land through
+/// [`Server::ingest_frame`] → [`Server::try_receive_upload`] /
+/// [`Server::try_receive_response`], which reject hostile traffic with
+/// typed [`IngestError`]s *before* any state is touched —
+/// `finish_round*` therefore only ever consumes validated state. The
+/// infallible `receive_upload` remains for trusted in-process callers
+/// (tests, benches) and panics loudly on what the fallible path would
+/// reject.
 pub struct Server {
     pub params: Params,
     roster: Vec<u64>,
@@ -246,6 +258,12 @@ pub struct Server {
     /// for the privacy metrics).
     pub upload_indices: Vec<Option<Vec<u32>>>,
     survivors: Vec<usize>,
+    /// Where this round's ingest state machine is.
+    phase: RoundPhase,
+    /// Which ids already delivered a validated unmask response.
+    responded: Vec<bool>,
+    /// Validated responses, consumed by [`Server::take_responses`].
+    pending: Vec<UnmaskResponse>,
 }
 
 impl Server {
@@ -256,6 +274,9 @@ impl Server {
             agg: vec![0u32; params.d],
             upload_indices: vec![None; params.n],
             survivors: Vec::new(),
+            phase: RoundPhase::Collecting,
+            responded: vec![false; params.n],
+            pending: Vec::new(),
         }
     }
 
@@ -274,16 +295,174 @@ impl Server {
         self.agg.iter_mut().for_each(|v| *v = 0);
         self.upload_indices.iter_mut().for_each(|v| *v = None);
         self.survivors.clear();
+        self.phase = RoundPhase::Collecting;
+        self.responded.iter_mut().for_each(|v| *v = false);
+        self.pending.clear();
     }
 
-    /// Aggregate one masked upload (eq. 20).
-    pub fn receive_upload(&mut self, up: SparseMaskedUpload) {
+    /// Validate and aggregate one masked upload (eq. 20) from untrusted
+    /// traffic. Nothing is aggregated unless every check passes, so a
+    /// rejected frame cannot corrupt the round: no double-count from a
+    /// replayed id, no panic from an out-of-range index, no silent
+    /// zip-truncation of a values/indices mismatch, no foreign `d`.
+    pub fn try_receive_upload(&mut self, up: SparseMaskedUpload)
+                              -> Result<(), IngestError> {
+        if self.phase != RoundPhase::Collecting {
+            return Err(IngestError::WrongPhase {
+                msg: "masked upload",
+                phase: self.phase.name(),
+            });
+        }
+        if up.id >= self.params.n {
+            return Err(IngestError::UnknownSender {
+                id: up.id,
+                n: self.params.n,
+            });
+        }
+        if self.upload_indices[up.id].is_some() {
+            return Err(IngestError::DuplicateUpload { id: up.id });
+        }
+        if up.d != self.params.d {
+            return Err(IngestError::WrongDimension {
+                got: up.d,
+                want: self.params.d,
+            });
+        }
+        if up.values.len() != up.indices.len() {
+            return Err(IngestError::LengthMismatch {
+                indices: up.indices.len(),
+                values: up.values.len(),
+            });
+        }
+        let mut prev: Option<u32> = None;
+        for &l in &up.indices {
+            if l as usize >= self.params.d {
+                return Err(IngestError::IndexOutOfRange {
+                    index: l,
+                    d: self.params.d,
+                });
+            }
+            if prev.is_some_and(|p| l <= p) {
+                return Err(IngestError::UnsortedIndices { id: up.id });
+            }
+            prev = Some(l);
+        }
+        if let Some(&v) = up.values.iter().find(|&&v| v >= field::Q) {
+            return Err(IngestError::ValueOutOfField { value: v });
+        }
+        // All checks passed: commit.
         for (&l, &v) in up.indices.iter().zip(&up.values) {
             let a = &mut self.agg[l as usize];
             *a = field::add(*a, v);
         }
         self.survivors.push(up.id);
         self.upload_indices[up.id] = Some(up.indices);
+        Ok(())
+    }
+
+    /// Trusted-path upload (in-process tests/benches): panics with the
+    /// typed error where [`Server::try_receive_upload`] would reject.
+    pub fn receive_upload(&mut self, up: SparseMaskedUpload) {
+        if let Err(e) = self.try_receive_upload(up) {
+            panic!("invalid upload on trusted path: {e}");
+        }
+    }
+
+    /// Close the MaskedInput phase: late or injected uploads are
+    /// rejected as [`IngestError::WrongPhase`] from here on.
+    pub fn close_uploads(&mut self) {
+        self.phase = RoundPhase::Unmasking;
+    }
+
+    /// Validate and buffer one unmask response from untrusted traffic.
+    /// Accepted only from solicited survivors, once each; every share
+    /// must sit at the sender's dealt evaluation point (`x = id + 1`),
+    /// reference a requested owner of the right set (DH shares for
+    /// dropped owners, seed shares for survivors) at most once, and
+    /// carry field-range payload words.
+    pub fn try_receive_response(&mut self, r: UnmaskResponse)
+                                -> Result<(), IngestError> {
+        if self.phase != RoundPhase::Unmasking {
+            return Err(IngestError::WrongPhase {
+                msg: "unmask response",
+                phase: self.phase.name(),
+            });
+        }
+        if r.id >= self.params.n {
+            return Err(IngestError::UnknownSender {
+                id: r.id,
+                n: self.params.n,
+            });
+        }
+        if self.upload_indices[r.id].is_none() {
+            return Err(IngestError::UnsolicitedResponse { id: r.id });
+        }
+        if self.responded[r.id] {
+            return Err(IngestError::DuplicateResponse { id: r.id });
+        }
+        let want_x = r.id as u32 + 1;
+        let check = |shares: &[(usize, Share)], owner_dropped: bool|
+                     -> Result<(), IngestError> {
+            for (k, (owner, s)) in shares.iter().enumerate() {
+                let requested = *owner < self.params.n
+                    && self.upload_indices[*owner].is_none() == owner_dropped;
+                if !requested
+                    || shares[..k].iter().any(|(o, _)| o == owner)
+                {
+                    return Err(IngestError::ForeignShare { owner: *owner });
+                }
+                if s.x != want_x {
+                    return Err(IngestError::WrongEvaluationPoint {
+                        got: s.x,
+                        want: want_x,
+                    });
+                }
+                if let Some(&y) = s.y.iter().find(|&&y| y >= field::Q) {
+                    return Err(IngestError::ValueOutOfField { value: y });
+                }
+            }
+            Ok(())
+        };
+        check(&r.dh_shares, true)?;
+        check(&r.seed_shares, false)?;
+        self.responded[r.id] = true;
+        self.pending.push(r);
+        Ok(())
+    }
+
+    /// Drain the validated responses buffered by
+    /// [`Server::try_receive_response`] (the only state `finish_round*`
+    /// should be fed on the frame-driven path).
+    pub fn take_responses(&mut self) -> Vec<UnmaskResponse> {
+        std::mem::take(&mut self.pending)
+    }
+
+    /// Frame-level ingest: decode an inbound wire frame and route it
+    /// through the fallible state machine. `from` is the transport
+    /// endpoint that submitted the frame; a header that claims a
+    /// different sender is rejected as spoofing before decoding the
+    /// payload.
+    pub fn ingest_frame(&mut self, from: usize, buf: &[u8])
+                        -> Result<(), IngestError> {
+        let malformed = |e: anyhow::Error| IngestError::Malformed(e.to_string());
+        let (sender, tag, _len) = wire::peek_header(buf).map_err(malformed)?;
+        if sender as usize != from {
+            return Err(IngestError::SpoofedSender {
+                claimed: sender as usize,
+                endpoint: from,
+            });
+        }
+        match tag {
+            wire::Tag::SparseMaskedUpload => {
+                let up = wire::decode_sparse_upload(buf).map_err(malformed)?;
+                self.try_receive_upload(up)
+            }
+            wire::Tag::UnmaskResponse => {
+                let r = wire::decode_unmask_response(buf).map_err(malformed)?;
+                self.try_receive_response(r)
+            }
+            other => Err(IngestError::UnexpectedTag(format!("{other:?}"))),
+        }
     }
 
     /// Which shares the server must collect this round.
@@ -633,6 +812,154 @@ mod tests {
         let frac = plan.indices.len() as f64 / p.d as f64;
         assert!(frac < 0.12, "frac={frac}");
         assert!(frac > 0.05, "frac={frac}");
+    }
+
+    #[test]
+    fn ingest_rejects_malformed_uploads_without_state_change() {
+        use crate::protocol::IngestError;
+        let p = params(6, 100, 0.4, 0.0);
+        let (users, mut server) = setup(p, 13);
+        let ys: Vec<f32> = vec![0.2; p.d];
+        let mut scratch = vec![0u32; p.d];
+        server.begin_round();
+        let plan = users[0].mask_plan(0, &p, &mut scratch);
+        let up = users[0].masked_upload(0, &ys, 1.0 / 6.0, &p, plan);
+
+        // Unknown sender.
+        let mut bad = up.clone();
+        bad.id = 99;
+        assert!(matches!(server.try_receive_upload(bad),
+                         Err(IngestError::UnknownSender { .. })));
+        // Wrong dimension.
+        let mut bad = up.clone();
+        bad.d = p.d + 1;
+        assert!(matches!(server.try_receive_upload(bad),
+                         Err(IngestError::WrongDimension { .. })));
+        // Values/indices mismatch (pre-fix this zip-truncated silently).
+        let mut bad = up.clone();
+        bad.values.pop();
+        assert!(matches!(server.try_receive_upload(bad),
+                         Err(IngestError::LengthMismatch { .. })));
+        // Out-of-range index (pre-fix this panicked on agg[l]).
+        let mut bad = up.clone();
+        *bad.indices.last_mut().unwrap() = p.d as u32;
+        assert!(matches!(server.try_receive_upload(bad),
+                         Err(IngestError::IndexOutOfRange { .. })));
+        // Duplicate coordinate.
+        let mut bad = up.clone();
+        bad.indices[1] = bad.indices[0];
+        assert!(matches!(server.try_receive_upload(bad),
+                         Err(IngestError::UnsortedIndices { .. })));
+        // Out-of-field value.
+        let mut bad = up.clone();
+        bad.values[0] = field::Q;
+        assert!(matches!(server.try_receive_upload(bad),
+                         Err(IngestError::ValueOutOfField { .. })));
+
+        // Nothing above touched the aggregate or the survivor set.
+        assert!(server.aggregate_field().iter().all(|&v| v == 0));
+        assert!(server.survivors().is_empty());
+
+        // The genuine upload lands; a replay of it must not double-count
+        // (pre-fix this silently doubled the aggregate).
+        server.try_receive_upload(up.clone()).unwrap();
+        let snapshot = server.aggregate_field().to_vec();
+        assert!(matches!(server.try_receive_upload(up),
+                         Err(IngestError::DuplicateUpload { .. })));
+        assert_eq!(server.aggregate_field(), &snapshot[..]);
+        assert_eq!(server.survivors(), &[0]);
+    }
+
+    #[test]
+    fn ingest_state_machine_enforces_phases_and_response_validity() {
+        use crate::protocol::IngestError;
+        let p = params(6, 120, 0.4, 0.0);
+        let (users, mut server) = setup(p, 14);
+        let ys: Vec<f32> = vec![0.1; p.d];
+        let mut scratch = vec![0u32; p.d];
+        server.begin_round();
+        // Users 0..4 upload; user 5 "drops".
+        for u in users.iter().take(5) {
+            let plan = u.mask_plan(0, &p, &mut scratch);
+            server.receive_upload(u.masked_upload(0, &ys, 1.0 / 6.0, &p,
+                                                  plan));
+        }
+        let req = server.unmask_request();
+        let honest: Vec<UnmaskResponse> =
+            users.iter().take(5).map(|u| u.respond_unmask(&req)).collect();
+
+        // Response before uploads close: phase error.
+        assert!(matches!(server.try_receive_response(honest[0].clone()),
+                         Err(IngestError::WrongPhase { .. })));
+        server.close_uploads();
+        // Upload after uploads close: phase error.
+        let plan = users[0].mask_plan(0, &p, &mut scratch);
+        let late = users[0].masked_upload(0, &ys, 1.0 / 6.0, &p, plan);
+        assert!(matches!(server.try_receive_upload(late),
+                         Err(IngestError::WrongPhase { .. })));
+
+        // Honest response accepted once, replay rejected.
+        server.try_receive_response(honest[0].clone()).unwrap();
+        assert!(matches!(server.try_receive_response(honest[0].clone()),
+                         Err(IngestError::DuplicateResponse { .. })));
+        // Unsolicited sender (the dropped user never uploaded).
+        let unsolicited = users[5].respond_unmask(&req);
+        assert!(matches!(server.try_receive_response(unsolicited),
+                         Err(IngestError::UnsolicitedResponse { .. })));
+        // Wrong evaluation point: user 1's shares re-stamped at x = 1
+        // (user 0's dealt point) — equivocation-by-geometry.
+        let mut equivocating = honest[1].clone();
+        for (_, s) in equivocating.dh_shares.iter_mut() {
+            s.x = 1;
+        }
+        assert!(matches!(
+            server.try_receive_response(equivocating),
+            Err(IngestError::WrongEvaluationPoint { .. })));
+        // Share for an owner of the wrong set (a survivor's DH share).
+        let mut foreign = honest[1].clone();
+        if let Some(first) = foreign.dh_shares.first_mut() {
+            first.0 = 0; // user 0 is a survivor, not dropped
+        }
+        assert!(matches!(server.try_receive_response(foreign),
+                         Err(IngestError::ForeignShare { .. })));
+
+        // The remaining honest responses complete the round.
+        for r in honest.into_iter().skip(1) {
+            server.try_receive_response(r).unwrap();
+        }
+        let responses = server.take_responses();
+        assert_eq!(responses.len(), 5);
+        assert!(server.finish_round(0, &responses).is_ok());
+    }
+
+    #[test]
+    fn frame_ingest_rejects_spoof_garbage_and_foreign_tags() {
+        use crate::protocol::{wire, IngestError};
+        let p = params(5, 80, 0.5, 0.0);
+        let (users, mut server) = setup(p, 15);
+        let ys: Vec<f32> = vec![0.3; p.d];
+        let mut scratch = vec![0u32; p.d];
+        server.begin_round();
+        let plan = users[2].mask_plan(0, &p, &mut scratch);
+        let up = users[2].masked_upload(0, &ys, 0.2, &p, plan);
+        let buf = wire::encode_sparse_upload(&up);
+
+        // Spoof: endpoint 4 submits user 2's frame.
+        assert!(matches!(server.ingest_frame(4, &buf),
+                         Err(IngestError::SpoofedSender { .. })));
+        // Garbage bytes.
+        assert!(matches!(server.ingest_frame(1, &[0xff; 40]),
+                         Err(IngestError::Malformed(_))));
+        // Well-formed frame of a type this ingest never accepts.
+        let ad = wire::encode_advertise(&AdvertiseKeys {
+            id: 1,
+            public: 42,
+        });
+        assert!(matches!(server.ingest_frame(1, &ad),
+                         Err(IngestError::UnexpectedTag(_))));
+        // The real thing still lands.
+        server.ingest_frame(2, &buf).unwrap();
+        assert_eq!(server.survivors(), &[2]);
     }
 
     #[test]

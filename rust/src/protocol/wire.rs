@@ -3,9 +3,42 @@
 //! [`super::messages`] carries the size accounting; this module makes the
 //! frames *real*: every message serializes to the exact byte layout the
 //! sizes promise (little-endian, 12-byte frame header of sender id /
-//! message tag / payload length), and round-trips losslessly. The
-//! simulated network moves these buffers, so a future swap to real
-//! sockets only replaces the transport, not the protocol.
+//! message tag / payload length), and round-trips losslessly. Frames move
+//! through [`crate::transport`]; swapping the in-memory bus for real
+//! sockets replaces only the transport, not the protocol.
+//!
+//! # Threat model
+//!
+//! Decoders assume every input byte is **hostile**. The codec layer
+//! guarantees, for arbitrary input:
+//!
+//! * no panic, no unbounded allocation — count fields are validated
+//!   against the bytes actually present *before* any allocation sized by
+//!   them ([`R::count`]), the sparse values region is bounded by the
+//!   bitmap's popcount before it is read, and bitmap padding bits beyond
+//!   `d` must be zero;
+//! * no silent truncation or extension — a roster payload must be a
+//!   whole number of keys, every decoder checks it consumed the frame
+//!   exactly, and [`peek_header`] rejects length-field lies;
+//! * decoded structs are *shape*-valid only. Semantic validation —
+//!   sender identity vs transport endpoint, round phase, duplicate
+//!   detection, dimension and field-range checks, share evaluation
+//!   points — is the job of the servers' fallible ingest layer
+//!   (`try_receive_upload` / `try_receive_response`), which rejects with
+//!   typed [`super::IngestError`]s.
+//!
+//! What no server-side check can catch: a well-formed upload whose
+//! masked values are simply *wrong* shifts the aggregate by the lie —
+//! secure aggregation hides individual updates, it does not authenticate
+//! their content (that is the paper's honest-but-curious model; input
+//! poisoning needs orthogonal defenses). Forged Shamir share *values*
+//! with a valid evaluation point are detected at reconstruction
+//! ([`crate::shamir::reconstruct`] cross-checks every extra share
+//! against the interpolated polynomial) and fail the round cleanly
+//! rather than silently corrupting the seed — provided the response set
+//! carries redundancy (> t+1 distinct points; at exact quorum any
+//! t+1 values define a valid polynomial, so detection is
+//! information-theoretically impossible without verifiable sharing).
 
 use crate::shamir::{Share, SHARE_BYTES};
 use anyhow::{bail, ensure, Result};
@@ -237,7 +270,12 @@ pub fn decode_advertise(buf: &[u8]) -> Result<AdvertiseKeys> {
 
 pub fn decode_roster(buf: &[u8]) -> Result<Roster> {
     let (_, mut r) = payload(buf, Tag::Roster)?;
-    let n = (buf.len() - FRAME_BYTES) / 8;
+    let body = buf.len() - FRAME_BYTES;
+    // A roster is a whole number of 64-bit keys; flooring `body / 8`
+    // would silently drop 1–7 trailing bytes of a corrupt frame.
+    ensure!(body % 8 == 0,
+            "roster payload of {body} bytes is not a whole number of keys");
+    let n = body / 8;
     let mut publics = Vec::with_capacity(n);
     for _ in 0..n {
         publics.push(r.u64()?);
@@ -258,15 +296,29 @@ pub fn decode_share_bundle(buf: &[u8]) -> Result<ShareBundle> {
 pub fn decode_sparse_upload(buf: &[u8]) -> Result<SparseMaskedUpload> {
     let (sender, mut r) = payload(buf, Tag::SparseMaskedUpload)?;
     let d = r.u32()? as usize;
-    let bitmap = r.take(d.div_ceil(8))?.to_vec();
-    let mut indices = Vec::new();
+    let bitmap = r.take(d.div_ceil(8))?;
+    // Padding bits beyond `d` in the last byte must be zero, so the
+    // popcount below equals the decoded support size exactly.
+    if d % 8 != 0 {
+        ensure!(bitmap[d / 8] >> (d % 8) == 0,
+                "bitmap padding bits set beyond d = {d}");
+    }
+    // Bound the values region by the popcount BEFORE reading it: the
+    // value count is derived data, and a frame whose payload disagrees
+    // with its own bitmap must be rejected, not zip-truncated.
+    let k: usize = bitmap.iter().map(|b| b.count_ones() as usize).sum();
+    let left = buf.len() - r.pos;
+    ensure!(left == 4 * k,
+            "sparse upload values region: popcount {k} needs {} bytes, \
+             {left} present", 4 * k);
+    let mut indices = Vec::with_capacity(k);
     for l in 0..d as u32 {
         if bitmap[(l / 8) as usize] & (1 << (l % 8)) != 0 {
             indices.push(l);
         }
     }
-    let mut values = Vec::with_capacity(indices.len());
-    for _ in 0..indices.len() {
+    let mut values = Vec::with_capacity(k);
+    for _ in 0..k {
         values.push(r.u32()?);
     }
     ensure!(r.pos == buf.len(), "trailing bytes in sparse upload");
@@ -429,5 +481,62 @@ mod tests {
         let buf = encode_roster(&m);
         assert!(decode_advertise(&buf).is_err());
         assert!(decode_unmask_request(&buf).is_err());
+    }
+
+    /// A frame whose header/length bookkeeping is consistent but whose
+    /// roster body is not a whole number of keys must be rejected, not
+    /// floored down to `len / 8` entries.
+    #[test]
+    fn roster_with_ragged_payload_rejected() {
+        let m = Roster { publics: vec![1, 2, 3] };
+        let mut buf = encode_roster(&m);
+        for extra in 1..8usize {
+            buf.push(0xab);
+            let len = (buf.len() - FRAME_BYTES) as u32;
+            buf[8..12].copy_from_slice(&len.to_le_bytes());
+            assert!(decode_roster(&buf).is_err(),
+                    "{extra} trailing bytes silently accepted");
+        }
+    }
+
+    /// Sparse upload whose values region disagrees with the bitmap's
+    /// popcount (one value short / one value long) must error out.
+    #[test]
+    fn sparse_upload_values_region_must_match_popcount() {
+        let m = SparseMaskedUpload {
+            id: 1,
+            indices: vec![0, 3, 9],
+            values: vec![10, 20, 30],
+            d: 16,
+        };
+        let good = encode_sparse_upload(&m);
+        assert!(decode_sparse_upload(&good).is_ok());
+        // one value short
+        let mut short = good[..good.len() - 4].to_vec();
+        let len = (short.len() - FRAME_BYTES) as u32;
+        short[8..12].copy_from_slice(&len.to_le_bytes());
+        assert!(decode_sparse_upload(&short).is_err());
+        // one value long
+        let mut long = good.clone();
+        long.extend_from_slice(&7u32.to_le_bytes());
+        let len = (long.len() - FRAME_BYTES) as u32;
+        long[8..12].copy_from_slice(&len.to_le_bytes());
+        assert!(decode_sparse_upload(&long).is_err());
+    }
+
+    /// Bitmap padding bits beyond `d` must be zero — a hostile frame
+    /// cannot inflate the popcount past the decodable support.
+    #[test]
+    fn sparse_upload_padding_bits_rejected() {
+        let m = SparseMaskedUpload {
+            id: 2,
+            indices: vec![1],
+            values: vec![5],
+            d: 12, // bitmap: 2 bytes, top 4 bits of byte 1 are padding
+        };
+        let mut buf = encode_sparse_upload(&m);
+        // header(12) + d(4) + bitmap byte 0 at 16, byte 1 at 17
+        buf[17] |= 0x80; // set a padding bit (bit 15 >= d)
+        assert!(decode_sparse_upload(&buf).is_err());
     }
 }

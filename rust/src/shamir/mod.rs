@@ -32,7 +32,7 @@ pub fn deal(seed: Seed, n: usize, t: usize, entropy: &mut ChaCha20Rng)
             -> Vec<Share> {
     assert!(n >= 1 && t < n, "need t < n (t={t}, n={n})");
     let words = seed.to_field_elems();
-    // coeffs[w][k]: coefficient of x^k for word w; k=0 is the secret.
+    // coeffs[k][w]: coefficient of x^k for word w; k=0 is the secret.
     let mut coeffs = vec![[0u32; 8]; t + 1];
     coeffs[0] = words;
     for c in coeffs.iter_mut().skip(1) {
@@ -56,31 +56,105 @@ pub fn deal(seed: Seed, n: usize, t: usize, entropy: &mut ChaCha20Rng)
         .collect()
 }
 
-/// Reconstruct the seed from any `t + 1` (or more) distinct shares.
-/// Returns `None` if fewer than `t + 1` shares are supplied.
+/// Lagrange interpolation over `pts` (pairwise-distinct nonzero `x`),
+/// evaluating the unique degree-`pts.len()-1` polynomial per seed word.
+/// The per-point denominators are x₀-independent and precomputed once,
+/// so each evaluation costs O(t) multiplications via prefix/suffix
+/// products of `(x₀ − x_j)`.
+struct Basis<'a> {
+    pts: &'a [&'a Share],
+    inv_den: Vec<u32>,
+}
+
+impl<'a> Basis<'a> {
+    fn new(pts: &'a [&'a Share]) -> Basis<'a> {
+        let inv_den = (0..pts.len())
+            .map(|i| {
+                let mut den = 1u32;
+                for (j, sj) in pts.iter().enumerate() {
+                    if j != i {
+                        den = field::mul(den, field::sub(pts[i].x, sj.x));
+                    }
+                }
+                // den != 0: the caller deduplicated x's.
+                field::inv(den)
+            })
+            .collect();
+        Basis { pts, inv_den }
+    }
+
+    /// All 8 seed words of the interpolating polynomial at `x0`.
+    fn eval(&self, x0: u32) -> [u32; 8] {
+        let k = self.pts.len();
+        // pre[i] = Π_{j<i} (x0 − x_j); suf[i] = Π_{j≥i} (x0 − x_j).
+        let mut pre = vec![1u32; k + 1];
+        for i in 0..k {
+            pre[i + 1] = field::mul(pre[i], field::sub(x0, self.pts[i].x));
+        }
+        let mut suf = vec![1u32; k + 1];
+        for i in (0..k).rev() {
+            suf[i] = field::mul(suf[i + 1], field::sub(x0, self.pts[i].x));
+        }
+        let mut words = [0u32; 8];
+        for i in 0..k {
+            let num = field::mul(pre[i], suf[i + 1]);
+            let lambda = field::mul(num, self.inv_den[i]);
+            for w in 0..8 {
+                words[w] =
+                    field::add(words[w], field::mul(lambda, self.pts[i].y[w]));
+            }
+        }
+        words
+    }
+}
+
+/// Reconstruct the seed from any `t + 1` (or more) shares with
+/// **distinct** evaluation points, hardened for hostile share lists:
+///
+/// * shares with `x = 0` (a claim to *be* the secret) or `x ≥ q` are
+///   rejected outright;
+/// * duplicate-`x` shares are collapsed when their payloads agree
+///   (replay) and rejected when they conflict (equivocation) — naive
+///   interpolation over a repeated point divides by zero;
+/// * returns `None` if fewer than `t + 1` *distinct* points remain;
+/// * every share beyond the first `t + 1` is cross-checked against the
+///   interpolated polynomial. A forged share among honest ones either
+///   lands in the interpolation set (some honest extra then disagrees)
+///   or is itself the disagreeing extra — both return `None` instead of
+///   silently folding garbage into the seed.
+///
+/// The cross-check needs redundancy: with **exactly** `t + 1` distinct
+/// points there is nothing to check against, and a forged share value
+/// is information-theoretically undetectable (any `t + 1` points define
+/// a valid degree-`t` polynomial). Protocol-level consequence: a
+/// two-faced survivor's poisoned shares fail the round cleanly whenever
+/// more than `t + 1` users respond, but an exact-quorum round has no
+/// redundancy to spend on detection — that residual risk is inherent to
+/// unauthenticated Shamir sharing, not a gap in this implementation
+/// (verifiable secret sharing would close it at extra communication
+/// cost).
 pub fn reconstruct(shares: &[&Share], t: usize) -> Option<Seed> {
-    if shares.len() < t + 1 {
+    let mut pts: Vec<&Share> = Vec::with_capacity(shares.len());
+    for &s in shares {
+        if s.x == 0 || s.x >= field::Q {
+            return None;
+        }
+        match pts.iter().find(|p| p.x == s.x) {
+            Some(p) if p.y == s.y => {} // replayed copy: collapse
+            Some(_) => return None,     // equivocation
+            None => pts.push(s),
+        }
+    }
+    if pts.len() < t + 1 {
         return None;
     }
-    let pts = &shares[..t + 1];
-    // Lagrange basis at x=0: λ_i = Π_{j≠i} x_j / (x_j − x_i).
-    let mut words = [0u32; 8];
-    for (i, si) in pts.iter().enumerate() {
-        let mut num = 1u32;
-        let mut den = 1u32;
-        for (j, sj) in pts.iter().enumerate() {
-            if i == j {
-                continue;
-            }
-            num = field::mul(num, sj.x);
-            den = field::mul(den, field::sub(sj.x, si.x));
-        }
-        let lambda = field::mul(num, field::inv(den));
-        for w in 0..8 {
-            words[w] = field::add(words[w], field::mul(lambda, si.y[w]));
+    let basis = Basis::new(&pts[..t + 1]);
+    for s in &pts[t + 1..] {
+        if basis.eval(s.x) != s.y {
+            return None;
         }
     }
-    Some(Seed(words))
+    Some(Seed(basis.eval(0)))
 }
 
 /// Default threshold: polynomial degree ⌊N/2⌋, so ⌊N/2⌋+1 shares
@@ -184,6 +258,117 @@ mod tests {
         }
         let frac = low as f64 / trials as f64;
         assert!((frac - 0.5).abs() < 0.05, "frac={frac}");
+    }
+
+    #[test]
+    fn replayed_shares_collapse_and_still_reconstruct() {
+        // t+1 distinct shares plus verbatim replays of two of them:
+        // replays are harmless (collapsed), reconstruction succeeds.
+        let mut rng = ChaCha20Rng::from_seed_u64(8);
+        let seed = seed_below_q(&mut rng);
+        let t = 3;
+        let shares = deal(seed, 8, t, &mut rng);
+        let mut refs: Vec<&Share> = shares.iter().take(t + 1).collect();
+        refs.push(&shares[0]);
+        refs.push(&shares[2]);
+        assert_eq!(reconstruct(&refs, t), Some(seed));
+    }
+
+    #[test]
+    fn equivocating_shares_return_none_not_panic() {
+        // Two shares at the same x with different y: the old code fed
+        // field::inv(0); now it must cleanly return None.
+        let mut rng = ChaCha20Rng::from_seed_u64(9);
+        let seed = seed_below_q(&mut rng);
+        let t = 3;
+        let shares = deal(seed, 8, t, &mut rng);
+        let mut forged = shares[1].clone();
+        forged.y[0] = field::add(forged.y[0], 1);
+        let mut refs: Vec<&Share> = shares.iter().take(t + 1).collect();
+        refs.push(&forged);
+        assert_eq!(reconstruct(&refs, t), None);
+    }
+
+    #[test]
+    fn replays_do_not_fake_a_quorum() {
+        // t+1 copies of one share are ONE distinct point: below the
+        // threshold, reconstruction must refuse.
+        let mut rng = ChaCha20Rng::from_seed_u64(10);
+        let seed = seed_below_q(&mut rng);
+        let t = 3;
+        let shares = deal(seed, 8, t, &mut rng);
+        let refs: Vec<&Share> = std::iter::repeat(&shares[0])
+            .take(t + 1)
+            .collect();
+        assert_eq!(reconstruct(&refs, t), None);
+        // t distinct + a replay of one of them: still only t points.
+        let mut refs: Vec<&Share> = shares.iter().take(t).collect();
+        refs.push(&shares[0]);
+        assert_eq!(reconstruct(&refs, t), None);
+    }
+
+    #[test]
+    fn forged_extra_share_is_detected() {
+        // More than t+1 shares where one is forged at a fresh x: the
+        // consistency cross-check must reject instead of silently
+        // reconstructing (the forgery may or may not land in the
+        // interpolation set depending on order — try both).
+        let mut rng = ChaCha20Rng::from_seed_u64(11);
+        let seed = seed_below_q(&mut rng);
+        let t = 3;
+        let shares = deal(seed, 9, t, &mut rng);
+        let mut forged = shares[6].clone();
+        forged.y[3] = field::add(forged.y[3], 12345);
+        // forgery last (checked as an extra)
+        let mut refs: Vec<&Share> = shares.iter().take(t + 2).collect();
+        refs.push(&forged);
+        assert_eq!(reconstruct(&refs, t), None);
+        // forgery first (lands in the interpolation set; honest extras
+        // disagree)
+        let mut refs: Vec<&Share> = vec![&forged];
+        refs.extend(shares.iter().take(t + 2));
+        assert_eq!(reconstruct(&refs, t), None);
+    }
+
+    /// Documents the information-theoretic boundary of the cross-check:
+    /// at EXACTLY t+1 distinct points a forged value defines a different
+    /// but perfectly valid polynomial, so reconstruction succeeds with a
+    /// wrong seed — detection fundamentally requires > t+1 shares (see
+    /// the `reconstruct` docs; one extra honest share restores it).
+    #[test]
+    fn exact_quorum_forgery_is_undetectable_by_construction() {
+        let mut rng = ChaCha20Rng::from_seed_u64(13);
+        let seed = seed_below_q(&mut rng);
+        let t = 3;
+        let shares = deal(seed, 8, t, &mut rng);
+        let mut forged = shares[2].clone();
+        forged.y[1] = field::add(forged.y[1], 99);
+        // Exactly t+1 points, one forged: succeeds, wrong seed.
+        let refs: Vec<&Share> =
+            [&shares[0], &shares[1], &forged, &shares[3]].to_vec();
+        let got = reconstruct(&refs, t);
+        assert!(got.is_some());
+        assert_ne!(got, Some(seed));
+        // One honest extra point: the forgery is caught.
+        let mut refs = refs;
+        refs.push(&shares[4]);
+        assert_eq!(reconstruct(&refs, t), None);
+    }
+
+    #[test]
+    fn hostile_evaluation_points_rejected() {
+        let mut rng = ChaCha20Rng::from_seed_u64(12);
+        let seed = seed_below_q(&mut rng);
+        let t = 2;
+        let shares = deal(seed, 6, t, &mut rng);
+        let zero_x = Share { x: 0, y: shares[0].y };
+        let big_x = Share { x: crate::field::Q, y: shares[0].y };
+        let mut refs: Vec<&Share> = shares.iter().take(t + 1).collect();
+        refs.push(&zero_x);
+        assert_eq!(reconstruct(&refs, t), None);
+        let mut refs: Vec<&Share> = shares.iter().take(t + 1).collect();
+        refs.push(&big_x);
+        assert_eq!(reconstruct(&refs, t), None);
     }
 
     #[test]

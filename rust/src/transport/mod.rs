@@ -1,0 +1,120 @@
+//! Byte-frame transport between the simulated endpoints.
+//!
+//! Every protocol message travels as an encoded [`crate::protocol::wire`]
+//! frame through a [`Transport`]; endpoints never hand each other structs.
+//! The trait is the seam for real deployment: swapping the in-memory bus
+//! for sockets (or an RPC mesh) replaces *only* this module — the wire
+//! codec, the server ingest state machine, and the round driver are
+//! already speaking bytes.
+//!
+//! # Endpoint identity vs frame identity
+//!
+//! [`Transport::to_server`] carries the *endpoint* id of the submitting
+//! client — the transport-level identity a production stack gets from
+//! the authenticated channel (mTLS peer, session token). Frames also
+//! carry a claimed sender id in their header. The server ingest layer
+//! cross-checks the two and rejects mismatches as spoofing; the
+//! transport itself moves bytes and makes no promise about their
+//! well-formedness. Hostile frames (malformed, replayed, phase-confused)
+//! are expected traffic here — validation is the receiver's job.
+//!
+//! [`InMemoryBus`] is the deterministic reference implementation: FIFO
+//! per-direction queues, no loss, no reordering, so rounds are exactly
+//! reproducible and the adversarial harness can pin byte-exact outcomes.
+
+use std::collections::VecDeque;
+
+/// Frame mover between N client endpoints and one server endpoint.
+pub trait Transport {
+    /// Queue `frame` from client endpoint `from` toward the server.
+    fn to_server(&mut self, from: usize, frame: Vec<u8>);
+
+    /// Queue `frame` from the server toward client endpoint `to`.
+    /// Frames to unknown endpoints are dropped (a real NIC cannot
+    /// deliver to a peer that does not exist).
+    fn to_client(&mut self, to: usize, frame: Vec<u8>);
+
+    /// Next frame waiting at the server, with the submitting endpoint id
+    /// (FIFO across all clients in submission order).
+    fn server_recv(&mut self) -> Option<(usize, Vec<u8>)>;
+
+    /// Next frame waiting at client endpoint `id` (FIFO).
+    fn client_recv(&mut self, id: usize) -> Option<Vec<u8>>;
+}
+
+/// In-memory byte bus: one FIFO into the server, one FIFO per client.
+pub struct InMemoryBus {
+    server_in: VecDeque<(usize, Vec<u8>)>,
+    client_in: Vec<VecDeque<Vec<u8>>>,
+}
+
+impl InMemoryBus {
+    /// A bus wiring `n` client endpoints to one server.
+    pub fn new(n: usize) -> Self {
+        InMemoryBus {
+            server_in: VecDeque::new(),
+            client_in: (0..n).map(|_| VecDeque::new()).collect(),
+        }
+    }
+
+    /// Frames currently queued at the server (tests/diagnostics).
+    pub fn server_pending(&self) -> usize {
+        self.server_in.len()
+    }
+}
+
+impl Transport for InMemoryBus {
+    fn to_server(&mut self, from: usize, frame: Vec<u8>) {
+        self.server_in.push_back((from, frame));
+    }
+
+    fn to_client(&mut self, to: usize, frame: Vec<u8>) {
+        if let Some(q) = self.client_in.get_mut(to) {
+            q.push_back(frame);
+        }
+    }
+
+    fn server_recv(&mut self) -> Option<(usize, Vec<u8>)> {
+        self.server_in.pop_front()
+    }
+
+    fn client_recv(&mut self, id: usize) -> Option<Vec<u8>> {
+        self.client_in.get_mut(id)?.pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_per_direction() {
+        let mut bus = InMemoryBus::new(2);
+        bus.to_server(0, vec![1]);
+        bus.to_server(1, vec![2]);
+        bus.to_server(0, vec![3]);
+        assert_eq!(bus.server_recv(), Some((0, vec![1])));
+        assert_eq!(bus.server_recv(), Some((1, vec![2])));
+        assert_eq!(bus.server_recv(), Some((0, vec![3])));
+        assert_eq!(bus.server_recv(), None);
+    }
+
+    #[test]
+    fn client_queues_are_isolated() {
+        let mut bus = InMemoryBus::new(3);
+        bus.to_client(1, vec![7]);
+        bus.to_client(2, vec![8]);
+        assert_eq!(bus.client_recv(0), None);
+        assert_eq!(bus.client_recv(1), Some(vec![7]));
+        assert_eq!(bus.client_recv(1), None);
+        assert_eq!(bus.client_recv(2), Some(vec![8]));
+    }
+
+    #[test]
+    fn unknown_endpoints_are_dropped_not_panicked() {
+        let mut bus = InMemoryBus::new(2);
+        bus.to_client(9, vec![1]); // no such endpoint: dropped
+        assert_eq!(bus.client_recv(9), None);
+        assert_eq!(bus.client_recv(0), None);
+    }
+}

@@ -1,0 +1,248 @@
+//! Adversarial robustness suite: full rounds under hostile traffic.
+//!
+//! A seeded byzantine catalog (replays, spoofed senders, wrong
+//! dimensions, bitmap/values mismatches, hostile counts, garbage
+//! payloads, unknown tags, truncations, phase confusion, replayed
+//! responses, forged shares) is driven through the frame-level round
+//! driver for **both protocols and all three unmask executors**. The
+//! contract under attack:
+//!
+//! * every detectable injection is rejected with a typed error and
+//!   counted — never a panic;
+//! * a surviving round is **bit-exactly** equal to the honest reference
+//!   (the same round with the byzantine users simply dropped) — no
+//!   silent aggregate corruption;
+//! * an unsurvivable round (byzantine pressure breaks quorum, or a
+//!   two-faced survivor poisons share values behind valid geometry)
+//!   fails with a clean `Err`.
+
+use sparsesecagg::adversary::{Adversary, Attack, FULL_CATALOG};
+use sparsesecagg::coordinator::Coordinator;
+use sparsesecagg::exec::{ExecMode, Executor};
+use sparsesecagg::field;
+use sparsesecagg::prg::ChaCha20Rng;
+use sparsesecagg::protocol::messages::UnmaskResponse;
+use sparsesecagg::protocol::shard::ShardConfig;
+use sparsesecagg::protocol::{secagg, sparse, Params};
+
+fn params(n: usize, d: usize, alpha: f64, theta: f64) -> Params {
+    Params { n, d, alpha, theta, c: 1024.0 }
+}
+
+fn grads(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = ChaCha20Rng::from_seed_u64(seed);
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.next_f32() - 0.5).collect())
+        .collect()
+}
+
+/// (mode, shard_size): shard_size 0 selects the monolithic path.
+const EXECUTORS: &[(ExecMode, usize)] = &[
+    (ExecMode::Stealing, 64),
+    (ExecMode::Windowed, 64),
+    (ExecMode::Monolithic, 0),
+];
+
+fn coordinator(secagg_proto: bool, p: Params, entropy: u64,
+               mode: ExecMode, shard: usize) -> Coordinator {
+    let mut c = if secagg_proto {
+        Coordinator::new_secagg(p, entropy)
+    } else {
+        Coordinator::new_sparse(p, entropy)
+    };
+    c.exec_mode = mode;
+    c.shard_size = shard;
+    c.threads = 3;
+    c
+}
+
+/// One attacked round vs its honest reference: byzantine users 0 and 1
+/// inject `attack` frames; the reference round simply drops them. The
+/// attacked round must complete bit-exact and count every injection as
+/// rejected.
+fn assert_attack_is_shed(secagg_proto: bool, attack: Attack,
+                         mode: ExecMode, shard: usize) {
+    let alpha = if secagg_proto { 1.0 } else { 0.3 };
+    let p = params(10, 500, alpha, 0.0);
+    let ys = grads(p.n, p.d, 0xfeed);
+    let betas = vec![1.0 / p.n as f64; p.n];
+    let dropped = vec![7usize];
+    let frac = 0.2; // byzantine ids 0, 1
+
+    let mut reference = coordinator(secagg_proto, p, 77, mode, shard);
+    let mut ref_dropped = dropped.clone();
+    ref_dropped.extend([0usize, 1]);
+    let (want, _) =
+        reference.run_round(3, &ys, &betas, &ref_dropped).unwrap();
+
+    let mut attacked = coordinator(secagg_proto, p, 77, mode, shard);
+    let mut adv = Adversary::with_catalog(frac, 0xa77ac4, &[attack]);
+    let (got, ledger) = attacked
+        .run_round_adversarial(3, &ys, &betas, &dropped, &mut adv)
+        .unwrap_or_else(|e| {
+            panic!("{attack:?}/{mode:?} should be survivable: {e:#}")
+        });
+
+    assert!(adv.injected > 0, "{attack:?} injected nothing");
+    assert_eq!(ledger.rejected_frames, adv.injected,
+               "{attack:?}/{mode:?}: every injected frame must be \
+                rejected, none silently accepted");
+    assert_eq!(got, want,
+               "{attack:?}/{mode:?} secagg={secagg_proto}: attacked \
+                aggregate differs from honest reference");
+}
+
+#[test]
+fn catalog_rounds_are_bit_exact_for_sparse_all_executors() {
+    for &(mode, shard) in EXECUTORS {
+        for &attack in FULL_CATALOG {
+            assert_attack_is_shed(false, attack, mode, shard);
+        }
+    }
+}
+
+#[test]
+fn catalog_rounds_are_bit_exact_for_secagg_all_executors() {
+    for &(mode, shard) in EXECUTORS {
+        for &attack in FULL_CATALOG {
+            assert_attack_is_shed(true, attack, mode, shard);
+        }
+    }
+}
+
+/// The whole catalog at once, several rounds on one coordinator: the
+/// bus and the ingest state machine must come back clean every round.
+#[test]
+fn full_catalog_storm_across_rounds() {
+    let p = params(10, 400, 0.35, 0.0);
+    let ys = grads(p.n, p.d, 0xcafe);
+    let betas = vec![1.0 / p.n as f64; p.n];
+    let mut reference = coordinator(false, p, 31, ExecMode::Stealing, 64);
+    let mut attacked = coordinator(false, p, 31, ExecMode::Stealing, 64);
+    let mut adv = Adversary::new(0.2, 9);
+    for round in 0..4 {
+        let (want, _) = reference
+            .run_round(round, &ys, &betas, &[0, 1])
+            .unwrap();
+        let (got, ledger) = attacked
+            .run_round_adversarial(round, &ys, &betas, &[], &mut adv)
+            .unwrap();
+        assert_eq!(got, want, "round {round}");
+        assert!(ledger.rejected_frames > 0);
+    }
+}
+
+/// Enough byzantine users to break quorum: the round must fail with a
+/// clean error (reconstruction refuses below threshold), never panic
+/// and never emit a fabricated aggregate.
+#[test]
+fn byzantine_pressure_breaking_quorum_fails_cleanly() {
+    let p = params(10, 300, 0.4, 0.0);
+    let ys = grads(p.n, p.d, 0xdead);
+    let betas = vec![1.0 / p.n as f64; p.n];
+    // 4 byzantine + 2 dropped => 4 survivors < t+1 = 6.
+    let dropped = vec![7usize, 8];
+    for &(mode, shard) in EXECUTORS {
+        let mut attacked = coordinator(false, p, 13, mode, shard);
+        let mut adv = Adversary::new(0.4, 5);
+        let res = attacked
+            .run_round_adversarial(0, &ys, &betas, &dropped, &mut adv);
+        assert!(res.is_err(), "{mode:?}: quorum loss must be an error");
+    }
+}
+
+/// A *two-faced* survivor: uploads honestly, then returns shares with
+/// valid geometry (right x, right owners) but poisoned words. Ingest
+/// cannot tell — but reconstruction cross-checks every extra share
+/// against the interpolated polynomial, so the round fails cleanly
+/// instead of silently folding garbage into the unmasking. All three
+/// executors consume the same reconstruction, so all three must refuse.
+#[test]
+fn two_faced_share_poisoning_fails_cleanly_not_silently() {
+    let p = params(8, 300, 0.4, 0.0);
+    let ys = grads(p.n, p.d, 0xbeef);
+    let beta = 1.0 / p.n as f64;
+    for &(mode, shard) in EXECUTORS {
+        let (users, mut server) = sparse::setup(p, 5);
+        server.begin_round();
+        let mut scratch = vec![0u32; p.d];
+        for u in &users {
+            let plan = u.mask_plan(0, &p, &mut scratch);
+            server.receive_upload(
+                u.masked_upload(0, &ys[u.id], beta, &p, plan));
+        }
+        server.close_uploads();
+        let req = server.unmask_request();
+        let mut responses: Vec<UnmaskResponse> =
+            users.iter().map(|u| u.respond_unmask(&req)).collect();
+        // User 0 equivocates on every seed share it holds.
+        for (_, s) in responses[0].seed_shares.iter_mut() {
+            s.y[0] = field::add(s.y[0], 1);
+        }
+        for r in responses {
+            server.try_receive_response(r).unwrap(); // shape-valid
+        }
+        let responses = server.take_responses();
+        let res = match (mode, shard) {
+            (ExecMode::Stealing, s) if s > 0 => {
+                let exec = Executor::new(2);
+                server
+                    .finish_round_stealing(0, &responses,
+                                           &ShardConfig::new(s, 2), &exec)
+                    .map(|_| ())
+            }
+            (ExecMode::Windowed, s) if s > 0 => server
+                .finish_round_sharded(0, &responses,
+                                      &ShardConfig::new(s, 2))
+                .map(|_| ()),
+            _ => server.finish_round(0, &responses).map(|_| ()),
+        };
+        assert!(res.is_err(),
+                "{mode:?}: poisoned shares must fail the round cleanly");
+    }
+}
+
+/// Same two-faced poisoning against the SecAgg baseline server.
+#[test]
+fn two_faced_share_poisoning_fails_cleanly_secagg() {
+    let p = params(8, 250, 1.0, 0.0);
+    let ys = grads(p.n, p.d, 0xabad);
+    let beta = 1.0 / p.n as f64;
+    let (users, mut server) = secagg::setup(p, 6);
+    server.begin_round();
+    for u in &users {
+        server.receive_upload(u.masked_upload(0, &ys[u.id], beta, &p));
+    }
+    server.close_uploads();
+    let req = server.unmask_request();
+    let mut responses: Vec<UnmaskResponse> =
+        users.iter().map(|u| u.respond_unmask(&req)).collect();
+    for (_, s) in responses[0].seed_shares.iter_mut() {
+        s.y[0] = field::add(s.y[0], 1);
+    }
+    for r in responses {
+        server.try_receive_response(r).unwrap();
+    }
+    let responses = server.take_responses();
+    assert!(server.finish_round(0, &responses).is_err());
+}
+
+/// Raw hostile bytes straight into the frame ingest: any byte soup must
+/// come back as a typed error, never a panic, and never mutate state.
+#[test]
+fn frame_ingest_survives_random_byte_storm() {
+    let p = params(6, 100, 0.5, 0.0);
+    let (_, mut server) = sparse::setup(p, 3);
+    server.begin_round();
+    let mut rng = ChaCha20Rng::from_seed_u64(0x57a9);
+    for _ in 0..500 {
+        let len = (rng.next_u32() as usize) % 200;
+        let buf: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+        let from = rng.next_u32() as usize % p.n;
+        // Hostile bytes: either rejected, or (vanishingly unlikely) a
+        // well-formed frame — but never a panic.
+        let _ = server.ingest_frame(from, &buf);
+    }
+    assert!(server.aggregate_field().iter().all(|&v| v == 0),
+            "random bytes must not reach the aggregate");
+}

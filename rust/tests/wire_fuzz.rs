@@ -163,3 +163,74 @@ fn hostile_counts_rejected_without_allocation() {
         assert!(wire::decode_unmask_response(&buf).is_err());
     }
 }
+
+/// Re-patch a frame's header length field after mutating its payload
+/// size, keeping header/buffer bookkeeping consistent so the *payload*
+/// checks are what gets exercised.
+fn repatch_len(buf: &mut Vec<u8>) {
+    let len = (buf.len() - 12) as u32;
+    buf[8..12].copy_from_slice(&len.to_le_bytes());
+}
+
+/// Strict-decode: a roster body that is not a whole number of 64-bit
+/// keys must be rejected for every ragged tail length, not floored.
+#[test]
+fn roster_rejects_every_ragged_tail() {
+    let m = Roster { publics: vec![7, 8, 9, 10] };
+    for extra in 1..8usize {
+        let mut buf = wire::encode_roster(&m);
+        buf.extend(std::iter::repeat(0x5a).take(extra));
+        repatch_len(&mut buf);
+        assert!(wire::decode_roster(&buf).is_err(),
+                "{extra} ragged bytes accepted");
+    }
+}
+
+/// Strict-decode: the sparse values region is bounded by the bitmap's
+/// popcount *before* it is read — a lying payload cannot zip-truncate
+/// or smuggle trailing bytes, and padding bits cannot inflate the
+/// popcount.
+#[test]
+fn sparse_upload_strict_region_checks() {
+    prop(40, |prng| {
+        let d = 9 + (prng.next_u32() as usize % 300);
+        let indices: Vec<u32> =
+            (0..d as u32).filter(|_| prng.next_f32() < 0.2).collect();
+        let m = SparseMaskedUpload {
+            id: prng.next_u32() as usize % 30,
+            values: indices.iter().map(|_| prng.next_field()).collect(),
+            indices,
+            d,
+        };
+        let good = wire::encode_sparse_upload(&m);
+        assert!(wire::decode_sparse_upload(&good).is_ok());
+        if !m.values.is_empty() {
+            // Drop one value: popcount now exceeds the region.
+            let mut short = good[..good.len() - 4].to_vec();
+            repatch_len(&mut short);
+            assert!(wire::decode_sparse_upload(&short).is_err());
+        }
+        // Append one value: region now exceeds the popcount.
+        let mut long = good.clone();
+        long.extend_from_slice(&3u32.to_le_bytes());
+        repatch_len(&mut long);
+        assert!(wire::decode_sparse_upload(&long).is_err());
+        // Set a padding bit beyond d (when d is not byte-aligned).
+        if d % 8 != 0 {
+            let mut padded = good.clone();
+            let last_bitmap_byte = 12 + 4 + d / 8;
+            padded[last_bitmap_byte] |= 1 << 7;
+            assert!(wire::decode_sparse_upload(&padded).is_err(),
+                    "padding bit accepted at d={d}");
+        }
+    });
+    // Popcount-derived allocation stays bounded for a hostile d with a
+    // consistent-looking but short payload.
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&2u32.to_le_bytes()); // sender
+    buf.extend_from_slice(&4u32.to_le_bytes()); // tag: sparse upload
+    buf.extend_from_slice(&8u32.to_le_bytes()); // payload len 8
+    buf.extend_from_slice(&(1u32 << 30).to_le_bytes()); // d = 2^30
+    buf.extend_from_slice(&[0xff; 4]);
+    assert!(wire::decode_sparse_upload(&buf).is_err());
+}
