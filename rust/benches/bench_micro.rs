@@ -10,6 +10,8 @@
 //! section at reduced sizes with a single iteration, asserting
 //! bit-equality of all three engines and writing no JSON — the CI gate.
 
+use sparsesecagg::adversary::{Adversary, TwoFaced};
+use sparsesecagg::coordinator::Coordinator;
 use sparsesecagg::exec::{jobs as exec_jobs, Executor};
 use sparsesecagg::field::vecops;
 use sparsesecagg::masking::{self, PairSeeds, STREAM_ADDITIVE};
@@ -59,7 +61,18 @@ struct ExecRow {
     steal_peak: usize,
 }
 
-fn write_bench_json(rows: &[ExecRow], threads: usize)
+/// The recovery-path A/B measurement (honest vs byzantine-with-recovery
+/// rounds through the frame driver).
+struct RecoveryRow {
+    n: usize,
+    d: usize,
+    honest_ms: f64,
+    recovery_ms: f64,
+    retries: usize,
+    excluded: usize,
+}
+
+fn write_bench_json(rows: &[ExecRow], rec: &RecoveryRow, threads: usize)
                     -> std::io::Result<()> {
     use std::fmt::Write as _;
     let mut s = String::new();
@@ -81,7 +94,18 @@ fn write_bench_json(rows: &[ExecRow], threads: usize)
             if i + 1 == rows.len() { "" } else { "," },
         );
     }
-    s.push_str("  ]\n}\n");
+    s.push_str("  ],\n");
+    let _ = writeln!(
+        s,
+        "  \"recovery\": {{\"n\": {}, \"d\": {}, \"honest_ms\": {:.3}, \
+         \"byzantine_recovery_ms\": {:.3}, \
+         \"recovery_overhead_x\": {:.3}, \"retries\": {}, \
+         \"excluded_users\": {}}}",
+        rec.n, rec.d, rec.honest_ms, rec.recovery_ms,
+        rec.recovery_ms / rec.honest_ms.max(1e-9), rec.retries,
+        rec.excluded,
+    );
+    s.push_str("}\n");
     // `cargo bench` runs from the package root (rust/); the trajectory
     // file lives at the repository root next to ROADMAP.md.
     let path = if std::path::Path::new("../ROADMAP.md").exists() {
@@ -241,9 +265,12 @@ fn exec_bench(smoke: bool) -> anyhow::Result<()> {
         });
     }
     println!("{}", t.render());
+    let rec = recovery_bench(smoke, reps)?;
     if smoke {
         println!("BENCH_SMOKE: bit-equality of all three engines asserted \
-                  over {} cases; timings/JSON skipped", rows.len());
+                  over {} cases; recovery-path A/B equality (honest vs \
+                  byzantine-with-recovery) asserted; timings/JSON \
+                  skipped", rows.len());
     } else {
         if let Some(r) = rows.iter().find(|r| r.name == "many-short-sparse") {
             if threads >= 2 && r.steal_ms >= r.win_ms {
@@ -252,10 +279,66 @@ fn exec_bench(smoke: bool) -> anyhow::Result<()> {
                           r.steal_ms, r.win_ms);
             }
         }
-        write_bench_json(&rows, threads)
+        write_bench_json(&rows, &rec, threads)
             .map_err(|e| anyhow::anyhow!("writing BENCH_round.json: {e}"))?;
     }
     Ok(())
+}
+
+/// Recovery-path A/B over the frame-driven coordinator: the same
+/// cohort/gradients run (a) honest with the byzantine ids simply
+/// dropped, and (b) under attack — a catalog injector plus a two-faced
+/// survivor that value-poisons its unmask shares, forcing one
+/// exclude-and-re-solicit pass per round. The two aggregates must be
+/// **bit-exactly** equal (the recovery contract); the timing delta is
+/// the cost of one retry wave. In smoke mode the equality check is the
+/// CI gate; timings go to `BENCH_round.json` otherwise.
+fn recovery_bench(smoke: bool, reps: usize)
+                  -> anyhow::Result<RecoveryRow> {
+    let (n, d) = if smoke { (10usize, 1usize << 10) } else { (24, 1 << 14) };
+    let p = Params { n, d, alpha: 0.2, theta: 0.0, c: 1024.0 };
+    let mut rng = ChaCha20Rng::from_seed_u64(0x2ec0);
+    let ys: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..d).map(|_| rng.next_f32() - 0.5).collect())
+        .collect();
+    let betas = vec![1.0 / n as f64; n];
+    // Byzantine prefix ⌊0.2n⌋; its last id turns two-faced (uploads,
+    // then poisons) — the rest inject catalog frames.
+    let nbyz = (0.2 * n as f64).floor() as usize;
+    let byz_dropped: Vec<usize> = (0..nbyz).collect();
+
+    let mut honest = Coordinator::new_sparse(p, 7);
+    let mut want: Vec<f32> = Vec::new();
+    let honest_ms = median_time(reps, || {
+        want = honest.run_round(0, &ys, &betas, &byz_dropped).unwrap().0;
+    }) * 1e3;
+
+    let mut attacked = Coordinator::new_sparse(p, 7);
+    let mut adv = Adversary::new(0.2, 0xbe);
+    adv.two_faced = vec![(nbyz - 1, TwoFaced::PoisonValues)];
+    let mut got: Vec<f32> = Vec::new();
+    let mut retries = 0usize;
+    let mut excluded = 0usize;
+    let recovery_ms = median_time(reps, || {
+        let (agg, ledger) = attacked
+            .run_round_adversarial(0, &ys, &betas, &[], &mut adv)
+            .expect("byzantine round with recovery must complete");
+        retries = ledger.retries;
+        excluded = ledger.excluded_users.len();
+        got = agg;
+    }) * 1e3;
+    assert_eq!(got, want,
+               "recovered round diverged from honest-minus-excluded \
+                reference");
+    assert_eq!(retries, 1, "exactly one exclude-and-re-solicit pass");
+    assert_eq!(excluded, 1);
+    println!(
+        "recovery A/B (N={n}, d={d}): honest {honest_ms:.2} ms, \
+         byzantine-with-recovery {recovery_ms:.2} ms \
+         ({:.2}x; {retries} retry, {excluded} excluded) — bit-exact",
+        recovery_ms / honest_ms.max(1e-9)
+    );
+    Ok(RecoveryRow { n, d, honest_ms, recovery_ms, retries, excluded })
 }
 
 fn main() -> anyhow::Result<()> {

@@ -16,11 +16,20 @@
 //! well-formed uploads carrying lies — is outside secure aggregation's
 //! contract; forged share *values* behind valid evaluation points are
 //! caught at reconstruction whenever the response set carries
-//! redundancy (> t+1 distinct shares) and fail the round cleanly
-//! instead (at exact quorum they are information-theoretically
-//! undetectable — see [`crate::shamir::reconstruct`]).
+//! redundancy (> t+1 distinct shares) — see
+//! [`crate::shamir::reconstruct_detailed`].
+//!
+//! Beyond the injector catalog the adversary models two deeper attacks
+//! that the *recovery* machinery (not mere rejection) must absorb:
+//! [`TwoFaced`] survivors, who upload honestly and then poison their
+//! unmask responses (by value or by geometry) and must end up
+//! identified, excluded, and the round re-finished bit-exactly at
+//! reduced quorum; and a [`Adversary::flood`] of garbage frames from
+//! one endpoint, which the transport-level
+//! [`crate::transport::RateLimiter`] sheds before decode.
 
 use crate::coordinator::ProtocolKind;
+use crate::field;
 use crate::prg::ChaCha20Rng;
 use crate::protocol::messages::*;
 use crate::protocol::wire::{self, Tag};
@@ -91,6 +100,23 @@ impl Attack {
     }
 }
 
+/// How a *two-faced* survivor attacks: it uploads an honest MaskedInput
+/// (so its contribution sits in the aggregate) and then sabotages the
+/// Unmask phase. Both variants are identified by the recovery machinery
+/// and the user is excluded at reduced quorum.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TwoFaced {
+    /// Shares with valid geometry but poisoned words — undetectable at
+    /// ingest, identified by `shamir::reconstruct_detailed`'s
+    /// minimal-culprit search whenever the response set carries
+    /// `≥ t+1+2f` distinct points.
+    PoisonValues,
+    /// Shares re-stamped at a wrong evaluation point — equivocation by
+    /// geometry, flagged at response ingest (always attributable, no
+    /// redundancy needed).
+    PoisonGeometry,
+}
+
 /// Seeded byzantine frame generator. The first `⌊frac·n⌋` user ids are
 /// byzantine (fixed-prefix assignment is WLOG under the uniform model,
 /// mirroring [`crate::coordinator::Coordinator::honest_mask`]; floor,
@@ -104,6 +130,18 @@ pub struct Adversary {
     /// Frames injected so far (across phases and rounds) — lets tests
     /// assert the attack surface was actually exercised.
     pub injected: usize,
+    /// Byzantine users that attack as *two-faced survivors* instead of
+    /// frame injectors: they upload honestly and poison their unmask
+    /// responses ([`Adversary::corrupt_response`]). Must be ids inside
+    /// the byzantine prefix; empty by default.
+    pub two_faced: Vec<(usize, TwoFaced)>,
+    /// Optional flood: `(endpoint, frames)` garbage frames dumped from
+    /// one sender during the upload phase — the DoS-bandwidth case the
+    /// transport rate limiter sheds before decode.
+    pub flood: Option<(usize, usize)>,
+    /// Flood frames emitted so far (counted separately from `injected`:
+    /// with rate limiting on they are shed, not rejected).
+    pub flooded: usize,
     /// Rotation cursor into `catalog`.
     cursor: usize,
 }
@@ -121,14 +159,59 @@ impl Adversary {
             seed,
             catalog: catalog.to_vec(),
             injected: 0,
+            two_faced: Vec::new(),
+            flood: None,
+            flooded: 0,
             cursor: 0,
         }
     }
 
-    /// `mask[i]` ⇔ user `i` is byzantine.
+    /// `mask[i]` ⇔ user `i` is byzantine (frame injector *or*
+    /// two-faced).
     pub fn byzantine_set(&self, n: usize) -> Vec<bool> {
         let a = (self.frac * n as f64).floor() as usize;
         (0..n).map(|i| i < a).collect()
+    }
+
+    /// `mask[i]` ⇔ user `i` sends no honest traffic at all. Two-faced
+    /// byzantines are carved out: they *do* upload (that is the attack).
+    pub fn silenced_set(&self, n: usize) -> Vec<bool> {
+        let byz = self.byzantine_set(n);
+        (0..n).map(|i| byz[i] && !self.is_two_faced(i)).collect()
+    }
+
+    fn is_two_faced(&self, id: usize) -> bool {
+        self.two_faced.iter().any(|(i, _)| *i == id)
+    }
+
+    /// Sabotage `resp` if its sender is a two-faced byzantine; returns
+    /// whether anything was corrupted. Deterministic: every share is
+    /// perturbed the same way on every solicitation wave, so an
+    /// un-excluded two-faced user re-offends on retry.
+    pub fn corrupt_response(&self, id: usize, resp: &mut UnmaskResponse)
+                            -> bool {
+        let Some((_, kind)) =
+            self.two_faced.iter().find(|(i, _)| *i == id)
+        else {
+            return false;
+        };
+        let poison = |shares: &mut Vec<(usize, Share)>| {
+            for (_, s) in shares.iter_mut() {
+                match kind {
+                    TwoFaced::PoisonValues => {
+                        s.y[0] = field::add(s.y[0], 1);
+                    }
+                    TwoFaced::PoisonGeometry => {
+                        // One off the dealt point: valid field element,
+                        // wrong x — caught as WrongEvaluationPoint.
+                        s.x += 1;
+                    }
+                }
+            }
+        };
+        poison(&mut resp.dh_shares);
+        poison(&mut resp.seed_shares);
+        true
     }
 
     fn rng(&self, id: usize, salt: u64) -> ChaCha20Rng {
@@ -144,15 +227,18 @@ impl Adversary {
     }
 
     /// Inject the upload-phase slice of the catalog: one attack frame
-    /// per byzantine user, after the honest frames are already queued.
-    /// `honest` is the captured honest traffic `(endpoint, frame)` —
-    /// replay/spoof material.
+    /// per byzantine frame-injector (two-faced users attack through
+    /// their own honest-then-poisoned traffic instead), after the
+    /// honest frames are already queued. `honest` is the captured
+    /// honest traffic `(endpoint, frame)` — replay/spoof material.
+    /// A configured [`Adversary::flood`] fires here too: seeded garbage
+    /// frames from one endpoint, the rate limiter's prey.
     pub fn inject_uploads(&mut self, bus: &mut dyn Transport,
                           params: &Params, kind: ProtocolKind,
                           honest: &[(usize, Vec<u8>)]) {
         let byz = self.byzantine_set(params.n);
         for id in 0..params.n {
-            if !byz[id] {
+            if !byz[id] || self.is_two_faced(id) {
                 continue;
             }
             let attack = self.next_attack();
@@ -160,6 +246,19 @@ impl Adversary {
                 continue; // fires in inject_responses instead
             }
             self.emit_upload_attack(bus, params, kind, id, attack, honest);
+        }
+        if let Some((from, frames)) = self.flood {
+            let mut rng = self.rng(from, 0xf100d);
+            for _ in 0..frames {
+                let len = 4 + (rng.next_u32() as usize % 32);
+                let payload: Vec<u8> =
+                    (0..len).map(|_| rng.next_u32() as u8).collect();
+                bus.to_server(
+                    from,
+                    raw_frame(from as u32, 0xf100d, &payload),
+                );
+                self.flooded += 1;
+            }
         }
     }
 
@@ -173,7 +272,7 @@ impl Adversary {
                             honest: &[(usize, Vec<u8>)]) {
         let byz = self.byzantine_set(params.n);
         for id in 0..params.n {
-            if !byz[id] {
+            if !byz[id] || self.is_two_faced(id) {
                 continue;
             }
             match self.next_attack() {

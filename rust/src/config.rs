@@ -78,7 +78,7 @@ impl Config {
             "test_samples", "target_accuracy", "eval_every",
             "use_hlo_quantmask", "participation", "dp_epsilon", "dp_clip",
             "seed", "artifacts_dir", "shard_size", "threads", "executor",
-            "byzantine",
+            "byzantine", "max_retries", "rate_limit",
         ];
         for k in self.values.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -139,6 +139,8 @@ impl Config {
                 }
                 b
             },
+            max_retries: self.parse("max_retries", d.max_retries)?,
+            rate_limit: self.parse("rate_limit", d.rate_limit)?,
         })
     }
 }
@@ -198,6 +200,23 @@ mod tests {
         assert!(c.to_fl_config().is_err());
         let mut c = Config::default();
         c.set("byzantine", "-0.1");
+        assert!(c.to_fl_config().is_err());
+    }
+
+    #[test]
+    fn recovery_knobs_parse_with_defaults() {
+        let fl = Config::default().to_fl_config().unwrap();
+        assert_eq!(fl.max_retries,
+                   crate::coordinator::DEFAULT_MAX_RETRIES);
+        assert_eq!(fl.rate_limit, 0);
+        let mut c = Config::default();
+        c.set("max_retries", "0");
+        c.set("rate_limit", "8");
+        let fl = c.to_fl_config().unwrap();
+        assert_eq!(fl.max_retries, 0);
+        assert_eq!(fl.rate_limit, 8);
+        let mut c = Config::default();
+        c.set("max_retries", "lots");
         assert!(c.to_fl_config().is_err());
     }
 

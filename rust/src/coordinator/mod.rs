@@ -35,16 +35,30 @@
 //! aggregate. The pre-refactor struct-passing driver survives as
 //! [`Coordinator::run_round_structs`]; a differential test pins the
 //! frame-driven honest round bit-exact against it.
+//!
+//! On top of rejection the driver runs the **round-recovery loop**
+//! (threat model and state machine in [`crate::protocol`]): when
+//! response ingest or seed reconstruction identifies an equivocating
+//! survivor, the server excludes it, the driver re-solicits
+//! UnmaskResponses from the non-excluded set over the same
+//! [`Transport`] — masked inputs are never re-uploaded — and the finish
+//! is retried, up to [`Coordinator::max_retries`] passes. Every retry's
+//! bandwidth and simulated time is billed to the ledger, and the
+//! transport-level [`RateLimiter`] ([`Coordinator::rate_limit`]) sheds
+//! per-sender frame floods before they reach the decoder.
 
 use crate::adversary::Adversary;
 use crate::exec::{ExecMode, Executor};
 use crate::network::{LinkModel, RoundLedger};
 use crate::protocol::messages::*;
 use crate::protocol::shard::{ShardConfig, DEFAULT_SHARD_SIZE};
-use crate::protocol::{secagg, sparse, wire, Params};
-use crate::transport::{InMemoryBus, Transport};
+use crate::protocol::{secagg, sparse, wire, FinishError, Params};
+use crate::transport::{InMemoryBus, RateLimiter, Transport};
 use anyhow::Result;
 use std::time::Instant;
+
+/// Default cap on exclude-and-re-solicit passes per round.
+pub const DEFAULT_MAX_RETRIES: usize = 3;
 
 /// Which protocol a cohort runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -76,6 +90,17 @@ pub struct Coordinator {
     pub shard_size: usize,
     /// Unmask engine selection (see [`ExecMode`]).
     pub exec_mode: ExecMode,
+    /// Round-recovery retry budget: how many exclude-and-re-solicit
+    /// passes a round may spend on identified equivocators before
+    /// aborting ([`DEFAULT_MAX_RETRIES`]; 0 restores the PR 3
+    /// detect-and-abort behavior).
+    pub max_retries: usize,
+    /// Per-sender inbound frame budget for the transport rate limiter
+    /// ([`RateLimiter`]); 0 = disabled. An honest sender needs 2
+    /// frames on the retry-free path (one upload, one response);
+    /// recovery re-solicitation waves replenish the budget, so the
+    /// limiter can never starve a recoverable round.
+    pub rate_limit: usize,
     /// Lazily-built persistent worker pool, reused across rounds.
     exec: Option<Executor>,
     /// The byte bus every protocol frame travels on (setup and rounds).
@@ -112,6 +137,142 @@ macro_rules! finish_round_dispatch {
             (None, _) => $server.finish_round($round, $responses)?,
         }
     };
+}
+
+/// Typed-error twin of [`finish_round_dispatch!`] for the recovery
+/// loop: a [`FinishError`] comes back to the caller instead of
+/// short-circuiting, so equivocation can be handled.
+macro_rules! finish_round_checked_dispatch {
+    ($server:expr, $ledger:expr, $shard_cfg:expr, $mode:expr, $exec:expr,
+     $round:expr, $responses:expr) => {
+        match ($shard_cfg, $mode) {
+            (Some(cfg), ExecMode::Stealing) => $server
+                .finish_round_stealing_checked($round, $responses, &cfg,
+                                               $exec)
+                .map(|(agg, stats)| {
+                    $ledger.record_unmask(&stats);
+                    agg
+                }),
+            (Some(cfg), _) => $server
+                .finish_round_sharded_checked($round, $responses, &cfg)
+                .map(|(agg, stats)| {
+                    $ledger.record_unmask(&stats);
+                    agg
+                }),
+            (None, _) => $server.finish_round_checked($round, $responses),
+        }
+    };
+}
+
+/// The Unmask phase of the frame driver, shared verbatim by the Sparse
+/// and SecAgg arms (identical tokens, different types): solicit
+/// responses from the current survivor set, ingest them behind the
+/// rate limiter, then run the recovery loop — ingest-flagged
+/// equivocators are excluded before a finish attempt is spent, a
+/// [`FinishError::Equivocation`] excludes the reconstructed culprits,
+/// and each exclusion re-solicits the reduced survivor set, up to
+/// `max_retries` passes. Masked inputs are never re-uploaded; only the
+/// response set shrinks. Evaluates to the dequantized aggregate;
+/// pushes each solicitation wave's frame sizes onto `$resp_waves`
+/// (each wave is a sequential comm phase for the simulated clock).
+macro_rules! run_unmask_with_recovery {
+    ($server:expr, $users:expr, $bus:expr, $ledger:expr, $adv:expr,
+     $limiter:expr, $capture:expr, $params:expr, $kind:expr, $n:expr,
+     $shard_cfg:expr, $mode:expr, $exec:expr, $round:expr,
+     $max_retries:expr, $resp_waves:expr) => {{
+        $server.close_uploads();
+        let mut retries = 0usize;
+        let mut first_wave = true;
+        loop {
+            // --- solicit one wave from the current survivor set.
+            let req = $server.unmask_request();
+            let req_buf = wire::encode_unmask_request(&req);
+            debug_assert_eq!(req_buf.len(), req.wire_bytes());
+            for &j in &req.survivors {
+                $bus.to_client(j, req_buf.clone());
+            }
+            let mut honest_resp: Vec<(usize, Vec<u8>)> = Vec::new();
+            for u in $users.iter() {
+                while let Some(fbuf) = $bus.client_recv(u.id) {
+                    $ledger.record_download(u.id, fbuf.len());
+                    let req = wire::decode_unmask_request(&fbuf)?;
+                    let mut resp = u.respond_unmask(&req);
+                    if let Some(a) = $adv.as_deref_mut() {
+                        // Two-faced survivors poison every wave until
+                        // they are excluded.
+                        a.corrupt_response(u.id, &mut resp);
+                    }
+                    let out = wire::encode_unmask_response(&resp);
+                    debug_assert_eq!(out.len(), resp.wire_bytes());
+                    if $capture && first_wave {
+                        honest_resp.push((u.id, out.clone()));
+                    }
+                    $bus.to_server(u.id, out);
+                }
+            }
+            if first_wave {
+                if let Some(a) = $adv.as_deref_mut() {
+                    a.inject_responses($bus, &$params, $kind, &req,
+                                       &honest_resp);
+                }
+            }
+            first_wave = false;
+            // --- drain: bill bytes, shed past-budget senders BEFORE
+            // decode, ingest the rest through the state machine.
+            let mut wave_sizes: Vec<usize> = Vec::new();
+            while let Some((from, buf)) = $bus.server_recv() {
+                wave_sizes.push(buf.len());
+                if from < $n {
+                    $ledger.record_upload(from, buf.len());
+                }
+                if let Some(l) = $limiter.as_mut() {
+                    if !l.admit(from) {
+                        $ledger.record_rate_limited();
+                        continue;
+                    }
+                }
+                if let Err(e) = $server.ingest_frame(from, &buf) {
+                    $ledger.record_reject(&e);
+                }
+            }
+            $resp_waves.push(wave_sizes);
+            let responses = $server.take_responses();
+            // --- recovery decision.
+            let flagged = $server.take_flagged_equivocators();
+            let culprits = if !flagged.is_empty() {
+                flagged
+            } else {
+                match finish_round_checked_dispatch!(
+                    $server, $ledger, $shard_cfg, $mode, $exec, $round,
+                    &responses)
+                {
+                    Ok(agg) => break agg,
+                    Err(FinishError::Equivocation(rep)) => {
+                        rep.equivocators
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+            };
+            if retries >= $max_retries {
+                return Err(anyhow::anyhow!(
+                    "round unrecoverable: equivocators {:?} identified \
+                     with max_retries = {} exhausted",
+                    culprits, $max_retries));
+            }
+            retries += 1;
+            $server.exclude_survivors(&culprits);
+            $ledger.record_recovery(&culprits);
+            // Replenish the per-sender budgets for the re-solicited
+            // wave: recovery must not starve itself against a limiter
+            // sized for the honest upload + one response. A flooder
+            // gains at most `budget` extra decodes per retry, and
+            // retries only happen on *identified* equivocators, which
+            // the flooder cannot mint.
+            if let Some(l) = $limiter.as_mut() {
+                l.reset();
+            }
+        }
+    }};
 }
 
 impl Coordinator {
@@ -213,6 +374,8 @@ impl Coordinator {
             threads: default_threads(params.n),
             shard_size: DEFAULT_SHARD_SIZE,
             exec_mode: ExecMode::Stealing,
+            max_retries: DEFAULT_MAX_RETRIES,
+            rate_limit: 0,
             exec: None,
             bus,
         }
@@ -292,6 +455,8 @@ impl Coordinator {
             threads: default_threads(params.n),
             shard_size: DEFAULT_SHARD_SIZE,
             exec_mode: ExecMode::Stealing,
+            max_retries: DEFAULT_MAX_RETRIES,
+            rate_limit: 0,
             exec: None,
             bus,
         }
@@ -343,14 +508,19 @@ impl Coordinator {
         self.run_round_frames(round, ys, betas, dropped, None)
     }
 
-    /// [`Self::run_round`] under attack: `adv`'s byzantine users send no
-    /// honest uploads; instead the adversary injects its frame catalog
-    /// into both phases. Every injection the server detects is dropped
-    /// and counted ([`RoundLedger::rejected_frames`]); a surviving round
-    /// is bit-exact equal to the same round with the byzantine users in
-    /// `dropped`, and an unrecoverable one (quorum lost, poisoned
-    /// reconstruction) fails with a clean error — never a panic, never a
-    /// silently wrong aggregate.
+    /// [`Self::run_round`] under attack: `adv`'s silenced byzantine
+    /// users send no honest uploads — the adversary injects its frame
+    /// catalog into both phases instead — while its *two-faced* users
+    /// upload honestly and poison their unmask responses. Every
+    /// injection the server detects is dropped and counted
+    /// ([`RoundLedger::rejected_frames`]); identified two-faced
+    /// equivocators are excluded and the round re-finished at reduced
+    /// quorum (`excluded_users` / `retries` in the ledger). A surviving
+    /// round is bit-exact equal to the same round with the byzantine
+    /// *and excluded* users in `dropped`, and an unrecoverable one
+    /// (quorum lost, unattributable poisoning, `max_retries` spent)
+    /// fails with a clean error — never a panic, never a silently wrong
+    /// aggregate.
     pub fn run_round_adversarial(&mut self, round: u32, ys: &[Vec<f32>],
                                  betas: &[f64], dropped: &[usize],
                                  adv: &mut Adversary)
@@ -371,18 +541,26 @@ impl Coordinator {
         let mode = self.effective_mode();
         let shard_cfg = (mode != ExecMode::Monolithic)
             .then(|| ShardConfig::new(self.shard_size, threads));
-        let byz = match &adv {
-            Some(a) => a.byzantine_set(n),
+        let max_retries = self.max_retries;
+        // Per-round budgets; the limiter guards every server drain of
+        // this round (uploads and all response waves).
+        let mut limiter = (self.rate_limit > 0)
+            .then(|| RateLimiter::new(self.rate_limit, n));
+        // Silenced byzantines inject frames instead of uploading;
+        // two-faced byzantines upload honestly (and poison their
+        // responses later), so they stay active here.
+        let silenced = match &adv {
+            Some(a) => a.silenced_set(n),
             None => vec![false; n],
         };
         let active: Vec<bool> = (0..n)
-            .map(|i| !dropped.contains(&i) && !byz[i])
+            .map(|i| !dropped.contains(&i) && !silenced[i])
             .collect();
         let Coordinator { cohort, exec, bus, .. } = &mut *self;
         let exec = exec.as_ref().expect("executor initialized");
         let bus: &mut dyn Transport = bus.as_mut();
 
-        let (agg, upload_bytes, resp_sizes) = match cohort {
+        let (agg, upload_bytes, resp_waves) = match cohort {
             Cohort::Sparse { users, server } => {
                 server.begin_round();
                 // --- MaskedInput compute: one tier-1 executor task per
@@ -411,61 +589,33 @@ impl Coordinator {
                 if let Some(a) = adv.as_deref_mut() {
                     a.inject_uploads(bus, &params, kind, &honest);
                 }
-                // --- Server ingest: validate every inbound frame.
-                // Rejected frames are dropped but still billed to the
+                // --- Server ingest: shed past-budget senders before
+                // decode, validate every admitted frame. Rejected and
+                // shed frames are dropped but still billed to the
                 // endpoint that sent them.
                 let mut upload_bytes = vec![0usize; n];
                 while let Some((from, buf)) = bus.server_recv() {
                     if from < n {
                         upload_bytes[from] += buf.len();
                     }
-                    if let Err(e) = server.ingest_frame(from, &buf) {
-                        ledger.record_reject(&e);
-                    }
-                }
-                // --- Unmask: close uploads, poll accepted survivors.
-                server.close_uploads();
-                let req = server.unmask_request();
-                let req_buf = wire::encode_unmask_request(&req);
-                debug_assert_eq!(req_buf.len(), req.wire_bytes());
-                for &j in &req.survivors {
-                    bus.to_client(j, req_buf.clone());
-                }
-                let mut honest_resp: Vec<(usize, Vec<u8>)> = Vec::new();
-                for u in users.iter() {
-                    while let Some(fbuf) = bus.client_recv(u.id) {
-                        ledger.record_download(u.id, fbuf.len());
-                        let req = wire::decode_unmask_request(&fbuf)?;
-                        let resp = u.respond_unmask(&req);
-                        let out = wire::encode_unmask_response(&resp);
-                        debug_assert_eq!(out.len(), resp.wire_bytes());
-                        if capture {
-                            honest_resp.push((u.id, out.clone()));
+                    if let Some(l) = limiter.as_mut() {
+                        if !l.admit(from) {
+                            ledger.record_rate_limited();
+                            continue;
                         }
-                        bus.to_server(u.id, out);
-                    }
-                }
-                if let Some(a) = adv.as_deref_mut() {
-                    a.inject_responses(bus, &params, kind, &req,
-                                       &honest_resp);
-                }
-                let mut resp_sizes: Vec<usize> = Vec::new();
-                while let Some((from, buf)) = bus.server_recv() {
-                    resp_sizes.push(buf.len());
-                    if from < n {
-                        ledger.record_upload(from, buf.len());
                     }
                     if let Err(e) = server.ingest_frame(from, &buf) {
                         ledger.record_reject(&e);
                     }
                 }
-                // --- finish_round* consumes only validated state.
-                let responses = server.take_responses();
-                let agg = finish_round_dispatch!(server, ledger, shard_cfg,
-                                                 mode, exec, round,
-                                                 &responses);
+                // --- Unmask with equivocator-exclusion recovery.
+                let mut resp_waves: Vec<Vec<usize>> = Vec::new();
+                let agg = run_unmask_with_recovery!(
+                    server, users, bus, ledger, adv, limiter, capture,
+                    params, kind, n, shard_cfg, mode, exec, round,
+                    max_retries, resp_waves);
                 ledger.server_compute_s += ts.elapsed().as_secs_f64();
-                (agg, upload_bytes, resp_sizes)
+                (agg, upload_bytes, resp_waves)
             }
             Cohort::SecAgg { users, server } => {
                 server.begin_round();
@@ -494,51 +644,23 @@ impl Coordinator {
                     if from < n {
                         upload_bytes[from] += buf.len();
                     }
-                    if let Err(e) = server.ingest_frame(from, &buf) {
-                        ledger.record_reject(&e);
-                    }
-                }
-                server.close_uploads();
-                let req = server.unmask_request();
-                let req_buf = wire::encode_unmask_request(&req);
-                debug_assert_eq!(req_buf.len(), req.wire_bytes());
-                for &j in &req.survivors {
-                    bus.to_client(j, req_buf.clone());
-                }
-                let mut honest_resp: Vec<(usize, Vec<u8>)> = Vec::new();
-                for u in users.iter() {
-                    while let Some(fbuf) = bus.client_recv(u.id) {
-                        ledger.record_download(u.id, fbuf.len());
-                        let req = wire::decode_unmask_request(&fbuf)?;
-                        let resp = u.respond_unmask(&req);
-                        let out = wire::encode_unmask_response(&resp);
-                        debug_assert_eq!(out.len(), resp.wire_bytes());
-                        if capture {
-                            honest_resp.push((u.id, out.clone()));
+                    if let Some(l) = limiter.as_mut() {
+                        if !l.admit(from) {
+                            ledger.record_rate_limited();
+                            continue;
                         }
-                        bus.to_server(u.id, out);
-                    }
-                }
-                if let Some(a) = adv.as_deref_mut() {
-                    a.inject_responses(bus, &params, kind, &req,
-                                       &honest_resp);
-                }
-                let mut resp_sizes: Vec<usize> = Vec::new();
-                while let Some((from, buf)) = bus.server_recv() {
-                    resp_sizes.push(buf.len());
-                    if from < n {
-                        ledger.record_upload(from, buf.len());
                     }
                     if let Err(e) = server.ingest_frame(from, &buf) {
                         ledger.record_reject(&e);
                     }
                 }
-                let responses = server.take_responses();
-                let agg = finish_round_dispatch!(server, ledger, shard_cfg,
-                                                 mode, exec, round,
-                                                 &responses);
+                let mut resp_waves: Vec<Vec<usize>> = Vec::new();
+                let agg = run_unmask_with_recovery!(
+                    server, users, bus, ledger, adv, limiter, capture,
+                    params, kind, n, shard_cfg, mode, exec, round,
+                    max_retries, resp_waves);
                 ledger.server_compute_s += ts.elapsed().as_secs_f64();
-                (agg, upload_bytes, resp_sizes)
+                (agg, upload_bytes, resp_waves)
             }
         };
 
@@ -547,8 +669,12 @@ impl Coordinator {
             ledger.record_upload(u, b);
         }
         ledger.advance_parallel_phase(&self.link, &upload_bytes);
-        // …unmask responses in parallel…
-        ledger.advance_parallel_phase(&self.link, &resp_sizes);
+        // …each unmask solicitation wave in parallel within itself,
+        // sequentially across retries (recovery costs simulated time,
+        // billed honestly)…
+        for wave in &resp_waves {
+            ledger.advance_parallel_phase(&self.link, wave);
+        }
         // …then the global-model broadcast to survivors.
         let bcast = ModelBroadcast { d: params.d }.wire_bytes();
         let mut bcast_sizes = Vec::new();

@@ -71,9 +71,22 @@ pub struct FlConfig {
     /// Byzantine fraction ∈ [0, 0.5): that share of the cohort attacks
     /// every round (hostile frames from the
     /// [`crate::adversary::Adversary`] catalog instead of honest
-    /// uploads). The hardened ingest treats them as dropped; training
-    /// proceeds on the honest survivors. 0 = everyone honest.
+    /// uploads; with ≥ 2 byzantine users, the last one attacks as a
+    /// *two-faced survivor* — honest upload, poisoned unmask shares —
+    /// so the round-recovery path is exercised, not just frame
+    /// shedding). The hardened ingest sheds the injectors and recovery
+    /// excludes the equivocator; training proceeds on the honest
+    /// survivors. 0 = everyone honest.
     pub byzantine: f64,
+    /// Round-recovery retry budget per round
+    /// ([`crate::coordinator::Coordinator::max_retries`]); 0 restores
+    /// detect-and-abort.
+    pub max_retries: usize,
+    /// Transport rate limit: inbound frames per sender
+    /// ([`crate::coordinator::Coordinator::rate_limit`]); 0 = disabled.
+    /// An honest sender needs 2 frames per retry-free round; recovery
+    /// re-solicitation waves replenish the budget.
+    pub rate_limit: usize,
 }
 
 impl Default for FlConfig {
@@ -104,6 +117,8 @@ impl Default for FlConfig {
             threads: 0,
             exec_mode: crate::exec::ExecMode::Stealing,
             byzantine: 0.0,
+            max_retries: crate::coordinator::DEFAULT_MAX_RETRIES,
+            rate_limit: 0,
         }
     }
 }
@@ -167,6 +182,8 @@ pub fn run_fl(cfg: &FlConfig, trainer: &Trainer) -> Result<FlRun> {
     };
     coord.shard_size = cfg.shard_size;
     coord.exec_mode = cfg.exec_mode;
+    coord.max_retries = cfg.max_retries;
+    coord.rate_limit = cfg.rate_limit;
     if cfg.threads > 0 {
         coord.threads = cfg.threads;
     }
@@ -189,8 +206,24 @@ pub fn run_fl(cfg: &FlConfig, trainer: &Trainer) -> Result<FlRun> {
          incompatible with use_hlo_quantmask"
     );
     let mut adversary = (cfg.byzantine > 0.0).then(|| {
-        crate::adversary::Adversary::new(cfg.byzantine,
-                                         cfg.seed ^ 0xbad_f00d)
+        let mut a = crate::adversary::Adversary::new(cfg.byzantine,
+                                                     cfg.seed ^ 0xbad_f00d);
+        // With ≥ 2 byzantine users, the last one turns two-faced:
+        // honest upload, then geometry-poisoned shares — identified at
+        // ingest and excluded by the recovery loop every round.
+        // Geometry (not value) poisoning keeps identification
+        // independent of response-set redundancy, so enabling the
+        // byzantine knob never costs availability beyond what a silent
+        // byzantine already costs (an excluded survivor contributes
+        // exactly as many responses as one that never uploaded: none).
+        let nbyz = (cfg.byzantine * cfg.users as f64).floor() as usize;
+        if nbyz >= 2 && cfg.max_retries > 0 {
+            a.two_faced = vec![(
+                nbyz - 1,
+                crate::adversary::TwoFaced::PoisonGeometry,
+            )];
+        }
+        a
     });
 
     // DP noise calibration uses the Thm-2 privacy guarantee T with the

@@ -11,6 +11,9 @@
 //!   sparsesecagg run --config configs/mnist_iid.cfg --users 10
 //!   sparsesecagg run --threads 8 --executor stealing
 //!   sparsesecagg run --byzantine 0.2   # hostile-cohort robustness demo
+//!   sparsesecagg run --byzantine 0.2 --max_retries 3 --rate_limit 8
+//!                                      # equivocator exclusion + retry,
+//!                                      # flood shedding before decode
 //!   sparsesecagg comm --users 100 --alpha 0.1 --executor windowed
 //!   sparsesecagg privacy --users 100 --gamma 0.333 --theta 0.3
 

@@ -114,6 +114,18 @@ pub struct RoundLedger {
     /// remain in the per-user totals: hostile traffic costs bandwidth
     /// even when it cannot corrupt state.
     pub rejected_frames: usize,
+    /// Inbound frames shed by the transport-level per-sender rate
+    /// limiter *before decode* ([`crate::transport::RateLimiter`]).
+    /// Like rejects, their bytes stay billed to the sender — a flood is
+    /// spent bandwidth, never state.
+    pub rate_limited_frames: usize,
+    /// Survivors excluded by round recovery (identified equivocators),
+    /// ascending. Their uploads were subtracted back out of the
+    /// aggregate; the bandwidth they and the retries cost stays billed.
+    pub excluded_users: Vec<usize>,
+    /// How many exclude-and-re-solicit passes the round needed (0 on
+    /// the honest path).
+    pub retries: usize,
 }
 
 impl RoundLedger {
@@ -168,6 +180,24 @@ impl RoundLedger {
     /// signature stays stable when per-kind taxonomy lands.
     pub fn record_reject(&mut self, _err: &crate::protocol::IngestError) {
         self.rejected_frames += 1;
+    }
+
+    /// Record one frame shed by the per-sender rate limiter (never
+    /// decoded; bytes already billed by the caller).
+    pub fn record_rate_limited(&mut self) {
+        self.rate_limited_frames += 1;
+    }
+
+    /// Record one recovery pass: the survivors excluded by it (merged
+    /// into the ascending `excluded_users` set) and one retry tick.
+    pub fn record_recovery(&mut self, excluded: &[usize]) {
+        for &e in excluded {
+            if !self.excluded_users.contains(&e) {
+                self.excluded_users.push(e);
+            }
+        }
+        self.excluded_users.sort_unstable();
+        self.retries += 1;
     }
 
     /// Total upload bytes across users.

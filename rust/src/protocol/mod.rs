@@ -22,6 +22,45 @@
 //! ([`RoundPhase`], `try_receive_upload` / `try_receive_response` /
 //! `ingest_frame`) that rejects hostile frames with typed
 //! [`IngestError`]s — see the threat model in [`wire`].
+//!
+//! # Round recovery state machine
+//!
+//! Detection alone loses the round; recovery finishes it. A round under
+//! attack moves through these states:
+//!
+//! ```text
+//! Collecting ──close_uploads──▶ Unmasking ──finish ok──▶ Done
+//!                                   │ ▲
+//!        equivocator identified ────┘ │ exclude_survivors +
+//!        (ingest flag or              │ re-solicited responses
+//!         FinishError::Equivocation)  │ (≤ max_retries times)
+//!                                     ▼
+//!                               Fatal (clean abort)
+//! ```
+//!
+//! Two detectors feed the loop. **Response ingest** flags a solicited
+//! survivor whose response carries provably forged share *geometry* —
+//! wrong evaluation point, foreign owner, out-of-field words (the
+//! transport vouches the sender, so the violation is attributable).
+//! **Seed reconstruction** ([`crate::shamir::reconstruct_detailed`])
+//! identifies poisoned share *values* by minimal-culprit search inside
+//! the Reed–Solomon unique-decoding radius, surfacing the culprit
+//! evaluation points — and user `i` only ever responds at `x = i + 1`,
+//! so points map back to responder ids ([`RecoveryReport`]).
+//!
+//! Either way the server **excludes** the identified survivors: their
+//! (retained) masked uploads are subtracted from the aggregate, they
+//! join the dropped set — so their now-dangling pairwise masks are
+//! removed through the ordinary dropped-user path once their DH shares
+//! arrive — and the unmask response set is re-solicited from the
+//! remaining survivors. No masked input is ever re-uploaded; only the
+//! response set shrinks. The round completes whenever ⌊N/2⌋+1 honest
+//! responders remain (the Shamir threshold is fixed at dealing time)
+//! and aborts cleanly with [`FinishError::Fatal`] otherwise, or when
+//! `max_retries` is exhausted. Crucially, `finish_round*` reconstructs
+//! **all** seeds before applying any mask-removal job, so a failed
+//! attempt never leaves the aggregate half-unmasked — retrying from
+//! already-validated state is always sound.
 
 pub mod dp;
 pub mod messages;
@@ -31,6 +70,7 @@ pub mod sparse;
 pub mod wire;
 
 use crate::prg::Seed;
+use crate::shamir::{self, ReconstructError, Share};
 use std::fmt;
 
 /// Where a server is inside one aggregation round. Frames are only legal
@@ -161,6 +201,207 @@ impl fmt::Display for IngestError {
 }
 
 impl std::error::Error for IngestError {}
+
+/// Which survivors a failed finish attempt identified as equivocators,
+/// mapped from conflicting Shamir evaluation points (`x = id + 1`) or
+/// from ingest-level share-geometry violations. Excluding these users
+/// and re-finishing at the reduced response set recovers the round.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// Culprit user ids, ascending, deduplicated.
+    pub equivocators: Vec<usize>,
+}
+
+/// Typed outcome of a `finish_round*_checked` attempt. Unlike the
+/// opaque `anyhow` error of the legacy `finish_round*` wrappers, the
+/// `Equivocation` variant is actionable: the caller can exclude the
+/// named users and retry from validated state.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FinishError {
+    /// Identified equivocating/poisoning survivors — recoverable by
+    /// exclusion + retry.
+    Equivocation(RecoveryReport),
+    /// The round cannot be finished with the current response set
+    /// (below threshold, or inconsistency without attribution).
+    Fatal(String),
+}
+
+impl fmt::Display for FinishError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FinishError::Equivocation(r) => write!(
+                f,
+                "equivocating survivors identified: {:?}", r.equivocators
+            ),
+            FinishError::Fatal(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for FinishError {}
+
+/// What a recovered round cost: which survivors were excluded and how
+/// many retry passes it took (server-side twin of the per-round ledger
+/// fields `excluded_users` / `retries`).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryOutcome {
+    pub excluded: Vec<usize>,
+    pub retries: usize,
+}
+
+/// Generates `finish_round_with_recovery` inside a server's `impl`
+/// block — the in-process (monolithic-engine) recovery driver, shared
+/// token-identically by [`sparse::Server`] and [`secagg::Server`] (the
+/// frame-driven twin with engine dispatch, transport re-solicitation
+/// and ledger accounting lives in the coordinator). Expansion sites
+/// must have `FinishError`, `RecoveryOutcome` and `messages::*` in
+/// scope and provide `take_responses` / `take_flagged_equivocators` /
+/// `finish_round_checked` / `exclude_survivors` / `unmask_request` /
+/// `try_receive_response`.
+macro_rules! impl_finish_round_with_recovery {
+    () => {
+        /// Finish with automatic equivocator exclusion and retry.
+        ///
+        /// Responses must already have been delivered through
+        /// `try_receive_response` (this method drains the pending set
+        /// itself). On an identified equivocation — flagged at ingest
+        /// or by reconstruction — the culprits are excluded and
+        /// `resolicit` is called with the reduced [`UnmaskRequest`];
+        /// its responses are re-validated through the ingest layer
+        /// (repeat offenders get flagged again) and the finish is
+        /// retried, up to `max_retries` times. Succeeds whenever
+        /// ⌊N/2⌋+1 honest responders remain.
+        pub fn finish_round_with_recovery(
+            &mut self, round: u32, max_retries: usize,
+            mut resolicit: impl FnMut(&UnmaskRequest)
+                -> Vec<UnmaskResponse>,
+        ) -> Result<(Vec<f32>, RecoveryOutcome), FinishError> {
+            let mut responses = self.take_responses();
+            let mut out = RecoveryOutcome::default();
+            loop {
+                let flagged = self.take_flagged_equivocators();
+                let culprits = if !flagged.is_empty() {
+                    flagged
+                } else {
+                    match self.finish_round_checked(round, &responses) {
+                        Ok(agg) => {
+                            out.excluded.sort_unstable();
+                            return Ok((agg, out));
+                        }
+                        Err(FinishError::Equivocation(rep)) => {
+                            rep.equivocators
+                        }
+                        Err(e) => return Err(e),
+                    }
+                };
+                if out.retries >= max_retries {
+                    return Err(FinishError::Fatal(format!(
+                        "equivocators {culprits:?} identified but \
+                         max_retries = {max_retries} exhausted")));
+                }
+                out.retries += 1;
+                self.exclude_survivors(&culprits);
+                out.excluded.extend(culprits);
+                let req = self.unmask_request();
+                for r in resolicit(&req) {
+                    let _ = self.try_receive_response(r);
+                }
+                responses = self.take_responses();
+            }
+        }
+    };
+}
+pub(crate) use impl_finish_round_with_recovery;
+
+/// Every secret the Unmask phase needs, reconstructed up front:
+/// dropped users' DH secrets (their dangling pairwise masks) and
+/// surviving users' private seeds (their self-masks).
+pub(crate) struct RoundSecrets {
+    /// `(user id, DH secret)` per dropped user, ascending id.
+    pub dropped: Vec<(usize, u64)>,
+    /// `(user id, private seed)` per surviving user, ascending id.
+    pub survivors: Vec<(usize, Seed)>,
+}
+
+/// Reconstruct all of a round's secrets from the validated response
+/// set, **before** any mask-removal job is applied — the two-phase
+/// split that makes retry-after-failure sound (the aggregate is never
+/// touched by a failing attempt).
+///
+/// `uploaded(i)` tells whether user `i` is a current survivor (uploaded
+/// and not excluded). Culprit evaluation points from
+/// [`shamir::reconstruct_detailed`] are mapped to responder ids
+/// (`x = id + 1`, enforced at ingest) and **accumulated across all
+/// owners** so one retry can exclude every identified equivocator at
+/// once.
+pub(crate) fn reconstruct_round_secrets(
+    n: usize, t: usize, uploaded: &dyn Fn(usize) -> bool,
+    responses: &[messages::UnmaskResponse],
+) -> Result<RoundSecrets, FinishError> {
+    let mut equivocators: Vec<usize> = Vec::new();
+    let mut fatal: Option<String> = None;
+    let mut flag = |owner: usize, what: &str, e: ReconstructError| {
+        match e {
+            ReconstructError::Inconsistent { xs } => {
+                for x in xs {
+                    let id = (x as usize).wrapping_sub(1);
+                    if id < n && !equivocators.contains(&id) {
+                        equivocators.push(id);
+                    }
+                }
+            }
+            other => {
+                if fatal.is_none() {
+                    fatal = Some(format!(
+                        "cannot reconstruct {what} of user {owner}: {other}"
+                    ));
+                }
+            }
+        }
+    };
+
+    let mut dropped: Vec<(usize, u64)> = Vec::new();
+    for i in (0..n).filter(|&i| !uploaded(i)) {
+        let shares: Vec<Share> = responses
+            .iter()
+            .filter_map(|r| {
+                r.dh_shares.iter().find(|(o, _)| *o == i)
+                    .map(|(_, s)| s.clone())
+            })
+            .collect();
+        let refs: Vec<&Share> = shares.iter().collect();
+        match shamir::reconstruct_detailed(&refs, t) {
+            Ok(seed) => dropped.push((i, u64_secret_from_seed(seed))),
+            Err(e) => flag(i, "DH secret", e),
+        }
+    }
+    let mut survivors: Vec<(usize, Seed)> = Vec::new();
+    for j in (0..n).filter(|&j| uploaded(j)) {
+        let shares: Vec<Share> = responses
+            .iter()
+            .filter_map(|r| {
+                r.seed_shares.iter().find(|(o, _)| *o == j)
+                    .map(|(_, s)| s.clone())
+            })
+            .collect();
+        let refs: Vec<&Share> = shares.iter().collect();
+        match shamir::reconstruct_detailed(&refs, t) {
+            Ok(seed) => survivors.push((j, seed)),
+            Err(e) => flag(j, "private seed", e),
+        }
+    }
+
+    if !equivocators.is_empty() {
+        equivocators.sort_unstable();
+        return Err(FinishError::Equivocation(RecoveryReport {
+            equivocators,
+        }));
+    }
+    if let Some(m) = fatal {
+        return Err(FinishError::Fatal(m));
+    }
+    Ok(RoundSecrets { dropped, survivors })
+}
 
 /// Static protocol parameters for a deployment.
 #[derive(Clone, Copy, Debug)]

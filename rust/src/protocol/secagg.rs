@@ -14,8 +14,8 @@ use crate::protocol::messages::*;
 use crate::protocol::shard::{self, MaskJob, ShardConfig, ShardStats};
 use crate::protocol::sparse::TAG_ADDITIVE;
 use crate::protocol::{
-    seed_from_u64_secret, u64_secret_from_seed, wire, IngestError, Params,
-    RoundPhase,
+    reconstruct_round_secrets, seed_from_u64_secret, wire, FinishError,
+    IngestError, Params, RecoveryOutcome, RoundPhase,
 };
 use crate::quantize;
 use crate::shamir::{self, Share};
@@ -135,7 +135,16 @@ pub struct Server {
     roster: Vec<u64>,
     agg: Vec<u32>,
     received: Vec<bool>,
+    /// Dense masked values per received upload, retained so an excluded
+    /// equivocator's contribution can be subtracted back out during
+    /// round recovery (O(N·d) memory — the no-re-upload price).
+    upload_values: Vec<Option<Vec<u32>>>,
     survivors: Vec<usize>,
+    /// Survivors excluded by round recovery this round.
+    excluded: Vec<usize>,
+    /// Ingest-flagged equivocators (forged share geometry/content from
+    /// solicited survivors).
+    flagged: Vec<usize>,
     phase: RoundPhase,
     responded: Vec<bool>,
     pending: Vec<UnmaskResponse>,
@@ -148,7 +157,10 @@ impl Server {
             roster: Vec::new(),
             agg: vec![0; params.d],
             received: vec![false; params.n],
+            upload_values: vec![None; params.n],
             survivors: Vec::new(),
+            excluded: Vec::new(),
+            flagged: Vec::new(),
             phase: RoundPhase::Collecting,
             responded: vec![false; params.n],
             pending: Vec::new(),
@@ -167,7 +179,10 @@ impl Server {
     pub fn begin_round(&mut self) {
         self.agg.iter_mut().for_each(|v| *v = 0);
         self.received.iter_mut().for_each(|v| *v = false);
+        self.upload_values.iter_mut().for_each(|v| *v = None);
         self.survivors.clear();
+        self.excluded.clear();
+        self.flagged.clear();
         self.phase = RoundPhase::Collecting;
         self.responded.iter_mut().for_each(|v| *v = false);
         self.pending.clear();
@@ -206,6 +221,8 @@ impl Server {
         crate::field::vecops::add_assign(&mut self.agg, &up.values);
         self.received[up.id] = true;
         self.survivors.push(up.id);
+        // Retained for potential equivocator exclusion.
+        self.upload_values[up.id] = Some(up.values);
         Ok(())
     }
 
@@ -246,35 +263,86 @@ impl Server {
             return Err(IngestError::DuplicateResponse { id: r.id });
         }
         let want_x = r.id as u32 + 1;
-        let check = |shares: &[(usize, Share)], owner_dropped: bool|
-                     -> Result<(), IngestError> {
-            for (k, (owner, s)) in shares.iter().enumerate() {
-                let requested = *owner < self.params.n
-                    && self.received[*owner] != owner_dropped;
-                if !requested
-                    || shares[..k].iter().any(|(o, _)| o == owner)
-                {
-                    return Err(IngestError::ForeignShare { owner: *owner });
+        let violation = {
+            let check = |shares: &[(usize, Share)], owner_dropped: bool|
+                         -> Result<(), IngestError> {
+                for (k, (owner, s)) in shares.iter().enumerate() {
+                    let requested = *owner < self.params.n
+                        && self.received[*owner] != owner_dropped;
+                    if !requested
+                        || shares[..k].iter().any(|(o, _)| o == owner)
+                    {
+                        return Err(IngestError::ForeignShare {
+                            owner: *owner,
+                        });
+                    }
+                    if s.x != want_x {
+                        return Err(IngestError::WrongEvaluationPoint {
+                            got: s.x,
+                            want: want_x,
+                        });
+                    }
+                    if let Some(&y) =
+                        s.y.iter().find(|&&y| y >= crate::field::Q)
+                    {
+                        return Err(IngestError::ValueOutOfField {
+                            value: y,
+                        });
+                    }
                 }
-                if s.x != want_x {
-                    return Err(IngestError::WrongEvaluationPoint {
-                        got: s.x,
-                        want: want_x,
-                    });
-                }
-                if let Some(&y) =
-                    s.y.iter().find(|&&y| y >= crate::field::Q)
-                {
-                    return Err(IngestError::ValueOutOfField { value: y });
-                }
-            }
-            Ok(())
+                Ok(())
+            };
+            check(&r.dh_shares, true)
+                .and_then(|()| check(&r.seed_shares, false))
+                .err()
         };
-        check(&r.dh_shares, true)?;
-        check(&r.seed_shares, false)?;
+        if let Some(e) = violation {
+            // Attributable equivocation from a solicited survivor (see
+            // the sparse server's twin) — flag for exclusion.
+            if !self.flagged.contains(&r.id) {
+                self.flagged.push(r.id);
+            }
+            return Err(e);
+        }
         self.responded[r.id] = true;
         self.pending.push(r);
         Ok(())
+    }
+
+    /// Drain ingest-flagged equivocators (see
+    /// [`crate::protocol::sparse::Server::take_flagged_equivocators`]).
+    pub fn take_flagged_equivocators(&mut self) -> Vec<usize> {
+        let mut f = std::mem::take(&mut self.flagged);
+        f.sort_unstable();
+        f
+    }
+
+    /// Survivors excluded by round recovery so far this round.
+    pub fn excluded(&self) -> &[usize] {
+        &self.excluded
+    }
+
+    /// Exclude identified equivocators: subtract their retained dense
+    /// uploads from the aggregate, demote them to the dropped set, and
+    /// invalidate the buffered responses (owner sets changed — callers
+    /// re-solicit). Ids that are not current survivors are ignored.
+    pub fn exclude_survivors(&mut self, users: &[usize]) {
+        for &e in users {
+            let Some(values) =
+                self.upload_values.get_mut(e).and_then(Option::take)
+            else {
+                continue;
+            };
+            crate::field::vecops::sub_assign(&mut self.agg, &values);
+            self.received[e] = false;
+            self.survivors.retain(|&s| s != e);
+            if !self.excluded.contains(&e) {
+                self.excluded.push(e);
+            }
+        }
+        self.excluded.sort_unstable();
+        self.responded.iter_mut().for_each(|v| *v = false);
+        self.pending.clear();
     }
 
     /// Drain the validated responses buffered by
@@ -323,31 +391,20 @@ impl Server {
     /// are seed-sized, nothing d-length is ever materialized here).
     /// Shared by the monolithic and sharded unmask paths; takes fields
     /// explicitly so callers can hold `agg` mutably in the sink.
+    ///
+    /// All seeds are reconstructed before the first job reaches the
+    /// sink, so a [`FinishError`] leaves the aggregate untouched and
+    /// exclusion-and-retry stays sound (see the sparse twin).
     fn for_each_unmask_job(
         params: &Params, roster: &[u64], received: &[bool], round: u32,
         responses: &[UnmaskResponse], mut sink: impl FnMut(MaskJob),
-    ) -> anyhow::Result<()> {
-        let t = params.threshold();
+    ) -> Result<(), FinishError> {
         // Same sets unmask_request() derives.
-        let dropped: Vec<usize> =
-            (0..params.n).filter(|&i| !received[i]).collect();
-        let survivors: Vec<usize> =
-            (0..params.n).filter(|&i| received[i]).collect();
+        let secrets = reconstruct_round_secrets(
+            params.n, params.threshold(), &|i| received[i], responses)?;
 
-        for &i in &dropped {
-            let shares: Vec<Share> = responses
-                .iter()
-                .filter_map(|r| {
-                    r.dh_shares.iter().find(|(o, _)| *o == i)
-                        .map(|(_, s)| s.clone())
-                })
-                .collect();
-            let refs: Vec<&Share> = shares.iter().collect();
-            let seed = shamir::reconstruct(&refs, t).ok_or_else(|| {
-                anyhow::anyhow!("cannot reconstruct DH secret of user {i}")
-            })?;
-            let secret_i = u64_secret_from_seed(seed);
-            for &j in &survivors {
+        for &(i, secret_i) in &secrets.dropped {
+            for &(j, _) in &secrets.survivors {
                 let add_seed = dh::agree(secret_i, roster[j], i as u32,
                                          j as u32, TAG_ADDITIVE);
                 sink(MaskJob::Dense {
@@ -359,18 +416,7 @@ impl Server {
             }
         }
 
-        for &j in &survivors {
-            let shares: Vec<Share> = responses
-                .iter()
-                .filter_map(|r| {
-                    r.seed_shares.iter().find(|(o, _)| *o == j)
-                        .map(|(_, s)| s.clone())
-                })
-                .collect();
-            let refs: Vec<&Share> = shares.iter().collect();
-            let seed = shamir::reconstruct(&refs, t).ok_or_else(|| {
-                anyhow::anyhow!("cannot reconstruct private seed of user {j}")
-            })?;
+        for &(_, seed) in &secrets.survivors {
             sink(MaskJob::Dense {
                 seed,
                 stream: STREAM_PRIVATE,
@@ -381,15 +427,37 @@ impl Server {
         Ok(())
     }
 
-    /// Unmask (eq. 10) + dequantize — monolithic reference path (one
-    /// sequential stream per mask).
-    pub fn finish_round(&mut self, round: u32, responses: &[UnmaskResponse])
-                        -> anyhow::Result<Vec<f32>> {
+    /// Unmask (eq. 10) + dequantize with a typed error (see the sparse
+    /// twin) — monolithic reference path.
+    pub fn finish_round_checked(&mut self, round: u32,
+                                responses: &[UnmaskResponse])
+                                -> Result<Vec<f32>, FinishError> {
         let Server { params, roster, received, agg, .. } = self;
         Self::for_each_unmask_job(
             params, roster, received, round, responses,
             |job| shard::apply_job_monolithic(agg, &job))?;
         Ok(quantize::dequantize(&self.agg, self.params.c))
+    }
+
+    /// [`Self::finish_round_checked`] under the legacy opaque-error
+    /// contract.
+    pub fn finish_round(&mut self, round: u32, responses: &[UnmaskResponse])
+                        -> anyhow::Result<Vec<f32>> {
+        Ok(self.finish_round_checked(round, responses)?)
+    }
+
+    /// Typed-error twin of [`Self::finish_round_sharded`].
+    pub fn finish_round_sharded_checked(
+        &mut self, round: u32, responses: &[UnmaskResponse],
+        cfg: &ShardConfig)
+        -> Result<(Vec<f32>, ShardStats), FinishError> {
+        let Server { params, roster, received, agg, .. } = self;
+        let mut stats = ShardStats::default();
+        Self::for_each_unmask_job(
+            params, roster, received, round, responses,
+            |job| stats.merge(shard::apply_jobs_sharded(
+                agg, std::slice::from_ref(&job), cfg)))?;
+        Ok((quantize::dequantize(&self.agg, self.params.c), stats))
     }
 
     /// Unmask through the sharded streaming pipeline — bit-exact to
@@ -399,12 +467,21 @@ impl Server {
                                 responses: &[UnmaskResponse],
                                 cfg: &ShardConfig)
                                 -> anyhow::Result<(Vec<f32>, ShardStats)> {
+        Ok(self.finish_round_sharded_checked(round, responses, cfg)?)
+    }
+
+    /// Typed-error twin of [`Self::finish_round_stealing`].
+    pub fn finish_round_stealing_checked(
+        &mut self, round: u32, responses: &[UnmaskResponse],
+        cfg: &ShardConfig, exec: &crate::exec::Executor)
+        -> Result<(Vec<f32>, ShardStats), FinishError> {
         let Server { params, roster, received, agg, .. } = self;
-        let mut stats = ShardStats::default();
+        let mut jobs: Vec<MaskJob> = Vec::new();
         Self::for_each_unmask_job(
             params, roster, received, round, responses,
-            |job| stats.merge(shard::apply_jobs_sharded(
-                agg, std::slice::from_ref(&job), cfg)))?;
+            |job| jobs.push(job))?;
+        let stats = crate::exec::jobs::apply_jobs_stealing(agg, &jobs, cfg,
+                                                           exec);
         Ok((quantize::dequantize(&self.agg, self.params.c), stats))
     }
 
@@ -419,15 +496,11 @@ impl Server {
                                  cfg: &ShardConfig,
                                  exec: &crate::exec::Executor)
                                  -> anyhow::Result<(Vec<f32>, ShardStats)> {
-        let Server { params, roster, received, agg, .. } = self;
-        let mut jobs: Vec<MaskJob> = Vec::new();
-        Self::for_each_unmask_job(
-            params, roster, received, round, responses,
-            |job| jobs.push(job))?;
-        let stats = crate::exec::jobs::apply_jobs_stealing(agg, &jobs, cfg,
-                                                           exec);
-        Ok((quantize::dequantize(&self.agg, self.params.c), stats))
+        Ok(self.finish_round_stealing_checked(round, responses, cfg,
+                                              exec)?)
     }
+
+    crate::protocol::impl_finish_round_with_recovery!();
 
     pub fn aggregate_field(&self) -> &[u32] {
         &self.agg

@@ -58,8 +58,8 @@ use crate::prg::{ChaCha20Rng, Seed};
 use crate::protocol::messages::*;
 use crate::protocol::shard::{self, MaskJob, ShardConfig, ShardStats};
 use crate::protocol::{
-    seed_from_u64_secret, u64_secret_from_seed, wire, IngestError, Params,
-    RoundPhase,
+    reconstruct_round_secrets, seed_from_u64_secret, wire, FinishError,
+    IngestError, Params, RecoveryOutcome, RoundPhase,
 };
 use crate::quantize;
 use crate::shamir::{self, Share};
@@ -257,7 +257,19 @@ pub struct Server {
     /// U_i of each received upload (needed for private-mask removal and
     /// for the privacy metrics).
     pub upload_indices: Vec<Option<Vec<u32>>>,
+    /// Masked values of each received upload, retained so an excluded
+    /// equivocator's contribution can be *subtracted* back out of the
+    /// aggregate during round recovery (O(Σ|U_i|) extra memory — the
+    /// price of not re-uploading on retry).
+    upload_values: Vec<Option<Vec<u32>>>,
     survivors: Vec<usize>,
+    /// Survivors excluded by round recovery (accumulates across
+    /// retries; reset by [`Server::begin_round`]).
+    excluded: Vec<usize>,
+    /// Solicited survivors whose unmask responses carried provably
+    /// forged share geometry/content — equivocators identified at
+    /// ingest, drained by [`Server::take_flagged_equivocators`].
+    flagged: Vec<usize>,
     /// Where this round's ingest state machine is.
     phase: RoundPhase,
     /// Which ids already delivered a validated unmask response.
@@ -273,7 +285,10 @@ impl Server {
             roster: Vec::new(),
             agg: vec![0u32; params.d],
             upload_indices: vec![None; params.n],
+            upload_values: vec![None; params.n],
             survivors: Vec::new(),
+            excluded: Vec::new(),
+            flagged: Vec::new(),
             phase: RoundPhase::Collecting,
             responded: vec![false; params.n],
             pending: Vec::new(),
@@ -294,7 +309,10 @@ impl Server {
     pub fn begin_round(&mut self) {
         self.agg.iter_mut().for_each(|v| *v = 0);
         self.upload_indices.iter_mut().for_each(|v| *v = None);
+        self.upload_values.iter_mut().for_each(|v| *v = None);
         self.survivors.clear();
+        self.excluded.clear();
+        self.flagged.clear();
         self.phase = RoundPhase::Collecting;
         self.responded.iter_mut().for_each(|v| *v = false);
         self.pending.clear();
@@ -350,13 +368,15 @@ impl Server {
         if let Some(&v) = up.values.iter().find(|&&v| v >= field::Q) {
             return Err(IngestError::ValueOutOfField { value: v });
         }
-        // All checks passed: commit.
+        // All checks passed: commit (values retained for potential
+        // equivocator exclusion — see `exclude_survivors`).
         for (&l, &v) in up.indices.iter().zip(&up.values) {
             let a = &mut self.agg[l as usize];
             *a = field::add(*a, v);
         }
         self.survivors.push(up.id);
         self.upload_indices[up.id] = Some(up.indices);
+        self.upload_values[up.id] = Some(up.values);
         Ok(())
     }
 
@@ -380,6 +400,12 @@ impl Server {
     /// reference a requested owner of the right set (DH shares for
     /// dropped owners, seed shares for survivors) at most once, and
     /// carry field-range payload words.
+    ///
+    /// A share-geometry/content violation from a *solicited survivor*
+    /// is attributable equivocation (the transport vouches the sender
+    /// and only the sender holds its dealt shares) — besides rejecting
+    /// the frame, the sender is flagged for exclusion
+    /// ([`Server::take_flagged_equivocators`]).
     pub fn try_receive_response(&mut self, r: UnmaskResponse)
                                 -> Result<(), IngestError> {
         if self.phase != RoundPhase::Unmasking {
@@ -401,33 +427,93 @@ impl Server {
             return Err(IngestError::DuplicateResponse { id: r.id });
         }
         let want_x = r.id as u32 + 1;
-        let check = |shares: &[(usize, Share)], owner_dropped: bool|
-                     -> Result<(), IngestError> {
-            for (k, (owner, s)) in shares.iter().enumerate() {
-                let requested = *owner < self.params.n
-                    && self.upload_indices[*owner].is_none() == owner_dropped;
-                if !requested
-                    || shares[..k].iter().any(|(o, _)| o == owner)
-                {
-                    return Err(IngestError::ForeignShare { owner: *owner });
+        let violation = {
+            let check = |shares: &[(usize, Share)], owner_dropped: bool|
+                         -> Result<(), IngestError> {
+                for (k, (owner, s)) in shares.iter().enumerate() {
+                    let requested = *owner < self.params.n
+                        && self.upload_indices[*owner].is_none()
+                            == owner_dropped;
+                    if !requested
+                        || shares[..k].iter().any(|(o, _)| o == owner)
+                    {
+                        return Err(IngestError::ForeignShare {
+                            owner: *owner,
+                        });
+                    }
+                    if s.x != want_x {
+                        return Err(IngestError::WrongEvaluationPoint {
+                            got: s.x,
+                            want: want_x,
+                        });
+                    }
+                    if let Some(&y) = s.y.iter().find(|&&y| y >= field::Q)
+                    {
+                        return Err(IngestError::ValueOutOfField {
+                            value: y,
+                        });
+                    }
                 }
-                if s.x != want_x {
-                    return Err(IngestError::WrongEvaluationPoint {
-                        got: s.x,
-                        want: want_x,
-                    });
-                }
-                if let Some(&y) = s.y.iter().find(|&&y| y >= field::Q) {
-                    return Err(IngestError::ValueOutOfField { value: y });
-                }
-            }
-            Ok(())
+                Ok(())
+            };
+            check(&r.dh_shares, true)
+                .and_then(|()| check(&r.seed_shares, false))
+                .err()
         };
-        check(&r.dh_shares, true)?;
-        check(&r.seed_shares, false)?;
+        if let Some(e) = violation {
+            if !self.flagged.contains(&r.id) {
+                self.flagged.push(r.id);
+            }
+            return Err(e);
+        }
         self.responded[r.id] = true;
         self.pending.push(r);
         Ok(())
+    }
+
+    /// Drain the survivors flagged as equivocators by response ingest
+    /// (empty in the common case; non-empty means the caller should
+    /// exclude them and re-solicit before spending a finish attempt).
+    pub fn take_flagged_equivocators(&mut self) -> Vec<usize> {
+        let mut f = std::mem::take(&mut self.flagged);
+        f.sort_unstable();
+        f
+    }
+
+    /// Survivors excluded by round recovery so far this round.
+    pub fn excluded(&self) -> &[usize] {
+        &self.excluded
+    }
+
+    /// Exclude identified equivocators from the round: subtract their
+    /// retained masked uploads from the aggregate and demote them to
+    /// the dropped set (their now-dangling pairwise masks are removed
+    /// through the ordinary dropped-user reconstruction once their DH
+    /// shares arrive). Because the requested owner sets change, the
+    /// buffered response set is invalidated — callers must re-solicit
+    /// [`Server::unmask_request`] from the remaining survivors.
+    /// Ids that are not current survivors are ignored.
+    pub fn exclude_survivors(&mut self, users: &[usize]) {
+        for &e in users {
+            let (Some(indices), Some(values)) = (
+                self.upload_indices.get_mut(e).and_then(Option::take),
+                self.upload_values.get_mut(e).and_then(Option::take),
+            ) else {
+                continue;
+            };
+            for (&l, &v) in indices.iter().zip(&values) {
+                let a = &mut self.agg[l as usize];
+                *a = field::sub(*a, v);
+            }
+            self.survivors.retain(|&s| s != e);
+            if !self.excluded.contains(&e) {
+                self.excluded.push(e);
+            }
+        }
+        self.excluded.sort_unstable();
+        // Stale responses reference the pre-exclusion owner sets.
+        self.responded.iter_mut().for_each(|v| *v = false);
+        self.pending.clear();
     }
 
     /// Drain the validated responses buffered by
@@ -483,39 +569,26 @@ impl Server {
     /// alive at a time regardless of cohort size. Shared by the
     /// monolithic and sharded unmask paths. Takes fields explicitly so
     /// callers can hold `agg` mutably in the sink.
+    ///
+    /// **All** seeds are reconstructed before the first job reaches the
+    /// sink ([`reconstruct_round_secrets`]): on any [`FinishError`] the
+    /// aggregate is untouched, which is what makes
+    /// exclusion-and-retry from validated state sound.
     fn for_each_unmask_job(
         params: &Params, roster: &[u64],
         upload_indices: &[Option<Vec<u32>>], round: u32,
         responses: &[UnmaskResponse], mut sink: impl FnMut(MaskJob),
-    ) -> anyhow::Result<()> {
-        let t = params.threshold();
-        // Same sets unmask_request() derives: dropped = never uploaded,
-        // survivors = uploaded, ascending ids.
-        let dropped: Vec<usize> = (0..params.n)
-            .filter(|&i| upload_indices[i].is_none())
-            .collect();
-        let survivors: Vec<usize> = (0..params.n)
-            .filter(|&i| upload_indices[i].is_some())
-            .collect();
+    ) -> Result<(), FinishError> {
+        // Same sets unmask_request() derives: dropped = never uploaded
+        // (or excluded), survivors = uploaded, ascending ids.
+        let secrets = reconstruct_round_secrets(
+            params.n, params.threshold(),
+            &|i| upload_indices[i].is_some(), responses)?;
 
-        // --- reconstruct dropped users' DH secrets; the dangling
-        // pairwise masks they left in each survivor's upload.
-        for &i in &dropped {
-            let shares: Vec<Share> = responses
-                .iter()
-                .filter_map(|r| {
-                    r.dh_shares.iter().find(|(o, _)| *o == i)
-                        .map(|(_, s)| s.clone())
-                })
-                .collect();
-            let refs: Vec<&Share> = shares.iter().collect();
-            let seed = shamir::reconstruct(&refs, t).ok_or_else(|| {
-                anyhow::anyhow!(
-                    "cannot reconstruct DH secret of dropped user {i}: \
-                     {} shares < threshold {}", refs.len(), t + 1)
-            })?;
-            let secret_i = u64_secret_from_seed(seed);
-            for &j in &survivors {
+        // --- dropped users' DH secrets: the dangling pairwise masks
+        // they left in each survivor's upload.
+        for &(i, secret_i) in &secrets.dropped {
+            for &(j, _) in &secrets.survivors {
                 // Seeds must match what users i and j derived: agree() is
                 // symmetric and canonicalizes the pair ids.
                 let add_seed = dh::agree(secret_i, roster[j], i as u32,
@@ -536,25 +609,12 @@ impl Server {
             }
         }
 
-        // --- reconstruct survivors' private seeds; r_j is stripped on
-        // the uploaded support U_j.
-        for &j in &survivors {
-            let shares: Vec<Share> = responses
-                .iter()
-                .filter_map(|r| {
-                    r.seed_shares.iter().find(|(o, _)| *o == j)
-                        .map(|(_, s)| s.clone())
-                })
-                .collect();
-            let refs: Vec<&Share> = shares.iter().collect();
-            let seed = shamir::reconstruct(&refs, t).ok_or_else(|| {
-                anyhow::anyhow!(
-                    "cannot reconstruct private seed of survivor {j}")
-            })?;
-            // The copy of U_j keeps MaskJob lifetime-free; with jobs
-            // streamed one at a time only a single O(ρd) support is ever
-            // alive, and the memcpy is noise next to expanding the same
-            // number of ChaCha words.
+        // --- survivors' private seeds; r_j is stripped on the uploaded
+        // support U_j. The copy of U_j keeps MaskJob lifetime-free; with
+        // jobs streamed one at a time only a single O(ρd) support is
+        // ever alive, and the memcpy is noise next to expanding the same
+        // number of ChaCha words.
+        for &(j, seed) in &secrets.survivors {
             sink(MaskJob::Indexed {
                 seed,
                 stream: STREAM_PRIVATE,
@@ -566,18 +626,40 @@ impl Server {
         Ok(())
     }
 
-    /// Unmask (eq. 21) + dequantize (eq. 23). `responses` must come from
-    /// at least t+1 survivors. Returns the aggregated real-valued
-    /// gradient Σ_{i∈S} select_i · Q_c(scale_i · y_i). Monolithic
-    /// reference path (one sequential stream per mask).
-    pub fn finish_round(&mut self, round: u32,
-                        responses: &[UnmaskResponse])
-                        -> anyhow::Result<Vec<f32>> {
+    /// Unmask (eq. 21) + dequantize (eq. 23) with a typed error:
+    /// [`FinishError::Equivocation`] names identified poisoners for the
+    /// recovery loop, [`FinishError::Fatal`] is unrecoverable.
+    /// Monolithic reference path (one sequential stream per mask).
+    pub fn finish_round_checked(&mut self, round: u32,
+                                responses: &[UnmaskResponse])
+                                -> Result<Vec<f32>, FinishError> {
         let Server { params, roster, upload_indices, agg, .. } = self;
         Self::for_each_unmask_job(
             params, roster, upload_indices, round, responses,
             |job| shard::apply_job_monolithic(agg, &job))?;
         Ok(quantize::dequantize(&self.agg, self.params.c))
+    }
+
+    /// [`Self::finish_round_checked`] under the legacy opaque-error
+    /// contract. `responses` must come from at least t+1 survivors.
+    pub fn finish_round(&mut self, round: u32,
+                        responses: &[UnmaskResponse])
+                        -> anyhow::Result<Vec<f32>> {
+        Ok(self.finish_round_checked(round, responses)?)
+    }
+
+    /// Typed-error twin of [`Self::finish_round_sharded`].
+    pub fn finish_round_sharded_checked(
+        &mut self, round: u32, responses: &[UnmaskResponse],
+        cfg: &ShardConfig)
+        -> Result<(Vec<f32>, ShardStats), FinishError> {
+        let Server { params, roster, upload_indices, agg, .. } = self;
+        let mut stats = ShardStats::default();
+        Self::for_each_unmask_job(
+            params, roster, upload_indices, round, responses,
+            |job| stats.merge(shard::apply_jobs_sharded(
+                agg, std::slice::from_ref(&job), cfg)))?;
+        Ok((quantize::dequantize(&self.agg, self.params.c), stats))
     }
 
     /// Unmask through the sharded streaming pipeline — bit-exact to
@@ -588,12 +670,21 @@ impl Server {
                                 responses: &[UnmaskResponse],
                                 cfg: &ShardConfig)
                                 -> anyhow::Result<(Vec<f32>, ShardStats)> {
+        Ok(self.finish_round_sharded_checked(round, responses, cfg)?)
+    }
+
+    /// Typed-error twin of [`Self::finish_round_stealing`].
+    pub fn finish_round_stealing_checked(
+        &mut self, round: u32, responses: &[UnmaskResponse],
+        cfg: &ShardConfig, exec: &crate::exec::Executor)
+        -> Result<(Vec<f32>, ShardStats), FinishError> {
         let Server { params, roster, upload_indices, agg, .. } = self;
-        let mut stats = ShardStats::default();
+        let mut jobs: Vec<MaskJob> = Vec::new();
         Self::for_each_unmask_job(
             params, roster, upload_indices, round, responses,
-            |job| stats.merge(shard::apply_jobs_sharded(
-                agg, std::slice::from_ref(&job), cfg)))?;
+            |job| jobs.push(job))?;
+        let stats = crate::exec::jobs::apply_jobs_stealing(agg, &jobs, cfg,
+                                                           exec);
         Ok((quantize::dequantize(&self.agg, self.params.c), stats))
     }
 
@@ -612,15 +703,11 @@ impl Server {
                                  cfg: &ShardConfig,
                                  exec: &crate::exec::Executor)
                                  -> anyhow::Result<(Vec<f32>, ShardStats)> {
-        let Server { params, roster, upload_indices, agg, .. } = self;
-        let mut jobs: Vec<MaskJob> = Vec::new();
-        Self::for_each_unmask_job(
-            params, roster, upload_indices, round, responses,
-            |job| jobs.push(job))?;
-        let stats = crate::exec::jobs::apply_jobs_stealing(agg, &jobs, cfg,
-                                                           exec);
-        Ok((quantize::dequantize(&self.agg, self.params.c), stats))
+        Ok(self.finish_round_stealing_checked(round, responses, cfg,
+                                              exec)?)
     }
+
+    crate::protocol::impl_finish_round_with_recovery!();
 
     /// Field-domain aggregate (post-unmask) — used by exactness tests.
     pub fn aggregate_field(&self) -> &[u32] {

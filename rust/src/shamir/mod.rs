@@ -14,6 +14,7 @@
 
 use crate::field;
 use crate::prg::{ChaCha20Rng, Seed};
+use std::fmt;
 
 /// One user's share of a 256-bit seed: the evaluation point plus 8 field
 /// elements (one per seed word).
@@ -108,53 +109,211 @@ impl<'a> Basis<'a> {
     }
 }
 
+/// Typed failure of [`reconstruct_detailed`]. The `Inconsistent`
+/// variant is the recovery hook: it names the *evaluation points* whose
+/// shares are provably at odds with the unique degree-`t` polynomial the
+/// rest of the share set supports, so a caller that knows the
+/// point↔sender mapping (the protocol servers deal user `i` its shares
+/// at `x = i + 1`) can exclude the equivocators and retry instead of
+/// abandoning the round.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ReconstructError {
+    /// A share claimed `x = 0` (the secret itself) or `x ≥ q`.
+    BadPoint { x: u32 },
+    /// Fewer than `t + 1` usable distinct evaluation points.
+    TooFew { distinct: usize, need: usize },
+    /// Shares at exactly these evaluation points conflict with the
+    /// polynomial consistently supported by all remaining points.
+    /// Minimal and — within the unique-decoding radius
+    /// `len ≥ t + 1 + 2·|xs|` — unambiguous.
+    Inconsistent { xs: Vec<u32> },
+    /// The share set is inconsistent but no culprit set small enough
+    /// for unambiguous identification exists (too many forgeries, or
+    /// too little redundancy to tell forger from framed).
+    Unidentifiable,
+}
+
+impl fmt::Display for ReconstructError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReconstructError::BadPoint { x } => {
+                write!(f, "hostile evaluation point x = {x}")
+            }
+            ReconstructError::TooFew { distinct, need } => write!(
+                f,
+                "{distinct} distinct shares, need {need} to reconstruct"
+            ),
+            ReconstructError::Inconsistent { xs } => write!(
+                f,
+                "shares at evaluation points {xs:?} conflict with the \
+                 polynomial the remaining shares agree on"
+            ),
+            ReconstructError::Unidentifiable => write!(
+                f,
+                "share set inconsistent, no unambiguous culprit set \
+                 within the unique-decoding radius"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ReconstructError {}
+
+/// Interpolate `pts[..t+1]` and check every remaining point against the
+/// result, with the points at positions in `skip` (sorted) left out
+/// entirely. Returns the seed words when all non-skipped points agree.
+fn try_consistent(pts: &[&Share], t: usize, skip: &[usize])
+                  -> Option<[u32; 8]> {
+    let kept: Vec<&Share> = pts
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| !skip.contains(i))
+        .map(|(_, s)| *s)
+        .collect();
+    if kept.len() < t + 1 {
+        return None;
+    }
+    let basis = Basis::new(&kept[..t + 1]);
+    for s in &kept[t + 1..] {
+        if basis.eval(s.x) != s.y {
+            return None;
+        }
+    }
+    Some(basis.eval(0))
+}
+
 /// Reconstruct the seed from any `t + 1` (or more) shares with
 /// **distinct** evaluation points, hardened for hostile share lists:
 ///
 /// * shares with `x = 0` (a claim to *be* the secret) or `x ≥ q` are
-///   rejected outright;
+///   rejected outright ([`ReconstructError::BadPoint`]);
 /// * duplicate-`x` shares are collapsed when their payloads agree
-///   (replay) and rejected when they conflict (equivocation) — naive
-///   interpolation over a repeated point divides by zero;
-/// * returns `None` if fewer than `t + 1` *distinct* points remain;
+///   (replay); when they conflict, that point is a self-evident
+///   equivocator — two different payloads signed off for one dealt
+///   point — and is reported in [`ReconstructError::Inconsistent`];
+/// * fewer than `t + 1` *distinct* points is
+///   [`ReconstructError::TooFew`];
 /// * every share beyond the first `t + 1` is cross-checked against the
-///   interpolated polynomial. A forged share among honest ones either
-///   lands in the interpolation set (some honest extra then disagrees)
-///   or is itself the disagreeing extra — both return `None` instead of
-///   silently folding garbage into the seed.
+///   interpolated polynomial. On disagreement the function searches for
+///   the **minimal** culprit set: the smallest `f ≥ 1` such that
+///   removing some `f` points leaves every remaining point on one
+///   degree-`t` polynomial. The identification is accepted only inside
+///   the unique-decoding radius (`len − f ≥ t + 1 + f`, the
+///   Reed–Solomon bound): there the consistent supermajority pins the
+///   true polynomial, so a forger cannot frame an honest point.
+///   Outside the radius the result is
+///   [`ReconstructError::Unidentifiable`] — detection without
+///   attribution, the round must abort.
 ///
 /// The cross-check needs redundancy: with **exactly** `t + 1` distinct
 /// points there is nothing to check against, and a forged share value
 /// is information-theoretically undetectable (any `t + 1` points define
 /// a valid degree-`t` polynomial). Protocol-level consequence: a
-/// two-faced survivor's poisoned shares fail the round cleanly whenever
-/// more than `t + 1` users respond, but an exact-quorum round has no
-/// redundancy to spend on detection — that residual risk is inherent to
-/// unauthenticated Shamir sharing, not a gap in this implementation
+/// two-faced survivor's poisoned shares are *identified* whenever the
+/// response set carries `≥ t + 1 + 2f` distinct points, merely
+/// *detected* above `t + 1`, and invisible at exact quorum — that
+/// residual risk is inherent to unauthenticated Shamir sharing
 /// (verifiable secret sharing would close it at extra communication
 /// cost).
-pub fn reconstruct(shares: &[&Share], t: usize) -> Option<Seed> {
+pub fn reconstruct_detailed(shares: &[&Share], t: usize)
+                            -> Result<Seed, ReconstructError> {
     let mut pts: Vec<&Share> = Vec::with_capacity(shares.len());
+    // Evaluation points that equivocated via conflicting duplicates —
+    // unambiguous culprits regardless of redundancy.
+    let mut dup_suspects: Vec<u32> = Vec::new();
     for &s in shares {
         if s.x == 0 || s.x >= field::Q {
-            return None;
+            return Err(ReconstructError::BadPoint { x: s.x });
         }
-        match pts.iter().find(|p| p.x == s.x) {
-            Some(p) if p.y == s.y => {} // replayed copy: collapse
-            Some(_) => return None,     // equivocation
-            None => pts.push(s),
+        match pts.iter().position(|p| p.x == s.x) {
+            Some(i) if pts[i].y == s.y => {} // replayed copy: collapse
+            Some(i) => {
+                // Conflicting payloads at one point: drop the point,
+                // remember the culprit.
+                pts.remove(i);
+                if !dup_suspects.contains(&s.x) {
+                    dup_suspects.push(s.x);
+                }
+            }
+            None => {
+                if dup_suspects.contains(&s.x) {
+                    continue; // third face of an already-flagged point
+                }
+                pts.push(s);
+            }
         }
     }
     if pts.len() < t + 1 {
-        return None;
+        return if dup_suspects.is_empty() {
+            Err(ReconstructError::TooFew {
+                distinct: pts.len(),
+                need: t + 1,
+            })
+        } else {
+            // The equivocators are known even though the remainder is
+            // too thin to finish — let the caller exclude and retry.
+            dup_suspects.sort_unstable();
+            Err(ReconstructError::Inconsistent { xs: dup_suspects })
+        };
     }
-    let basis = Basis::new(&pts[..t + 1]);
-    for s in &pts[t + 1..] {
-        if basis.eval(s.x) != s.y {
-            return None;
+    if let Some(words) = try_consistent(&pts, t, &[]) {
+        return if dup_suspects.is_empty() {
+            Ok(Seed(words))
+        } else {
+            dup_suspects.sort_unstable();
+            Err(ReconstructError::Inconsistent { xs: dup_suspects })
+        };
+    }
+    // Minimal-culprit search, smallest f first. Unique decoding needs
+    // len − f ≥ t + 1 + f; the budget caps pathological cohort sizes
+    // (the search is trivially cheap at protocol scale).
+    let len = pts.len();
+    let f_max = (len - (t + 1)) / 2;
+    let mut budget = 100_000usize;
+    for f in 1..=f_max {
+        let mut skip: Vec<usize> = (0..f).collect();
+        loop {
+            if budget == 0 {
+                return Err(ReconstructError::Unidentifiable);
+            }
+            budget -= 1;
+            if try_consistent(&pts, t, &skip).is_some() {
+                let mut xs: Vec<u32> =
+                    skip.iter().map(|&i| pts[i].x).collect();
+                xs.extend_from_slice(&dup_suspects);
+                xs.sort_unstable();
+                return Err(ReconstructError::Inconsistent { xs });
+            }
+            if !next_combination(&mut skip, len) {
+                break;
+            }
         }
     }
-    Some(Seed(basis.eval(0)))
+    Err(ReconstructError::Unidentifiable)
+}
+
+/// Advance `idx` (strictly increasing indices into `0..len`) to the next
+/// combination in lexicographic order; `false` when exhausted.
+fn next_combination(idx: &mut [usize], len: usize) -> bool {
+    let f = idx.len();
+    let mut i = f;
+    while i > 0 {
+        i -= 1;
+        if idx[i] != i + len - f {
+            idx[i] += 1;
+            for j in i + 1..f {
+                idx[j] = idx[j - 1] + 1;
+            }
+            return true;
+        }
+    }
+    false
+}
+
+/// [`reconstruct_detailed`] collapsed to the legacy `Option` contract:
+/// `Some` only when the whole share set lies on one polynomial.
+pub fn reconstruct(shares: &[&Share], t: usize) -> Option<Seed> {
+    reconstruct_detailed(shares, t).ok()
 }
 
 /// Default threshold: polynomial degree ⌊N/2⌋, so ⌊N/2⌋+1 shares
@@ -369,6 +528,97 @@ mod tests {
         let mut refs: Vec<&Share> = shares.iter().take(t + 1).collect();
         refs.push(&big_x);
         assert_eq!(reconstruct(&refs, t), None);
+    }
+
+    /// Inside the unique-decoding radius (len ≥ t+1+2f) the detailed
+    /// reconstruction must *name* the forged evaluation points, whatever
+    /// positions they occupy in the share list.
+    #[test]
+    fn forged_shares_are_identified_by_evaluation_point() {
+        prop(60, |rng| {
+            let n = 9 + (rng.next_u32() as usize % 8); // 9..16
+            let t = 3;
+            let seed = seed_below_q(rng);
+            let shares = deal(seed, n, t, rng);
+            // forge 1 or 2 shares at random positions (radius needs
+            // n ≥ t+1+2f = 8 for f=2 — all n here qualify).
+            let f = 1 + (rng.next_u32() as usize % 2);
+            let mut forged_xs: Vec<u32> = Vec::new();
+            let mut refs: Vec<Share> =
+                shares.iter().map(|s| (*s).clone()).collect();
+            while forged_xs.len() < f {
+                let k = rng.next_u32() as usize % n;
+                if forged_xs.contains(&refs[k].x) {
+                    continue;
+                }
+                let w = rng.next_u32() as usize % 8;
+                refs[k].y[w] =
+                    field::add(refs[k].y[w], 1 + rng.next_u32() % 1000);
+                forged_xs.push(refs[k].x);
+            }
+            forged_xs.sort_unstable();
+            let refs: Vec<&Share> = refs.iter().collect();
+            assert_eq!(
+                reconstruct_detailed(&refs, t),
+                Err(ReconstructError::Inconsistent { xs: forged_xs })
+            );
+        });
+    }
+
+    /// Conflicting duplicates at one x are self-evident equivocation:
+    /// identified without any redundancy requirement, and the honest
+    /// remainder still reconstructs once the caller excludes them.
+    #[test]
+    fn duplicate_equivocation_names_the_point() {
+        let mut rng = ChaCha20Rng::from_seed_u64(21);
+        let seed = seed_below_q(&mut rng);
+        let t = 3;
+        let shares = deal(seed, 8, t, &mut rng);
+        let mut forged = shares[2].clone();
+        forged.y[4] = field::add(forged.y[4], 7);
+        let mut refs: Vec<&Share> = shares.iter().take(t + 2).collect();
+        refs.push(&forged); // same x as shares[2], different payload
+        assert_eq!(
+            reconstruct_detailed(&refs, t),
+            Err(ReconstructError::Inconsistent { xs: vec![forged.x] })
+        );
+        // Caller drops both faces of x=3: the rest reconstructs.
+        let clean: Vec<&Share> = refs
+            .iter()
+            .copied()
+            .filter(|s| s.x != forged.x)
+            .collect();
+        assert_eq!(reconstruct_detailed(&clean, t), Ok(seed));
+    }
+
+    /// One extra share detects a forgery (len = t+2) but cannot
+    /// attribute it — the forger and the framed are symmetric at that
+    /// redundancy, so the typed error says Unidentifiable, not a guess.
+    #[test]
+    fn detection_without_radius_is_unidentifiable() {
+        let mut rng = ChaCha20Rng::from_seed_u64(22);
+        let seed = seed_below_q(&mut rng);
+        let t = 3;
+        let shares = deal(seed, 8, t, &mut rng);
+        let mut forged = shares[1].clone();
+        forged.y[0] = field::add(forged.y[0], 5);
+        let refs: Vec<&Share> = [&shares[0], &forged, &shares[2],
+                                 &shares[3], &shares[4]].to_vec();
+        assert_eq!(reconstruct_detailed(&refs, t),
+                   Err(ReconstructError::Unidentifiable));
+    }
+
+    #[test]
+    fn too_few_is_typed() {
+        let mut rng = ChaCha20Rng::from_seed_u64(23);
+        let seed = seed_below_q(&mut rng);
+        let t = 4;
+        let shares = deal(seed, 9, t, &mut rng);
+        let refs: Vec<&Share> = shares.iter().take(t).collect();
+        assert_eq!(
+            reconstruct_detailed(&refs, t),
+            Err(ReconstructError::TooFew { distinct: t, need: t + 1 })
+        );
     }
 
     #[test]

@@ -21,6 +21,29 @@
 //! [`InMemoryBus`] is the deterministic reference implementation: FIFO
 //! per-direction queues, no loss, no reordering, so rounds are exactly
 //! reproducible and the adversarial harness can pin byte-exact outcomes.
+//!
+//! # Rate limiting (DoS-bandwidth threat model)
+//!
+//! The validating ingest layer already guarantees hostile frames cannot
+//! corrupt state — but every rejected frame still costs a *decode*
+//! attempt, so a flooding sender can burn server CPU at line rate.
+//! [`RateLimiter`] closes that gap at the transport seam: each sender
+//! endpoint gets a per-round frame budget, and frames beyond it are
+//! **shed before decode** — counted (`rate_limited_frames` in the round
+//! ledger) and billed as bandwidth (the flood still crossed the
+//! sender's link), but never parsed. The budget keys off the
+//! authenticated endpoint id, not frame contents, so a flooder cannot
+//! spend anyone else's budget: an honest sender needs one MaskedInput
+//! frame plus one UnmaskResponse, and a budget at or above that is
+//! never shed (the boundary is pinned by tests — frames 1..=budget
+//! pass, frame budget+1 is shed). The round driver replenishes budgets
+//! ([`RateLimiter::reset`]) for each recovery re-solicitation wave, so
+//! the limiter can never starve a recoverable round; a flooder gains
+//! at most one budget refill per *identified equivocator*, which it
+//! cannot mint. What rate limiting
+//! deliberately does *not* do is drop the flood's bytes from the
+//! ledger: in a real deployment shed traffic still saturated the NIC,
+//! and the honest way to account a DoS is as spent bandwidth.
 
 use std::collections::VecDeque;
 
@@ -83,6 +106,43 @@ impl Transport for InMemoryBus {
     }
 }
 
+/// Per-sender frame budget for one round — the flood-shedding policy of
+/// the module-level threat model. `admit` is called with the
+/// authenticated endpoint id of every inbound frame *before* decoding;
+/// the first `budget` frames of a round pass, everything after is shed.
+#[derive(Clone, Debug)]
+pub struct RateLimiter {
+    budget: usize,
+    counts: Vec<usize>,
+}
+
+impl RateLimiter {
+    /// A limiter admitting `budget` frames per sender per round
+    /// (`budget ≥ 1`; "disabled" is expressed by not constructing one).
+    /// The `senders` known endpoints get one bucket each, plus a shared
+    /// overflow bucket for out-of-range ids — so a flood from a forged
+    /// unknown endpoint can never drain a real sender's budget.
+    pub fn new(budget: usize, senders: usize) -> Self {
+        RateLimiter {
+            budget: budget.max(1),
+            counts: vec![0; senders + 1],
+        }
+    }
+
+    /// Account one inbound frame from `from`; `true` ⇔ within budget
+    /// (frames 1..=budget admitted, budget+1 onward shed).
+    pub fn admit(&mut self, from: usize) -> bool {
+        let slot = from.min(self.counts.len() - 1);
+        self.counts[slot] += 1;
+        self.counts[slot] <= self.budget
+    }
+
+    /// Start a fresh round: all budgets replenished.
+    pub fn reset(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,5 +176,35 @@ mod tests {
         bus.to_client(9, vec![1]); // no such endpoint: dropped
         assert_eq!(bus.client_recv(9), None);
         assert_eq!(bus.client_recv(0), None);
+    }
+
+    /// The off-by-one that matters: a sender at EXACTLY the budget is
+    /// never shed; frame budget+1 is the first one shed.
+    #[test]
+    fn rate_limiter_boundary_is_exact() {
+        for budget in 1..6usize {
+            let mut rl = RateLimiter::new(budget, 3);
+            for k in 1..=budget {
+                assert!(rl.admit(1), "frame {k} within budget {budget}");
+            }
+            assert!(!rl.admit(1), "frame {} must be shed", budget + 1);
+            assert!(!rl.admit(1));
+            // Other senders' budgets are untouched.
+            assert!(rl.admit(0));
+            // Replenished next round.
+            rl.reset();
+            assert!(rl.admit(1));
+        }
+    }
+
+    /// Floods from forged out-of-range endpoints land in the overflow
+    /// bucket and cannot drain a real sender's budget.
+    #[test]
+    fn rate_limiter_overflow_bucket_is_isolated() {
+        let mut rl = RateLimiter::new(2, 2);
+        assert!(rl.admit(17));
+        assert!(rl.admit(99)); // same overflow bucket
+        assert!(!rl.admit(1234)); // overflow bucket exhausted
+        assert!(rl.admit(0) && rl.admit(1), "real senders unaffected");
     }
 }

@@ -14,9 +14,15 @@
 //!   silent aggregate corruption;
 //! * an unsurvivable round (byzantine pressure breaks quorum, or a
 //!   two-faced survivor poisons share values behind valid geometry)
-//!   fails with a clean `Err`.
+//!   fails with a clean `Err`;
+//! * **recovery catalog** (post-PR 5): every attack that previously
+//!   could only *cleanly abort* — two-faced share-value poisoning,
+//!   equivocation-by-geometry — now completes **bit-exactly** equal to
+//!   the honest-reference-minus-excluded-users aggregate, across both
+//!   protocols and all three unmask executors, with the round ledger's
+//!   `excluded_users` / `retries` asserted exactly.
 
-use sparsesecagg::adversary::{Adversary, Attack, FULL_CATALOG};
+use sparsesecagg::adversary::{Adversary, Attack, TwoFaced, FULL_CATALOG};
 use sparsesecagg::coordinator::Coordinator;
 use sparsesecagg::exec::{ExecMode, Executor};
 use sparsesecagg::field;
@@ -225,6 +231,239 @@ fn two_faced_share_poisoning_fails_cleanly_secagg() {
     }
     let responses = server.take_responses();
     assert!(server.finish_round(0, &responses).is_err());
+}
+
+/// Recovery catalog: one two-faced survivor (honest upload, poisoned
+/// unmask shares) against the frame driver. The attacked round must
+/// complete **bit-exactly** equal to the honest reference with the
+/// byzantine ids (injector + excluded equivocator) simply dropped, and
+/// the ledger must account the recovery exactly: `excluded_users` is
+/// the two-faced id, `retries` is one.
+///
+/// Cohort math: N = 10, t = 5. Byzantine prefix {0, 1}; id 0 injects
+/// catalog frames, id 1 is two-faced. Nine users upload and respond,
+/// one response poisoned — inside the unique-decoding radius
+/// (9 ≥ t+1+2), so value poisoning is *identified*, and geometry
+/// poisoning is flagged at ingest regardless.
+fn assert_two_faced_recovers(secagg_proto: bool, kind: TwoFaced,
+                             mode: ExecMode, shard: usize) {
+    let alpha = if secagg_proto { 1.0 } else { 0.3 };
+    let p = params(10, 500, alpha, 0.0);
+    let ys = grads(p.n, p.d, 0x2f2f);
+    let betas = vec![1.0 / p.n as f64; p.n];
+
+    let mut reference = coordinator(secagg_proto, p, 177, mode, shard);
+    let (want, ref_ledger) =
+        reference.run_round(1, &ys, &betas, &[0, 1]).unwrap();
+    assert_eq!(ref_ledger.retries, 0);
+
+    let mut attacked = coordinator(secagg_proto, p, 177, mode, shard);
+    let mut adv = Adversary::new(0.2, 0x7e57);
+    adv.two_faced = vec![(1, kind)];
+    let (got, ledger) = attacked
+        .run_round_adversarial(1, &ys, &betas, &[], &mut adv)
+        .unwrap_or_else(|e| {
+            panic!("{kind:?}/{mode:?} secagg={secagg_proto} must \
+                    recover, not abort: {e:#}")
+        });
+
+    assert_eq!(got, want,
+               "{kind:?}/{mode:?} secagg={secagg_proto}: recovered \
+                aggregate differs from honest-minus-excluded reference");
+    assert_eq!(ledger.excluded_users, vec![1],
+               "{kind:?}/{mode:?}: exactly the two-faced survivor is \
+                excluded");
+    assert_eq!(ledger.retries, 1,
+               "{kind:?}/{mode:?}: one exclude-and-re-solicit pass");
+    // Catalog injections from id 0 are all rejected; a geometry-poisoned
+    // response is additionally rejected at ingest (value poisoning
+    // passes ingest and is caught at reconstruction instead).
+    let poisoned_rejects = match kind {
+        TwoFaced::PoisonGeometry => 1,
+        TwoFaced::PoisonValues => 0,
+    };
+    assert_eq!(ledger.rejected_frames, adv.injected + poisoned_rejects,
+               "{kind:?}/{mode:?}: reject accounting");
+}
+
+#[test]
+fn recovery_catalog_completes_bit_exactly_sparse_all_executors() {
+    for &(mode, shard) in EXECUTORS {
+        for kind in [TwoFaced::PoisonValues, TwoFaced::PoisonGeometry] {
+            assert_two_faced_recovers(false, kind, mode, shard);
+        }
+    }
+}
+
+#[test]
+fn recovery_catalog_completes_bit_exactly_secagg_all_executors() {
+    for &(mode, shard) in EXECUTORS {
+        for kind in [TwoFaced::PoisonValues, TwoFaced::PoisonGeometry] {
+            assert_two_faced_recovers(true, kind, mode, shard);
+        }
+    }
+}
+
+/// `max_retries = 0` restores PR 3's detect-and-abort: the equivocator
+/// is identified but the round must fail cleanly instead of retrying.
+#[test]
+fn max_retries_zero_aborts_cleanly_on_identified_equivocator() {
+    let p = params(10, 300, 0.3, 0.0);
+    let ys = grads(p.n, p.d, 0x2f30);
+    let betas = vec![1.0 / p.n as f64; p.n];
+    for kind in [TwoFaced::PoisonValues, TwoFaced::PoisonGeometry] {
+        let mut c = coordinator(false, p, 178, ExecMode::Stealing, 64);
+        c.max_retries = 0;
+        let mut adv = Adversary::new(0.2, 0x7e58);
+        adv.two_faced = vec![(1, kind)];
+        let res = c.run_round_adversarial(0, &ys, &betas, &[], &mut adv);
+        assert!(res.is_err(),
+                "{kind:?}: retry budget 0 must abort, not recover");
+    }
+}
+
+/// The server-level recovery driver (monolithic engine, closure
+/// re-solicitation): poisoned share *values* with redundancy are
+/// identified by reconstruction, the poisoner excluded, and the
+/// aggregate finishes bit-exact to a reference round that never had
+/// user 0 — for both protocols.
+#[test]
+fn poisoned_values_recover_via_server_recovery_driver() {
+    let p = params(8, 300, 0.4, 0.0);
+    let ys = grads(p.n, p.d, 0xbeed);
+    let beta = 1.0 / p.n as f64;
+
+    // --- sparse ---
+    // Reference: identical cohort (same entropy), user 0 dropped.
+    let (r_users, mut r_server) = sparse::setup(p, 5);
+    r_server.begin_round();
+    let mut scratch = vec![0u32; p.d];
+    for u in r_users.iter().skip(1) {
+        let plan = u.mask_plan(0, &p, &mut scratch);
+        r_server.receive_upload(
+            u.masked_upload(0, &ys[u.id], beta, &p, plan));
+    }
+    r_server.close_uploads();
+    let req = r_server.unmask_request();
+    for u in r_users.iter().skip(1) {
+        r_server.try_receive_response(u.respond_unmask(&req)).unwrap();
+    }
+    let responses = r_server.take_responses();
+    r_server.finish_round(0, &responses).unwrap();
+    let want = r_server.aggregate_field().to_vec();
+
+    // Attacked: everyone uploads; user 0 poisons every share word it
+    // returns (valid geometry — ingest accepts it).
+    let (users, mut server) = sparse::setup(p, 5);
+    server.begin_round();
+    for u in &users {
+        let plan = u.mask_plan(0, &p, &mut scratch);
+        server.receive_upload(
+            u.masked_upload(0, &ys[u.id], beta, &p, plan));
+    }
+    server.close_uploads();
+    let req = server.unmask_request();
+    for u in &users {
+        let mut resp = u.respond_unmask(&req);
+        if u.id == 0 {
+            for (_, s) in resp.seed_shares.iter_mut() {
+                s.y[0] = field::add(s.y[0], 1);
+            }
+        }
+        server.try_receive_response(resp).unwrap();
+    }
+    let (_, outcome) = server
+        .finish_round_with_recovery(0, 2, |req| {
+            users.iter().filter(|u| u.id != 0)
+                .map(|u| u.respond_unmask(req)).collect()
+        })
+        .expect("value poisoning with redundancy must recover");
+    assert_eq!(outcome.excluded, vec![0]);
+    assert_eq!(outcome.retries, 1);
+    assert_eq!(server.excluded(), &[0]);
+    assert_eq!(server.aggregate_field(), &want[..],
+               "recovered sparse aggregate != reference without user 0");
+
+    // --- secagg ---
+    let (r_users, mut r_server) = secagg::setup(p, 6);
+    r_server.begin_round();
+    for u in r_users.iter().skip(1) {
+        r_server.receive_upload(u.masked_upload(0, &ys[u.id], beta, &p));
+    }
+    r_server.close_uploads();
+    let req = r_server.unmask_request();
+    for u in r_users.iter().skip(1) {
+        r_server.try_receive_response(u.respond_unmask(&req)).unwrap();
+    }
+    let responses = r_server.take_responses();
+    r_server.finish_round(0, &responses).unwrap();
+    let want = r_server.aggregate_field().to_vec();
+
+    let (users, mut server) = secagg::setup(p, 6);
+    server.begin_round();
+    for u in &users {
+        server.receive_upload(u.masked_upload(0, &ys[u.id], beta, &p));
+    }
+    server.close_uploads();
+    let req = server.unmask_request();
+    for u in &users {
+        let mut resp = u.respond_unmask(&req);
+        if u.id == 0 {
+            for (_, s) in resp.seed_shares.iter_mut() {
+                s.y[0] = field::add(s.y[0], 1);
+            }
+        }
+        server.try_receive_response(resp).unwrap();
+    }
+    let (_, outcome) = server
+        .finish_round_with_recovery(0, 2, |req| {
+            users.iter().filter(|u| u.id != 0)
+                .map(|u| u.respond_unmask(req)).collect()
+        })
+        .expect("secagg value poisoning with redundancy must recover");
+    assert_eq!(outcome.excluded, vec![0]);
+    assert_eq!(outcome.retries, 1);
+    assert_eq!(server.aggregate_field(), &want[..],
+               "recovered secagg aggregate != reference without user 0");
+}
+
+/// Equivocation-by-geometry against the server recovery driver: the
+/// re-stamped response is rejected *and flagged* at ingest, so recovery
+/// excludes the equivocator without spending a finish attempt on it.
+#[test]
+fn geometry_equivocator_is_flagged_and_excluded_at_ingest() {
+    let p = params(8, 250, 0.4, 0.0);
+    let ys = grads(p.n, p.d, 0x6e00);
+    let beta = 1.0 / p.n as f64;
+    let (users, mut server) = sparse::setup(p, 7);
+    server.begin_round();
+    let mut scratch = vec![0u32; p.d];
+    for u in &users {
+        let plan = u.mask_plan(0, &p, &mut scratch);
+        server.receive_upload(
+            u.masked_upload(0, &ys[u.id], beta, &p, plan));
+    }
+    server.close_uploads();
+    let req = server.unmask_request();
+    for u in &users {
+        let mut resp = u.respond_unmask(&req);
+        if u.id == 2 {
+            for (_, s) in resp.seed_shares.iter_mut() {
+                s.x += 1; // wrong evaluation point: geometry forgery
+            }
+            assert!(server.try_receive_response(resp).is_err());
+        } else {
+            server.try_receive_response(resp).unwrap();
+        }
+    }
+    let (_, outcome) = server
+        .finish_round_with_recovery(0, 1, |req| {
+            users.iter().filter(|u| u.id != 2)
+                .map(|u| u.respond_unmask(req)).collect()
+        })
+        .expect("geometry equivocation must recover");
+    assert_eq!(outcome.excluded, vec![2]);
+    assert_eq!(outcome.retries, 1);
 }
 
 /// Raw hostile bytes straight into the frame ingest: any byte soup must

@@ -10,7 +10,7 @@ use sparsesecagg::prg::ChaCha20Rng;
 use sparsesecagg::protocol::messages::UnmaskResponse;
 use sparsesecagg::protocol::{secagg, sparse, Params};
 use sparsesecagg::quantize;
-use sparsesecagg::testutil::prop;
+use sparsesecagg::testutil::prop_shrink;
 
 fn random_grads(rng: &mut ChaCha20Rng, n: usize, d: usize) -> Vec<Vec<f32>> {
     (0..n)
@@ -259,15 +259,47 @@ fn storm_split(rng: &mut ChaCha20Rng, n: usize, responders: usize)
     (p1, p2, resp)
 }
 
+/// One dropout-storm scenario, fully determined by its fields — the
+/// explicit-case shape `testutil::prop_shrink` needs: on failure the
+/// driver halves the cohort / drops users / halves the dimension and
+/// reports the smallest still-failing reproduction.
+#[derive(Clone, Copy, Debug)]
+struct StormCase {
+    n: usize,
+    d: usize,
+    alpha: f64,
+    seed: u64,
+}
+
+fn gen_storm(rng: &mut ChaCha20Rng) -> StormCase {
+    StormCase {
+        n: 5 + (rng.next_u32() as usize % 8),
+        d: 150 + (rng.next_u32() as usize % 400),
+        alpha: 0.2 + 0.5 * rng.next_f32() as f64,
+        seed: rng.next_u64(),
+    }
+}
+
+fn shrink_storm(c: &StormCase) -> Vec<StormCase> {
+    let mut out = Vec::new();
+    if c.n > 5 {
+        out.push(StormCase { n: (c.n / 2).max(5), ..*c }); // halve cohort
+        out.push(StormCase { n: c.n - 1, ..*c }); // drop one user
+    }
+    if c.d > 80 {
+        out.push(StormCase { d: c.d / 2, ..*c });
+    }
+    out
+}
+
 /// Dropout storm, SparseSecAgg: random per-phase dropout patterns down to
 /// exactly ⌊N/2⌋+1 responders must recover the round — bit-exactly — and
 /// one responder fewer must fail cleanly with an error (never garbage).
 #[test]
 fn dropout_storm_at_threshold_sparse() {
-    prop(15, |rng| {
-        let n = 5 + (rng.next_u32() as usize % 8);
-        let d = 150 + (rng.next_u32() as usize % 400);
-        let alpha = 0.2 + 0.5 * rng.next_f32() as f64;
+    prop_shrink(15, gen_storm, shrink_storm, |c: &StormCase| {
+        let StormCase { n, d, alpha, seed } = *c;
+        let rng = &mut ChaCha20Rng::from_seed_u64(seed);
         let params = Params { n, d, alpha, theta: 0.3, c: 1024.0 };
         let (users, mut server) =
             sparse::setup(params, 3_000 + rng.next_u32() as u64);
@@ -336,9 +368,9 @@ fn dropout_storm_at_threshold_sparse() {
 /// error.)
 #[test]
 fn dropout_storm_at_threshold_secagg() {
-    prop(15, |rng| {
-        let n = 5 + (rng.next_u32() as usize % 7);
-        let d = 100 + (rng.next_u32() as usize % 300);
+    prop_shrink(15, gen_storm, shrink_storm, |c: &StormCase| {
+        let StormCase { n, d, seed, .. } = *c;
+        let rng = &mut ChaCha20Rng::from_seed_u64(seed ^ 0x5ec);
         let params = Params { n, d, alpha: 1.0, theta: 0.3, c: 65536.0 };
         let (users, mut server) =
             secagg::setup(params, 7_000 + rng.next_u32() as u64);

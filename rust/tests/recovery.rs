@@ -1,0 +1,377 @@
+//! Round-recovery and rate-limiting suite — the availability half of
+//! the secure-aggregation story.
+//!
+//! * **Soak**: ≥ 20 consecutive byzantine rounds through the frame
+//!   driver with a catalog injector *and* a two-faced share poisoner:
+//!   zero lost rounds while the honest quorum holds, every round
+//!   bit-exact to its honest-minus-excluded reference, deterministic
+//!   under the seed (two full runs compared bit-for-bit).
+//! * **Quorum starvation**: recovery that would dip below ⌊N/2⌋+1
+//!   responders aborts with a clean error after the retry budget —
+//!   never a panic, never a fabricated aggregate.
+//! * **Rate limiter**: a seeded flood from one endpoint is shed before
+//!   decode (`rate_limited_frames` counted exactly, round bit-exact vs
+//!   the no-flood reference), per-sender budgets are isolated, and an
+//!   honest sender at exactly the budget is never shed — the
+//!   off-by-one is pinned from both sides (budget 2 completes, budget
+//!   1 starves the response wave and fails cleanly).
+//! * **Shrinker adoption**: the recovery property runs under
+//!   `testutil::prop_shrink`, so a failure reports its minimal cohort.
+
+use sparsesecagg::adversary::{Adversary, Attack, TwoFaced};
+use sparsesecagg::coordinator::Coordinator;
+use sparsesecagg::exec::ExecMode;
+use sparsesecagg::field;
+use sparsesecagg::fl::{run_fl, FlConfig, Trainer};
+use sparsesecagg::prg::ChaCha20Rng;
+use sparsesecagg::protocol::{sparse, Params};
+use sparsesecagg::testutil::prop_shrink;
+
+fn params(n: usize, d: usize, alpha: f64, theta: f64) -> Params {
+    Params { n, d, alpha, theta, c: 1024.0 }
+}
+
+fn grads(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = ChaCha20Rng::from_seed_u64(seed);
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.next_f32() - 0.5).collect())
+        .collect()
+}
+
+fn coordinator(p: Params, entropy: u64) -> Coordinator {
+    let mut c = Coordinator::new_sparse(p, entropy);
+    c.exec_mode = ExecMode::Stealing;
+    c.shard_size = 64;
+    c.threads = 3;
+    c
+}
+
+/// One full soak run: 24 rounds, byzantine ids {0, 1} (0 injects the
+/// frame catalog, 1 two-faced value-poisons every round), rotating
+/// dropout patterns that keep the response set inside the
+/// unique-decoding radius (≥ t+1+2 = 9 responders of N = 12). Returns
+/// the per-round aggregates for determinism comparison.
+fn soak_run(entropy: u64) -> Vec<Vec<f32>> {
+    let p = params(12, 250, 0.35, 0.0);
+    let ys = grads(p.n, p.d, 0x50a6_u64 ^ entropy);
+    let betas = vec![1.0 / p.n as f64; p.n];
+    let dropout_patterns: [&[usize]; 3] = [&[], &[5], &[5, 9]];
+
+    let mut attacked = coordinator(p, entropy);
+    let mut reference = coordinator(p, entropy);
+    let mut adv = Adversary::new(0.2, entropy ^ 0xad);
+    adv.two_faced = vec![(1, TwoFaced::PoisonValues)];
+
+    let mut aggs = Vec::new();
+    for round in 0..24u32 {
+        let dropped = dropout_patterns[round as usize % 3].to_vec();
+        let (got, ledger) = attacked
+            .run_round_adversarial(round, &ys, &betas, &dropped, &mut adv)
+            .unwrap_or_else(|e| {
+                panic!("soak round {round} lost under byzantine \
+                        pressure with honest quorum intact: {e:#}")
+            });
+        assert_eq!(ledger.excluded_users, vec![1], "round {round}");
+        assert_eq!(ledger.retries, 1, "round {round}");
+        assert!(ledger.rejected_frames > 0, "round {round}");
+
+        let mut ref_dropped = dropped.clone();
+        ref_dropped.extend([0usize, 1]);
+        let (want, ref_ledger) = reference
+            .run_round(round, &ys, &betas, &ref_dropped)
+            .unwrap();
+        assert_eq!(ref_ledger.retries, 0);
+        assert_eq!(got, want,
+                   "round {round}: recovered aggregate diverged from \
+                    honest-minus-excluded reference");
+        aggs.push(got);
+    }
+    aggs
+}
+
+/// ≥ 20 byzantine rounds, zero lost, bit-exact, deterministic.
+#[test]
+fn soak_byzantine_rounds_recover_without_loss_and_deterministically() {
+    let a = soak_run(31);
+    let b = soak_run(31);
+    assert_eq!(a.len(), 24);
+    for (r, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x, y, "soak round {r} not deterministic under seed");
+    }
+}
+
+/// Quorum starvation: excluding the identified equivocator leaves
+/// fewer than ⌊N/2⌋+1 responders — the retry must end in a clean
+/// error, not a panic and not a wrong aggregate. (N = 8, t+1 = 5:
+/// byzantine {0, 1} with 1 two-faced, honest dropouts {6, 7} → five
+/// uploaders; excluding the equivocator leaves four.)
+#[test]
+fn quorum_starvation_fails_cleanly_after_retry() {
+    let p = params(8, 200, 0.4, 0.0);
+    let ys = grads(p.n, p.d, 0x57a2);
+    let betas = vec![1.0 / p.n as f64; p.n];
+    let mut c = coordinator(p, 91);
+    let mut adv = Adversary::new(0.25, 5);
+    adv.two_faced = vec![(1, TwoFaced::PoisonGeometry)];
+    let res =
+        c.run_round_adversarial(0, &ys, &betas, &[6, 7], &mut adv);
+    assert!(res.is_err(),
+            "post-exclusion quorum loss must be a clean error");
+}
+
+/// A seeded flood from one byzantine endpoint alongside its catalog
+/// frame: the budget admits (and the ingest rejects) exactly
+/// `rate_limit` frames from that sender; everything past the budget is
+/// shed before decode; honest traffic is untouched and the round is
+/// bit-exact to the no-flood reference.
+#[test]
+fn flood_from_one_sender_is_shed_and_round_bit_exact() {
+    let p = params(10, 300, 0.3, 0.0);
+    let ys = grads(p.n, p.d, 0xf10d);
+    let betas = vec![1.0 / p.n as f64; p.n];
+
+    let mut reference = coordinator(p, 44);
+    let (want, _) = reference.run_round(0, &ys, &betas, &[0]).unwrap();
+
+    let mut attacked = coordinator(p, 44);
+    attacked.rate_limit = 4;
+    let mut adv =
+        Adversary::with_catalog(0.1, 7, &[Attack::GarbagePayload]);
+    adv.flood = Some((0, 40));
+    let (got, ledger) = attacked
+        .run_round_adversarial(0, &ys, &betas, &[], &mut adv)
+        .unwrap();
+    // Endpoint 0 sends 42 frames: 1 catalog garbage + 40 flood in the
+    // upload phase, 1 catalog fallback in the response phase. Budget 4
+    // admits the first four (all garbage → rejected at decode); the
+    // remaining 38 are shed before decode.
+    assert_eq!(adv.flooded, 40);
+    assert_eq!(adv.injected, 2);
+    assert_eq!(ledger.rejected_frames, 4);
+    assert_eq!(ledger.rate_limited_frames, 38);
+    assert_eq!(got, want, "flooded round diverged from reference");
+    assert_eq!(ledger.retries, 0);
+}
+
+/// Budget-exactness property over random flood sizes and budgets, with
+/// the flood arriving from a *forged out-of-range endpoint*: sheds are
+/// exactly `flood − budget` (overflow bucket), admitted frames are all
+/// rejected at decode, honest senders are never shed, and the round
+/// stays bit-exact.
+#[test]
+fn flood_shedding_is_exact_for_any_budget() {
+    let p = params(8, 150, 0.4, 0.0);
+    let ys = grads(p.n, p.d, 0xf11);
+    let betas = vec![1.0 / p.n as f64; p.n];
+    let mut reference = coordinator(p, 45);
+    let (want, _) = reference.run_round(0, &ys, &betas, &[]).unwrap();
+    for case in 0..8u64 {
+        let mut rng = ChaCha20Rng::from_seed_u64(0xb0d6e7 + case);
+        let budget = 2 + (rng.next_u32() as usize % 6); // 2..=7
+        let flood = rng.next_u32() as usize % 50;
+        let mut attacked = coordinator(p, 45);
+        attacked.rate_limit = budget;
+        // frac 0 ⇒ no byzantine users, no catalog frames — the flood
+        // from forged endpoint n+3 is the only hostile traffic.
+        let mut adv = Adversary::with_catalog(
+            0.0, 3, &[Attack::GarbagePayload]);
+        adv.flood = Some((p.n + 3, flood));
+        let (got, ledger) = attacked
+            .run_round_adversarial(0, &ys, &betas, &[], &mut adv)
+            .unwrap();
+        let admitted = flood.min(budget);
+        assert_eq!(ledger.rejected_frames, admitted,
+                   "budget {budget}, flood {flood}");
+        assert_eq!(ledger.rate_limited_frames, flood - admitted,
+                   "budget {budget}, flood {flood}");
+        assert_eq!(got, want, "budget {budget}, flood {flood}");
+    }
+}
+
+/// The honest boundary, pinned from both sides: an honest sender needs
+/// exactly 2 frames per retry-free round (upload + response). At
+/// budget 2 nothing is shed and the round is bit-exact to the
+/// unlimited reference; at budget 1 every response wave is shed and
+/// the round fails cleanly (response starvation), proving the limiter
+/// admits frames 1..=budget, not budget−1.
+#[test]
+fn honest_sender_at_exact_budget_is_never_shed() {
+    let p = params(8, 200, 0.4, 0.0);
+    let ys = grads(p.n, p.d, 0xb0b);
+    let betas = vec![1.0 / p.n as f64; p.n];
+    let mut unlimited = coordinator(p, 46);
+    let (want, _) = unlimited.run_round(0, &ys, &betas, &[]).unwrap();
+
+    let mut at_budget = coordinator(p, 46);
+    at_budget.rate_limit = 2;
+    let (got, ledger) = at_budget.run_round(0, &ys, &betas, &[]).unwrap();
+    assert_eq!(ledger.rate_limited_frames, 0,
+               "honest sender at exactly the budget must not be shed");
+    assert_eq!(got, want);
+
+    let mut starved = coordinator(p, 46);
+    starved.rate_limit = 1;
+    assert!(starved.run_round(0, &ys, &betas, &[]).is_err(),
+            "budget 1 sheds every unmask response: clean failure");
+}
+
+/// Rate limiting composes with recovery: with the budget sized for
+/// honest retry-free traffic (2 frames) AND a two-faced equivocator
+/// forcing a re-solicitation wave, the replenished budget lets every
+/// honest retry response through — the round completes bit-exactly,
+/// nothing honest is shed, and the exclusion is still accounted.
+#[test]
+fn recovery_completes_under_honest_sized_rate_limit() {
+    let p = params(10, 250, 0.3, 0.0);
+    let ys = grads(p.n, p.d, 0x2a7e);
+    let betas = vec![1.0 / p.n as f64; p.n];
+
+    let mut reference = coordinator(p, 47);
+    let (want, _) = reference.run_round(0, &ys, &betas, &[0, 1]).unwrap();
+
+    let mut attacked = coordinator(p, 47);
+    attacked.rate_limit = 2; // honest upload + one response
+    // Garbage-only catalog: the injector spends its *own* budget
+    // (replay/spoof entries would bill the replayed frame to the honest
+    // victim's endpoint and eat its budget — a different scenario).
+    let mut adv =
+        Adversary::with_catalog(0.2, 0x2a7f, &[Attack::GarbagePayload]);
+    adv.two_faced = vec![(1, TwoFaced::PoisonValues)];
+    let (got, ledger) = attacked
+        .run_round_adversarial(0, &ys, &betas, &[], &mut adv)
+        .expect("tight honest budget must not starve recovery");
+    assert_eq!(got, want);
+    assert_eq!(ledger.excluded_users, vec![1]);
+    assert_eq!(ledger.retries, 1);
+    assert_eq!(ledger.rate_limited_frames, 0,
+               "honest retry responses must ride the replenished budget");
+}
+
+/// Recovery property under the minimal-failing-case shrinker: for any
+/// cohort inside the unique-decoding radius (n ≥ t+3, i.e. n ≥ 6), a
+/// single value-poisoning survivor is identified, excluded, and the
+/// round finishes bit-exact to the reference without it. On failure
+/// the shrinker reports the smallest (n, d) reproduction.
+#[derive(Clone, Copy, Debug)]
+struct RecoveryCase {
+    n: usize,
+    d: usize,
+    alpha: f64,
+    seed: u64,
+}
+
+fn shrink_recovery(c: &RecoveryCase) -> Vec<RecoveryCase> {
+    let mut out = Vec::new();
+    if c.n > 6 {
+        out.push(RecoveryCase { n: (c.n / 2).max(6), ..*c }); // halve cohort
+        out.push(RecoveryCase { n: c.n - 1, ..*c }); // drop one user
+    }
+    if c.d > 60 {
+        out.push(RecoveryCase { d: c.d / 2, ..*c });
+    }
+    out
+}
+
+fn check_recovery(c: &RecoveryCase) {
+    let p = params(c.n, c.d, c.alpha, 0.0);
+    let ys = grads(p.n, p.d, c.seed);
+    let beta = 1.0 / p.n as f64;
+
+    let (r_users, mut r_server) = sparse::setup(p, c.seed ^ 0xc0);
+    r_server.begin_round();
+    let mut scratch = vec![0u32; p.d];
+    for u in r_users.iter().skip(1) {
+        let plan = u.mask_plan(0, &p, &mut scratch);
+        r_server.receive_upload(
+            u.masked_upload(0, &ys[u.id], beta, &p, plan));
+    }
+    r_server.close_uploads();
+    let req = r_server.unmask_request();
+    for u in r_users.iter().skip(1) {
+        r_server.try_receive_response(u.respond_unmask(&req)).unwrap();
+    }
+    let responses = r_server.take_responses();
+    r_server.finish_round(0, &responses).unwrap();
+    let want = r_server.aggregate_field().to_vec();
+
+    let (users, mut server) = sparse::setup(p, c.seed ^ 0xc0);
+    server.begin_round();
+    for u in &users {
+        let plan = u.mask_plan(0, &p, &mut scratch);
+        server.receive_upload(
+            u.masked_upload(0, &ys[u.id], beta, &p, plan));
+    }
+    server.close_uploads();
+    let req = server.unmask_request();
+    for u in &users {
+        let mut resp = u.respond_unmask(&req);
+        if u.id == 0 {
+            for (_, s) in resp.seed_shares.iter_mut() {
+                s.y[2] = field::add(s.y[2], 7);
+            }
+        }
+        server.try_receive_response(resp).unwrap();
+    }
+    let (_, outcome) = server
+        .finish_round_with_recovery(0, 1, |req| {
+            users.iter().filter(|u| u.id != 0)
+                .map(|u| u.respond_unmask(req)).collect()
+        })
+        .unwrap_or_else(|e| panic!("{c:?}: must recover: {e}"));
+    assert_eq!(outcome.excluded, vec![0], "{c:?}");
+    assert_eq!(outcome.retries, 1, "{c:?}");
+    assert_eq!(server.aggregate_field(), &want[..], "{c:?}");
+}
+
+#[test]
+fn recovery_property_with_minimal_case_shrinking() {
+    prop_shrink(
+        10,
+        |rng| RecoveryCase {
+            n: 6 + (rng.next_u32() as usize % 8),
+            d: 100 + (rng.next_u32() as usize % 300),
+            alpha: 0.25 + 0.4 * rng.next_f32() as f64,
+            seed: rng.next_u64(),
+        },
+        shrink_recovery,
+        check_recovery,
+    );
+}
+
+/// `run_fl` soak under the `byzantine` config knob (requires `make
+/// artifacts`; self-skips otherwise): ≥ 20 rounds, the last byzantine
+/// id two-faced every round, recovery on — zero aborted rounds and a
+/// bit-deterministic history under the seed. The quorum-starvation
+/// side of the knob is covered hermetically above.
+#[test]
+fn run_fl_soak_under_byzantine_knob() {
+    let t = match Trainer::load("artifacts", "mlp", false) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            return;
+        }
+    };
+    let cfg = FlConfig {
+        model: "mlp".into(),
+        users: 12,
+        rounds: 20,
+        samples_per_user: 40,
+        test_samples: 100,
+        alpha: 0.3,
+        theta: 0.0,
+        lr: 0.05,
+        byzantine: 0.2,
+        eval_every: 5,
+        ..FlConfig::default()
+    };
+    let a = run_fl(&cfg, &t).expect("no round may be lost to recovery");
+    assert_eq!(a.history.len(), 20);
+    let b = run_fl(&cfg, &t).unwrap();
+    for (x, y) in a.history.iter().zip(&b.history) {
+        assert_eq!(x.mean_local_loss.to_bits(), y.mean_local_loss.to_bits(),
+                   "round {}: byzantine training not deterministic",
+                   x.round);
+        assert_eq!(x.max_up_bytes, y.max_up_bytes);
+    }
+}
