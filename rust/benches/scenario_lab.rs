@@ -1,0 +1,452 @@
+//! Scenario lab: the degradation matrix over the seeded
+//! network-impairment simulator ([`sparsesecagg::netsim`]).
+//!
+//! Sweeps cohort size × dropout rate θ × byzantine fraction ×
+//! straggler distribution × sparsity α, running every cell's rounds
+//! over impaired links (latency + jitter + bandwidth caps, straggler
+//! tails past the phase deadlines) and checking each completed round
+//! **bit-exactly** against a raw-bus reference round whose dropout set
+//! is the impairment's equivalent (drawn dropouts ∪ silenced byzantines
+//! ∪ excluded equivocators ∪ deadline-missed stragglers). Per-phase
+//! byte/time breakdowns go to `BENCH_scenarios.json` at the repository
+//! root for trend tracking.
+//!
+//! With `BENCH_SMOKE=1` the binary runs a 4-cell always-recoverable
+//! matrix at 1 round each, equality-only, writing no JSON — the CI
+//! gate. Cells whose random draws land below quorum or below the
+//! equivocator-identification radius are *legitimate* protocol
+//! failures (clean typed errors); the full matrix counts them as data
+//! (`failed`), the smoke matrix is chosen so none can occur.
+
+use sparsesecagg::adversary::{Adversary, TwoFaced};
+use sparsesecagg::coordinator::{Coordinator, PhaseDeadlines};
+use sparsesecagg::metrics::Table;
+use sparsesecagg::netsim::{LinkProfile, NetSim, NetSimConfig};
+use sparsesecagg::network::draw_dropouts;
+use sparsesecagg::prg::ChaCha20Rng;
+use sparsesecagg::protocol::Params;
+use std::time::Instant;
+
+/// Baseline WAN for every cell: 100 Mbit/s, 2 ms ± 1 ms.
+fn base_link() -> LinkProfile {
+    LinkProfile::paper_wan()
+}
+
+/// Straggler uplink: latency past the Collecting deadline but inside
+/// the first unmask wave's window, so late uploads get *delivered and
+/// rejected* (phase-confused) rather than silently withheld.
+const STRAGGLER_LATENCY_S: f64 = 0.08;
+/// Collecting window (stragglers at 80 ms miss this 30 ms budget).
+const COLLECT_DEADLINE_S: f64 = 0.03;
+/// Unmask-wave window (30 ms + 60 ms = 90 ms > 80 ms: stragglers'
+/// uploads surface in wave 1 and are billed as rejects).
+const WAVE_DEADLINE_S: f64 = 0.06;
+
+#[derive(Clone, Copy)]
+struct CellSpec {
+    secagg: bool,
+    n: usize,
+    alpha: f64,
+    theta: f64,
+    /// Byzantine cohort size; ≥ 2 adds a two-faced (geometry-poisoning)
+    /// survivor, so recovery excludes it every round it uploads.
+    byz: usize,
+    /// Give the last n/4 endpoints the straggler uplink.
+    straggler: bool,
+}
+
+impl CellSpec {
+    fn label(&self) -> String {
+        format!(
+            "{} n={} a={} th={} byz={} strag={}",
+            if self.secagg { "secagg" } else { "sparse" },
+            self.n, self.alpha, self.theta, self.byz,
+            if self.straggler { "y" } else { "n" },
+        )
+    }
+
+    fn straggler_ids(&self) -> Vec<usize> {
+        if self.straggler {
+            (self.n - self.n / 4..self.n).collect()
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+/// Accumulated per-phase traffic across a cell's completed rounds.
+struct PhaseAcc {
+    name: &'static str,
+    up_bytes: usize,
+    down_bytes: usize,
+    comm_s: f64,
+}
+
+struct CellResult {
+    spec: CellSpec,
+    rounds: usize,
+    completed: usize,
+    failed: usize,
+    /// Rounds that needed ≥ 1 recovery retry.
+    recovered: usize,
+    rejected_frames: usize,
+    netsim_clock_s: f64,
+    wall_ms: f64,
+    phases: Vec<PhaseAcc>,
+}
+
+fn grads(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = ChaCha20Rng::from_seed_u64(seed);
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.next_f32() - 0.5).collect())
+        .collect()
+}
+
+fn run_cell(spec: &CellSpec, rounds: usize, d: usize, smoke: bool)
+            -> CellResult {
+    let p = Params {
+        n: spec.n,
+        d,
+        alpha: if spec.secagg { 1.0 } else { spec.alpha },
+        theta: spec.theta,
+        c: 1024.0,
+    };
+    let entropy = 0x5ce0_0000
+        ^ (spec.n as u64) << 20
+        ^ (spec.byz as u64) << 16
+        ^ ((spec.alpha * 100.0) as u64) << 8
+        ^ ((spec.theta * 100.0) as u64)
+        ^ if spec.straggler { 1 << 30 } else { 0 }
+        ^ if spec.secagg { 1 << 31 } else { 0 };
+
+    // Impaired cohort: baseline WAN everywhere, straggler tails on the
+    // designated endpoints, phase deadlines turning "late" into the
+    // dropout path.
+    let mut ncfg = NetSimConfig::uniform(entropy ^ 0x11, base_link());
+    for id in spec.straggler_ids() {
+        ncfg.overrides.push((
+            id,
+            LinkProfile {
+                latency_s: STRAGGLER_LATENCY_S,
+                ..base_link()
+            },
+        ));
+    }
+    let bus = Box::new(NetSim::over_bus(p.n, ncfg));
+    let mut coord = if spec.secagg {
+        Coordinator::new_secagg_on(p, entropy, bus)
+    } else {
+        Coordinator::new_sparse_on(p, entropy, bus)
+    };
+    if spec.straggler {
+        coord.deadlines = Some(PhaseDeadlines {
+            collecting_s: COLLECT_DEADLINE_S,
+            unmasking_s: WAVE_DEADLINE_S,
+        });
+    }
+    // Reference cohort: same entropy (state-identical users/shares) on
+    // the raw lossless bus.
+    let mut reference = if spec.secagg {
+        Coordinator::new_secagg(p, entropy)
+    } else {
+        Coordinator::new_sparse(p, entropy)
+    };
+    let mut adv = (spec.byz > 0).then(|| {
+        let mut a = Adversary::new(spec.byz as f64 / spec.n as f64,
+                                   entropy ^ 0xbad);
+        if spec.byz >= 2 {
+            // Geometry poisoning is attributable at ingest — exclusion
+            // never depends on response-set redundancy, so byzantine
+            // cells only fail when quorum itself is lost.
+            a.two_faced =
+                vec![(spec.byz - 1, TwoFaced::PoisonGeometry)];
+        }
+        a
+    });
+    let silenced: Vec<usize> = match &adv {
+        Some(a) => a
+            .silenced_set(spec.n)
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &s)| s.then_some(i))
+            .collect(),
+        None => Vec::new(),
+    };
+
+    let ys = grads(p.n, p.d, entropy ^ 0x22);
+    let betas = vec![1.0 / p.n as f64; p.n];
+    let stragglers = spec.straggler_ids();
+
+    let mut res = CellResult {
+        spec: *spec,
+        rounds,
+        completed: 0,
+        failed: 0,
+        recovered: 0,
+        rejected_frames: 0,
+        netsim_clock_s: 0.0,
+        wall_ms: 0.0,
+        phases: Vec::new(),
+    };
+    let t0 = Instant::now();
+    for round in 0..rounds as u32 {
+        let dropped =
+            draw_dropouts(p.n, p.theta, round, entropy ^ 0x33, true);
+        let out = match adv.as_mut() {
+            Some(a) => {
+                coord.run_round_adversarial(round, &ys, &betas, &dropped, a)
+            }
+            None => coord.run_round(round, &ys, &betas, &dropped),
+        };
+        let (agg, ledger) = match out {
+            Ok(v) => v,
+            Err(e) => {
+                assert!(
+                    !smoke,
+                    "smoke cell [{}] round {round} must complete: {e}",
+                    spec.label()
+                );
+                res.failed += 1;
+                continue;
+            }
+        };
+        // The degradation contract: a completed impaired round equals
+        // the raw-bus round whose dropout set is the impairment's
+        // equivalent.
+        let mut ref_dropped = dropped.clone();
+        for &u in silenced.iter().chain(&ledger.excluded_users)
+            .chain(&stragglers)
+        {
+            if !ref_dropped.contains(&u) {
+                ref_dropped.push(u);
+            }
+        }
+        ref_dropped.sort_unstable();
+        let (want, _) = reference
+            .run_round(round, &ys, &betas, &ref_dropped)
+            .expect("reference round with >= quorum uploaders");
+        assert_eq!(
+            agg,
+            want,
+            "cell [{}] round {round}: impaired != dropout-equivalent",
+            spec.label()
+        );
+        res.completed += 1;
+        res.rejected_frames += ledger.rejected_frames;
+        if ledger.retries > 0 {
+            res.recovered += 1;
+        }
+        for ph in &ledger.phases {
+            match res.phases.iter_mut().find(|a| a.name == ph.name) {
+                Some(a) => {
+                    a.up_bytes += ph.up_bytes;
+                    a.down_bytes += ph.down_bytes;
+                    a.comm_s += ph.comm_time_s;
+                }
+                None => res.phases.push(PhaseAcc {
+                    name: ph.name,
+                    up_bytes: ph.up_bytes,
+                    down_bytes: ph.down_bytes,
+                    comm_s: ph.comm_time_s,
+                }),
+            }
+        }
+    }
+    res.netsim_clock_s = coord.bus_clock_s();
+    res.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    res
+}
+
+/// The CI smoke matrix: 4 cells chosen so every round is recoverable by
+/// construction (θ = 0 wherever stragglers/byzantines eat into the
+/// margin), 1 round each, equality-only.
+fn smoke_matrix() -> Vec<CellSpec> {
+    vec![
+        CellSpec { secagg: false, n: 12, alpha: 0.1, theta: 0.0,
+                   byz: 0, straggler: false },
+        CellSpec { secagg: false, n: 12, alpha: 0.4, theta: 0.0,
+                   byz: 0, straggler: true },
+        CellSpec { secagg: false, n: 12, alpha: 0.1, theta: 0.0,
+                   byz: 2, straggler: false },
+        CellSpec { secagg: true, n: 12, alpha: 1.0, theta: 0.2,
+                   byz: 0, straggler: false },
+    ]
+}
+
+fn full_matrix() -> Vec<CellSpec> {
+    let mut cells = Vec::new();
+    for &n in &[12usize, 24] {
+        for &theta in &[0.0, 0.3] {
+            for &byz in &[0usize, 2] {
+                for &straggler in &[false, true] {
+                    for &alpha in &[0.1, 0.4] {
+                        cells.push(CellSpec {
+                            secagg: false, n, alpha, theta, byz,
+                            straggler,
+                        });
+                    }
+                }
+            }
+        }
+        cells.push(CellSpec {
+            secagg: true, n, alpha: 1.0, theta: 0.2, byz: 0,
+            straggler: false,
+        });
+    }
+    cells
+}
+
+fn write_scenarios_json(cells: &[CellResult]) -> std::io::Result<()> {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    s.push_str("{\n  \"bench\": \"scenario_lab/degradation-matrix\",\n");
+    // Simulated constants carry `_s`/`_bps` suffixes; only measured
+    // host time uses `_ms`, which is what the zero-clobber guard keys
+    // on.
+    let _ = writeln!(
+        s,
+        "  \"link\": {{\"latency_s\": {}, \"jitter_s\": {}, \
+         \"bandwidth_bps\": {}, \"straggler_latency_s\": {}, \
+         \"collect_deadline_s\": {}, \"wave_deadline_s\": {}}},",
+        base_link().latency_s, base_link().jitter_s,
+        base_link().bandwidth_bps, STRAGGLER_LATENCY_S,
+        COLLECT_DEADLINE_S, WAVE_DEADLINE_S,
+    );
+    s.push_str("  \"cells\": [\n");
+    for (i, c) in cells.iter().enumerate() {
+        let _ = writeln!(
+            s,
+            "    {{\"protocol\": \"{}\", \"n\": {}, \"alpha\": {}, \
+             \"theta\": {}, \"byzantine\": {}, \"straggler\": {}, \
+             \"rounds\": {}, \"completed\": {}, \"failed\": {}, \
+             \"recovered\": {}, \"rejected_frames\": {}, \
+             \"netsim_clock_s\": {:.6}, \"wall_ms\": {:.3},",
+            if c.spec.secagg { "secagg" } else { "sparse" },
+            c.spec.n, c.spec.alpha, c.spec.theta, c.spec.byz,
+            c.spec.straggler, c.rounds, c.completed, c.failed,
+            c.recovered, c.rejected_frames, c.netsim_clock_s, c.wall_ms,
+        );
+        s.push_str("     \"phases\": [");
+        for (j, ph) in c.phases.iter().enumerate() {
+            let _ = write!(
+                s,
+                "{{\"phase\": \"{}\", \"up_bytes\": {}, \
+                 \"down_bytes\": {}, \"comm_s\": {:.6}}}{}",
+                ph.name, ph.up_bytes, ph.down_bytes, ph.comm_s,
+                if j + 1 == c.phases.len() { "" } else { ", " },
+            );
+        }
+        let _ = writeln!(s, "]}}{}",
+                         if i + 1 == cells.len() { "" } else { "," });
+    }
+    s.push_str("  ]\n}\n");
+    // `cargo bench` runs from the package root (rust/); the trajectory
+    // file lives at the repository root next to ROADMAP.md.
+    let path = if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_scenarios.json"
+    } else {
+        "BENCH_scenarios.json"
+    };
+    // Trajectory guard (mirrors bench_micro's write_bench_json): never
+    // clobber real measurements with schema-only zeros.
+    let new_all_zero = cells.iter().all(|c| c.wall_ms == 0.0);
+    if new_all_zero {
+        if let Ok(existing) = std::fs::read_to_string(path) {
+            if json_has_nonzero_ms(&existing) {
+                println!(
+                    "refusing to overwrite {path}: it holds non-zero \
+                     measurements and the new results are schema-only \
+                     zeros"
+                );
+                return Ok(());
+            }
+        }
+    }
+    std::fs::write(path, s)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// Does the existing trajectory JSON carry any strictly positive
+/// `*_ms` measurement? (Mirror of bench_micro's scan — no serde in the
+/// vendored crate set; the file is machine-written by this bench, so
+/// the `"key": value` shape is stable.)
+fn json_has_nonzero_ms(text: &str) -> bool {
+    let mut rest = text;
+    while let Some(k) = rest.find("_ms\":") {
+        let tail = &rest[k + 5..];
+        let num: String = tail
+            .chars()
+            .skip_while(|c| c.is_whitespace())
+            .take_while(|c| c.is_ascii_digit() || *c == '.' || *c == '-')
+            .collect();
+        if num.parse::<f64>().map(|v| v > 0.0).unwrap_or(false) {
+            return true;
+        }
+        rest = tail;
+    }
+    false
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let (cells, rounds, d) = if smoke {
+        (smoke_matrix(), 1usize, 1 << 10)
+    } else {
+        (full_matrix(), 3usize, 1 << 12)
+    };
+    println!(
+        "# scenario lab: {} cells x {rounds} round(s), d={d}{}",
+        cells.len(),
+        if smoke { " [smoke]" } else { "" },
+    );
+
+    let mut results = Vec::new();
+    let mut t = Table::new(
+        "degradation matrix (impaired == dropout-equivalent, bit-exact)",
+        &["cell", "done", "fail", "recov", "rejects", "sim_clock_s",
+          "wall_ms"],
+    );
+    for spec in &cells {
+        let r = run_cell(spec, rounds, d, smoke);
+        t.row(&[
+            r.spec.label(),
+            format!("{}/{}", r.completed, r.rounds),
+            r.failed.to_string(),
+            r.recovered.to_string(),
+            r.rejected_frames.to_string(),
+            format!("{:.4}", r.netsim_clock_s),
+            format!("{:.1}", r.wall_ms),
+        ]);
+        results.push(r);
+    }
+    println!("{}", t.render());
+
+    if smoke {
+        // The gate: every smoke round completed bit-exactly (asserted
+        // in-cell), and each cell exercised its intended path.
+        assert!(results.iter().all(|r| r.failed == 0
+                                   && r.completed == r.rounds));
+        assert!(results[0].netsim_clock_s > 0.0,
+                "baseline cell must advance the virtual clock");
+        assert_eq!(results[0].rejected_frames, 0);
+        let strag = results[1].spec.straggler_ids().len();
+        assert!(results[1].rejected_frames >= strag,
+                "straggler uploads must be billed as rejects \
+                 ({} < {strag})", results[1].rejected_frames);
+        assert_eq!(results[2].recovered, results[2].rounds,
+                   "byzantine cell must recover every round");
+        assert!(results.iter().all(|r| !r.phases.is_empty()));
+        println!("SMOKE PASS: {} cells, per-phase breakdowns present, \
+                  equality checked every round", results.len());
+        return;
+    }
+
+    let failed: usize = results.iter().map(|r| r.failed).sum();
+    let total: usize = results.iter().map(|r| r.rounds).sum();
+    println!("# {failed}/{total} rounds failed cleanly (harsh draws \
+              below quorum/identification radius — counted as data)");
+    if let Err(e) = write_scenarios_json(&results) {
+        eprintln!("could not write BENCH_scenarios.json: {e}");
+    }
+}

@@ -78,7 +78,9 @@ impl Config {
             "test_samples", "target_accuracy", "eval_every",
             "use_hlo_quantmask", "participation", "dp_epsilon", "dp_clip",
             "seed", "artifacts_dir", "shard_size", "threads", "executor",
-            "byzantine", "max_retries", "rate_limit",
+            "byzantine", "max_retries", "rate_limit", "net_latency_s",
+            "net_jitter_s", "net_loss", "net_bandwidth_bps",
+            "phase_deadline_s",
         ];
         for k in self.values.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -141,6 +143,20 @@ impl Config {
             },
             max_retries: self.parse("max_retries", d.max_retries)?,
             rate_limit: self.parse("rate_limit", d.rate_limit)?,
+            net_latency_s: self.parse("net_latency_s", d.net_latency_s)?,
+            net_jitter_s: self.parse("net_jitter_s", d.net_jitter_s)?,
+            net_loss: {
+                let l: f64 = self.parse("net_loss", d.net_loss)?;
+                if !(0.0..1.0).contains(&l) {
+                    bail!("config key net_loss={l}: want probability in \
+                           [0, 1) (losing every frame cannot aggregate)");
+                }
+                l
+            },
+            net_bandwidth_bps: self.parse("net_bandwidth_bps",
+                                          d.net_bandwidth_bps)?,
+            phase_deadline_s: self.parse("phase_deadline_s",
+                                         d.phase_deadline_s)?,
         })
     }
 }
@@ -217,6 +233,32 @@ mod tests {
         assert_eq!(fl.rate_limit, 8);
         let mut c = Config::default();
         c.set("max_retries", "lots");
+        assert!(c.to_fl_config().is_err());
+    }
+
+    #[test]
+    fn netsim_knobs_parse_with_defaults_and_bounds() {
+        let fl = Config::default().to_fl_config().unwrap();
+        assert_eq!(fl.net_latency_s, 0.0);
+        assert_eq!(fl.net_loss, 0.0);
+        assert_eq!(fl.phase_deadline_s, 0.0);
+        let mut c = Config::default();
+        c.set("net_latency_s", "0.002");
+        c.set("net_jitter_s", "0.001");
+        c.set("net_loss", "0.05");
+        c.set("net_bandwidth_bps", "100e6");
+        c.set("phase_deadline_s", "0.25");
+        let fl = c.to_fl_config().unwrap();
+        assert!((fl.net_latency_s - 0.002).abs() < 1e-12);
+        assert!((fl.net_jitter_s - 0.001).abs() < 1e-12);
+        assert!((fl.net_loss - 0.05).abs() < 1e-12);
+        assert!((fl.net_bandwidth_bps - 100e6).abs() < 1.0);
+        assert!((fl.phase_deadline_s - 0.25).abs() < 1e-12);
+        let mut c = Config::default();
+        c.set("net_loss", "1.0"); // total loss: rejected
+        assert!(c.to_fl_config().is_err());
+        let mut c = Config::default();
+        c.set("net_loss", "-0.1");
         assert!(c.to_fl_config().is_err());
     }
 

@@ -60,6 +60,31 @@ use std::time::Instant;
 /// Default cap on exclude-and-re-solicit passes per round.
 pub const DEFAULT_MAX_RETRIES: usize = 3;
 
+/// Per-phase deadline budgets for the frame driver, in simulated
+/// seconds of the transport's clock ([`Transport::open_phase`]). With
+/// deadlines set, a frame that cannot arrive inside its phase's budget
+/// is withheld by the transport until a later phase opens, where the
+/// ingest state machine rejects it as phase-confused — so a straggler
+/// degrades into the existing dropout/recovery path instead of the
+/// round waiting on quorum forever. Meaningful only on a
+/// delay-simulating transport ([`crate::netsim`]): the in-memory bus
+/// delivers everything instantly, making every deadline trivially met.
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseDeadlines {
+    /// MaskedInput collection window.
+    pub collecting_s: f64,
+    /// Each unmask solicitation wave — the first wave and every
+    /// recovery re-solicitation get a fresh window of this budget.
+    pub unmasking_s: f64,
+}
+
+impl PhaseDeadlines {
+    /// The same budget for every phase.
+    pub fn uniform(budget_s: f64) -> Self {
+        PhaseDeadlines { collecting_s: budget_s, unmasking_s: budget_s }
+    }
+}
+
 /// Which protocol a cohort runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ProtocolKind {
@@ -101,6 +126,10 @@ pub struct Coordinator {
     /// recovery re-solicitation waves replenish the budget, so the
     /// limiter can never starve a recoverable round.
     pub rate_limit: usize,
+    /// Per-phase deadline budgets for the frame driver; `None` (the
+    /// default) waits for all traffic, exactly the pre-deadline
+    /// behavior. See [`PhaseDeadlines`].
+    pub deadlines: Option<PhaseDeadlines>,
     /// Lazily-built persistent worker pool, reused across rounds.
     exec: Option<Executor>,
     /// The byte bus every protocol frame travels on (setup and rounds).
@@ -173,17 +202,25 @@ macro_rules! finish_round_checked_dispatch {
 /// and each exclusion re-solicits the reduced survivor set, up to
 /// `max_retries` passes. Masked inputs are never re-uploaded; only the
 /// response set shrinks. Evaluates to the dequantized aggregate;
-/// pushes each solicitation wave's frame sizes onto `$resp_waves`
-/// (each wave is a sequential comm phase for the simulated clock).
+/// pushes each solicitation wave's `(request download bytes, response
+/// frame sizes)` onto `$resp_waves` (each wave is a sequential comm
+/// phase for the simulated clock). Each wave opens a fresh transport
+/// phase with `$wave_budget` simulated seconds of deadline — frames
+/// that missed the previous phase surface here and are rejected by the
+/// ingest state machine as phase-confused.
 macro_rules! run_unmask_with_recovery {
     ($server:expr, $users:expr, $bus:expr, $ledger:expr, $adv:expr,
      $limiter:expr, $capture:expr, $params:expr, $kind:expr, $n:expr,
      $shard_cfg:expr, $mode:expr, $exec:expr, $round:expr,
-     $max_retries:expr, $resp_waves:expr) => {{
+     $max_retries:expr, $wave_budget:expr, $resp_waves:expr) => {{
         $server.close_uploads();
         let mut retries = 0usize;
         let mut first_wave = true;
         loop {
+            // --- open this wave's delivery window (releases any frames
+            // that missed the previous phase's deadline into a phase
+            // where ingest will reject them).
+            $bus.open_phase($wave_budget);
             // --- solicit one wave from the current survivor set.
             let req = $server.unmask_request();
             let req_buf = wire::encode_unmask_request(&req);
@@ -192,9 +229,11 @@ macro_rules! run_unmask_with_recovery {
                 $bus.to_client(j, req_buf.clone());
             }
             let mut honest_resp: Vec<(usize, Vec<u8>)> = Vec::new();
+            let mut wave_down = 0usize;
             for u in $users.iter() {
                 while let Some(fbuf) = $bus.client_recv(u.id) {
                     $ledger.record_download(u.id, fbuf.len());
+                    wave_down += fbuf.len();
                     let req = wire::decode_unmask_request(&fbuf)?;
                     let mut resp = u.respond_unmask(&req);
                     if let Some(a) = $adv.as_deref_mut() {
@@ -235,7 +274,7 @@ macro_rules! run_unmask_with_recovery {
                     $ledger.record_reject(&e);
                 }
             }
-            $resp_waves.push(wave_sizes);
+            $resp_waves.push((wave_down, wave_sizes));
             let responses = $server.take_responses();
             // --- recovery decision.
             let flagged = $server.take_flagged_equivocators();
@@ -376,6 +415,7 @@ impl Coordinator {
             exec_mode: ExecMode::Stealing,
             max_retries: DEFAULT_MAX_RETRIES,
             rate_limit: 0,
+            deadlines: None,
             exec: None,
             bus,
         }
@@ -457,6 +497,7 @@ impl Coordinator {
             exec_mode: ExecMode::Stealing,
             max_retries: DEFAULT_MAX_RETRIES,
             rate_limit: 0,
+            deadlines: None,
             exec: None,
             bus,
         }
@@ -542,6 +583,13 @@ impl Coordinator {
         let shard_cfg = (mode != ExecMode::Monolithic)
             .then(|| ShardConfig::new(self.shard_size, threads));
         let max_retries = self.max_retries;
+        // Per-phase deadline budgets for the transport's delivery
+        // windows; no deadline = infinite budget (every frame arrives
+        // "on time", the pre-deadline behavior).
+        let (collect_budget, wave_budget) = match self.deadlines {
+            Some(dl) => (dl.collecting_s, dl.unmasking_s),
+            None => (f64::INFINITY, f64::INFINITY),
+        };
         // Per-round budgets; the limiter guards every server drain of
         // this round (uploads and all response waves).
         let mut limiter = (self.rate_limit > 0)
@@ -559,6 +607,12 @@ impl Coordinator {
         let Coordinator { cohort, exec, bus, .. } = &mut *self;
         let exec = exec.as_ref().expect("executor initialized");
         let bus: &mut dyn Transport = bus.as_mut();
+        // Round boundary first (a delaying transport expires any frames
+        // still in flight from the previous round — the wire format has
+        // no round id, so they must never surface here), then the
+        // Collecting delivery window.
+        bus.begin_round();
+        bus.open_phase(collect_budget);
 
         let (agg, upload_bytes, resp_waves) = match cohort {
             Cohort::Sparse { users, server } => {
@@ -609,11 +663,11 @@ impl Coordinator {
                     }
                 }
                 // --- Unmask with equivocator-exclusion recovery.
-                let mut resp_waves: Vec<Vec<usize>> = Vec::new();
+                let mut resp_waves: Vec<(usize, Vec<usize>)> = Vec::new();
                 let agg = run_unmask_with_recovery!(
                     server, users, bus, ledger, adv, limiter, capture,
                     params, kind, n, shard_cfg, mode, exec, round,
-                    max_retries, resp_waves);
+                    max_retries, wave_budget, resp_waves);
                 ledger.server_compute_s += ts.elapsed().as_secs_f64();
                 (agg, upload_bytes, resp_waves)
             }
@@ -654,26 +708,33 @@ impl Coordinator {
                         ledger.record_reject(&e);
                     }
                 }
-                let mut resp_waves: Vec<Vec<usize>> = Vec::new();
+                let mut resp_waves: Vec<(usize, Vec<usize>)> = Vec::new();
                 let agg = run_unmask_with_recovery!(
                     server, users, bus, ledger, adv, limiter, capture,
                     params, kind, n, shard_cfg, mode, exec, round,
-                    max_retries, resp_waves);
+                    max_retries, wave_budget, resp_waves);
                 ledger.server_compute_s += ts.elapsed().as_secs_f64();
                 (agg, upload_bytes, resp_waves)
             }
         };
 
-        // --- wire accounting: MaskedInput uploads in parallel…
+        // --- wire accounting, decomposed into named phases (the clock
+        // math is identical to the anonymous advance_parallel_phase
+        // folds it replaced — pinned by the frame≡struct differential).
+        // MaskedInput uploads in parallel…
         for (u, &b) in upload_bytes.iter().enumerate() {
             ledger.record_upload(u, b);
         }
-        ledger.advance_parallel_phase(&self.link, &upload_bytes);
+        let up_total: usize = upload_bytes.iter().sum();
+        ledger.advance_named_phase("collecting", &self.link,
+                                   &upload_bytes, up_total, 0);
         // …each unmask solicitation wave in parallel within itself,
         // sequentially across retries (recovery costs simulated time,
         // billed honestly)…
-        for wave in &resp_waves {
-            ledger.advance_parallel_phase(&self.link, wave);
+        for (k, (down, wave)) in resp_waves.iter().enumerate() {
+            let name = if k == 0 { "unmasking" } else { "recovery_wave" };
+            ledger.advance_named_phase(name, &self.link, wave,
+                                       wave.iter().sum(), *down);
         }
         // …then the global-model broadcast to survivors.
         let bcast = ModelBroadcast { d: params.d }.wire_bytes();
@@ -684,9 +745,18 @@ impl Coordinator {
                 bcast_sizes.push(bcast);
             }
         }
-        ledger.advance_parallel_phase(&self.link, &bcast_sizes);
+        let down_total: usize = bcast_sizes.iter().sum();
+        ledger.advance_named_phase("broadcast", &self.link, &bcast_sizes,
+                                   0, down_total);
 
         Ok((agg, ledger))
+    }
+
+    /// Simulated seconds the round transport has spent delivering
+    /// frames: 0.0 on the in-memory bus, the virtual clock on a
+    /// [`crate::netsim`] transport (the scenario lab's per-cell clock).
+    pub fn bus_clock_s(&self) -> f64 {
+        self.bus.clock_s()
     }
 
     /// The pre-refactor struct-passing round driver, kept verbatim as
@@ -1213,6 +1283,44 @@ mod tests {
             assert!((lf.comm_time_s - ls.comm_time_s).abs() < 1e-12,
                     "clock drift: {} vs {}", lf.comm_time_s,
                     ls.comm_time_s);
+        }
+    }
+
+    /// The per-phase breakdown must decompose the round totals exactly:
+    /// named phases in protocol order, byte sums and clock sum equal to
+    /// the round-level counters (honest round, no forged traffic).
+    #[test]
+    fn per_phase_breakdown_sums_to_round_totals() {
+        for secagg in [false, true] {
+            let p = if secagg {
+                params(8, 600, 1.0, 0.2)
+            } else {
+                params(8, 600, 0.35, 0.2)
+            };
+            let ys = grads(p.n, p.d, 31);
+            let betas = vec![1.0 / p.n as f64; p.n];
+            let mut coord = if secagg {
+                Coordinator::new_secagg(p, 41)
+            } else {
+                Coordinator::new_sparse(p, 41)
+            };
+            let (_, ledger) =
+                coord.run_round(1, &ys, &betas, &[2]).unwrap();
+            let names: Vec<&str> =
+                ledger.phases.iter().map(|p| p.name).collect();
+            assert_eq!(names, ["collecting", "unmasking", "broadcast"]);
+            assert_eq!(
+                ledger.phases.iter().map(|p| p.up_bytes).sum::<usize>(),
+                ledger.total_up()
+            );
+            assert_eq!(
+                ledger.phases.iter().map(|p| p.down_bytes).sum::<usize>(),
+                ledger.total_down()
+            );
+            let clock: f64 =
+                ledger.phases.iter().map(|p| p.comm_time_s).sum();
+            assert!((clock - ledger.comm_time_s).abs() < 1e-12);
+            assert!(ledger.phases.iter().all(|p| p.comm_time_s > 0.0));
         }
     }
 

@@ -87,6 +87,23 @@ pub struct FlConfig {
     /// An honest sender needs 2 frames per retry-free round; recovery
     /// re-solicitation waves replenish the budget.
     pub rate_limit: usize,
+    /// Simulated per-frame link latency, seconds
+    /// ([`crate::netsim::LinkProfile::latency_s`]). Any nonzero
+    /// `net_*` knob routes round traffic through the seeded
+    /// network-impairment simulator instead of the raw in-memory bus.
+    pub net_latency_s: f64,
+    /// Simulated per-frame jitter amplitude, seconds (reorders frames
+    /// within a phase).
+    pub net_jitter_s: f64,
+    /// Simulated per-frame Bernoulli loss probability ∈ [0, 1).
+    pub net_loss: f64,
+    /// Simulated link bandwidth, bits/s; 0 = uncapped.
+    pub net_bandwidth_bps: f64,
+    /// Per-phase deadline budget in simulated seconds
+    /// ([`crate::coordinator::PhaseDeadlines`]); 0 = wait for all
+    /// traffic. Late frames degrade to the dropout path. Only
+    /// meaningful together with a nonzero `net_*` knob.
+    pub phase_deadline_s: f64,
 }
 
 impl Default for FlConfig {
@@ -119,6 +136,11 @@ impl Default for FlConfig {
             byzantine: 0.0,
             max_retries: crate::coordinator::DEFAULT_MAX_RETRIES,
             rate_limit: 0,
+            net_latency_s: 0.0,
+            net_jitter_s: 0.0,
+            net_loss: 0.0,
+            net_bandwidth_bps: 0.0,
+            phase_deadline_s: 0.0,
         }
     }
 }
@@ -176,14 +198,49 @@ pub fn run_fl(cfg: &FlConfig, trainer: &Trainer) -> Result<FlRun> {
         theta: cfg.theta,
         c: cfg.c,
     };
+    // Any nonzero impairment knob swaps the raw in-memory bus for the
+    // seeded network simulator; setup traffic stays transparent either
+    // way (netsim impairs round phases only).
+    let impaired = cfg.net_latency_s > 0.0
+        || cfg.net_jitter_s > 0.0
+        || cfg.net_loss > 0.0
+        || cfg.net_bandwidth_bps > 0.0;
+    let bus: Box<dyn crate::transport::Transport> = if impaired {
+        let link = crate::netsim::LinkProfile {
+            latency_s: cfg.net_latency_s,
+            jitter_s: cfg.net_jitter_s,
+            bandwidth_bps: if cfg.net_bandwidth_bps > 0.0 {
+                cfg.net_bandwidth_bps
+            } else {
+                f64::INFINITY
+            },
+            loss: cfg.net_loss,
+            die_after: None,
+        };
+        Box::new(crate::netsim::NetSim::over_bus(
+            n,
+            crate::netsim::NetSimConfig::uniform(cfg.seed ^ 0x7e75, link),
+        ))
+    } else {
+        Box::new(crate::transport::InMemoryBus::new(n))
+    };
     let mut coord = match cfg.protocol {
-        ProtocolKind::Sparse => Coordinator::new_sparse(params, cfg.seed),
-        ProtocolKind::SecAgg => Coordinator::new_secagg(params, cfg.seed),
+        ProtocolKind::Sparse => {
+            Coordinator::new_sparse_on(params, cfg.seed, bus)
+        }
+        ProtocolKind::SecAgg => {
+            Coordinator::new_secagg_on(params, cfg.seed, bus)
+        }
     };
     coord.shard_size = cfg.shard_size;
     coord.exec_mode = cfg.exec_mode;
     coord.max_retries = cfg.max_retries;
     coord.rate_limit = cfg.rate_limit;
+    if cfg.phase_deadline_s > 0.0 {
+        coord.deadlines = Some(crate::coordinator::PhaseDeadlines::uniform(
+            cfg.phase_deadline_s,
+        ));
+    }
     if cfg.threads > 0 {
         coord.threads = cfg.threads;
     }

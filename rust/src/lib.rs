@@ -30,6 +30,7 @@ pub mod field;
 pub mod fl;
 pub mod masking;
 pub mod metrics;
+pub mod netsim;
 pub mod network;
 pub mod prg;
 pub mod protocol;

@@ -14,6 +14,13 @@
 //!   sparsesecagg run --byzantine 0.2 --max_retries 3 --rate_limit 8
 //!                                      # equivocator exclusion + retry,
 //!                                      # flood shedding before decode
+//!   sparsesecagg run --net_latency_s 0.002 --net_jitter_s 0.001
+//!                                      # rounds over the seeded
+//!                                      # network-impairment simulator
+//!   sparsesecagg run --net_latency_s 0.002 --net_loss 0.02 \
+//!                    --phase_deadline_s 0.25
+//!                                      # lossy links + per-phase
+//!                                      # deadlines (late ⇒ dropout path)
 //!   sparsesecagg comm --users 100 --alpha 0.1 --executor windowed
 //!   sparsesecagg privacy --users 100 --gamma 0.333 --theta 0.3
 

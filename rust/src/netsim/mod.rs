@@ -1,0 +1,708 @@
+//! Seeded, deterministic network-impairment layer — the scenario lab's
+//! physical layer.
+//!
+//! [`NetSim`] wraps any inner [`Transport`] as a decorator: frames
+//! submitted by either side are stamped with a simulated arrival time
+//! drawn from per-link [`LinkProfile`]s (latency, jitter, bandwidth
+//! serialization, Bernoulli loss, mid-round connection death) and held
+//! in a virtual-clock event queue; they are released into the inner
+//! transport — in arrival order — only when the receiver polls and only
+//! if they made the current phase's deadline. Everything downstream
+//! (wire codec, validating ingest, round driver) is untouched: the
+//! simulator impairs *delivery*, never content.
+//!
+//! # Fidelity model
+//!
+//! What is simulated:
+//! - **Latency + jitter**: per-frame arrival = departure + transfer +
+//!   `latency_s` + U[0,1)·`jitter_s`. Jitter draws reorder frames
+//!   within a phase, which is how the reorder-tolerance suite generates
+//!   seeded permutations.
+//! - **Bandwidth serialization**: each endpoint's link transmits one
+//!   frame at a time at `bandwidth_bps`; back-to-back sends queue
+//!   behind each other (`transfer = 8·bytes / bandwidth`).
+//! - **Loss**: per-frame Bernoulli with probability `loss`, plus
+//!   `die_after` — the uplink dies after its k-th frame of the round
+//!   (models a client that uploads, then vanishes before unmasking: the
+//!   churn class that actually stresses Shamir recovery).
+//! - **Phase deadlines**: [`Transport::open_phase`] sets an absolute
+//!   deadline; frames arriving later are withheld until a later phase
+//!   opens, where the ingest state machine rejects them as
+//!   phase-confused (`WrongPhase`) — "late" degrades to the existing
+//!   dropout path instead of stalling quorum. A finite-deadline phase
+//!   always runs out its full budget (the server waits for its timer);
+//!   with no deadline the clock advances only as far as the last
+//!   delivered frame.
+//! - **Request→response chaining**: a client's uplink departure is
+//!   floored at the arrival time of the last downlink frame delivered
+//!   to it, so unmask responses cannot depart before the solicitation
+//!   arrived.
+//!
+//! What is deliberately NOT simulated: packet-level fragmentation and
+//! retransmission (frames are atomic — lost whole or delivered whole),
+//! cross-traffic, and cross-round delivery. The wire format carries no
+//! round id, so a stale frame surfacing one round later would be
+//! indistinguishable from fresh traffic; real deployments scope frames
+//! to a per-round connection, and the simulator models that teardown by
+//! expiring still-in-flight frames at [`Transport::begin_round`]
+//! (counted in [`NetSim::expired_frames`]).
+//!
+//! Byte accounting is measurement-at-receiver: a lost frame's bytes are
+//! never billed to the round ledger, because billing happens when the
+//! server drains the frame — the same place a real coordinator meters
+//! traffic. The flood-bandwidth accounting argument in
+//! [`crate::transport`] (shed traffic still crossed the wire) applies
+//! to *admitted-then-shed* frames, which netsim does deliver.
+//!
+//! # Determinism invariant
+//!
+//! Every delivery decision is a pure function of
+//! ([`NetSimConfig::seed`], submission sequence). Loss and jitter
+//! uniforms are drawn from one [`ChaCha20Rng`] stream in submission
+//! order — both draws happen for *every* frame even when the profile
+//! has zero jitter and zero loss, so changing a profile's values never
+//! shifts the stream for later frames. Ties in arrival time break by
+//! submission sequence number. Hence: same seed + same driver schedule
+//! ⇒ bit-identical delivery order, clock, and loss pattern, which is
+//! what lets the degradation suite shrink failing scenarios to minimal
+//! reproductions.
+//!
+//! # Setup transparency
+//!
+//! Until the first [`Transport::open_phase`] call, `NetSim` is a pure
+//! pass-through (zero clock, no impairment). The coordinator
+//! constructors run the framed roster/keys/shares setup before any
+//! phase opens, so impairments apply to *round* traffic only — setup
+//! resilience is a different protocol problem (persistent retry on a
+//! reliable channel) and simulating its loss would only abort
+//! construction.
+
+use crate::prg::ChaCha20Rng;
+use crate::transport::{InMemoryBus, Transport};
+use std::collections::BinaryHeap;
+
+/// One direction of one endpoint's link.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkProfile {
+    /// Fixed propagation delay per frame (seconds).
+    pub latency_s: f64,
+    /// Per-frame jitter amplitude: arrival gains U[0,1)·`jitter_s`.
+    pub jitter_s: f64,
+    /// Serialization rate in bits/s; `f64::INFINITY` = uncapped.
+    pub bandwidth_bps: f64,
+    /// Per-frame Bernoulli loss probability in [0,1].
+    pub loss: f64,
+    /// The connection dies after this many frames in a round: frame
+    /// k ≤ `die_after` passes (subject to `loss`), frame k+1 onward is
+    /// lost. Resets at each round boundary (the client reconnects).
+    pub die_after: Option<usize>,
+}
+
+impl LinkProfile {
+    /// Zero-impairment link: zero latency/jitter/loss, infinite
+    /// bandwidth. `NetSim` over this is frame-for-frame identical to
+    /// the raw inner transport (pinned by the differential suite).
+    pub fn ideal() -> Self {
+        LinkProfile {
+            latency_s: 0.0,
+            jitter_s: 0.0,
+            bandwidth_bps: f64::INFINITY,
+            loss: 0.0,
+            die_after: None,
+        }
+    }
+
+    /// The paper's evaluation link (100 Mbit/s, ~2 ms RTT/2) with a
+    /// mild 1 ms jitter tail — the scenario lab's baseline WAN.
+    pub fn paper_wan() -> Self {
+        LinkProfile {
+            latency_s: 2e-3,
+            jitter_s: 1e-3,
+            bandwidth_bps: 100e6,
+            loss: 0.0,
+            die_after: None,
+        }
+    }
+
+    fn transfer_s(&self, bytes: usize) -> f64 {
+        if self.bandwidth_bps.is_finite() {
+            bytes as f64 * 8.0 / self.bandwidth_bps
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A full scenario: RNG seed, default uplink profile, per-endpoint
+/// uplink overrides (stragglers, dead links), and the shared downlink
+/// profile.
+#[derive(Clone, Debug)]
+pub struct NetSimConfig {
+    /// Seed for the loss/jitter stream (determinism invariant root).
+    pub seed: u64,
+    /// Uplink profile for endpoints without an override. Forged
+    /// endpoints (`from ≥ n`) also get this profile.
+    pub default_up: LinkProfile,
+    /// Downlink (server → client) profile, shared by all clients: the
+    /// server's own egress is the bottleneck being modeled.
+    pub down: LinkProfile,
+    /// Per-endpoint uplink overrides `(endpoint id, profile)`.
+    pub overrides: Vec<(usize, LinkProfile)>,
+}
+
+impl NetSimConfig {
+    /// Zero-impairment scenario (differential-test configuration).
+    pub fn ideal(seed: u64) -> Self {
+        NetSimConfig {
+            seed,
+            default_up: LinkProfile::ideal(),
+            down: LinkProfile::ideal(),
+            overrides: Vec::new(),
+        }
+    }
+
+    /// Symmetric scenario: `link` on every uplink; the downlink gets
+    /// the same delay/bandwidth but no loss/death (client connection
+    /// failure is an uplink-expressed event — a client that cannot be
+    /// reached cannot respond, which its uplink already models).
+    pub fn uniform(seed: u64, link: LinkProfile) -> Self {
+        NetSimConfig {
+            seed,
+            default_up: link,
+            down: LinkProfile {
+                loss: 0.0,
+                die_after: None,
+                ..link
+            },
+            overrides: Vec::new(),
+        }
+    }
+
+    fn up(&self, from: usize) -> LinkProfile {
+        self.overrides
+            .iter()
+            .find(|(id, _)| *id == from)
+            .map(|(_, p)| *p)
+            .unwrap_or(self.default_up)
+    }
+}
+
+/// An in-flight frame. Ordering is (arrival time, submission seq),
+/// REVERSED so `BinaryHeap` pops the earliest event; equality is on
+/// `seq` alone (times are f64 and `seq` is unique, so this is a total
+/// order with no NaN hazard — times are always finite).
+struct Event {
+    time: f64,
+    seq: u64,
+    dest: usize,
+    frame: Vec<u8>,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The impairment decorator. See the module doc for the fidelity model
+/// and determinism invariant.
+pub struct NetSim {
+    inner: Box<dyn Transport>,
+    cfg: NetSimConfig,
+    rng: ChaCha20Rng,
+    n: usize,
+    /// False until the first `open_phase`: pure pass-through (setup
+    /// transparency).
+    opened: bool,
+    /// Virtual clock (seconds).
+    now: f64,
+    /// Departure floor for the current phase.
+    phase_start: f64,
+    /// Absolute deadline of the current phase (INFINITY = none).
+    deadline: f64,
+    seq: u64,
+    up_q: BinaryHeap<Event>,
+    down_q: BinaryHeap<Event>,
+    /// Per-uplink "link busy until" times; slot n is the shared
+    /// overflow slot for forged endpoints (mirrors `RateLimiter`).
+    up_free: Vec<f64>,
+    down_free: Vec<f64>,
+    /// Arrival time of the last downlink frame delivered to each
+    /// client — floors that client's next uplink departure
+    /// (request→response chaining).
+    client_rx: Vec<f64>,
+    /// Uplink frames submitted this round per endpoint (`die_after`).
+    sent_up: Vec<usize>,
+    lost: usize,
+    expired: usize,
+    delivered: usize,
+}
+
+impl NetSim {
+    /// Impair `inner`, which wires `n` client endpoints to one server.
+    pub fn new(inner: Box<dyn Transport>, n: usize, cfg: NetSimConfig) -> Self {
+        let rng = ChaCha20Rng::from_seed_u64(cfg.seed ^ 0x6e65_7473_696d);
+        NetSim {
+            inner,
+            cfg,
+            rng,
+            n,
+            opened: false,
+            now: 0.0,
+            phase_start: 0.0,
+            deadline: f64::INFINITY,
+            seq: 0,
+            up_q: BinaryHeap::new(),
+            down_q: BinaryHeap::new(),
+            up_free: vec![0.0; n + 1],
+            down_free: vec![0.0; n + 1],
+            client_rx: vec![0.0; n + 1],
+            sent_up: vec![0; n + 1],
+            lost: 0,
+            expired: 0,
+            delivered: 0,
+        }
+    }
+
+    /// The common case: impair a fresh [`InMemoryBus`] for `n` clients.
+    pub fn over_bus(n: usize, cfg: NetSimConfig) -> Self {
+        NetSim::new(Box::new(InMemoryBus::new(n)), n, cfg)
+    }
+
+    /// Frames lost to Bernoulli loss or a dead connection.
+    pub fn lost_frames(&self) -> usize {
+        self.lost
+    }
+
+    /// Frames expired at a round boundary while still in flight.
+    pub fn expired_frames(&self) -> usize {
+        self.expired
+    }
+
+    /// Frames delivered into the inner transport.
+    pub fn delivered_frames(&self) -> usize {
+        self.delivered
+    }
+
+    /// Frames queued but not yet deliverable (late or unpolled).
+    pub fn in_flight(&self) -> usize {
+        self.up_q.len() + self.down_q.len()
+    }
+
+    /// Draw the (loss, jitter) uniforms for one frame. Always both,
+    /// always in this order — see the determinism invariant.
+    fn draws(&mut self) -> (f64, f64) {
+        let u_loss = self.rng.next_f32() as f64;
+        let u_jit = self.rng.next_f32() as f64;
+        (u_loss, u_jit)
+    }
+
+    fn pump_up(&mut self) {
+        while self
+            .up_q
+            .peek()
+            .map(|e| e.time <= self.deadline)
+            .unwrap_or(false)
+        {
+            let e = self.up_q.pop().unwrap();
+            self.now = self.now.max(e.time);
+            self.delivered += 1;
+            self.inner.to_server(e.dest, e.frame);
+        }
+    }
+
+    fn pump_down(&mut self) {
+        while self
+            .down_q
+            .peek()
+            .map(|e| e.time <= self.deadline)
+            .unwrap_or(false)
+        {
+            let e = self.down_q.pop().unwrap();
+            self.now = self.now.max(e.time);
+            self.delivered += 1;
+            if e.dest < self.n {
+                self.client_rx[e.dest] = self.client_rx[e.dest].max(e.time);
+            }
+            self.inner.to_client(e.dest, e.frame);
+        }
+    }
+}
+
+impl Transport for NetSim {
+    fn to_server(&mut self, from: usize, frame: Vec<u8>) {
+        if !self.opened {
+            return self.inner.to_server(from, frame);
+        }
+        let (u_loss, u_jit) = self.draws();
+        let slot = from.min(self.n);
+        self.sent_up[slot] += 1;
+        let prof = self.cfg.up(from);
+        let died = prof
+            .die_after
+            .map(|k| self.sent_up[slot] > k)
+            .unwrap_or(false);
+        if died || u_loss < prof.loss {
+            self.lost += 1;
+            return;
+        }
+        let depart = self.phase_start
+            .max(self.up_free[slot])
+            .max(self.client_rx[slot]);
+        let xfer = prof.transfer_s(frame.len());
+        self.up_free[slot] = depart + xfer;
+        let time = depart + xfer + prof.latency_s + u_jit * prof.jitter_s;
+        self.seq += 1;
+        self.up_q.push(Event {
+            time,
+            seq: self.seq,
+            dest: from,
+            frame,
+        });
+    }
+
+    fn to_client(&mut self, to: usize, frame: Vec<u8>) {
+        if !self.opened {
+            return self.inner.to_client(to, frame);
+        }
+        let (u_loss, u_jit) = self.draws();
+        let prof = self.cfg.down;
+        if u_loss < prof.loss {
+            self.lost += 1;
+            return;
+        }
+        let slot = to.min(self.n);
+        let depart = self.phase_start.max(self.down_free[slot]);
+        let xfer = prof.transfer_s(frame.len());
+        self.down_free[slot] = depart + xfer;
+        let time = depart + xfer + prof.latency_s + u_jit * prof.jitter_s;
+        self.seq += 1;
+        self.down_q.push(Event {
+            time,
+            seq: self.seq,
+            dest: to,
+            frame,
+        });
+    }
+
+    fn server_recv(&mut self) -> Option<(usize, Vec<u8>)> {
+        if self.opened {
+            self.pump_up();
+        }
+        self.inner.server_recv()
+    }
+
+    fn client_recv(&mut self, id: usize) -> Option<Vec<u8>> {
+        if self.opened {
+            self.pump_down();
+        }
+        self.inner.client_recv(id)
+    }
+
+    fn begin_round(&mut self) {
+        self.expired += self.up_q.len() + self.down_q.len();
+        self.up_q.clear();
+        self.down_q.clear();
+        self.sent_up.iter_mut().for_each(|c| *c = 0);
+    }
+
+    fn open_phase(&mut self, budget_s: f64) {
+        if self.opened && self.deadline.is_finite() {
+            // A finite-deadline phase runs out its full timer: the
+            // server cannot know no further frame is coming.
+            self.now = self.now.max(self.deadline);
+        }
+        self.opened = true;
+        self.phase_start = self.now;
+        // INFINITY + x = INFINITY: "no deadline" composes.
+        self.deadline = self.now + budget_s;
+    }
+
+    fn clock_s(&self) -> f64 {
+        self.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain_server(t: &mut dyn Transport) -> Vec<(usize, Vec<u8>)> {
+        let mut out = Vec::new();
+        while let Some(f) = t.server_recv() {
+            out.push(f);
+        }
+        out
+    }
+
+    /// Before the first open_phase the decorator is a pure pass-through
+    /// (setup transparency): frames flow synchronously, clock stays 0.
+    #[test]
+    fn transparent_until_first_phase_opens() {
+        let harsh = LinkProfile {
+            latency_s: 10.0,
+            jitter_s: 5.0,
+            bandwidth_bps: 8.0,
+            loss: 1.0,
+            die_after: Some(0),
+        };
+        let mut ns = NetSim::over_bus(2, NetSimConfig::uniform(1, harsh));
+        ns.to_server(0, vec![1, 2, 3]);
+        ns.to_client(1, vec![9]);
+        assert_eq!(ns.server_recv(), Some((0, vec![1, 2, 3])));
+        assert_eq!(ns.client_recv(1), Some(vec![9]));
+        assert_eq!(ns.clock_s(), 0.0);
+        assert_eq!(ns.lost_frames(), 0);
+    }
+
+    /// Zero impairment after open_phase: FIFO order and zero clock,
+    /// exactly like the raw bus.
+    #[test]
+    fn ideal_links_preserve_fifo_and_zero_clock() {
+        let mut ns = NetSim::over_bus(3, NetSimConfig::ideal(7));
+        ns.open_phase(f64::INFINITY);
+        for (from, byte) in [(2usize, 5u8), (0, 6), (1, 7), (0, 8)] {
+            ns.to_server(from, vec![byte]);
+        }
+        assert_eq!(
+            drain_server(&mut ns),
+            vec![
+                (2, vec![5]),
+                (0, vec![6]),
+                (1, vec![7]),
+                (0, vec![8])
+            ]
+        );
+        assert_eq!(ns.clock_s(), 0.0);
+    }
+
+    /// Per-link latency reorders arrivals; delivery follows arrival
+    /// time, ties broken by submission order.
+    #[test]
+    fn latency_reorders_delivery_by_arrival_time() {
+        let slow = LinkProfile {
+            latency_s: 5e-3,
+            ..LinkProfile::ideal()
+        };
+        let mut cfg = NetSimConfig::ideal(3);
+        cfg.overrides.push((0, slow));
+        let mut ns = NetSim::over_bus(2, cfg);
+        ns.open_phase(f64::INFINITY);
+        ns.to_server(0, vec![10]); // arrives at 5 ms
+        ns.to_server(1, vec![11]); // arrives at 0
+        assert_eq!(
+            drain_server(&mut ns),
+            vec![(1, vec![11]), (0, vec![10])]
+        );
+        assert!((ns.clock_s() - 5e-3).abs() < 1e-12);
+    }
+
+    /// Bandwidth caps serialize back-to-back sends on one uplink:
+    /// 1000 bytes at 8000 bit/s = 1 s per frame, so the second frame
+    /// arrives at 2 s — and another endpoint's link is independent.
+    #[test]
+    fn bandwidth_serializes_per_link() {
+        let capped = LinkProfile {
+            bandwidth_bps: 8000.0,
+            ..LinkProfile::ideal()
+        };
+        let mut cfg = NetSimConfig::ideal(4);
+        cfg.default_up = capped;
+        let mut ns = NetSim::over_bus(2, cfg);
+        ns.open_phase(f64::INFINITY);
+        ns.to_server(0, vec![0; 1000]);
+        ns.to_server(0, vec![1; 1000]);
+        ns.to_server(1, vec![2; 1000]);
+        let got = drain_server(&mut ns);
+        // Endpoint 1's frame (1 s) beats endpoint 0's second (2 s);
+        // endpoint 0's first (1 s) wins the tie on submission order.
+        assert_eq!(
+            got.iter().map(|(f, _)| *f).collect::<Vec<_>>(),
+            vec![0, 1, 0]
+        );
+        assert!((ns.clock_s() - 2.0).abs() < 1e-12);
+    }
+
+    /// Post-deadline frames are withheld from the current phase and
+    /// released into the next one; a finite phase runs its full budget.
+    #[test]
+    fn late_frames_are_withheld_until_the_next_phase() {
+        let slow = LinkProfile {
+            latency_s: 50e-3,
+            ..LinkProfile::ideal()
+        };
+        let mut cfg = NetSimConfig::ideal(5);
+        cfg.overrides.push((1, slow));
+        let mut ns = NetSim::over_bus(2, cfg);
+        ns.open_phase(20e-3);
+        ns.to_server(0, vec![1]); // on time (arrival 0)
+        ns.to_server(1, vec![2]); // arrival 50 ms > 20 ms deadline
+        assert_eq!(drain_server(&mut ns), vec![(0, vec![1])]);
+        assert_eq!(ns.in_flight(), 1);
+        // Phase ran its budget even though the last delivery was at 0.
+        ns.open_phase(f64::INFINITY);
+        assert!((ns.clock_s() - 20e-3).abs() < 1e-12);
+        // The straggler surfaces in the new phase.
+        assert_eq!(drain_server(&mut ns), vec![(1, vec![2])]);
+        assert!((ns.clock_s() - 50e-3).abs() < 1e-12);
+    }
+
+    /// loss = 1.0 loses every frame; die_after = k passes exactly k
+    /// frames per round and the connection revives at the round
+    /// boundary.
+    #[test]
+    fn loss_and_connection_death_boundaries() {
+        let lossy = LinkProfile {
+            loss: 1.0,
+            ..LinkProfile::ideal()
+        };
+        let dying = LinkProfile {
+            die_after: Some(2),
+            ..LinkProfile::ideal()
+        };
+        let mut cfg = NetSimConfig::ideal(11);
+        cfg.overrides.push((0, lossy));
+        cfg.overrides.push((1, dying));
+        let mut ns = NetSim::over_bus(3, cfg);
+        ns.open_phase(f64::INFINITY);
+        ns.to_server(0, vec![1]);
+        ns.to_server(1, vec![2]); // frame 1 ≤ 2: passes
+        ns.to_server(1, vec![3]); // frame 2 ≤ 2: passes
+        ns.to_server(1, vec![4]); // frame 3 > 2: dead
+        ns.to_server(2, vec![5]);
+        assert_eq!(
+            drain_server(&mut ns),
+            vec![(1, vec![2]), (1, vec![3]), (2, vec![5])]
+        );
+        assert_eq!(ns.lost_frames(), 2);
+        ns.begin_round();
+        ns.open_phase(f64::INFINITY);
+        ns.to_server(1, vec![6]); // reconnected
+        assert_eq!(drain_server(&mut ns), vec![(1, vec![6])]);
+    }
+
+    /// A round boundary expires in-flight frames instead of leaking
+    /// them into the next round's Collecting phase.
+    #[test]
+    fn round_boundary_expires_in_flight_frames() {
+        let slow = LinkProfile {
+            latency_s: 1.0,
+            ..LinkProfile::ideal()
+        };
+        let mut ns = NetSim::over_bus(2, NetSimConfig::uniform(5, slow));
+        ns.open_phase(10e-3);
+        ns.to_server(0, vec![1]); // arrival 1 s, never deliverable
+        assert_eq!(drain_server(&mut ns), vec![]);
+        ns.begin_round();
+        ns.open_phase(f64::INFINITY);
+        assert_eq!(drain_server(&mut ns), vec![]);
+        assert_eq!(ns.expired_frames(), 1);
+    }
+
+    /// Same seed + same submission schedule ⇒ identical delivery
+    /// sequence, clock, and loss count (the determinism invariant).
+    #[test]
+    fn replay_is_bit_exact_from_the_seed() {
+        let link = LinkProfile {
+            latency_s: 1e-3,
+            jitter_s: 4e-3,
+            bandwidth_bps: 1e6,
+            loss: 0.3,
+            die_after: None,
+        };
+        let run = || {
+            let mut ns =
+                NetSim::over_bus(4, NetSimConfig::uniform(42, link));
+            ns.open_phase(f64::INFINITY);
+            for i in 0..24u8 {
+                ns.to_server(usize::from(i) % 4, vec![i; 64]);
+            }
+            let got = drain_server(&mut ns);
+            (got, ns.clock_s().to_bits(), ns.lost_frames())
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+        assert_eq!(a.2, b.2);
+        assert!(a.2 > 0, "loss 0.3 over 24 frames should lose some");
+    }
+
+    /// Profile values must not shift the RNG stream: two configs that
+    /// differ only in jitter amplitude lose exactly the same frames.
+    #[test]
+    fn rng_stream_is_aligned_across_profiles() {
+        let lost_with = |jitter_s: f64| {
+            let link = LinkProfile {
+                jitter_s,
+                loss: 0.5,
+                ..LinkProfile::ideal()
+            };
+            let mut ns =
+                NetSim::over_bus(2, NetSimConfig::uniform(9, link));
+            ns.open_phase(f64::INFINITY);
+            for i in 0..32u8 {
+                ns.to_server(usize::from(i) % 2, vec![i]);
+            }
+            let survivors: Vec<u8> = drain_server(&mut ns)
+                .into_iter()
+                .map(|(_, f)| f[0])
+                .collect();
+            let mut sorted = survivors;
+            sorted.sort_unstable();
+            sorted
+        };
+        assert_eq!(lost_with(0.0), lost_with(7e-3));
+    }
+
+    /// Forged endpoints (from ≥ n) share the overflow slot and the
+    /// default profile — they are impaired, not panicked on.
+    #[test]
+    fn forged_endpoints_use_the_overflow_slot() {
+        let mut ns = NetSim::over_bus(2, NetSimConfig::ideal(3));
+        ns.open_phase(f64::INFINITY);
+        ns.to_server(99, vec![1]);
+        ns.to_server(2, vec![2]);
+        assert_eq!(
+            drain_server(&mut ns),
+            vec![(99, vec![1]), (2, vec![2])]
+        );
+        // Downlink to an unknown endpoint: dropped by the inner bus,
+        // no panic.
+        ns.to_client(7, vec![3]);
+        assert_eq!(ns.client_recv(7), None);
+    }
+
+    /// Request→response chaining: an uplink frame sent after a downlink
+    /// delivery departs no earlier than that delivery arrived.
+    #[test]
+    fn response_departure_is_floored_at_request_arrival() {
+        let down = LinkProfile {
+            latency_s: 8e-3,
+            ..LinkProfile::ideal()
+        };
+        let mut cfg = NetSimConfig::ideal(13);
+        cfg.down = down;
+        let mut ns = NetSim::over_bus(2, cfg);
+        ns.open_phase(f64::INFINITY);
+        ns.to_client(0, vec![1]);
+        assert_eq!(ns.client_recv(0), Some(vec![1])); // arrives at 8 ms
+        ns.to_server(0, vec![2]); // departs ≥ 8 ms
+        drain_server(&mut ns);
+        assert!((ns.clock_s() - 8e-3).abs() < 1e-12);
+    }
+}

@@ -78,6 +78,30 @@ impl LinkModel {
     }
 }
 
+/// One named protocol phase's slice of a round's traffic — the
+/// per-phase decomposition of the round totals the scenario lab sweeps
+/// over. Phase names used by the frame driver: `"collecting"` (masked
+/// uploads), `"unmasking"` (first solicitation wave), `"recovery_wave"`
+/// (each exclude-and-retry re-solicitation), `"broadcast"` (model
+/// push). Invariant (pinned by the frame-driver tests): summing
+/// `up_bytes`/`down_bytes`/`comm_time_s` over a round's phases
+/// reproduces the round totals exactly — for rounds without
+/// forged-endpoint traffic (frames from out-of-range endpoints are
+/// clocked and phase-attributed but never billed to a per-user total,
+/// matching the pre-breakdown accounting).
+#[derive(Clone, Debug)]
+pub struct PhaseBreakdown {
+    /// Which phase ("collecting", "unmasking", "recovery_wave",
+    /// "broadcast").
+    pub name: &'static str,
+    /// Client→server bytes billed during this phase.
+    pub up_bytes: usize,
+    /// Server→client bytes billed during this phase.
+    pub down_bytes: usize,
+    /// Simulated seconds this phase added to the round clock.
+    pub comm_time_s: f64,
+}
+
 /// Per-round communication/timing ledger. The byte counters feed Table I
 /// and Figs. 3(a)/5(a)/6(a); the clock feeds Figs. 3(c)/5(b)/6(b).
 #[derive(Clone, Debug, Default)]
@@ -126,6 +150,11 @@ pub struct RoundLedger {
     /// How many exclude-and-re-solicit passes the round needed (0 on
     /// the honest path).
     pub retries: usize,
+    /// Per-phase decomposition of the byte/time totals above, in
+    /// protocol order. Empty on drivers that only track round totals
+    /// (the struct/HLO paths); the frame driver fills it via
+    /// [`RoundLedger::advance_named_phase`].
+    pub phases: Vec<PhaseBreakdown>,
 }
 
 impl RoundLedger {
@@ -154,6 +183,26 @@ impl RoundLedger {
             .map(|&b| link.transfer_time(b))
             .fold(0.0f64, f64::max);
         self.comm_time_s += t;
+    }
+
+    /// [`RoundLedger::advance_parallel_phase`] plus a named
+    /// [`PhaseBreakdown`] entry: the clock advances by the max transfer
+    /// time over `clocked` (byte-for-byte the same fold as
+    /// `advance_parallel_phase`, so switching a driver to named phases
+    /// cannot move the round clock), and the phase is billed `up`/`down`
+    /// bytes. The byte arguments are pure attribution — the per-user
+    /// byte totals are still recorded at drain time by the caller.
+    pub fn advance_named_phase(&mut self, name: &'static str,
+                               link: &LinkModel, clocked: &[usize],
+                               up: usize, down: usize) {
+        let before = self.comm_time_s;
+        self.advance_parallel_phase(link, clocked);
+        self.phases.push(PhaseBreakdown {
+            name,
+            up_bytes: up,
+            down_bytes: down,
+            comm_time_s: self.comm_time_s - before,
+        });
     }
 
     /// Record one round's unmask decomposition (accumulates across
@@ -268,6 +317,37 @@ mod tests {
         let mut ledger = RoundLedger::new(3);
         ledger.advance_parallel_phase(&link, &[1_000_000, 2_000_000, 500]);
         assert!((ledger.comm_time_s - 2.0).abs() < 1e-9);
+    }
+
+    /// Named phases must advance the clock exactly like the anonymous
+    /// fold (same max-transfer semantics) while attributing bytes, and
+    /// the breakdown must sum back to the round totals.
+    #[test]
+    fn named_phases_match_anonymous_clock_and_sum_to_totals() {
+        let link = LinkModel { bandwidth_bps: 8e6, latency_s: 1e-3 };
+        let mut anon = RoundLedger::new(3);
+        anon.advance_parallel_phase(&link, &[1_000_000, 2_000_000, 500]);
+        anon.advance_parallel_phase(&link, &[300, 40, 0]);
+        let mut named = RoundLedger::new(3);
+        named.advance_named_phase("collecting", &link,
+                                  &[1_000_000, 2_000_000, 500],
+                                  2_000_500, 0);
+        named.advance_named_phase("unmasking", &link, &[300, 40, 0],
+                                  340, 120);
+        assert_eq!(anon.comm_time_s.to_bits(),
+                   named.comm_time_s.to_bits());
+        assert_eq!(named.phases.len(), 2);
+        assert_eq!(named.phases[0].name, "collecting");
+        assert_eq!(named.phases[1].name, "unmasking");
+        let phase_sum: f64 =
+            named.phases.iter().map(|p| p.comm_time_s).sum();
+        assert!((phase_sum - named.comm_time_s).abs() < 1e-15);
+        assert_eq!(named.phases.iter().map(|p| p.up_bytes).sum::<usize>(),
+                   2_000_840);
+        assert_eq!(
+            named.phases.iter().map(|p| p.down_bytes).sum::<usize>(),
+            120
+        );
     }
 
     #[test]

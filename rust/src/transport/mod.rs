@@ -63,6 +63,29 @@ pub trait Transport {
 
     /// Next frame waiting at client endpoint `id` (FIFO).
     fn client_recv(&mut self, id: usize) -> Option<Vec<u8>>;
+
+    /// Round boundary: frames still in flight belong to a round that is
+    /// over and must never be delivered (the wire format carries no
+    /// round id, so a stale MaskedInput surfacing in the next round's
+    /// Collecting phase would be indistinguishable from a fresh one).
+    /// Undelayed transports deliver everything within the round, so the
+    /// default is a no-op; delaying decorators ([`crate::netsim`])
+    /// expire their queues here.
+    fn begin_round(&mut self) {}
+
+    /// Open a new delivery phase whose deadline is `budget_s` simulated
+    /// seconds from now: frames that would arrive later are withheld
+    /// from the receiver until a subsequent phase opens (where the
+    /// ingest layer rejects them as phase-confused). Undelayed
+    /// transports deliver everything "on time" — default no-op.
+    fn open_phase(&mut self, _budget_s: f64) {}
+
+    /// Simulated seconds this transport has spent delivering frames
+    /// (0.0 on undelayed transports, which is what keeps the
+    /// zero-impairment differential suite exact).
+    fn clock_s(&self) -> f64 {
+        0.0
+    }
 }
 
 /// In-memory byte bus: one FIFO into the server, one FIFO per client.

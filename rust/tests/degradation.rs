@@ -1,0 +1,246 @@
+//! Degradation properties at the quorum boundary, under the seeded
+//! shrinker ([`sparsesecagg::testutil::prop_shrink`]).
+//!
+//! A scenario impairs three disjoint user classes through the network
+//! simulator:
+//!
+//! * **lost uploads** (uplink loss = 1.0) — pure dropouts;
+//! * **silent-after-upload** (uplink dies after its first frame) — the
+//!   masked input lands, the unmask response never does: the class
+//!   that actually exercises Shamir reconstruction-from-peers;
+//! * **stragglers** (uplink latency 100× the Collecting deadline) —
+//!   late uploads rejected as phase-confused.
+//!
+//! Property: while the responder count stays at or above the Shamir
+//! quorum t+1, the round completes **bit-exactly** equal to the raw-bus
+//! reference whose dropout set is {lost ∪ stragglers} (silent users'
+//! inputs are *included* — their masks are reconstructed from peers).
+//! One more silent user past the boundary and the round must fail with
+//! a clean typed error — never a panic, never a wrong aggregate. A
+//! failing draw shrinks to a minimal reproduction.
+
+use sparsesecagg::coordinator::{Coordinator, PhaseDeadlines};
+use sparsesecagg::exec::ExecMode;
+use sparsesecagg::netsim::{LinkProfile, NetSim, NetSimConfig};
+use sparsesecagg::prg::ChaCha20Rng;
+use sparsesecagg::protocol::Params;
+use sparsesecagg::testutil::prop_shrink;
+
+#[derive(Clone, Debug)]
+struct DegradationCase {
+    n: usize,
+    d: usize,
+    alpha: f64,
+    seed: u64,
+    lost_uploads: usize,
+    silent_after_upload: usize,
+    stragglers: usize,
+}
+
+impl DegradationCase {
+    fn quorum(&self) -> usize {
+        self.n / 2 + 1 // t+1, t = ⌊n/2⌋
+    }
+
+    fn impaired(&self) -> usize {
+        self.lost_uploads + self.silent_after_upload + self.stragglers
+    }
+
+    /// Quorum-preserving (the property's precondition), with at least
+    /// one never-uploader so reconstruction is always on the path.
+    fn feasible(&self) -> bool {
+        self.n >= 8
+            && self.d >= 64
+            && self.lost_uploads + self.stragglers >= 1
+            && self.n - self.impaired() >= self.quorum()
+    }
+
+    /// Impaired ids from the tail, one contiguous block per class:
+    /// [silent | lost | stragglers] ending at n.
+    fn straggler_ids(&self) -> Vec<usize> {
+        (self.n - self.stragglers..self.n).collect()
+    }
+    fn lost_ids(&self) -> Vec<usize> {
+        let hi = self.n - self.stragglers;
+        (hi - self.lost_uploads..hi).collect()
+    }
+    fn silent_ids(&self) -> Vec<usize> {
+        let hi = self.n - self.stragglers - self.lost_uploads;
+        (hi - self.silent_after_upload..hi).collect()
+    }
+}
+
+const COLLECT_DEADLINE_S: f64 = 0.1;
+
+fn impaired_coordinator(c: &DegradationCase, p: Params) -> Coordinator {
+    let brisk = LinkProfile {
+        latency_s: 1e-3,
+        ..LinkProfile::ideal()
+    };
+    let mut cfg = NetSimConfig::uniform(c.seed ^ 0xde6, brisk);
+    for id in c.lost_ids() {
+        cfg.overrides.push((id, LinkProfile { loss: 1.0, ..brisk }));
+    }
+    for id in c.silent_ids() {
+        cfg.overrides
+            .push((id, LinkProfile { die_after: Some(1), ..brisk }));
+    }
+    for id in c.straggler_ids() {
+        cfg.overrides.push((
+            id,
+            LinkProfile { latency_s: 100.0 * COLLECT_DEADLINE_S, ..brisk },
+        ));
+    }
+    let bus = Box::new(NetSim::over_bus(p.n, cfg));
+    let mut coord = Coordinator::new_sparse_on(p, c.seed, bus);
+    coord.exec_mode = ExecMode::Stealing;
+    coord.shard_size = 64;
+    coord.threads = 2;
+    coord.deadlines = Some(PhaseDeadlines {
+        collecting_s: COLLECT_DEADLINE_S,
+        unmasking_s: f64::INFINITY,
+    });
+    coord
+}
+
+fn grads(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = ChaCha20Rng::from_seed_u64(seed);
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.next_f32() - 0.5).collect())
+        .collect()
+}
+
+/// The property body (also reused by the explicit boundary test).
+fn check(c: &DegradationCase) {
+    assert!(c.feasible(), "generator/shrinker bug: {c:?}");
+    let p = Params {
+        n: c.n,
+        d: c.d,
+        alpha: c.alpha,
+        theta: 0.0,
+        c: 1024.0,
+    };
+    let ys = grads(c.n, c.d, c.seed ^ 0x99);
+    let betas = vec![1.0 / c.n as f64; c.n];
+
+    // --- at or above quorum: bit-exact completion.
+    let mut coord = impaired_coordinator(c, p);
+    let (got, ledger) = coord
+        .run_round(0, &ys, &betas, &[])
+        .unwrap_or_else(|e| {
+            panic!("{c:?}: quorum-preserving impairment must complete \
+                    ({} responders >= {}): {e:#}",
+                   c.n - c.impaired(), c.quorum())
+        });
+    assert_eq!(ledger.rejected_frames, c.stragglers,
+               "{c:?}: exactly the late uploads are rejected");
+    assert!(ledger.excluded_users.is_empty(),
+            "{c:?}: impairment is not equivocation");
+
+    // Reference: lost + straggler users simply dropped; silent users
+    // stay active — their inputs are in the sum, their masks come back
+    // via peers' shares (Shamir exactness makes the response subset
+    // immaterial).
+    let mut ref_dropped = c.lost_ids();
+    ref_dropped.extend(c.straggler_ids());
+    ref_dropped.sort_unstable();
+    let mut reference = Coordinator::new_sparse(p, c.seed);
+    reference.exec_mode = ExecMode::Stealing;
+    reference.shard_size = 64;
+    reference.threads = 2;
+    let (want, _) = reference
+        .run_round(0, &ys, &betas, &ref_dropped)
+        .expect("reference round");
+    assert_eq!(got, want, "{c:?}: degraded aggregate differs from the \
+                           dropout-equivalent reference");
+
+    // --- one past the boundary: silence one more (honest) uploader so
+    // the responder count lands at exactly t — a clean typed error.
+    let mut twin = c.clone();
+    twin.silent_after_upload =
+        twin.n - twin.lost_uploads - twin.stragglers - twin.quorum() + 1;
+    assert!(twin.silent_ids().iter().all(|&id| id < twin.n),
+            "twin construction bug: {twin:?}");
+    let mut sub = impaired_coordinator(&twin, p);
+    let err = sub.run_round(0, &ys, &betas, &[]);
+    assert!(err.is_err(),
+            "{twin:?}: one responder below quorum must fail cleanly, \
+             got Ok");
+}
+
+#[test]
+fn quorum_boundary_property_with_shrinking() {
+    prop_shrink(
+        6,
+        |rng| {
+            let n = 8 + (rng.next_u32() % 9) as usize; // 8..=16
+            let margin = n - (n / 2 + 1);
+            let stragglers = (rng.next_u32() as usize) % (margin + 1);
+            let lost =
+                (rng.next_u32() as usize) % (margin - stragglers + 1);
+            let silent = (rng.next_u32() as usize)
+                % (margin - stragglers - lost + 1);
+            let mut c = DegradationCase {
+                n,
+                d: 256 + (rng.next_u32() % 256) as usize,
+                alpha: 0.2 + 0.3 * rng.next_f32() as f64,
+                seed: 0xca5e ^ (rng.next_u32() as u64),
+                lost_uploads: lost,
+                silent_after_upload: silent,
+                stragglers,
+            };
+            if c.lost_uploads + c.stragglers == 0 {
+                // Keep reconstruction on the path (margin >= 3 for
+                // n >= 8); make room if silent users filled the margin.
+                c.silent_after_upload =
+                    c.silent_after_upload.min(margin - 1);
+                c.lost_uploads = 1;
+            }
+            c
+        },
+        |c| {
+            // Halve the cohort, shed one impaired user per class,
+            // halve d; infeasible candidates are filtered out.
+            let mut cands =
+                vec![DegradationCase { n: c.n / 2, ..c.clone() },
+                     DegradationCase { d: c.d / 2, ..c.clone() }];
+            if c.lost_uploads > 0 {
+                cands.push(DegradationCase {
+                    lost_uploads: c.lost_uploads - 1,
+                    ..c.clone()
+                });
+            }
+            if c.silent_after_upload > 0 {
+                cands.push(DegradationCase {
+                    silent_after_upload: c.silent_after_upload - 1,
+                    ..c.clone()
+                });
+            }
+            if c.stragglers > 0 {
+                cands.push(DegradationCase {
+                    stragglers: c.stragglers - 1,
+                    ..c.clone()
+                });
+            }
+            cands.retain(|x| x.feasible());
+            cands
+        },
+        check,
+    );
+}
+
+/// The boundary, pinned explicitly: n = 8 (quorum 5) with one user of
+/// each impairment class completes at exactly quorum responders; the
+/// sub-quorum twin inside `check` fails cleanly.
+#[test]
+fn quorum_boundary_exact_at_n8() {
+    check(&DegradationCase {
+        n: 8,
+        d: 200,
+        alpha: 0.3,
+        seed: 0xb0da7,
+        lost_uploads: 1,
+        silent_after_upload: 1,
+        stragglers: 1,
+    });
+}

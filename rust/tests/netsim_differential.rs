@@ -1,0 +1,252 @@
+//! Differential suite for the network-impairment simulator
+//! ([`sparsesecagg::netsim`]).
+//!
+//! * **Zero-impairment differential**: a round driven over `NetSim`
+//!   with ideal links is *indistinguishable* from the raw
+//!   [`InMemoryBus`] — bit-exact aggregate, identical per-user byte
+//!   ledgers, identical simulated comm clock (`to_bits`), identical
+//!   scheduling counters, zero rejected frames, and a virtual clock
+//!   that never advances. Both protocols × all three unmask executors,
+//!   with and without phase deadlines armed.
+//! * **Reorder tolerance**: seeded jitter permutes frame delivery
+//!   within each phase; every permutation must aggregate bit-exactly
+//!   (the ingest path is order-free by construction).
+//! * **Deadline rejection**: a straggler whose upload misses the
+//!   Collecting deadline surfaces in the Unmasking phase, where the
+//!   validating ingest rejects it as phase-confused and bills it in
+//!   `rejected_frames` — the round completes as if the straggler had
+//!   dropped, and nothing panics.
+
+use sparsesecagg::coordinator::{Coordinator, PhaseDeadlines};
+use sparsesecagg::exec::ExecMode;
+use sparsesecagg::netsim::{LinkProfile, NetSim, NetSimConfig};
+use sparsesecagg::network::draw_dropouts;
+use sparsesecagg::prg::ChaCha20Rng;
+use sparsesecagg::protocol::Params;
+
+fn params(n: usize, d: usize, alpha: f64, theta: f64) -> Params {
+    Params { n, d, alpha, theta, c: 1024.0 }
+}
+
+fn grads(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = ChaCha20Rng::from_seed_u64(seed);
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.next_f32() - 0.5).collect())
+        .collect()
+}
+
+/// (mode, shard_size): shard_size 0 selects the monolithic path.
+const EXECUTORS: &[(ExecMode, usize)] = &[
+    (ExecMode::Stealing, 64),
+    (ExecMode::Windowed, 64),
+    (ExecMode::Monolithic, 0),
+];
+
+fn coordinator_on(secagg: bool, p: Params, entropy: u64, mode: ExecMode,
+                  shard: usize, cfg: Option<NetSimConfig>) -> Coordinator {
+    let mut c = match cfg {
+        Some(cfg) => {
+            let bus = Box::new(NetSim::over_bus(p.n, cfg));
+            if secagg {
+                Coordinator::new_secagg_on(p, entropy, bus)
+            } else {
+                Coordinator::new_sparse_on(p, entropy, bus)
+            }
+        }
+        None if secagg => Coordinator::new_secagg(p, entropy),
+        None => Coordinator::new_sparse(p, entropy),
+    };
+    c.exec_mode = mode;
+    c.shard_size = shard;
+    c.threads = 3;
+    c
+}
+
+/// Two rounds (with drawn dropouts) on ideal links vs the raw bus:
+/// every observable must match. `deadlines` additionally arms finite
+/// per-phase budgets — on ideal links nothing is ever late, so arming
+/// them must not change any result (only the virtual clock, which then
+/// counts the budgets the server waited out).
+fn assert_zero_impairment_exact(secagg: bool, mode: ExecMode, shard: usize,
+                                deadlines: Option<PhaseDeadlines>) {
+    let alpha = if secagg { 1.0 } else { 0.3 };
+    let p = params(10, 600, alpha, 0.2);
+    let ys = grads(p.n, p.d, 0xd1ff);
+    let betas = vec![1.0 / p.n as f64; p.n];
+
+    let mut raw = coordinator_on(secagg, p, 42, mode, shard, None);
+    let mut sim = coordinator_on(secagg, p, 42, mode, shard,
+                                 Some(NetSimConfig::ideal(0x1dea)));
+    sim.deadlines = deadlines;
+    let armed = sim.deadlines.is_some();
+
+    for round in 0..2u32 {
+        let dropped = draw_dropouts(p.n, p.theta, round, 0xd0, true);
+        let (want, lw) = raw.run_round(round, &ys, &betas, &dropped)
+            .expect("raw bus round");
+        let (got, lg) = sim.run_round(round, &ys, &betas, &dropped)
+            .expect("ideal netsim round");
+        let tag = format!("secagg={secagg} {mode:?} armed={armed} \
+                           round={round}");
+        assert_eq!(got, want, "{tag}: aggregate differs");
+        assert_eq!(lg.up_bytes, lw.up_bytes, "{tag}: up_bytes differ");
+        assert_eq!(lg.down_bytes, lw.down_bytes,
+                   "{tag}: down_bytes differ");
+        assert_eq!(lg.comm_time_s.to_bits(), lw.comm_time_s.to_bits(),
+                   "{tag}: simulated comm clock differs");
+        assert_eq!(lg.client_tasks, lw.client_tasks,
+                   "{tag}: scheduling differs");
+        assert_eq!(lg.rejected_frames, 0, "{tag}: spurious rejects");
+        assert_eq!(
+            lg.phases.iter().map(|ph| ph.name).collect::<Vec<_>>(),
+            lw.phases.iter().map(|ph| ph.name).collect::<Vec<_>>(),
+            "{tag}: phase decomposition differs"
+        );
+    }
+    if armed {
+        // Finite budgets: the server waited each phase's timer out.
+        assert!(sim.bus_clock_s() > 0.0,
+                "armed deadlines must consume simulated time");
+    } else {
+        assert_eq!(sim.bus_clock_s(), 0.0,
+                   "ideal links without deadlines must not advance \
+                    the virtual clock");
+    }
+}
+
+#[test]
+fn zero_impairment_is_bit_exact_sparse_all_executors() {
+    for &(mode, shard) in EXECUTORS {
+        assert_zero_impairment_exact(false, mode, shard, None);
+        assert_zero_impairment_exact(
+            false, mode, shard, Some(PhaseDeadlines::uniform(1.0)));
+    }
+}
+
+#[test]
+fn zero_impairment_is_bit_exact_secagg_all_executors() {
+    for &(mode, shard) in EXECUTORS {
+        assert_zero_impairment_exact(true, mode, shard, None);
+        assert_zero_impairment_exact(
+            true, mode, shard, Some(PhaseDeadlines::uniform(1.0)));
+    }
+}
+
+/// Jitter-only impairment: delivery order inside each phase is a
+/// seeded permutation of submission order. Every seed must aggregate
+/// bit-exactly against the raw bus — ingest keeps per-sender slots, so
+/// arrival order is immaterial by construction, and this pins it.
+#[test]
+fn seeded_reorder_permutations_are_bit_exact() {
+    let p = params(9, 500, 0.3, 0.2);
+    let ys = grads(p.n, p.d, 0x5eed);
+    let betas = vec![1.0 / p.n as f64; p.n];
+    let jittery = LinkProfile {
+        latency_s: 1e-4,
+        jitter_s: 5e-3, // 50x the latency: heavy reordering
+        ..LinkProfile::ideal()
+    };
+    let mut raw = coordinator_on(false, p, 9, ExecMode::Stealing, 64, None);
+    let dropped = draw_dropouts(p.n, p.theta, 0, 0x0d, true);
+    let (want, _) = raw.run_round(0, &ys, &betas, &dropped).unwrap();
+
+    for seed in 0..5u64 {
+        let mut sim = coordinator_on(
+            false, p, 9, ExecMode::Stealing, 64,
+            Some(NetSimConfig::uniform(0x900d + seed, jittery)));
+        let (got, ledger) =
+            sim.run_round(0, &ys, &betas, &dropped).unwrap();
+        assert_eq!(got, want, "seed {seed}: reorder changed the sum");
+        assert_eq!(ledger.rejected_frames, 0,
+                   "seed {seed}: no deadline armed, nothing is late");
+        assert!(sim.bus_clock_s() > 0.0,
+                "seed {seed}: jittery delivery takes simulated time");
+    }
+}
+
+/// A straggler past the Collecting deadline degrades to the dropout
+/// path: its upload surfaces in the Unmasking phase, is rejected as
+/// phase-confused by the ingest state machine (billed in
+/// `rejected_frames`), nobody is *excluded* (lateness is not
+/// equivocation), and the aggregate equals the reference round where
+/// the straggler simply dropped.
+#[test]
+fn post_deadline_upload_is_rejected_and_degrades_to_dropout() {
+    let p = params(10, 500, 0.3, 0.0);
+    let ys = grads(p.n, p.d, 0x57a6);
+    let betas = vec![1.0 / p.n as f64; p.n];
+    let straggler = 7usize;
+
+    let mut reference =
+        coordinator_on(false, p, 13, ExecMode::Stealing, 64, None);
+    let (want, _) = reference
+        .run_round(0, &ys, &betas, &[straggler])
+        .expect("reference with straggler dropped");
+
+    let brisk = LinkProfile {
+        latency_s: 1e-3,
+        ..LinkProfile::ideal()
+    };
+    let mut cfg = NetSimConfig::uniform(0xdead1, brisk);
+    cfg.overrides.push((
+        straggler,
+        LinkProfile {
+            latency_s: 0.5, // 10x the Collecting budget below
+            ..brisk
+        },
+    ));
+    let mut sim =
+        coordinator_on(false, p, 13, ExecMode::Stealing, 64, Some(cfg));
+    sim.deadlines = Some(PhaseDeadlines {
+        collecting_s: 0.05,
+        unmasking_s: f64::INFINITY,
+    });
+    let (got, ledger) = sim
+        .run_round(0, &ys, &betas, &[])
+        .expect("round must survive a straggler");
+    assert_eq!(got, want,
+               "straggler must degrade to the dropout path exactly");
+    assert_eq!(ledger.rejected_frames, 1,
+               "exactly the one late upload is rejected");
+    assert!(ledger.excluded_users.is_empty(),
+            "lateness must not trigger equivocator exclusion");
+    assert_eq!(ledger.retries, 0);
+    assert!(sim.bus_clock_s() >= 0.05,
+            "the Collecting phase ran out its full budget");
+}
+
+/// Same straggler, but *both* budgets finite and shorter than the
+/// straggler's latency: the late upload stays in flight past every
+/// phase and is expired at the next round boundary instead of ever
+/// being ingested — two clean rounds back to back.
+#[test]
+fn straggler_past_every_deadline_expires_at_the_round_boundary() {
+    let p = params(10, 400, 0.3, 0.0);
+    let ys = grads(p.n, p.d, 0x57a7);
+    let betas = vec![1.0 / p.n as f64; p.n];
+    let straggler = 3usize;
+
+    let mut reference =
+        coordinator_on(false, p, 29, ExecMode::Stealing, 64, None);
+    let brisk = LinkProfile { latency_s: 1e-3, ..LinkProfile::ideal() };
+    let mut cfg = NetSimConfig::uniform(0xdead2, brisk);
+    cfg.overrides.push((
+        straggler,
+        LinkProfile { latency_s: 10.0, ..brisk },
+    ));
+    let mut sim =
+        coordinator_on(false, p, 29, ExecMode::Stealing, 64, Some(cfg));
+    sim.deadlines = Some(PhaseDeadlines::uniform(0.05));
+
+    for round in 0..2u32 {
+        let (want, _) = reference
+            .run_round(round, &ys, &betas, &[straggler])
+            .unwrap();
+        let (got, ledger) =
+            sim.run_round(round, &ys, &betas, &[]).unwrap();
+        assert_eq!(got, want, "round {round}");
+        assert_eq!(ledger.rejected_frames, 0,
+                   "round {round}: the upload never surfaced inside \
+                    the round");
+    }
+}

@@ -23,6 +23,7 @@ use sparsesecagg::coordinator::Coordinator;
 use sparsesecagg::exec::ExecMode;
 use sparsesecagg::field;
 use sparsesecagg::fl::{run_fl, FlConfig, Trainer};
+use sparsesecagg::netsim::{LinkProfile, NetSim, NetSimConfig};
 use sparsesecagg::prg::ChaCha20Rng;
 use sparsesecagg::protocol::{sparse, Params};
 use sparsesecagg::testutil::prop_shrink;
@@ -336,6 +337,89 @@ fn recovery_property_with_minimal_case_shrinking() {
         shrink_recovery,
         check_recovery,
     );
+}
+
+/// One churn-soak run over the impairment simulator: 30 rounds on
+/// jittery, bandwidth-capped links with a seeded churn draw of 0..=3
+/// leavers per round AND byzantine ids {0, 1} (0 silenced catalog
+/// injector, 1 two-faced value-poisoner). Sizing keeps every round
+/// recoverable by construction: N = 14, t+1 = 8, and the response set
+/// stays at or above the unique-decoding radius t+1+2 = 10 even at
+/// peak churn (14 − 3 leavers − 1 silenced = 10). Returns the
+/// per-round aggregates for determinism comparison.
+fn churn_soak_run(entropy: u64) -> Vec<Vec<f32>> {
+    let p = params(14, 220, 0.35, 0.0);
+    let ys = grads(p.n, p.d, 0xc4u64 ^ entropy);
+    let betas = vec![1.0 / p.n as f64; p.n];
+    let wan = LinkProfile {
+        latency_s: 1e-3,
+        jitter_s: 2e-3, // 2x the latency: reordering every phase
+        bandwidth_bps: 50e6,
+        loss: 0.0,
+        die_after: None,
+    };
+    let bus = Box::new(NetSim::over_bus(
+        p.n, NetSimConfig::uniform(entropy ^ 0x9e7, wan)));
+    let mut attacked = Coordinator::new_sparse_on(p, entropy, bus);
+    attacked.exec_mode = ExecMode::Stealing;
+    attacked.shard_size = 64;
+    attacked.threads = 3;
+    let mut reference = coordinator(p, entropy);
+    let mut adv = Adversary::new(2.0 / 14.0, entropy ^ 0xad);
+    adv.two_faced = vec![(1, TwoFaced::PoisonValues)];
+
+    let mut churn_rng = ChaCha20Rng::from_seed_u64(entropy ^ 0xc42);
+    let mut aggs = Vec::new();
+    for round in 0..30u32 {
+        // Seeded churn: 0..=3 distinct leavers from the honest pool
+        // {2, …, 13} join late / leave early this round.
+        let k = churn_rng.next_u32() as usize % 4;
+        let mut pool: Vec<usize> = (2..p.n).collect();
+        let mut leave = Vec::new();
+        for _ in 0..k {
+            let i = churn_rng.next_u32() as usize % pool.len();
+            leave.push(pool.swap_remove(i));
+        }
+        leave.sort_unstable();
+
+        let (got, ledger) = attacked
+            .run_round_adversarial(round, &ys, &betas, &leave, &mut adv)
+            .unwrap_or_else(|e| {
+                panic!("churn soak round {round} (leavers {leave:?}) \
+                        lost while recoverable: {e:#}")
+            });
+        assert_eq!(ledger.excluded_users, vec![1], "round {round}");
+        assert_eq!(ledger.retries, 1, "round {round}");
+        assert!(ledger.rejected_frames > 0, "round {round}");
+
+        let mut ref_dropped = leave.clone();
+        ref_dropped.extend([0usize, 1]);
+        ref_dropped.sort_unstable();
+        let (want, _) = reference
+            .run_round(round, &ys, &betas, &ref_dropped)
+            .unwrap();
+        assert_eq!(got, want,
+                   "round {round}: churned aggregate diverged from \
+                    honest-minus-excluded reference");
+        aggs.push(got);
+    }
+    assert!(attacked.bus_clock_s() > 0.0,
+            "the impairment layer must have cost simulated time");
+    aggs
+}
+
+/// ≥ 30 rounds of churn + byzantine pressure over impaired links: zero
+/// recoverable rounds lost, every round bit-exact to its reference,
+/// and the full trajectory bit-deterministic under the seed.
+#[test]
+fn churn_soak_over_impaired_links_is_lossless_and_deterministic() {
+    let a = churn_soak_run(77);
+    let b = churn_soak_run(77);
+    assert_eq!(a.len(), 30);
+    for (r, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x, y,
+                   "churn soak round {r} not deterministic under seed");
+    }
 }
 
 /// `run_fl` soak under the `byzantine` config knob (requires `make
