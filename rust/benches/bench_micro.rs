@@ -9,11 +9,15 @@
 //! `BENCH_SMOKE=1` in the environment the binary runs *only* that
 //! section at reduced sizes with a single iteration, asserting
 //! bit-equality of all three engines and writing no JSON — the CI gate.
+//! The section also measures the durable-round-journal overhead
+//! (journal-off vs journal-on with per-round snapshot compaction, same
+//! aggregate bit-for-bit) under the `"journal"` key.
 
 use sparsesecagg::adversary::{Adversary, TwoFaced};
 use sparsesecagg::coordinator::Coordinator;
 use sparsesecagg::exec::{jobs as exec_jobs, Executor};
 use sparsesecagg::field::vecops;
+use sparsesecagg::journal::Journal;
 use sparsesecagg::masking::{self, PairSeeds, STREAM_ADDITIVE};
 use sparsesecagg::metrics::Table;
 use sparsesecagg::prg::{ChaCha20Rng, Seed};
@@ -22,6 +26,7 @@ use sparsesecagg::protocol::shard::{self, MaskJob, ShardConfig};
 use sparsesecagg::protocol::{sparse, Params};
 use sparsesecagg::quantize;
 use sparsesecagg::shamir;
+use sparsesecagg::testutil;
 use std::time::Instant;
 
 fn median_time<F: FnMut()>(reps: usize, mut f: F) -> f64 {
@@ -72,8 +77,18 @@ struct RecoveryRow {
     excluded: usize,
 }
 
-fn write_bench_json(rows: &[ExecRow], rec: &RecoveryRow, threads: usize)
-                    -> std::io::Result<()> {
+/// The durable-round-journal A/B measurement (journal-off vs journal-on
+/// with snapshot compaction every round, bit-exact aggregates).
+struct JournalRow {
+    n: usize,
+    d: usize,
+    plain_ms: f64,
+    journal_ms: f64,
+    journal_bytes: usize,
+}
+
+fn write_bench_json(rows: &[ExecRow], rec: &RecoveryRow, jr: &JournalRow,
+                    threads: usize) -> std::io::Result<()> {
     use std::fmt::Write as _;
     let mut s = String::new();
     s.push_str("{\n  \"bench\": \"bench_micro/two-tier-executor\",\n");
@@ -100,62 +115,29 @@ fn write_bench_json(rows: &[ExecRow], rec: &RecoveryRow, threads: usize)
         "  \"recovery\": {{\"n\": {}, \"d\": {}, \"honest_ms\": {:.3}, \
          \"byzantine_recovery_ms\": {:.3}, \
          \"recovery_overhead_x\": {:.3}, \"retries\": {}, \
-         \"excluded_users\": {}}}",
+         \"excluded_users\": {}}},",
         rec.n, rec.d, rec.honest_ms, rec.recovery_ms,
         rec.recovery_ms / rec.honest_ms.max(1e-9), rec.retries,
         rec.excluded,
     );
+    let _ = writeln!(
+        s,
+        "  \"journal\": {{\"n\": {}, \"d\": {}, \"plain_ms\": {:.3}, \
+         \"journal_ms\": {:.3}, \"journal_overhead_x\": {:.3}, \
+         \"journal_bytes\": {}}}",
+        jr.n, jr.d, jr.plain_ms, jr.journal_ms,
+        jr.journal_ms / jr.plain_ms.max(1e-9), jr.journal_bytes,
+    );
     s.push_str("}\n");
-    // `cargo bench` runs from the package root (rust/); the trajectory
-    // file lives at the repository root next to ROADMAP.md.
-    let path = if std::path::Path::new("../ROADMAP.md").exists() {
-        "../BENCH_round.json"
-    } else {
-        "BENCH_round.json"
-    };
-    // Trajectory guard: never clobber real measurements with
-    // schema-only zeros (a toolchain-less container run, or a broken
-    // clock). "Real" = any strictly positive ms field in the existing
-    // file; "zeros" = every timing in the new rows is 0.
+    // Zero-clobber guard + repo-root path resolution live in testutil
+    // (shared with scenario_lab): "zeros" = every timing in the new
+    // executor rows is 0.
+    let path = testutil::bench_json_path("BENCH_round.json");
     let new_all_zero = rows.iter().all(|r| {
         r.mono_ms == 0.0 && r.win_ms == 0.0 && r.steal_ms == 0.0
     });
-    if new_all_zero {
-        if let Ok(existing) = std::fs::read_to_string(path) {
-            if json_has_nonzero_ms(&existing) {
-                println!(
-                    "refusing to overwrite {path}: it holds non-zero \
-                     measurements and the new results are schema-only \
-                     zeros"
-                );
-                return Ok(());
-            }
-        }
-    }
-    std::fs::write(path, s)?;
-    println!("wrote {path}");
+    testutil::write_bench_json_guarded(&path, &s, new_all_zero)?;
     Ok(())
-}
-
-/// Does the existing trajectory JSON carry any strictly positive
-/// `*_ms` measurement? (Hand-rolled scan — no serde in the vendored
-/// crate set; the file is machine-written by this bench, so the
-/// `"key": value` shape is stable.)
-fn json_has_nonzero_ms(text: &str) -> bool {
-    let mut rest = text;
-    while let Some(k) = rest.find("_ms\":") {
-        let tail = &rest[k + 5..];
-        let num: String = tail
-            .chars()
-            .skip_while(|c| c.is_whitespace())
-            .take_while(|c| c.is_ascii_digit() || *c == '.' || *c == '-')
-            .collect();
-        if num.parse::<f64>().map(|v| v > 0.0).unwrap_or(false) {
-            return true;
-        }
-        rest = tail;
-    }
-    false
 }
 
 /// Windowed vs work-stealing vs monolithic over the regimes PR 2 is
@@ -266,10 +248,12 @@ fn exec_bench(smoke: bool) -> anyhow::Result<()> {
     }
     println!("{}", t.render());
     let rec = recovery_bench(smoke, reps)?;
+    let jr = journal_bench(smoke, reps)?;
     if smoke {
         println!("BENCH_SMOKE: bit-equality of all three engines asserted \
                   over {} cases; recovery-path A/B equality (honest vs \
-                  byzantine-with-recovery) asserted; timings/JSON \
+                  byzantine-with-recovery) asserted; journal-on == \
+                  journal-off equality asserted; timings/JSON \
                   skipped", rows.len());
     } else {
         if let Some(r) = rows.iter().find(|r| r.name == "many-short-sparse") {
@@ -279,10 +263,63 @@ fn exec_bench(smoke: bool) -> anyhow::Result<()> {
                           r.steal_ms, r.win_ms);
             }
         }
-        write_bench_json(&rows, &rec, threads)
+        write_bench_json(&rows, &rec, &jr, threads)
             .map_err(|e| anyhow::anyhow!("writing BENCH_round.json: {e}"))?;
     }
     Ok(())
+}
+
+/// Durable-round-journal A/B: the same round run journal-off and
+/// journal-on (fsync'd append-only log + snapshot compaction every
+/// round — the worst-case persistence cadence). The aggregates must be
+/// **bit-exactly** equal: journaling is pure observation of the
+/// validated round state and must never perturb the computation. In
+/// smoke mode the equality check is the CI gate; timings land under the
+/// `"journal"` key of `BENCH_round.json` otherwise.
+fn journal_bench(smoke: bool, reps: usize) -> anyhow::Result<JournalRow> {
+    let (n, d) = if smoke { (8usize, 1usize << 10) } else { (24, 1 << 14) };
+    let p = Params { n, d, alpha: 0.2, theta: 0.0, c: 1024.0 };
+    let mut rng = ChaCha20Rng::from_seed_u64(0x10a7);
+    let ys: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..d).map(|_| rng.next_f32() - 0.5).collect())
+        .collect();
+    let betas = vec![1.0 / n as f64; n];
+
+    let mut plain = Coordinator::new_sparse(p, 7);
+    let mut want: Vec<f32> = Vec::new();
+    let plain_ms = median_time(reps, || {
+        want = plain.run_round(0, &ys, &betas, &[]).unwrap().0;
+    }) * 1e3;
+
+    let dir = std::path::Path::new(env!("CARGO_TARGET_TMPDIR"))
+        .join("bench-journal-overhead");
+    let mut journaled = Coordinator::new_sparse(p, 7);
+    let mut got: Vec<f32> = Vec::new();
+    let mut journal_bytes = 0usize;
+    let journal_ms = median_time(reps, || {
+        // Fresh journal per repetition so every timed pass pays the full
+        // cost of one journaled round: meta + setup records, per-frame
+        // appends, the phase-seal fsyncs, and one snapshot compaction.
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut j = Journal::create(&dir).expect("journal create");
+        j.snapshot_every = 1;
+        journaled.attach_journal(j).expect("journal attach");
+        let (agg, ledger) =
+            journaled.run_round(0, &ys, &betas, &[]).unwrap();
+        journal_bytes = ledger.journal_bytes;
+        got = agg;
+    }) * 1e3;
+    assert_eq!(got, want,
+               "journaled round diverged from the journal-off reference");
+    assert!(journal_bytes > 0, "journaled round must report log bytes");
+    let _ = std::fs::remove_dir_all(&dir);
+    println!(
+        "journal A/B (N={n}, d={d}): off {plain_ms:.2} ms, on \
+         {journal_ms:.2} ms ({:.2}x; {journal_bytes} B appended per \
+         round incl. snapshot compaction) — bit-exact",
+        journal_ms / plain_ms.max(1e-9)
+    );
+    Ok(JournalRow { n, d, plain_ms, journal_ms, journal_bytes })
 }
 
 /// Recovery-path A/B over the frame-driven coordinator: the same

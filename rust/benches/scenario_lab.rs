@@ -25,6 +25,7 @@ use sparsesecagg::netsim::{LinkProfile, NetSim, NetSimConfig};
 use sparsesecagg::network::draw_dropouts;
 use sparsesecagg::prg::ChaCha20Rng;
 use sparsesecagg::protocol::Params;
+use sparsesecagg::testutil;
 use std::time::Instant;
 
 /// Baseline WAN for every cell: 100 Mbit/s, 2 ms ± 1 ms.
@@ -340,52 +341,12 @@ fn write_scenarios_json(cells: &[CellResult]) -> std::io::Result<()> {
                          if i + 1 == cells.len() { "" } else { "," });
     }
     s.push_str("  ]\n}\n");
-    // `cargo bench` runs from the package root (rust/); the trajectory
-    // file lives at the repository root next to ROADMAP.md.
-    let path = if std::path::Path::new("../ROADMAP.md").exists() {
-        "../BENCH_scenarios.json"
-    } else {
-        "BENCH_scenarios.json"
-    };
-    // Trajectory guard (mirrors bench_micro's write_bench_json): never
-    // clobber real measurements with schema-only zeros.
+    // Zero-clobber guard + repo-root path resolution live in testutil
+    // (shared with bench_micro's write_bench_json).
+    let path = testutil::bench_json_path("BENCH_scenarios.json");
     let new_all_zero = cells.iter().all(|c| c.wall_ms == 0.0);
-    if new_all_zero {
-        if let Ok(existing) = std::fs::read_to_string(path) {
-            if json_has_nonzero_ms(&existing) {
-                println!(
-                    "refusing to overwrite {path}: it holds non-zero \
-                     measurements and the new results are schema-only \
-                     zeros"
-                );
-                return Ok(());
-            }
-        }
-    }
-    std::fs::write(path, s)?;
-    println!("wrote {path}");
+    testutil::write_bench_json_guarded(&path, &s, new_all_zero)?;
     Ok(())
-}
-
-/// Does the existing trajectory JSON carry any strictly positive
-/// `*_ms` measurement? (Mirror of bench_micro's scan — no serde in the
-/// vendored crate set; the file is machine-written by this bench, so
-/// the `"key": value` shape is stable.)
-fn json_has_nonzero_ms(text: &str) -> bool {
-    let mut rest = text;
-    while let Some(k) = rest.find("_ms\":") {
-        let tail = &rest[k + 5..];
-        let num: String = tail
-            .chars()
-            .skip_while(|c| c.is_whitespace())
-            .take_while(|c| c.is_ascii_digit() || *c == '.' || *c == '-')
-            .collect();
-        if num.parse::<f64>().map(|v| v > 0.0).unwrap_or(false) {
-            return true;
-        }
-        rest = tail;
-    }
-    false
 }
 
 fn main() {

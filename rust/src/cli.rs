@@ -89,6 +89,19 @@ mod tests {
     }
 
     #[test]
+    fn journal_flags_pass_through_verbatim() {
+        // crash-plan values contain colons; journal dirs contain slashes —
+        // neither may be mangled on the way to the config layer.
+        let a = parse(
+            "run --journal_dir run1/journal --journal_snapshot_every 5 \
+             --crash_plan wave-closed:0:torn",
+        );
+        assert_eq!(a.get("journal_dir"), Some("run1/journal"));
+        assert_eq!(a.get("journal_snapshot_every"), Some("5"));
+        assert_eq!(a.get("crash_plan"), Some("wave-closed:0:torn"));
+    }
+
+    #[test]
     fn typed_flags() {
         let a = parse("run --users 25");
         assert_eq!(a.parse_flag("users", 10usize).unwrap(), 25);

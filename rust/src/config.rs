@@ -80,7 +80,8 @@ impl Config {
             "seed", "artifacts_dir", "shard_size", "threads", "executor",
             "byzantine", "max_retries", "rate_limit", "net_latency_s",
             "net_jitter_s", "net_loss", "net_bandwidth_bps",
-            "phase_deadline_s",
+            "phase_deadline_s", "journal_dir", "journal_snapshot_every",
+            "crash_plan",
         ];
         for k in self.values.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -157,6 +158,24 @@ impl Config {
                                           d.net_bandwidth_bps)?,
             phase_deadline_s: self.parse("phase_deadline_s",
                                          d.phase_deadline_s)?,
+            journal_dir: self
+                .get("journal_dir")
+                .unwrap_or(&d.journal_dir)
+                .to_string(),
+            journal_snapshot_every: self.parse("journal_snapshot_every",
+                                               d.journal_snapshot_every)?,
+            crash_plan: {
+                let p = self
+                    .get("crash_plan")
+                    .unwrap_or(&d.crash_plan)
+                    .to_string();
+                if !p.is_empty() {
+                    crate::journal::CrashPlan::parse(&p).map_err(|e| {
+                        anyhow::anyhow!("config key crash_plan={p}: {e}")
+                    })?;
+                }
+                p
+            },
         })
     }
 }
@@ -259,6 +278,30 @@ mod tests {
         assert!(c.to_fl_config().is_err());
         let mut c = Config::default();
         c.set("net_loss", "-0.1");
+        assert!(c.to_fl_config().is_err());
+    }
+
+    #[test]
+    fn journal_knobs_parse_with_defaults_and_validation() {
+        let fl = Config::default().to_fl_config().unwrap();
+        assert_eq!(fl.journal_dir, "");
+        assert_eq!(fl.journal_snapshot_every, 0);
+        assert_eq!(fl.crash_plan, "");
+        let mut c = Config::default();
+        c.set("journal_dir", "run1/journal");
+        c.set("journal_snapshot_every", "5");
+        c.set("crash_plan", "wave-closed:0:before");
+        let fl = c.to_fl_config().unwrap();
+        assert_eq!(fl.journal_dir, "run1/journal");
+        assert_eq!(fl.journal_snapshot_every, 5);
+        assert_eq!(fl.crash_plan, "wave-closed:0:before");
+        // A malformed crash plan is rejected at config time, not at
+        // round time.
+        let mut c = Config::default();
+        c.set("crash_plan", "upload:after");
+        assert!(c.to_fl_config().is_err());
+        let mut c = Config::default();
+        c.set("journal_snapshot_every", "often");
         assert!(c.to_fl_config().is_err());
     }
 

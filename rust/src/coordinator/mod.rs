@@ -49,6 +49,7 @@
 
 use crate::adversary::Adversary;
 use crate::exec::{ExecMode, Executor};
+use crate::journal::{Journal, Record, RoundReplay};
 use crate::network::{LinkModel, RoundLedger};
 use crate::protocol::messages::*;
 use crate::protocol::shard::{ShardConfig, DEFAULT_SHARD_SIZE};
@@ -134,6 +135,12 @@ pub struct Coordinator {
     exec: Option<Executor>,
     /// The byte bus every protocol frame travels on (setup and rounds).
     bus: Box<dyn Transport>,
+    /// The setup entropy the cohort was built from — journaled so a
+    /// restarted process can rebuild the (stateless-after-setup) users
+    /// deterministically.
+    entropy: u64,
+    /// Durable round journal ([`crate::journal`]); `None` = off.
+    journal: Option<Journal>,
 }
 
 fn default_threads(n: usize) -> usize {
@@ -208,74 +215,161 @@ macro_rules! finish_round_checked_dispatch {
 /// phase with `$wave_budget` simulated seconds of deadline — frames
 /// that missed the previous phase surface here and are rejected by the
 /// ingest state machine as phase-confused.
+///
+/// Crash recovery ([`crate::journal`]): journaled waves in `$rp_waves`
+/// are replayed first — validated responses re-enter the same ingest
+/// path, billing comes from each wave's sealed snapshot, and a sealed
+/// wave's pending responses feed the recovery decision exactly as they
+/// would have live. A wave with no `WaveClosed` seal was torn by the
+/// crash and is redone live from scratch (it never billed, so the
+/// one-request-per-survivor download accounting stays exact). Live
+/// waves append `WaveSolicited`/`Response`/`WaveClosed`/`Excluded`
+/// records and fsync at the seal points; with `$rp_completed` the
+/// finish recomputes a durably completed round's aggregate without
+/// re-journaling its completion.
 macro_rules! run_unmask_with_recovery {
     ($server:expr, $users:expr, $bus:expr, $ledger:expr, $adv:expr,
      $limiter:expr, $capture:expr, $params:expr, $kind:expr, $n:expr,
      $shard_cfg:expr, $mode:expr, $exec:expr, $round:expr,
-     $max_retries:expr, $wave_budget:expr, $resp_waves:expr) => {{
+     $max_retries:expr, $wave_budget:expr, $resp_waves:expr,
+     $journal:expr, $rp_waves:expr, $rp_completed:expr) => {{
         $server.close_uploads();
         let mut retries = 0usize;
         let mut first_wave = true;
-        loop {
-            // --- open this wave's delivery window (releases any frames
-            // that missed the previous phase's deadline into a phase
-            // where ingest will reject them).
-            $bus.open_phase($wave_budget);
-            // --- solicit one wave from the current survivor set.
-            let req = $server.unmask_request();
-            let req_buf = wire::encode_unmask_request(&req);
-            debug_assert_eq!(req_buf.len(), req.wire_bytes());
-            for &j in &req.survivors {
-                $bus.to_client(j, req_buf.clone());
-            }
-            let mut honest_resp: Vec<(usize, Vec<u8>)> = Vec::new();
-            let mut wave_down = 0usize;
-            for u in $users.iter() {
-                while let Some(fbuf) = $bus.client_recv(u.id) {
-                    $ledger.record_download(u.id, fbuf.len());
-                    wave_down += fbuf.len();
-                    let req = wire::decode_unmask_request(&fbuf)?;
-                    let mut resp = u.respond_unmask(&req);
-                    if let Some(a) = $adv.as_deref_mut() {
-                        // Two-faced survivors poison every wave until
-                        // they are excluded.
-                        a.corrupt_response(u.id, &mut resp);
-                    }
-                    let out = wire::encode_unmask_response(&resp);
-                    debug_assert_eq!(out.len(), resp.wire_bytes());
-                    if $capture && first_wave {
-                        honest_resp.push((u.id, out.clone()));
-                    }
-                    $bus.to_server(u.id, out);
+        // --- replay journaled waves (empty unless resuming).
+        let mut pending: Option<Vec<UnmaskResponse>> = None;
+        for rw in $rp_waves {
+            let Some(bill) = rw.closed else {
+                // Torn wave: discarded wholesale, redone live below.
+                continue;
+            };
+            for (from, frame) in &rw.responses {
+                if *from < $n {
+                    $ledger.record_upload(*from, frame.len());
                 }
-            }
-            if first_wave {
-                if let Some(a) = $adv.as_deref_mut() {
-                    a.inject_responses($bus, &$params, $kind, &req,
-                                       &honest_resp);
-                }
-            }
-            first_wave = false;
-            // --- drain: bill bytes, shed past-budget senders BEFORE
-            // decode, ingest the rest through the state machine.
-            let mut wave_sizes: Vec<usize> = Vec::new();
-            while let Some((from, buf)) = $bus.server_recv() {
-                wave_sizes.push(buf.len());
-                if from < $n {
-                    $ledger.record_upload(from, buf.len());
-                }
-                if let Some(l) = $limiter.as_mut() {
-                    if !l.admit(from) {
-                        $ledger.record_rate_limited();
-                        continue;
-                    }
-                }
-                if let Err(e) = $server.ingest_frame(from, &buf) {
+                $ledger.replayed_frames += 1;
+                if let Err(e) = $server.ingest_frame(*from, frame) {
                     $ledger.record_reject(&e);
                 }
             }
-            $resp_waves.push((wave_down, wave_sizes));
+            for (&r, &db) in
+                bill.recipients.iter().zip(&bill.down_per_recipient)
+            {
+                $ledger.record_download(r, db);
+            }
+            let down: usize = bill.down_per_recipient.iter().sum();
+            $resp_waves.push((down, bill.sizes));
             let responses = $server.take_responses();
+            // Geometry flags raised during replay re-identify the same
+            // equivocators the crashed process saw; the journaled
+            // exclusion (if the crash came after it) is authoritative.
+            let _ = $server.take_flagged_equivocators();
+            match rw.excluded_after {
+                Some(exc) => {
+                    retries += 1;
+                    $server.exclude_survivors(&exc);
+                    $ledger.record_recovery(&exc);
+                    pending = None;
+                }
+                None => pending = Some(responses),
+            }
+            first_wave = false;
+        }
+        loop {
+            let responses = match pending.take() {
+                Some(r) => r,
+                None => {
+                    // --- open this wave's delivery window (releases any
+                    // frames that missed the previous phase's deadline
+                    // into a phase where ingest will reject them).
+                    $bus.open_phase($wave_budget);
+                    // --- solicit one wave from the current survivors.
+                    let req = $server.unmask_request();
+                    let req_buf = wire::encode_unmask_request(&req);
+                    debug_assert_eq!(req_buf.len(), req.wire_bytes());
+                    if let Some(j) = $journal.as_mut() {
+                        j.append(&Record::WaveSolicited {
+                            survivors: req.survivors.iter()
+                                .map(|&s| s as u32).collect(),
+                        })?;
+                    }
+                    for &j in &req.survivors {
+                        $bus.to_client(j, req_buf.clone());
+                    }
+                    let mut honest_resp: Vec<(usize, Vec<u8>)> =
+                        Vec::new();
+                    let mut recipients: Vec<u32> = Vec::new();
+                    let mut down_per: Vec<u32> = Vec::new();
+                    let mut wave_down = 0usize;
+                    for u in $users.iter() {
+                        while let Some(fbuf) = $bus.client_recv(u.id) {
+                            $ledger.record_download(u.id, fbuf.len());
+                            recipients.push(u.id as u32);
+                            down_per.push(fbuf.len() as u32);
+                            wave_down += fbuf.len();
+                            let req = wire::decode_unmask_request(&fbuf)?;
+                            let mut resp = u.respond_unmask(&req);
+                            if let Some(a) = $adv.as_deref_mut() {
+                                // Two-faced survivors poison every wave
+                                // until they are excluded.
+                                a.corrupt_response(u.id, &mut resp);
+                            }
+                            let out = wire::encode_unmask_response(&resp);
+                            debug_assert_eq!(out.len(), resp.wire_bytes());
+                            if $capture && first_wave {
+                                honest_resp.push((u.id, out.clone()));
+                            }
+                            $bus.to_server(u.id, out);
+                        }
+                    }
+                    if first_wave {
+                        if let Some(a) = $adv.as_deref_mut() {
+                            a.inject_responses($bus, &$params, $kind, &req,
+                                               &honest_resp);
+                        }
+                    }
+                    first_wave = false;
+                    // --- drain: bill bytes, shed past-budget senders
+                    // BEFORE decode, ingest the rest through the state
+                    // machine. Only frames that pass ingest reach the
+                    // journal.
+                    let mut wave_sizes: Vec<usize> = Vec::new();
+                    while let Some((from, buf)) = $bus.server_recv() {
+                        wave_sizes.push(buf.len());
+                        if from < $n {
+                            $ledger.record_upload(from, buf.len());
+                        }
+                        if let Some(l) = $limiter.as_mut() {
+                            if !l.admit(from) {
+                                $ledger.record_rate_limited();
+                                continue;
+                            }
+                        }
+                        match $server.ingest_frame(from, &buf) {
+                            Ok(()) => {
+                                if let Some(j) = $journal.as_mut() {
+                                    j.append(&Record::Response {
+                                        from: from as u32,
+                                        frame: buf,
+                                    })?;
+                                }
+                            }
+                            Err(e) => $ledger.record_reject(&e),
+                        }
+                    }
+                    if let Some(j) = $journal.as_mut() {
+                        j.append(&Record::WaveClosed {
+                            recipients,
+                            down_per_recipient: down_per,
+                            sizes: wave_sizes.iter()
+                                .map(|&s| s as u32).collect(),
+                        })?;
+                        j.sync()?;
+                    }
+                    $resp_waves.push((wave_down, wave_sizes));
+                    $server.take_responses()
+                }
+            };
             // --- recovery decision.
             let flagged = $server.take_flagged_equivocators();
             let culprits = if !flagged.is_empty() {
@@ -285,14 +379,35 @@ macro_rules! run_unmask_with_recovery {
                     $server, $ledger, $shard_cfg, $mode, $exec, $round,
                     &responses)
                 {
-                    Ok(agg) => break agg,
+                    Ok(agg) => {
+                        if !$rp_completed {
+                            if let Some(j) = $journal.as_mut() {
+                                j.append(&Record::RoundComplete {
+                                    round: $round,
+                                })?;
+                                j.sync()?;
+                            }
+                        }
+                        break agg;
+                    }
                     Err(FinishError::Equivocation(rep)) => {
                         rep.equivocators
                     }
-                    Err(e) => return Err(e.into()),
+                    Err(e) => {
+                        // Fatal finish: leave the journal durably synced
+                        // behind (graceful-shutdown contract) before the
+                        // typed error propagates.
+                        if let Some(j) = $journal.as_mut() {
+                            let _ = j.sync();
+                        }
+                        return Err(e.into());
+                    }
                 }
             };
             if retries >= $max_retries {
+                if let Some(j) = $journal.as_mut() {
+                    let _ = j.sync();
+                }
                 return Err(anyhow::anyhow!(
                     "round unrecoverable: equivocators {:?} identified \
                      with max_retries = {} exhausted",
@@ -301,6 +416,12 @@ macro_rules! run_unmask_with_recovery {
             retries += 1;
             $server.exclude_survivors(&culprits);
             $ledger.record_recovery(&culprits);
+            if let Some(j) = $journal.as_mut() {
+                j.append(&Record::Excluded {
+                    users: culprits.iter().map(|&u| u as u32).collect(),
+                })?;
+                j.sync()?;
+            }
             // Replenish the per-sender budgets for the re-solicited
             // wave: recovery must not starve itself against a limiter
             // sized for the honest upload + one response. A flooder
@@ -418,6 +539,8 @@ impl Coordinator {
             deadlines: None,
             exec: None,
             bus,
+            entropy,
+            journal: None,
         }
     }
 
@@ -500,6 +623,8 @@ impl Coordinator {
             deadlines: None,
             exec: None,
             bus,
+            entropy,
+            journal: None,
         }
     }
 
@@ -546,7 +671,25 @@ impl Coordinator {
     /// MaskedInput. Returns the dequantized aggregate and the ledger.
     pub fn run_round(&mut self, round: u32, ys: &[Vec<f32>], betas: &[f64],
                      dropped: &[usize]) -> Result<(Vec<f32>, RoundLedger)> {
-        self.run_round_frames(round, ys, betas, dropped, None)
+        self.run_round_frames(round, ys, betas, dropped, None, None)
+    }
+
+    /// Resume the in-flight round a reconstructed coordinator
+    /// ([`Self::from_journal`]) found in its journal: journaled
+    /// validated frames are replayed through the ingest state machine
+    /// (billing from the sealed snapshots), then the round continues
+    /// live from the exact pre-crash phase — re-soliciting only what
+    /// was never durably received. For honest cohorts the resumed
+    /// round's aggregate, per-user byte ledger, and simulated clock are
+    /// bit-exactly those of the uninterrupted run (the crash-restart
+    /// differential suite pins this). `ys`/`betas`/`dropped` must be
+    /// what the crashed round ran with — they are deterministic
+    /// functions of the run seed, not journaled state.
+    pub fn resume_round(&mut self, replay: RoundReplay, ys: &[Vec<f32>],
+                        betas: &[f64], dropped: &[usize])
+                        -> Result<(Vec<f32>, RoundLedger)> {
+        let round = replay.round;
+        self.run_round_frames(round, ys, betas, dropped, None, Some(replay))
     }
 
     /// [`Self::run_round`] under attack: `adv`'s silenced byzantine
@@ -566,12 +709,13 @@ impl Coordinator {
                                  betas: &[f64], dropped: &[usize],
                                  adv: &mut Adversary)
                                  -> Result<(Vec<f32>, RoundLedger)> {
-        self.run_round_frames(round, ys, betas, dropped, Some(adv))
+        self.run_round_frames(round, ys, betas, dropped, Some(adv), None)
     }
 
     fn run_round_frames(&mut self, round: u32, ys: &[Vec<f32>],
                         betas: &[f64], dropped: &[usize],
-                        mut adv: Option<&mut Adversary>)
+                        mut adv: Option<&mut Adversary>,
+                        replay: Option<RoundReplay>)
                         -> Result<(Vec<f32>, RoundLedger)> {
         let params = self.params;
         let n = params.n;
@@ -604,9 +748,31 @@ impl Coordinator {
         let active: Vec<bool> = (0..n)
             .map(|i| !dropped.contains(&i) && !silenced[i])
             .collect();
-        let Coordinator { cohort, exec, bus, .. } = &mut *self;
+        let Coordinator { cohort, exec, bus, journal, .. } = &mut *self;
         let exec = exec.as_ref().expect("executor initialized");
         let bus: &mut dyn Transport = bus.as_mut();
+        // --- crash recovery: split the replay (if any) into its parts
+        // and record how far the journal carried this round.
+        if let Some(r) = &replay {
+            ledger.resumed_phase = Some(if r.completed {
+                "complete"
+            } else if r.uploads_closed.is_some() {
+                "unmasking"
+            } else {
+                "collecting"
+            });
+        }
+        if replay.is_none() {
+            if let Some(j) = journal.as_mut() {
+                j.append(&Record::RoundStart { round })?;
+            }
+        }
+        let (rp_uploads, rp_uploads_closed, rp_waves, rp_completed) =
+            match replay {
+                Some(r) => (r.uploads, r.uploads_closed, r.waves,
+                            r.completed),
+                None => (Vec::new(), None, Vec::new(), false),
+            };
         // Round boundary first (a delaying transport expires any frames
         // still in flight from the previous round — the wire format has
         // no round id, so they must never surface here), then the
@@ -617,49 +783,95 @@ impl Coordinator {
         let (agg, upload_bytes, resp_waves) = match cohort {
             Cohort::Sparse { users, server } => {
                 server.begin_round();
-                // --- MaskedInput compute: one tier-1 executor task per
-                // active user, on the worker's kept-zeroed arena.
-                let t0 = Instant::now();
-                let (uploads, cstats) = compute_sparse_uploads(
-                    users, exec, params, round, ys, betas, &active);
-                ledger.client_compute_s += t0.elapsed().as_secs_f64();
-                ledger.record_client_phase(cstats.tasks, cstats.steals);
-
-                // --- MaskedInput frames onto the transport. The
-                // `honest` capture (replay/spoof material for the
-                // adversary) is only copied when there IS an adversary —
-                // the honest path moves each frame exactly once.
+                // --- crash recovery: re-ingest journaled validated
+                // uploads through the same state machine live traffic
+                // takes, before any live collection.
+                let mut upload_bytes = vec![0usize; n];
+                let mut already = vec![false; n];
+                for (from, frame) in &rp_uploads {
+                    if *from < n {
+                        already[*from] = true;
+                        upload_bytes[*from] += frame.len();
+                    }
+                    ledger.replayed_frames += 1;
+                    if let Err(e) = server.ingest_frame(*from, frame) {
+                        ledger.record_reject(&e);
+                    }
+                }
                 let ts = Instant::now();
                 let capture = adv.is_some();
-                let mut honest: Vec<(usize, Vec<u8>)> = Vec::new();
-                for up in uploads.into_iter().flatten() {
-                    let buf = wire::encode_sparse_upload(&up);
-                    debug_assert_eq!(buf.len(), up.wire_bytes());
-                    if capture {
-                        honest.push((up.id, buf.clone()));
+                if let Some(snap) = &rp_uploads_closed {
+                    // The collecting phase was durably sealed pre-crash:
+                    // its billing snapshot is authoritative (it also
+                    // carries bytes of billed-but-rejected traffic,
+                    // which is never journaled).
+                    for (b, &s) in upload_bytes.iter_mut().zip(snap) {
+                        *b = s;
                     }
-                    bus.to_server(up.id, buf);
-                }
-                if let Some(a) = adv.as_deref_mut() {
-                    a.inject_uploads(bus, &params, kind, &honest);
-                }
-                // --- Server ingest: shed past-budget senders before
-                // decode, validate every admitted frame. Rejected and
-                // shed frames are dropped but still billed to the
-                // endpoint that sent them.
-                let mut upload_bytes = vec![0usize; n];
-                while let Some((from, buf)) = bus.server_recv() {
-                    if from < n {
-                        upload_bytes[from] += buf.len();
+                } else {
+                    // --- MaskedInput compute for what was never durably
+                    // received: one tier-1 executor task per live user,
+                    // on the worker's kept-zeroed arena.
+                    let live: Vec<bool> = (0..n)
+                        .map(|i| active[i] && !already[i])
+                        .collect();
+                    let t0 = Instant::now();
+                    let (uploads, cstats) = compute_sparse_uploads(
+                        users, exec, params, round, ys, betas, &live);
+                    ledger.client_compute_s += t0.elapsed().as_secs_f64();
+                    ledger.record_client_phase(cstats.tasks, cstats.steals);
+                    // --- MaskedInput frames onto the transport. The
+                    // `honest` capture (replay/spoof material for the
+                    // adversary) is only copied when there IS an
+                    // adversary — the honest path moves each frame
+                    // exactly once.
+                    let mut honest: Vec<(usize, Vec<u8>)> = Vec::new();
+                    for up in uploads.into_iter().flatten() {
+                        let buf = wire::encode_sparse_upload(&up);
+                        debug_assert_eq!(buf.len(), up.wire_bytes());
+                        if capture {
+                            honest.push((up.id, buf.clone()));
+                        }
+                        bus.to_server(up.id, buf);
                     }
-                    if let Some(l) = limiter.as_mut() {
-                        if !l.admit(from) {
-                            ledger.record_rate_limited();
-                            continue;
+                    if let Some(a) = adv.as_deref_mut() {
+                        a.inject_uploads(bus, &params, kind, &honest);
+                    }
+                    // --- Server ingest: shed past-budget senders before
+                    // decode, validate every admitted frame. Rejected
+                    // and shed frames are dropped but still billed to
+                    // the endpoint that sent them; only validated
+                    // frames reach the journal.
+                    while let Some((from, buf)) = bus.server_recv() {
+                        if from < n {
+                            upload_bytes[from] += buf.len();
+                        }
+                        if let Some(l) = limiter.as_mut() {
+                            if !l.admit(from) {
+                                ledger.record_rate_limited();
+                                continue;
+                            }
+                        }
+                        match server.ingest_frame(from, &buf) {
+                            Ok(()) => {
+                                if let Some(j) = journal.as_mut() {
+                                    j.append(&Record::Upload {
+                                        from: from as u32,
+                                        frame: buf,
+                                    })?;
+                                }
+                            }
+                            Err(e) => ledger.record_reject(&e),
                         }
                     }
-                    if let Err(e) = server.ingest_frame(from, &buf) {
-                        ledger.record_reject(&e);
+                    // Seal the collecting phase with its billing
+                    // snapshot (fsync point).
+                    if let Some(j) = journal.as_mut() {
+                        j.append(&Record::UploadsClosed {
+                            upload_bytes: upload_bytes.iter()
+                                .map(|&b| b as u64).collect(),
+                        })?;
+                        j.sync()?;
                     }
                 }
                 // --- Unmask with equivocator-exclusion recovery.
@@ -667,52 +879,88 @@ impl Coordinator {
                 let agg = run_unmask_with_recovery!(
                     server, users, bus, ledger, adv, limiter, capture,
                     params, kind, n, shard_cfg, mode, exec, round,
-                    max_retries, wave_budget, resp_waves);
+                    max_retries, wave_budget, resp_waves,
+                    journal, rp_waves, rp_completed);
                 ledger.server_compute_s += ts.elapsed().as_secs_f64();
                 (agg, upload_bytes, resp_waves)
             }
             Cohort::SecAgg { users, server } => {
                 server.begin_round();
-                let t0 = Instant::now();
-                let (uploads, cstats) = compute_secagg_uploads(
-                    users, exec, params, round, ys, betas, &active);
-                ledger.client_compute_s += t0.elapsed().as_secs_f64();
-                ledger.record_client_phase(cstats.tasks, cstats.steals);
-
+                let mut upload_bytes = vec![0usize; n];
+                let mut already = vec![false; n];
+                for (from, frame) in &rp_uploads {
+                    if *from < n {
+                        already[*from] = true;
+                        upload_bytes[*from] += frame.len();
+                    }
+                    ledger.replayed_frames += 1;
+                    if let Err(e) = server.ingest_frame(*from, frame) {
+                        ledger.record_reject(&e);
+                    }
+                }
                 let ts = Instant::now();
                 let capture = adv.is_some();
-                let mut honest: Vec<(usize, Vec<u8>)> = Vec::new();
-                for up in uploads.into_iter().flatten() {
-                    let buf = wire::encode_dense_upload(&up);
-                    debug_assert_eq!(buf.len(), up.wire_bytes());
-                    if capture {
-                        honest.push((up.id, buf.clone()));
+                if let Some(snap) = &rp_uploads_closed {
+                    for (b, &s) in upload_bytes.iter_mut().zip(snap) {
+                        *b = s;
                     }
-                    bus.to_server(up.id, buf);
-                }
-                if let Some(a) = adv.as_deref_mut() {
-                    a.inject_uploads(bus, &params, kind, &honest);
-                }
-                let mut upload_bytes = vec![0usize; n];
-                while let Some((from, buf)) = bus.server_recv() {
-                    if from < n {
-                        upload_bytes[from] += buf.len();
+                } else {
+                    let live: Vec<bool> = (0..n)
+                        .map(|i| active[i] && !already[i])
+                        .collect();
+                    let t0 = Instant::now();
+                    let (uploads, cstats) = compute_secagg_uploads(
+                        users, exec, params, round, ys, betas, &live);
+                    ledger.client_compute_s += t0.elapsed().as_secs_f64();
+                    ledger.record_client_phase(cstats.tasks, cstats.steals);
+                    let mut honest: Vec<(usize, Vec<u8>)> = Vec::new();
+                    for up in uploads.into_iter().flatten() {
+                        let buf = wire::encode_dense_upload(&up);
+                        debug_assert_eq!(buf.len(), up.wire_bytes());
+                        if capture {
+                            honest.push((up.id, buf.clone()));
+                        }
+                        bus.to_server(up.id, buf);
                     }
-                    if let Some(l) = limiter.as_mut() {
-                        if !l.admit(from) {
-                            ledger.record_rate_limited();
-                            continue;
+                    if let Some(a) = adv.as_deref_mut() {
+                        a.inject_uploads(bus, &params, kind, &honest);
+                    }
+                    while let Some((from, buf)) = bus.server_recv() {
+                        if from < n {
+                            upload_bytes[from] += buf.len();
+                        }
+                        if let Some(l) = limiter.as_mut() {
+                            if !l.admit(from) {
+                                ledger.record_rate_limited();
+                                continue;
+                            }
+                        }
+                        match server.ingest_frame(from, &buf) {
+                            Ok(()) => {
+                                if let Some(j) = journal.as_mut() {
+                                    j.append(&Record::Upload {
+                                        from: from as u32,
+                                        frame: buf,
+                                    })?;
+                                }
+                            }
+                            Err(e) => ledger.record_reject(&e),
                         }
                     }
-                    if let Err(e) = server.ingest_frame(from, &buf) {
-                        ledger.record_reject(&e);
+                    if let Some(j) = journal.as_mut() {
+                        j.append(&Record::UploadsClosed {
+                            upload_bytes: upload_bytes.iter()
+                                .map(|&b| b as u64).collect(),
+                        })?;
+                        j.sync()?;
                     }
                 }
                 let mut resp_waves: Vec<(usize, Vec<usize>)> = Vec::new();
                 let agg = run_unmask_with_recovery!(
                     server, users, bus, ledger, adv, limiter, capture,
                     params, kind, n, shard_cfg, mode, exec, round,
-                    max_retries, wave_budget, resp_waves);
+                    max_retries, wave_budget, resp_waves,
+                    journal, rp_waves, rp_completed);
                 ledger.server_compute_s += ts.elapsed().as_secs_f64();
                 (agg, upload_bytes, resp_waves)
             }
@@ -749,7 +997,129 @@ impl Coordinator {
         ledger.advance_named_phase("broadcast", &self.link, &bcast_sizes,
                                    0, down_total);
 
+        // --- journal upkeep: periodic snapshot compaction (the round
+        // is durably complete, so its records can collapse into a
+        // snapshot prefix), then per-round byte accounting.
+        let compact_now = self.journal.as_ref().is_some_and(|j| {
+            j.snapshot_every > 0 && (round + 1) % j.snapshot_every == 0
+        });
+        if compact_now {
+            let prefix = self.journal_prefix(round);
+            self.journal.as_mut().unwrap().compact(&prefix)?;
+        }
+        if let Some(j) = self.journal.as_mut() {
+            ledger.journal_bytes = j.take_round_bytes();
+        }
+
         Ok((agg, ledger))
+    }
+
+    /// Attach a durable round journal: writes the `Meta` +
+    /// `SetupComplete` prefix (cohort identity + roster integrity
+    /// anchor) and syncs it. Subsequent rounds append their validated
+    /// state; see [`crate::journal`] for the durability model.
+    pub fn attach_journal(&mut self, mut j: Journal) -> Result<()> {
+        j.append(&self.meta_record())?;
+        j.append(&Record::SetupComplete {
+            roster: self.roster().to_vec(),
+        })?;
+        j.sync()?;
+        // Setup records are attach-time cost, not round traffic.
+        let _ = j.take_round_bytes();
+        self.journal = Some(j);
+        Ok(())
+    }
+
+    /// The attached journal, if any (tests arm [`crate::journal::CrashPlan`]s
+    /// through this).
+    pub fn journal_mut(&mut self) -> Option<&mut Journal> {
+        self.journal.as_mut()
+    }
+
+    /// Best-effort journal fsync — the graceful-shutdown hook
+    /// ([`crate::fl::request_shutdown`] / fatal-error exits).
+    pub fn sync_journal(&mut self) {
+        if let Some(j) = self.journal.as_mut() {
+            let _ = j.sync();
+        }
+    }
+
+    /// Reconstruct a coordinator (and the in-flight round's replay, if
+    /// one was journaled) from a journal directory, on an in-memory
+    /// bus. See [`Self::from_journal_on`].
+    pub fn from_journal(dir: &std::path::Path)
+                        -> Result<(Self, Option<RoundReplay>)> {
+        Self::from_journal_on(dir, |n| Box::new(InMemoryBus::new(n)))
+    }
+
+    /// Reconstruct from a journal on a caller-supplied transport (the
+    /// restarted process may be behind a different network). Opens the
+    /// journal (truncating any torn tail), rebuilds the cohort
+    /// deterministically from the journaled entropy, verifies the
+    /// rebuilt roster against the journaled `SetupComplete` anchor,
+    /// and installs the journaled roster through the servers'
+    /// `from_journal` constructors. The returned [`RoundReplay`] (if
+    /// any) feeds [`Self::resume_round`]; `replay.completed` means the
+    /// last round finished durably and resuming it merely recomputes
+    /// its aggregate.
+    pub fn from_journal_on(
+        dir: &std::path::Path,
+        mk_bus: impl FnOnce(usize) -> Box<dyn Transport>,
+    ) -> Result<(Self, Option<RoundReplay>)> {
+        let (j, records, _torn) = Journal::open(dir)?;
+        let st = crate::journal::parse_state(&records)?;
+        let params = st.params;
+        let mut coord = match st.kind {
+            0 => Self::new_sparse_on(params, st.entropy, mk_bus(params.n)),
+            1 => Self::new_secagg_on(params, st.entropy, mk_bus(params.n)),
+            k => anyhow::bail!("journal meta: unknown protocol kind {k}"),
+        };
+        anyhow::ensure!(
+            coord.roster() == &st.roster[..],
+            "journal roster mismatch: the deterministic setup rebuild \
+             disagrees with the journaled SetupComplete anchor");
+        match &mut coord.cohort {
+            Cohort::Sparse { server, .. } => {
+                *server = sparse::Server::from_journal(params, st.roster);
+            }
+            Cohort::SecAgg { server, .. } => {
+                *server = secagg::Server::from_journal(params, st.roster);
+            }
+        }
+        coord.journal = Some(j);
+        Ok((coord, st.replay))
+    }
+
+    fn meta_record(&self) -> Record {
+        Record::Meta {
+            kind: match self.kind() {
+                ProtocolKind::Sparse => 0,
+                ProtocolKind::SecAgg => 1,
+            },
+            n: self.params.n as u32,
+            d: self.params.d as u32,
+            alpha: self.params.alpha,
+            theta: self.params.theta,
+            c: self.params.c,
+            entropy: self.entropy,
+        }
+    }
+
+    fn roster(&self) -> &[u64] {
+        match &self.cohort {
+            Cohort::Sparse { server, .. } => server.roster(),
+            Cohort::SecAgg { server, .. } => server.roster(),
+        }
+    }
+
+    /// The compacted-journal prefix: identity, roster anchor, and the
+    /// snapshot watermark.
+    fn journal_prefix(&self, through_round: u32) -> Vec<Record> {
+        vec![
+            self.meta_record(),
+            Record::SetupComplete { roster: self.roster().to_vec() },
+            Record::Snapshot { through_round },
+        ]
     }
 
     /// Simulated seconds the round transport has spent delivering

@@ -104,6 +104,18 @@ pub struct FlConfig {
     /// traffic. Late frames degrade to the dropout path. Only
     /// meaningful together with a nonzero `net_*` knob.
     pub phase_deadline_s: f64,
+    /// Directory for the durable round journal ([`crate::journal`]):
+    /// validated round state is logged there so a crashed run can be
+    /// resumed bit-exactly. Empty = journaling off.
+    pub journal_dir: String,
+    /// Compact the journal (snapshot + truncate) every this many
+    /// completed rounds; 0 = never compact.
+    pub journal_snapshot_every: u32,
+    /// Crash-fault injection point, `site:ordinal:mode`
+    /// ([`crate::journal::CrashPlan`]); empty = off. A test knob: the
+    /// run dies at that journal site with a typed error, leaving a
+    /// resumable journal behind.
+    pub crash_plan: String,
 }
 
 impl Default for FlConfig {
@@ -141,6 +153,9 @@ impl Default for FlConfig {
             net_loss: 0.0,
             net_bandwidth_bps: 0.0,
             phase_deadline_s: 0.0,
+            journal_dir: String::new(),
+            journal_snapshot_every: 0,
+            crash_plan: String::new(),
         }
     }
 }
@@ -167,6 +182,36 @@ pub struct FlRun {
     pub history: Vec<RoundRecord>,
     pub reached_target_at: Option<usize>,
     pub final_accuracy: f64,
+    /// `Some("interrupted")` when the run stopped early because
+    /// [`request_shutdown`] was called; the journal (if attached) was
+    /// flushed and synced first, so the run is resumable. `None` for
+    /// runs that completed normally.
+    pub halted: Option<&'static str>,
+}
+
+/// Cooperative shutdown flag for [`run_fl`]. The round loop polls it at
+/// every round boundary and exits gracefully — journal flushed and
+/// fsynced, typed `halted` marker in the result — instead of tearing
+/// down mid-append. The vendored crate set has no signal-handling
+/// dependency, so the embedder is expected to wire its SIGINT/SIGTERM
+/// handler to [`request_shutdown`]; the "signal during append" case is
+/// covered by the crash injector's `Torn` mode, which models exactly a
+/// kill that catches a write half-done.
+static SHUTDOWN: std::sync::atomic::AtomicBool =
+    std::sync::atomic::AtomicBool::new(false);
+
+/// Ask the running [`run_fl`] loop to stop at the next round boundary.
+pub fn request_shutdown() {
+    SHUTDOWN.store(true, std::sync::atomic::Ordering::SeqCst);
+}
+
+/// Clear the shutdown flag (tests; a fresh run after a handled stop).
+pub fn clear_shutdown() {
+    SHUTDOWN.store(false, std::sync::atomic::Ordering::SeqCst);
+}
+
+fn shutdown_requested() -> bool {
+    SHUTDOWN.load(std::sync::atomic::Ordering::SeqCst)
 }
 
 /// Drive a full federated training run.
@@ -244,6 +289,19 @@ pub fn run_fl(cfg: &FlConfig, trainer: &Trainer) -> Result<FlRun> {
     if cfg.threads > 0 {
         coord.threads = cfg.threads;
     }
+    if !cfg.journal_dir.is_empty() {
+        let mut j = crate::journal::Journal::create(
+            std::path::Path::new(&cfg.journal_dir))
+            .map_err(|e| anyhow::anyhow!(
+                "creating journal in {}: {e}", cfg.journal_dir))?;
+        j.snapshot_every = cfg.journal_snapshot_every;
+        if !cfg.crash_plan.is_empty() {
+            j.set_crash_plan(
+                crate::journal::CrashPlan::parse(&cfg.crash_plan)
+                    .map_err(|e| anyhow::anyhow!("crash_plan: {e}"))?);
+        }
+        coord.attach_journal(j)?;
+    }
 
     let mut global = trainer.init_params(cfg.seed ^ 0x1417);
     let mut history = Vec::new();
@@ -293,7 +351,15 @@ pub fn run_fl(cfg: &FlConfig, trainer: &Trainer) -> Result<FlRun> {
         }, t_guarantee)
     });
 
+    let mut halted = None;
     for round in 0..cfg.rounds {
+        // Cooperative interrupt: stop at the round boundary with the
+        // journal durably synced, never mid-append.
+        if shutdown_requested() {
+            coord.sync_journal();
+            halted = Some("interrupted");
+            break;
+        }
         let mut dropped =
             draw_dropouts(n, cfg.theta, round as u32, cfg.seed, true);
         // Client sampling (complementary user selection, §II): unsampled
@@ -344,17 +410,28 @@ pub fn run_fl(cfg: &FlConfig, trainer: &Trainer) -> Result<FlRun> {
         }
 
         // --- secure aggregation round.
-        let (agg, mut ledger) = if cfg.use_hlo_quantmask {
+        let round_result = if cfg.use_hlo_quantmask {
             coord.run_round_hlo(round as u32, &ys, &betas, &dropped,
-                                trainer.quantmask()?)?
+                                trainer.quantmask()?)
         } else if let Some(adv) = adversary.as_mut() {
             // Hostile-cohort training: byzantine users inject catalog
             // frames instead of honest uploads; the hardened ingest
             // sheds them and the round proceeds on honest survivors.
             coord.run_round_adversarial(round as u32, &ys, &betas,
-                                        &dropped, adv)?
+                                        &dropped, adv)
         } else {
-            coord.run_round(round as u32, &ys, &betas, &dropped)?
+            coord.run_round(round as u32, &ys, &betas, &dropped)
+        };
+        let (agg, mut ledger) = match round_result {
+            Ok(v) => v,
+            Err(e) => {
+                // Graceful teardown on any round failure (fatal finish,
+                // injected crash, unrecoverable quorum loss): leave the
+                // journal durably synced so the round stays resumable,
+                // then surface the typed error.
+                coord.sync_journal();
+                return Err(e);
+            }
         };
         ledger.client_compute_s += max_train_s;
 
@@ -395,5 +472,10 @@ pub fn run_fl(cfg: &FlConfig, trainer: &Trainer) -> Result<FlRun> {
         }
     }
 
-    Ok(FlRun { history, reached_target_at: reached, final_accuracy: final_acc })
+    Ok(FlRun {
+        history,
+        reached_target_at: reached,
+        final_accuracy: final_acc,
+        halted,
+    })
 }

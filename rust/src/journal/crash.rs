@@ -1,0 +1,180 @@
+//! Seeded crash-fault injection for the durable round journal — the
+//! [`crate::adversary`]/[`crate::netsim`] sibling for the crash threat
+//! model. A [`CrashPlan`] arms exactly one append (or compaction) site
+//! and kills the process model there with a typed
+//! [`super::JournalError::Crashed`]: before the bytes reach the file,
+//! mid-write (a torn frame — the "signal during append" point), or
+//! after the write but before the caller observes the ack. The
+//! crash-restart differential suite drives every site through
+//! [`crate::coordinator::Coordinator::resume_round`] and pins resume
+//! bit-exact against the uninterrupted reference.
+
+use super::Record;
+
+/// Where in the journal's write path the fault fires: one site per
+/// durable record kind, plus the snapshot-compaction rewrite.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CrashSite {
+    Meta,
+    SetupComplete,
+    RoundStart,
+    Upload,
+    UploadsClosed,
+    WaveSolicited,
+    Response,
+    WaveClosed,
+    Excluded,
+    RoundComplete,
+    Snapshot,
+    /// The snapshot-compaction rewrite ([`super::Journal::compact`]):
+    /// `Before` fires before the replacement file is written, `Torn`
+    /// after the tmp file is durable but before the atomic rename (the
+    /// old journal must stay valid), `After` after the rename.
+    Compaction,
+}
+
+impl CrashSite {
+    /// The site a record append belongs to.
+    pub fn of(rec: &Record) -> CrashSite {
+        match rec {
+            Record::Meta { .. } => CrashSite::Meta,
+            Record::SetupComplete { .. } => CrashSite::SetupComplete,
+            Record::RoundStart { .. } => CrashSite::RoundStart,
+            Record::Upload { .. } => CrashSite::Upload,
+            Record::UploadsClosed { .. } => CrashSite::UploadsClosed,
+            Record::WaveSolicited { .. } => CrashSite::WaveSolicited,
+            Record::Response { .. } => CrashSite::Response,
+            Record::WaveClosed { .. } => CrashSite::WaveClosed,
+            Record::Excluded { .. } => CrashSite::Excluded,
+            Record::RoundComplete { .. } => CrashSite::RoundComplete,
+            Record::Snapshot { .. } => CrashSite::Snapshot,
+        }
+    }
+
+    fn parse(s: &str) -> Result<CrashSite, String> {
+        Ok(match s {
+            "meta" => CrashSite::Meta,
+            "setup" => CrashSite::SetupComplete,
+            "round-start" => CrashSite::RoundStart,
+            "upload" => CrashSite::Upload,
+            "uploads-closed" => CrashSite::UploadsClosed,
+            "wave-solicited" => CrashSite::WaveSolicited,
+            "response" => CrashSite::Response,
+            "wave-closed" => CrashSite::WaveClosed,
+            "excluded" => CrashSite::Excluded,
+            "round-complete" => CrashSite::RoundComplete,
+            "snapshot" => CrashSite::Snapshot,
+            "compaction" => CrashSite::Compaction,
+            other => return Err(format!("unknown crash site {other:?}")),
+        })
+    }
+}
+
+/// How the armed site dies relative to the durable write.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CrashMode {
+    /// Killed before any byte reaches the file: the record is lost.
+    Before,
+    /// Killed mid-write: a partial frame reaches the file (the torn
+    /// tail [`super::Journal::open`] must truncate away).
+    Torn,
+    /// Killed between the durable write and the caller's ack: the
+    /// record survives, the caller never learns it did.
+    After,
+}
+
+impl CrashMode {
+    fn parse(s: &str) -> Result<CrashMode, String> {
+        Ok(match s {
+            "before" => CrashMode::Before,
+            "torn" => CrashMode::Torn,
+            "after" => CrashMode::After,
+            other => return Err(format!("unknown crash mode {other:?}")),
+        })
+    }
+}
+
+/// One planned crash: the `ordinal`-th append at `site` dies with
+/// `mode`. Fires at most once — a resumed process re-arms explicitly if
+/// a double-crash is being modeled.
+#[derive(Clone, Copy, Debug)]
+pub struct CrashPlan {
+    pub site: CrashSite,
+    pub mode: CrashMode,
+    /// Which append at `site` dies (0-based count within this plan's
+    /// lifetime).
+    pub ordinal: usize,
+    seen: usize,
+    fired: bool,
+}
+
+impl CrashPlan {
+    pub fn new(site: CrashSite, mode: CrashMode, ordinal: usize) -> Self {
+        CrashPlan { site, mode, ordinal, seen: 0, fired: false }
+    }
+
+    /// Parse the `crash_plan` config knob: `site:ordinal:mode`, e.g.
+    /// `upload:2:after`, `wave-closed:0:before`, `compaction:0:torn`.
+    pub fn parse(s: &str) -> Result<CrashPlan, String> {
+        let mut it = s.split(':');
+        let (site, ord, mode) = (it.next(), it.next(), it.next());
+        let (Some(site), Some(ord), Some(mode), None) =
+            (site, ord, mode, it.next())
+        else {
+            return Err(format!(
+                "crash plan {s:?}: want site:ordinal:mode"));
+        };
+        let ordinal: usize = ord
+            .parse()
+            .map_err(|e| format!("crash plan ordinal {ord:?}: {e}"))?;
+        Ok(CrashPlan::new(CrashSite::parse(site)?, CrashMode::parse(mode)?,
+                          ordinal))
+    }
+
+    /// Consult the plan at an append/compaction site. Returns the mode
+    /// to die with when this is the armed occurrence.
+    pub(super) fn check(&mut self, site: CrashSite) -> Option<CrashMode> {
+        if self.fired || site != self.site {
+            return None;
+        }
+        let k = self.seen;
+        self.seen += 1;
+        if k == self.ordinal {
+            self.fired = true;
+            Some(self.mode)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_site_ordinal_mode() {
+        let p = CrashPlan::parse("upload:2:after").unwrap();
+        assert_eq!(p.site, CrashSite::Upload);
+        assert_eq!(p.mode, CrashMode::After);
+        assert_eq!(p.ordinal, 2);
+        let p = CrashPlan::parse("compaction:0:torn").unwrap();
+        assert_eq!(p.site, CrashSite::Compaction);
+        assert_eq!(p.mode, CrashMode::Torn);
+        assert!(CrashPlan::parse("upload:2").is_err());
+        assert!(CrashPlan::parse("upload:two:after").is_err());
+        assert!(CrashPlan::parse("uplod:2:after").is_err());
+        assert!(CrashPlan::parse("upload:2:later").is_err());
+        assert!(CrashPlan::parse("upload:2:after:x").is_err());
+    }
+
+    #[test]
+    fn fires_once_at_the_armed_ordinal() {
+        let mut p = CrashPlan::parse("response:1:before").unwrap();
+        assert_eq!(p.check(CrashSite::Upload), None);
+        assert_eq!(p.check(CrashSite::Response), None); // ordinal 0
+        assert_eq!(p.check(CrashSite::Response), Some(CrashMode::Before));
+        assert_eq!(p.check(CrashSite::Response), None); // already fired
+        assert!(p.fired);
+    }
+}

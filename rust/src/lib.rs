@@ -28,6 +28,7 @@ pub mod dh;
 pub mod exec;
 pub mod field;
 pub mod fl;
+pub mod journal;
 pub mod masking;
 pub mod metrics;
 pub mod netsim;

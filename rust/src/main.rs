@@ -21,6 +21,13 @@
 //!                    --phase_deadline_s 0.25
 //!                                      # lossy links + per-phase
 //!                                      # deadlines (late ⇒ dropout path)
+//!   sparsesecagg run --journal_dir run1/journal --journal_snapshot_every 5
+//!                                      # durable round journal: crash here,
+//!                                      # rerun with the same flags to resume
+//!   sparsesecagg run --journal_dir run1/journal \
+//!                    --crash_plan wave-closed:0:torn
+//!                                      # seeded crash injection (exit 3);
+//!                                      # the journal stays resumable
 //!   sparsesecagg comm --users 100 --alpha 0.1 --executor windowed
 //!   sparsesecagg privacy --users 100 --gamma 0.333 --theta 0.3
 
@@ -38,6 +45,19 @@ use sparsesecagg::sparsify;
 fn main() {
     if let Err(e) = real_main() {
         eprintln!("error: {e:#}");
+        // An injected crash (--crash_plan) is a *simulated* fault: the
+        // journal on disk is valid up to the last synced record, so the
+        // run is resumable.  Signal that with a dedicated exit status.
+        if matches!(
+            e.downcast_ref::<sparsesecagg::journal::JournalError>(),
+            Some(sparsesecagg::journal::JournalError::Crashed)
+        ) {
+            eprintln!(
+                "injected crash fired; journal is resumable — rerun with \
+                 the same --journal_dir to recover the round"
+            );
+            std::process::exit(3);
+        }
         std::process::exit(1);
     }
 }
@@ -105,6 +125,12 @@ fn cmd_run(args: &Args) -> Result<()> {
     match run.reached_target_at {
         Some(r) => println!("reached target accuracy at round {r}"),
         None => println!("final accuracy: {:.3}", run.final_accuracy),
+    }
+    if let Some(why) = run.halted {
+        println!(
+            "run halted early ({why}); journal flushed — rerun with the \
+             same --journal_dir to continue"
+        );
     }
     Ok(())
 }

@@ -155,6 +155,20 @@ pub struct RoundLedger {
     /// (the struct/HLO paths); the frame driver fills it via
     /// [`RoundLedger::advance_named_phase`].
     pub phases: Vec<PhaseBreakdown>,
+    /// Bytes appended to the durable round journal ([`crate::journal`])
+    /// on behalf of this round (records + framing, including snapshot
+    /// compaction). 0 when journaling is off. Journal traffic is local
+    /// disk I/O, not link traffic, so it never enters the byte/clock
+    /// totals above.
+    pub journal_bytes: usize,
+    /// Validated frames re-ingested from the journal while resuming
+    /// this round (uploads + unmask responses). 0 for rounds that ran
+    /// uninterrupted.
+    pub replayed_frames: usize,
+    /// For a resumed round, the phase the journal replay reached before
+    /// live traffic took over: `"collecting"`, `"unmasking"`, or
+    /// `"complete"`. `None` for rounds that started fresh.
+    pub resumed_phase: Option<&'static str>,
 }
 
 impl RoundLedger {

@@ -167,6 +167,25 @@ impl Server {
         }
     }
 
+    /// Reconstruction constructor for crash recovery
+    /// ([`crate::journal`]): the setup-time roster comes from a durable
+    /// `SetupComplete` record; per-round state is rebuilt by the
+    /// coordinator replaying journaled validated frames through
+    /// [`Server::ingest_frame`] — see `sparse::Server::from_journal`.
+    pub fn from_journal(params: Params, roster: Vec<u64>) -> Self {
+        assert_eq!(roster.len(), params.n,
+                   "journaled roster length disagrees with params.n");
+        let mut s = Server::new(params);
+        s.roster = roster;
+        s
+    }
+
+    /// The DH public-key roster fixed at setup (journaled verbatim as
+    /// the `SetupComplete` integrity anchor).
+    pub fn roster(&self) -> &[u64] {
+        &self.roster
+    }
+
     pub fn collect_keys(&mut self, ads: &[AdvertiseKeys]) -> Roster {
         let mut publics = vec![0u64; self.params.n];
         for ad in ads {

@@ -295,6 +295,28 @@ impl Server {
         }
     }
 
+    /// Reconstruction constructor for crash recovery
+    /// ([`crate::journal`]): a server whose one-time setup state (the
+    /// DH key roster) comes from a durable `SetupComplete` record
+    /// instead of a live AdvertiseKeys phase. Per-round state is *not*
+    /// restored here — the coordinator replays journaled validated
+    /// frames through [`Server::ingest_frame`], the same state machine
+    /// live traffic takes, so recovery can never admit bytes that
+    /// ingest would have refused.
+    pub fn from_journal(params: Params, roster: Vec<u64>) -> Self {
+        assert_eq!(roster.len(), params.n,
+                   "journaled roster length disagrees with params.n");
+        let mut s = Server::new(params);
+        s.roster = roster;
+        s
+    }
+
+    /// The DH public-key roster fixed at setup (journaled verbatim as
+    /// the `SetupComplete` integrity anchor).
+    pub fn roster(&self) -> &[u64] {
+        &self.roster
+    }
+
     /// Collect advertisements into the roster broadcast.
     pub fn collect_keys(&mut self, ads: &[AdvertiseKeys]) -> Roster {
         assert_eq!(ads.len(), self.params.n);

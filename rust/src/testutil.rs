@@ -12,6 +12,11 @@
 //! dimension, …); on failure the driver greedily re-runs candidates
 //! that still fail and reports the smallest reproduction instead of
 //! whatever large random draw happened to trip first.
+//!
+//! The module also hosts the bench-trajectory JSON helpers
+//! ([`bench_json_path`], [`json_has_nonzero_ms`],
+//! [`write_bench_json_guarded`]) shared by the bench binaries, so the
+//! zero-clobber guard has exactly one implementation.
 
 use crate::prg::ChaCha20Rng;
 
@@ -98,6 +103,65 @@ pub fn prop_shrink<C: Clone + std::fmt::Debug>(
     }
 }
 
+/// Resolve where a bench trajectory file lives. `cargo bench` runs from
+/// the package root (`rust/`) while the trajectory files sit at the
+/// repository root next to `ROADMAP.md`; probe for that anchor and fall
+/// back to the current directory (running the bench binary from the
+/// repo root directly).
+pub fn bench_json_path(name: &str) -> String {
+    if std::path::Path::new("../ROADMAP.md").exists() {
+        format!("../{name}")
+    } else {
+        name.to_string()
+    }
+}
+
+/// Does a trajectory JSON carry any strictly positive `*_ms`
+/// measurement? (Hand-rolled scan — no serde in the vendored crate set;
+/// the files are machine-written by the benches, so the `"key": value`
+/// shape is stable.)
+pub fn json_has_nonzero_ms(text: &str) -> bool {
+    let mut rest = text;
+    while let Some(k) = rest.find("_ms\":") {
+        let tail = &rest[k + 5..];
+        let num: String = tail
+            .chars()
+            .skip_while(|c| c.is_whitespace())
+            .take_while(|c| c.is_ascii_digit() || *c == '.' || *c == '-')
+            .collect();
+        if num.parse::<f64>().map(|v| v > 0.0).unwrap_or(false) {
+            return true;
+        }
+        rest = tail;
+    }
+    false
+}
+
+/// Write a bench trajectory JSON behind the zero-clobber guard: never
+/// overwrite real measurements with schema-only zeros (a toolchain-less
+/// container run, or a broken clock). The caller decides `new_all_zero`
+/// from its own rows; "real" means any strictly positive `_ms` field in
+/// the existing file. Returns whether the file was written.
+pub fn write_bench_json_guarded(path: &str, contents: &str,
+                                new_all_zero: bool)
+                                -> std::io::Result<bool> {
+    if new_all_zero {
+        if let Ok(existing) = std::fs::read_to_string(path) {
+            if json_has_nonzero_ms(&existing) {
+                println!(
+                    "refusing to overwrite {path}: it holds non-zero \
+                     measurements and the new results are schema-only \
+                     zeros"
+                );
+                return Ok(false);
+            }
+        }
+    }
+    std::fs::write(path, contents)?;
+    println!("wrote {path}");
+    Ok(true)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,5 +204,41 @@ mod tests {
             |_| vec![0],
             |&v| assert!(v < 100),
         );
+    }
+
+    #[test]
+    fn nonzero_ms_scan_matches_only_positive_timings() {
+        assert!(json_has_nonzero_ms("{\"wall_ms\": 1.25}"));
+        assert!(json_has_nonzero_ms("{\"a_ms\": 0.0, \"b_ms\": 0.001}"));
+        assert!(!json_has_nonzero_ms("{\"wall_ms\": 0.000}"));
+        assert!(!json_has_nonzero_ms("{\"wall_ms\": -3.0}"));
+        // Non-`_ms` numerics never trip the guard (simulated `_s`
+        // constants are nonzero even in schema-only runs).
+        assert!(!json_has_nonzero_ms("{\"latency_s\": 0.002}"));
+        assert!(!json_has_nonzero_ms(""));
+    }
+
+    #[test]
+    fn guard_refuses_zero_over_real_and_allows_the_rest() {
+        let dir = std::env::temp_dir()
+            .join(format!("ssa-benchguard-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_guard_test.json");
+        let path = path.to_str().unwrap();
+
+        // Fresh file: even all-zero rows may create it (schema lands).
+        assert!(write_bench_json_guarded(path, "{\"x_ms\": 0.0}\n", true)
+            .unwrap());
+        // Real measurements always overwrite.
+        assert!(write_bench_json_guarded(path, "{\"x_ms\": 2.5}\n", false)
+            .unwrap());
+        // Schema-only zeros must not clobber them…
+        assert!(!write_bench_json_guarded(path, "{\"x_ms\": 0.0}\n", true)
+            .unwrap());
+        assert!(std::fs::read_to_string(path).unwrap().contains("2.5"));
+        // …but fresh real measurements still do.
+        assert!(write_bench_json_guarded(path, "{\"x_ms\": 9.0}\n", false)
+            .unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,643 @@
+//! Crash-restart differential suite — the durability half of the
+//! secure-aggregation story ([`sparsesecagg::journal`]).
+//!
+//! * **Crash matrix**: ≥ 8 seeded crash points — per-phase append
+//!   boundaries (`before`/`torn`/`after` at every durable record kind)
+//!   — × both protocols × all three unmask executors. For every cell
+//!   the crashed-and-resumed round's aggregate, per-user byte ledger,
+//!   and simulated clock are bit-exactly those of the uninterrupted
+//!   reference, and so is every subsequent round.
+//! * **Mid-recovery crash**: the crash fires inside the
+//!   equivocator-exclusion recovery loop (solicitation of the retry
+//!   wave, either side of the durable `Excluded` record) under a
+//!   byzantine injector + two-faced value-poisoner; resume still
+//!   excludes exactly the equivocator and lands on the reference
+//!   aggregate.
+//! * **Netsim composition**: crash and resume both run over the seeded
+//!   network-impairment simulator (latency + reordering jitter); the
+//!   resumed round is pinned against the ideal-bus reference, proving
+//!   replay is delivery-order independent.
+//! * **Torn-tail property**: for *any* truncation point of the journal
+//!   file, restart either fails with a clean typed error or resumes
+//!   bit-exactly — never a corrupted aggregate.
+//! * **Crash-churn soak**: ≥ 20 rounds with seeded per-round crash
+//!   points (including snapshot-compaction crashes), dropout churn,
+//!   and netsim jitter: zero recoverable rounds lost, every round
+//!   bit-exact, the whole trajectory deterministic under the seed.
+
+use sparsesecagg::adversary::{Adversary, TwoFaced};
+use sparsesecagg::coordinator::{Coordinator, ProtocolKind};
+use sparsesecagg::exec::ExecMode;
+use sparsesecagg::journal::{CrashPlan, Journal, JournalError};
+use sparsesecagg::netsim::{LinkProfile, NetSim, NetSimConfig};
+use sparsesecagg::network::RoundLedger;
+use sparsesecagg::prg::ChaCha20Rng;
+use sparsesecagg::protocol::Params;
+use sparsesecagg::transport::Transport;
+use std::path::PathBuf;
+
+fn params(n: usize, d: usize, alpha: f64) -> Params {
+    Params { n, d, alpha, theta: 0.0, c: 1024.0 }
+}
+
+fn grads(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = ChaCha20Rng::from_seed_u64(seed);
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.next_f32() - 0.5).collect())
+        .collect()
+}
+
+/// Fresh per-test journal directory under the cargo tmp root.
+fn tdir(name: &str) -> PathBuf {
+    let p = PathBuf::from(env!("CARGO_TARGET_TMPDIR"))
+        .join(format!("crash-recovery-{name}"));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+fn build(kind: ProtocolKind, p: Params, entropy: u64,
+         mode: ExecMode) -> Coordinator {
+    let mut c = match kind {
+        ProtocolKind::Sparse => Coordinator::new_sparse(p, entropy),
+        ProtocolKind::SecAgg => Coordinator::new_secagg(p, entropy),
+    };
+    tune(&mut c, mode);
+    c
+}
+
+/// The knobs a restarted process re-applies from its config (they are
+/// operator state, not journaled state).
+fn tune(c: &mut Coordinator, mode: ExecMode) {
+    c.threads = 3;
+    c.shard_size = 64;
+    c.exec_mode = mode;
+}
+
+/// The bit-exactness contract: aggregate, per-user byte ledgers, the
+/// simulated communication clock, and the recovery accounting. Compute
+/// wall-times, scheduling stats, and journal/replay meta-counters are
+/// process-local and excluded by construction.
+fn assert_ledger_eq(got: &RoundLedger, want: &RoundLedger, ctx: &str) {
+    assert_eq!(got.up_bytes, want.up_bytes, "{ctx}: up_bytes");
+    assert_eq!(got.down_bytes, want.down_bytes, "{ctx}: down_bytes");
+    assert_eq!(got.comm_time_s.to_bits(), want.comm_time_s.to_bits(),
+               "{ctx}: comm clock not bit-exact \
+                ({} vs {})", got.comm_time_s, want.comm_time_s);
+    assert_eq!(got.excluded_users, want.excluded_users,
+               "{ctx}: excluded_users");
+    assert_eq!(got.retries, want.retries, "{ctx}: retries");
+    assert_eq!(got.phases.len(), want.phases.len(), "{ctx}: phase count");
+    for (g, w) in got.phases.iter().zip(&want.phases) {
+        assert_eq!(g.name, w.name, "{ctx}: phase order");
+        assert_eq!(g.up_bytes, w.up_bytes, "{ctx}: phase {} up", g.name);
+        assert_eq!(g.down_bytes, w.down_bytes,
+                   "{ctx}: phase {} down", g.name);
+        assert_eq!(g.comm_time_s.to_bits(), w.comm_time_s.to_bits(),
+                   "{ctx}: phase {} clock", g.name);
+    }
+}
+
+fn assert_round_eq(got: &(Vec<f32>, RoundLedger),
+                   want: &(Vec<f32>, RoundLedger), ctx: &str) {
+    assert_eq!(got.0, want.0, "{ctx}: aggregate diverged");
+    assert_ledger_eq(&got.1, &want.1, ctx);
+}
+
+fn assert_crashed(err: &anyhow::Error, ctx: &str) {
+    assert!(
+        matches!(err.downcast_ref::<JournalError>(),
+                 Some(JournalError::Crashed)),
+        "{ctx}: expected the typed injected-crash error, got {err:#}");
+}
+
+// ---------------------------------------------------------------------
+// Crash matrix: every append-boundary site × both protocols × all
+// three executors.
+// ---------------------------------------------------------------------
+
+/// Per-phase and append-boundary crash points for an honest 3-round
+/// run, armed in round 1: `before` (record lost), `torn` (partial
+/// frame — the restart must truncate it away), and `after` (record
+/// durable, ack lost) at every record kind the round writes.
+const SITES: [&str; 11] = [
+    "round-start:0:before",
+    "upload:1:torn",
+    "upload:2:after",
+    "uploads-closed:0:before",
+    "uploads-closed:0:after",
+    "wave-solicited:0:after",
+    "response:1:torn",
+    "wave-closed:0:before",
+    "wave-closed:0:after",
+    "round-complete:0:before",
+    "round-complete:0:after",
+];
+
+/// Run the full crash catalog for one (protocol, executor) cell:
+/// 3-round runs with rotating dropouts, the crash armed in round 1,
+/// restart via [`Coordinator::from_journal`], and every round from the
+/// resumed one onward pinned bit-exact against the uninterrupted
+/// reference.
+fn crash_matrix(kind: ProtocolKind, mode: ExecMode, tag: &str) {
+    let p = params(8, 120, 0.4);
+    let entropy = 0x3c11;
+    let ys = grads(p.n, p.d, 0xd1ff ^ entropy);
+    let betas = vec![1.0 / p.n as f64; p.n];
+    let drops: [&[usize]; 3] = [&[], &[3], &[5, 6]];
+
+    let mut refc = build(kind, p, entropy, mode);
+    let reference: Vec<(Vec<f32>, RoundLedger)> = (0..3u32)
+        .map(|r| refc.run_round(r, &ys, &betas, drops[r as usize]).unwrap())
+        .collect();
+
+    for plan in SITES {
+        let ctx = format!("{tag}/{plan}");
+        let dir = tdir(&format!("matrix-{tag}-{}", plan.replace(':', "-")));
+        let mut live = build(kind, p, entropy, mode);
+        live.attach_journal(Journal::create(&dir).unwrap()).unwrap();
+        // Round 0 completes durably; journaling must not perturb it.
+        let r0 = live.run_round(0, &ys, &betas, drops[0]).unwrap();
+        assert!(r0.1.journal_bytes > 0, "{ctx}: journal must be written");
+        assert_round_eq(&r0, &reference[0], &format!("{ctx} (round 0)"));
+
+        live.journal_mut()
+            .unwrap()
+            .set_crash_plan(CrashPlan::parse(plan).unwrap());
+        let err = live.run_round(1, &ys, &betas, drops[1]).unwrap_err();
+        assert_crashed(&err, &ctx);
+        drop(live); // the process model dies here
+
+        let (mut resumed, replay) = Coordinator::from_journal(&dir)
+            .unwrap_or_else(|e| panic!("{ctx}: restart failed: {e:#}"));
+        tune(&mut resumed, mode);
+        let next = match replay {
+            Some(rp) if rp.round == 1 => {
+                let was_complete = rp.completed;
+                let got = resumed
+                    .resume_round(rp, &ys, &betas, drops[1])
+                    .unwrap_or_else(|e| {
+                        panic!("{ctx}: resume failed: {e:#}")
+                    });
+                assert!(got.1.resumed_phase.is_some(), "{ctx}");
+                if was_complete {
+                    // `round-complete:0:after`: the completion record
+                    // survived, only the ack was lost — resume merely
+                    // recomputes the durably finished round.
+                    assert_eq!(got.1.resumed_phase, Some("complete"),
+                               "{ctx}");
+                }
+                assert_round_eq(&got, &reference[1],
+                                &format!("{ctx} (resumed round 1)"));
+                2u32
+            }
+            Some(rp) => {
+                // `round-start:0:before`: round 1 never reached the
+                // file; the journal holds completed round 0, which
+                // resume recomputes bit-exactly before moving on.
+                assert_eq!((rp.round, rp.completed), (0, true), "{ctx}");
+                let got = resumed
+                    .resume_round(rp, &ys, &betas, drops[0])
+                    .unwrap();
+                assert_eq!(got.1.resumed_phase, Some("complete"), "{ctx}");
+                assert_round_eq(&got, &reference[0],
+                                &format!("{ctx} (recomputed round 0)"));
+                1u32
+            }
+            None => panic!("{ctx}: journal lost the setup anchor"),
+        };
+        // The round the crash orphaned (if resume recovered an earlier
+        // one) and everything after run live on the restarted process.
+        for r in next..3 {
+            let got = resumed
+                .run_round(r, &ys, &betas, drops[r as usize])
+                .unwrap();
+            assert_round_eq(&got, &reference[r as usize],
+                            &format!("{ctx} (round {r})"));
+        }
+    }
+}
+
+#[test]
+fn crash_matrix_sparse_stealing() {
+    crash_matrix(ProtocolKind::Sparse, ExecMode::Stealing,
+                 "sparse-stealing");
+}
+
+#[test]
+fn crash_matrix_sparse_windowed() {
+    crash_matrix(ProtocolKind::Sparse, ExecMode::Windowed,
+                 "sparse-windowed");
+}
+
+#[test]
+fn crash_matrix_sparse_monolithic() {
+    crash_matrix(ProtocolKind::Sparse, ExecMode::Monolithic,
+                 "sparse-monolithic");
+}
+
+#[test]
+fn crash_matrix_secagg_stealing() {
+    crash_matrix(ProtocolKind::SecAgg, ExecMode::Stealing,
+                 "secagg-stealing");
+}
+
+#[test]
+fn crash_matrix_secagg_windowed() {
+    crash_matrix(ProtocolKind::SecAgg, ExecMode::Windowed,
+                 "secagg-windowed");
+}
+
+#[test]
+fn crash_matrix_secagg_monolithic() {
+    crash_matrix(ProtocolKind::SecAgg, ExecMode::Monolithic,
+                 "secagg-monolithic");
+}
+
+// ---------------------------------------------------------------------
+// Mid-recovery crashes under byzantine pressure.
+// ---------------------------------------------------------------------
+
+/// Crash inside the equivocator-exclusion recovery loop: byzantine ids
+/// {0, 1} (0 a silenced catalog injector, 1 a two-faced value-poisoner
+/// whose detection happens in reconstruction — deterministic on
+/// replay). The armed sites bracket the recovery wave: the retry
+/// solicitation record, and either side of the durable `Excluded`
+/// record. Resume runs with no adversary process attached (it died
+/// with the coordinator); the journaled validated frames carry the
+/// poisoned responses, so the restart re-identifies and excludes the
+/// same equivocator and lands on the reference aggregate.
+///
+/// The injector's own endpoint (user 0) is the one legitimate billing
+/// divergence: its rejected garbage is billed live but never journaled,
+/// and without the adversary its silencing lapses for the model
+/// broadcast — so user 0's byte rows are excluded from the comparison.
+/// Everything clock-carrying (sealed wave size snapshots) replays
+/// exactly, so the simulated clock is still bit-exact.
+fn recovery_crash_cell(plan: &str) {
+    let p = params(10, 150, 0.35);
+    let entropy = 0xa11ce;
+    let ys = grads(p.n, p.d, 0xbad ^ entropy);
+    let betas = vec![1.0 / p.n as f64; p.n];
+    let mk_adv = || {
+        let mut a = Adversary::new(0.2, entropy ^ 0xad);
+        a.two_faced = vec![(1, TwoFaced::PoisonValues)];
+        a
+    };
+
+    let mut refc = build(ProtocolKind::Sparse, p, entropy,
+                         ExecMode::Stealing);
+    let mut adv = mk_adv();
+    let (want_agg, want_ledger) = refc
+        .run_round_adversarial(0, &ys, &betas, &[], &mut adv)
+        .unwrap();
+    assert_eq!(want_ledger.excluded_users, vec![1]);
+    assert_eq!(want_ledger.retries, 1);
+
+    let dir = tdir(&format!("recovery-{}", plan.replace(':', "-")));
+    let mut live = build(ProtocolKind::Sparse, p, entropy,
+                         ExecMode::Stealing);
+    live.attach_journal(Journal::create(&dir).unwrap()).unwrap();
+    live.journal_mut()
+        .unwrap()
+        .set_crash_plan(CrashPlan::parse(plan).unwrap());
+    let mut adv = mk_adv();
+    let err = live
+        .run_round_adversarial(0, &ys, &betas, &[], &mut adv)
+        .unwrap_err();
+    assert_crashed(&err, plan);
+    drop(live);
+
+    let (mut resumed, replay) = Coordinator::from_journal(&dir).unwrap();
+    tune(&mut resumed, ExecMode::Stealing);
+    let rp = replay.unwrap_or_else(|| panic!("{plan}: no replay"));
+    assert_eq!(rp.round, 0, "{plan}");
+    let (got_agg, got_ledger) =
+        resumed.resume_round(rp, &ys, &betas, &[]).unwrap_or_else(|e| {
+            panic!("{plan}: recovery round lost across the crash: {e:#}")
+        });
+    assert_eq!(got_agg, want_agg, "{plan}: aggregate diverged");
+    assert_eq!(got_ledger.excluded_users, vec![1], "{plan}");
+    assert_eq!(got_ledger.retries, 1, "{plan}");
+    assert_eq!(got_ledger.resumed_phase, Some("unmasking"), "{plan}");
+    assert!(got_ledger.replayed_frames > 0, "{plan}");
+    assert_eq!(got_ledger.up_bytes[1..], want_ledger.up_bytes[1..],
+               "{plan}: honest up_bytes");
+    assert_eq!(got_ledger.down_bytes[1..], want_ledger.down_bytes[1..],
+               "{plan}: honest down_bytes");
+    assert_eq!(got_ledger.comm_time_s.to_bits(),
+               want_ledger.comm_time_s.to_bits(),
+               "{plan}: comm clock not bit-exact");
+}
+
+#[test]
+fn crash_before_durable_exclusion_reidentifies_the_equivocator() {
+    recovery_crash_cell("excluded:0:before");
+}
+
+#[test]
+fn crash_after_durable_exclusion_replays_it() {
+    recovery_crash_cell("excluded:0:after");
+}
+
+#[test]
+fn crash_soliciting_the_retry_wave_redoes_it() {
+    recovery_crash_cell("wave-solicited:1:after");
+}
+
+// ---------------------------------------------------------------------
+// Netsim composition.
+// ---------------------------------------------------------------------
+
+/// Crash and restart both behind the seeded impairment simulator
+/// (latency + jitter at 2× latency ⇒ reordering every phase, loss-free
+/// so the round is recoverable by construction). The resumed process
+/// gets a *fresh* netsim with a different seed — its delivery order
+/// shares nothing with the crashed attempt — yet the round is pinned
+/// bit-exact against the ideal-bus reference: replay and the protocol
+/// itself are delivery-order independent.
+#[test]
+fn crash_resume_composes_with_netsim_reordering() {
+    let p = params(9, 140, 0.35);
+    let entropy = 0x7e15;
+    let ys = grads(p.n, p.d, 0x31u64 ^ entropy);
+    let betas = vec![1.0 / p.n as f64; p.n];
+    let wan = LinkProfile {
+        latency_s: 1e-3,
+        jitter_s: 2e-3,
+        bandwidth_bps: 50e6,
+        loss: 0.0,
+        die_after: None,
+    };
+
+    let mut refc = build(ProtocolKind::Sparse, p, entropy,
+                         ExecMode::Stealing);
+    let reference: Vec<(Vec<f32>, RoundLedger)> = (0..2u32)
+        .map(|r| refc.run_round(r, &ys, &betas, &[]).unwrap())
+        .collect();
+
+    let dir = tdir("netsim");
+    let bus = Box::new(NetSim::over_bus(
+        p.n, NetSimConfig::uniform(entropy ^ 0x9e7, wan)));
+    let mut live = Coordinator::new_sparse_on(p, entropy, bus);
+    tune(&mut live, ExecMode::Stealing);
+    live.attach_journal(Journal::create(&dir).unwrap()).unwrap();
+    live.journal_mut()
+        .unwrap()
+        .set_crash_plan(CrashPlan::parse("wave-closed:0:torn").unwrap());
+    let err = live.run_round(0, &ys, &betas, &[]).unwrap_err();
+    assert_crashed(&err, "netsim cell");
+    drop(live);
+
+    let (mut resumed, replay) = Coordinator::from_journal_on(&dir, |n| {
+        Box::new(NetSim::over_bus(
+            n, NetSimConfig::uniform(entropy ^ 0x515, wan)))
+    })
+    .unwrap();
+    tune(&mut resumed, ExecMode::Stealing);
+    let rp = replay.expect("in-flight round journaled");
+    let got = resumed.resume_round(rp, &ys, &betas, &[]).unwrap();
+    assert_eq!(got.1.resumed_phase, Some("unmasking"));
+    assert_round_eq(&got, &reference[0], "netsim resumed round");
+    let got1 = resumed.run_round(1, &ys, &betas, &[]).unwrap();
+    assert_round_eq(&got1, &reference[1], "netsim follow-on round");
+    assert!(resumed.bus_clock_s() > 0.0,
+            "the impairment layer must have cost simulated time");
+}
+
+// ---------------------------------------------------------------------
+// Torn-tail truncation property.
+// ---------------------------------------------------------------------
+
+/// For ANY truncation point of the journal file — mid-record, at a
+/// record boundary, inside the setup prefix, even byte 0 — restart
+/// either fails with a clean *typed* error or resumes to bit-exact
+/// equality with the reference. Never a panic, never a silently wrong
+/// aggregate.
+#[test]
+fn every_truncation_point_fails_cleanly_or_resumes_bit_exactly() {
+    let p = params(6, 80, 0.5);
+    let entropy = 0x70a4;
+    let ys = grads(p.n, p.d, 0x7e44 ^ entropy);
+    let betas = vec![1.0 / p.n as f64; p.n];
+
+    let mut refc = build(ProtocolKind::Sparse, p, entropy,
+                         ExecMode::Stealing);
+    let reference: Vec<(Vec<f32>, RoundLedger)> = (0..2u32)
+        .map(|r| refc.run_round(r, &ys, &betas, &[]).unwrap())
+        .collect();
+
+    let dir = tdir("torn-source");
+    let mut live = build(ProtocolKind::Sparse, p, entropy,
+                         ExecMode::Stealing);
+    live.attach_journal(Journal::create(&dir).unwrap()).unwrap();
+    for r in 0..2u32 {
+        live.run_round(r, &ys, &betas, &[]).unwrap();
+    }
+    drop(live);
+    let full = std::fs::read(dir.join("round.journal")).unwrap();
+    assert!(full.len() > 64);
+
+    let mut rng = ChaCha20Rng::from_seed_u64(0x7064);
+    let cuts: Vec<usize> = std::iter::once(0)
+        .chain(std::iter::once(full.len()))
+        .chain((0..46).map(|_| rng.next_u32() as usize % full.len()))
+        .collect();
+    for (i, &cut) in cuts.iter().enumerate() {
+        let d2 = tdir(&format!("torn-cut-{i}"));
+        std::fs::create_dir_all(&d2).unwrap();
+        std::fs::write(d2.join("round.journal"), &full[..cut]).unwrap();
+        match Coordinator::from_journal(&d2) {
+            Err(e) => {
+                // Pre-setup truncation: the typed grammar error, not a
+                // panic and not a half-built cohort.
+                assert!(e.downcast_ref::<JournalError>().is_some(),
+                        "cut {cut}: untyped restart error: {e:#}");
+            }
+            Ok((mut resumed, replay)) => {
+                tune(&mut resumed, ExecMode::Stealing);
+                let next = match replay {
+                    Some(rp) => {
+                        let r = rp.round;
+                        let got = resumed
+                            .resume_round(rp, &ys, &betas, &[])
+                            .unwrap_or_else(|e| {
+                                panic!("cut {cut}: resume failed: {e:#}")
+                            });
+                        assert_round_eq(
+                            &got, &reference[r as usize],
+                            &format!("cut {cut} (resumed round {r})"));
+                        r + 1
+                    }
+                    // Truncated back to the bare setup anchor: nothing
+                    // in flight, rounds simply rerun.
+                    None => 0,
+                };
+                for r in next..2 {
+                    let got =
+                        resumed.run_round(r, &ys, &betas, &[]).unwrap();
+                    assert_round_eq(&got, &reference[r as usize],
+                                    &format!("cut {cut} (round {r})"));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Crash-churn soak.
+// ---------------------------------------------------------------------
+
+/// The soak's per-round crash catalog: sites that occur in every
+/// honest round. Compaction sites are armed separately on snapshot
+/// boundaries.
+const SOAK_SITES: [&str; 10] = [
+    "upload:0:torn",
+    "upload:1:after",
+    "uploads-closed:0:before",
+    "uploads-closed:0:after",
+    "wave-solicited:0:after",
+    "response:0:torn",
+    "wave-closed:0:before",
+    "wave-closed:0:after",
+    "round-complete:0:before",
+    "round-complete:0:after",
+];
+
+const COMPACTION_SITES: [&str; 3] =
+    ["compaction:0:before", "compaction:0:torn", "compaction:0:after"];
+
+/// One crash-churn soak run: 22 rounds over jittery reordering links
+/// with snapshot compaction every 3 rounds, seeded dropout churn
+/// (0..=2 leavers), and a seeded coin that crashes ~60% of rounds at a
+/// seeded site (compaction crashes on snapshot boundaries). Every
+/// crash restarts via [`Coordinator::from_journal_on`] on a fresh
+/// netsim; every round — resumed or not — is pinned bit-exact against
+/// the uninterrupted ideal-bus reference. Returns the per-round
+/// aggregates for the determinism comparison.
+fn crash_churn_soak_run(entropy: u64) -> Vec<Vec<f32>> {
+    const ROUNDS: u32 = 22;
+    const SNAP: u32 = 3;
+    let p = params(10, 130, 0.35);
+    let ys = grads(p.n, p.d, 0x50a4 ^ entropy);
+    let betas = vec![1.0 / p.n as f64; p.n];
+    let wan = LinkProfile {
+        latency_s: 1e-3,
+        jitter_s: 2e-3,
+        bandwidth_bps: 50e6,
+        loss: 0.0,
+        die_after: None,
+    };
+    let mk_bus = |n: usize, seed: u64| -> Box<dyn Transport> {
+        Box::new(NetSim::over_bus(n, NetSimConfig::uniform(seed, wan)))
+    };
+
+    let mut refc = build(ProtocolKind::Sparse, p, entropy,
+                         ExecMode::Stealing);
+    let reference: Vec<(Vec<f32>, RoundLedger)> = (0..ROUNDS)
+        .map(|r| {
+            refc.run_round(r, &ys, &betas, &churn(entropy, r)).unwrap()
+        })
+        .collect();
+
+    let dir = tdir(&format!("soak-{entropy}"));
+    let mut coord = Coordinator::new_sparse_on(
+        p, entropy, mk_bus(p.n, entropy ^ 0x9e70));
+    tune(&mut coord, ExecMode::Stealing);
+    let mut j = Journal::create(&dir).unwrap();
+    j.snapshot_every = SNAP;
+    coord.attach_journal(j).unwrap();
+
+    let mut crash_rng = ChaCha20Rng::from_seed_u64(entropy ^ 0xc2a5);
+    let mut crashes = 0usize;
+    let mut compaction_crashes = 0usize;
+    let mut aggs = Vec::new();
+    for r in 0..ROUNDS {
+        let dropped = churn(entropy, r);
+        let on_snap = (r + 1) % SNAP == 0;
+        let crash_here = crash_rng.next_u32() % 10 < 6;
+        let plan = if crash_here {
+            let site = if on_snap && crash_rng.next_u32() % 2 == 0 {
+                compaction_crashes += 1;
+                COMPACTION_SITES
+                    [crash_rng.next_u32() as usize % COMPACTION_SITES.len()]
+            } else {
+                SOAK_SITES
+                    [crash_rng.next_u32() as usize % SOAK_SITES.len()]
+            };
+            Some(CrashPlan::parse(site).unwrap())
+        } else {
+            None
+        };
+
+        let got = if let Some(plan) = plan {
+            crashes += 1;
+            coord.journal_mut().unwrap().set_crash_plan(plan);
+            let err = coord
+                .run_round(r, &ys, &betas, &dropped)
+                .expect_err("armed crash plan must fire this round");
+            assert_crashed(&err, &format!("soak round {r}"));
+            // restart: fresh process model, fresh impaired network.
+            let (c2, replay) = Coordinator::from_journal_on(&dir, |n| {
+                mk_bus(n, entropy ^ 0x9e70 ^ (r as u64 + 1) * 0x517c)
+            })
+            .unwrap_or_else(|e| {
+                panic!("soak round {r}: restart failed: {e:#}")
+            });
+            coord = c2;
+            tune(&mut coord, ExecMode::Stealing);
+            coord.journal_mut().unwrap().snapshot_every = SNAP;
+            match replay {
+                // The common shape: the crashed round itself is in the
+                // journal (possibly already completed) — resume it.
+                Some(rp) if rp.round == r => coord
+                    .resume_round(rp, &ys, &betas, &dropped)
+                    .unwrap_or_else(|e| {
+                        panic!("soak round {r}: lost a recoverable \
+                                round: {e:#}")
+                    }),
+                // Post-compaction-commit crash: the log is already the
+                // snapshot prefix, nothing in flight — recompute live.
+                _ => coord.run_round(r, &ys, &betas, &dropped).unwrap(),
+            }
+        } else {
+            coord.run_round(r, &ys, &betas, &dropped).unwrap()
+        };
+        assert_round_eq(&got, &reference[r as usize],
+                        &format!("soak round {r}"));
+        aggs.push(got.0);
+    }
+    assert!(crashes >= 8,
+            "soak seed too gentle: only {crashes} crashes fired");
+    assert!(compaction_crashes >= 1,
+            "soak must exercise a compaction crash");
+    aggs
+}
+
+/// Seeded dropout churn for soak round `r`: 0..=2 distinct leavers.
+fn churn(entropy: u64, r: u32) -> Vec<usize> {
+    let mut rng =
+        ChaCha20Rng::from_seed_u64(entropy ^ 0xc42 ^ (r as u64) << 17);
+    let k = rng.next_u32() as usize % 3;
+    let mut pool: Vec<usize> = (0..10).collect();
+    let mut leave = Vec::new();
+    for _ in 0..k {
+        let i = rng.next_u32() as usize % pool.len();
+        leave.push(pool.swap_remove(i));
+    }
+    leave.sort_unstable();
+    leave
+}
+
+/// ≥ 20 rounds of seeded crash churn (including compaction crashes)
+/// over reordering links: zero recoverable rounds lost, every round
+/// bit-exact to its reference, and the full trajectory deterministic
+/// under the seed.
+#[test]
+fn crash_churn_soak_loses_nothing_and_is_deterministic() {
+    let a = crash_churn_soak_run(0x5eed);
+    let b = crash_churn_soak_run(0x5eed);
+    assert_eq!(a.len(), 22);
+    for (r, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x, y, "soak round {r} not deterministic under seed");
+    }
+}

@@ -8,6 +8,14 @@
 //! 3. random buffers behind a *valid* header (correct tag + patched
 //!    length), which drive the payload parsers much deeper than layer 2.
 
+//! The same three layers cover the durable round journal's record
+//! codec ([`sparsesecagg::journal`]): framed encode∘decode identity
+//! per record kind, seeded random-byte and valid-header/garbage
+//! streams through `decode_stream` (no panics, hostile counts rejected
+//! before allocation), and the corrupt-tail truncation property (any
+//! cut of a valid stream recovers exactly a valid record prefix).
+
+use sparsesecagg::journal::{self, Record};
 use sparsesecagg::prg::ChaCha20Rng;
 use sparsesecagg::protocol::messages::*;
 use sparsesecagg::protocol::wire;
@@ -233,4 +241,175 @@ fn sparse_upload_strict_region_checks() {
     buf.extend_from_slice(&(1u32 << 30).to_le_bytes()); // d = 2^30
     buf.extend_from_slice(&[0xff; 4]);
     assert!(wire::decode_sparse_upload(&buf).is_err());
+}
+
+// ---------------------------------------------------------------------
+// Journal record codec (`sparsesecagg::journal`)
+// ---------------------------------------------------------------------
+
+fn rand_bytes(rng: &mut ChaCha20Rng, max: usize) -> Vec<u8> {
+    (0..rng.next_u32() as usize % max)
+        .map(|_| rng.next_u32() as u8)
+        .collect()
+}
+
+fn rand_u32s(rng: &mut ChaCha20Rng, max: usize) -> Vec<u32> {
+    (0..rng.next_u32() as usize % max)
+        .map(|_| rng.next_u32())
+        .collect()
+}
+
+/// One randomized record of each kind per draw, covering every field
+/// shape the codec frames (floats round-trip by bit pattern).
+fn rand_record(rng: &mut ChaCha20Rng) -> Record {
+    match rng.next_u32() % 11 {
+        0 => Record::Meta {
+            kind: (rng.next_u32() % 2) as u8,
+            n: rng.next_u32() % 1000,
+            d: rng.next_u32(),
+            alpha: rng.next_f32() as f64,
+            theta: rng.next_f32() as f64,
+            c: rng.next_f32(),
+            entropy: rng.next_u64(),
+        },
+        1 => Record::SetupComplete {
+            roster: (0..rng.next_u32() as usize % 32)
+                .map(|_| rng.next_u64())
+                .collect(),
+        },
+        2 => Record::RoundStart { round: rng.next_u32() },
+        3 => Record::Upload {
+            from: rng.next_u32() % 64,
+            frame: rand_bytes(rng, 200),
+        },
+        4 => Record::UploadsClosed {
+            upload_bytes: (0..rng.next_u32() as usize % 32)
+                .map(|_| rng.next_u64())
+                .collect(),
+        },
+        5 => Record::WaveSolicited { survivors: rand_u32s(rng, 32) },
+        6 => Record::Response {
+            from: rng.next_u32() % 64,
+            frame: rand_bytes(rng, 200),
+        },
+        7 => Record::WaveClosed {
+            recipients: rand_u32s(rng, 32),
+            down_per_recipient: rand_u32s(rng, 32),
+            sizes: rand_u32s(rng, 32),
+        },
+        8 => Record::Excluded { users: rand_u32s(rng, 8) },
+        9 => Record::RoundComplete { round: rng.next_u32() },
+        _ => Record::Snapshot { through_round: rng.next_u32() },
+    }
+}
+
+/// encode∘decode identity, both per-payload and through the framed
+/// stream scanner: a random multi-record stream decodes back to
+/// exactly itself with a clean end-of-stream.
+#[test]
+fn journal_record_encode_decode_identity() {
+    prop(50, |rng| {
+        let recs: Vec<Record> =
+            (0..1 + rng.next_u32() as usize % 12)
+                .map(|_| rand_record(rng))
+                .collect();
+        let mut stream = Vec::new();
+        for r in &recs {
+            assert_eq!(&Record::decode(&r.encode()).unwrap(), r);
+            stream.extend_from_slice(&journal::frame_record(r));
+        }
+        let (got, end, err) = journal::decode_stream(&stream);
+        assert!(err.is_none(), "{err:?}");
+        assert_eq!(end, stream.len());
+        assert_eq!(got, recs);
+    });
+}
+
+/// Seeded pure-random byte streams: the scanner must return (treating
+/// anything implausible as a torn tail), never panic, and never report
+/// more valid bytes than it was given.
+#[test]
+fn journal_random_byte_streams_never_panic() {
+    let mut rng = ChaCha20Rng::from_seed_u64(0x10a7);
+    for _ in 0..2000 {
+        let buf = rand_bytes(&mut rng, 600);
+        let (recs, end, _err) = journal::decode_stream(&buf);
+        assert!(end <= buf.len());
+        assert!(recs.len() <= buf.len() / 8 + 1);
+        let _ = Record::decode(&buf);
+    }
+}
+
+/// A *CRC-valid* frame over a garbage payload drives the payload
+/// parser itself: the scan either yields a legitimately-decodable
+/// record or stops with the typed corruption error (tampering, not
+/// tearing) — never a panic.
+#[test]
+fn journal_valid_header_garbage_payload_is_typed() {
+    let mut rng = ChaCha20Rng::from_seed_u64(0x10a8);
+    for _ in 0..2000 {
+        let payload = rand_bytes(&mut rng, 120);
+        let mut buf = Vec::with_capacity(8 + payload.len());
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&journal::crc32(&payload).to_le_bytes());
+        buf.extend_from_slice(&payload);
+        let (recs, end, err) = journal::decode_stream(&buf);
+        match err {
+            Some(e) => {
+                assert!(recs.is_empty() && end == 0,
+                        "corruption after progress: {e}");
+            }
+            None => {
+                assert_eq!((recs.len(), end), (1, buf.len()),
+                           "CRC-valid frame neither decoded nor \
+                            reported corrupt");
+            }
+        }
+    }
+}
+
+/// Hostile vector counts behind a correct CRC must be rejected before
+/// allocation: a `SetupComplete` claiming 2^32−1 roster keys in a
+/// 5-byte payload is typed corruption, not a 32 GiB allocation.
+#[test]
+fn journal_hostile_counts_rejected_without_allocation() {
+    let mut payload = vec![2u8]; // kind: SetupComplete
+    payload.extend_from_slice(&u32::MAX.to_le_bytes());
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&journal::crc32(&payload).to_le_bytes());
+    buf.extend_from_slice(&payload);
+    let (recs, end, err) = journal::decode_stream(&buf);
+    assert!(recs.is_empty() && end == 0);
+    assert!(err.is_some(), "hostile count must be typed corruption");
+    // A length prefix past the record cap is a torn tail, not an
+    // allocation request.
+    let huge = (1u32 << 29).to_le_bytes();
+    let mut buf = huge.to_vec();
+    buf.extend_from_slice(&[0u8; 12]);
+    let (recs, end, err) = journal::decode_stream(&buf);
+    assert!(recs.is_empty() && end == 0 && err.is_none());
+}
+
+/// Corrupt-tail truncation property: cutting a valid stream at ANY
+/// byte recovers exactly a prefix of its records — no invented
+/// records, no corruption error, and the valid-end watermark lands on
+/// the frame boundary of the last surviving record.
+#[test]
+fn journal_any_truncation_recovers_exact_record_prefix() {
+    let mut rng = ChaCha20Rng::from_seed_u64(0x10a9);
+    let recs: Vec<Record> = (0..6).map(|_| rand_record(&mut rng)).collect();
+    let mut stream = Vec::new();
+    let mut boundaries = vec![0usize];
+    for r in &recs {
+        stream.extend_from_slice(&journal::frame_record(r));
+        boundaries.push(stream.len());
+    }
+    for cut in 0..=stream.len() {
+        let (got, end, err) = journal::decode_stream(&stream[..cut]);
+        assert!(err.is_none(), "cut {cut}: {err:?}");
+        let keep = boundaries.iter().filter(|&&b| b <= cut).count() - 1;
+        assert_eq!(end, boundaries[keep], "cut {cut}");
+        assert_eq!(got, recs[..keep], "cut {cut}");
+    }
 }
