@@ -1,0 +1,47 @@
+// Known-good fixture: every construct the rules police, each carried by
+// its sanctioned escape hatch. Must lint clean under ALL rules — this
+// guards against rules over-firing. This file is not a module of the
+// crate.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn read_first(p: *const u8) -> u8 {
+    // SAFETY: `p` is non-null and valid for reads by this fixture's
+    // contract; nothing here is ever executed.
+    unsafe { *p }
+}
+
+pub fn decode_len(bytes: &[u8]) -> u32 {
+    let head: [u8; 4] = bytes[..4]
+        .try_into()
+        // lint: allow(decode-no-panic) — the 4-byte slice makes the
+        // conversion infallible; fixture mirrors wire.rs idiom.
+        .unwrap();
+    u32::from_le_bytes(head)
+}
+
+pub fn tally(xs: &[u32]) -> usize {
+    // lint: allow(core-determinism) — demo only: iteration order is
+    // never observed, only the length.
+    let mut seen: std::collections::HashMap<u32, usize> = Default::default();
+    for &x in xs {
+        *seen.entry(x).or_default() += 1;
+    }
+    seen.len()
+}
+
+pub fn snapshot(counter: &AtomicUsize) -> usize {
+    // lint: allow(relaxed-justified) — monotonic counter read with no
+    // dependent loads; staleness is benign.
+    counter.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    // Test regions are exempt from the scoped rules.
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        let v: Option<u8> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+    }
+}

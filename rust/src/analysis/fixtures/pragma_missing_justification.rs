@@ -1,0 +1,13 @@
+// Known-bad fixture: a pragma with no justification. It still
+// suppresses its target (so the underlying `core-determinism` hit does
+// not double-report) but must trip `pragma` exactly once. This file is
+// not a module of the crate.
+
+pub fn tally(xs: &[u32]) -> usize {
+    // lint: allow(core-determinism)
+    let mut seen: std::collections::HashMap<u32, usize> = Default::default();
+    for &x in xs {
+        *seen.entry(x).or_default() += 1;
+    }
+    seen.len()
+}

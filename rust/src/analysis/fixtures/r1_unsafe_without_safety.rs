@@ -1,0 +1,7 @@
+// Known-bad fixture: an `unsafe` block with no adjacent `// SAFETY:`
+// comment. Must trip `safety-comment` exactly once. This file is not a
+// module of the crate; only the linter reads it.
+
+pub fn read_first(p: *const u8) -> u8 {
+    unsafe { *p }
+}

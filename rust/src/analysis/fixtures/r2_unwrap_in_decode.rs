@@ -1,0 +1,8 @@
+// Known-bad fixture: a panic-capable call in what repolint treats as a
+// decode path (fixtures get every rule). Must trip `decode-no-panic`
+// exactly once. This file is not a module of the crate.
+
+pub fn decode_len(bytes: &[u8]) -> u32 {
+    let head: [u8; 4] = bytes[..4].try_into().unwrap();
+    u32::from_le_bytes(head)
+}

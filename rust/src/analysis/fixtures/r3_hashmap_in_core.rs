@@ -1,0 +1,12 @@
+// Known-bad fixture: a random-iteration-order collection in what
+// repolint treats as protocol core (fixtures get every rule). Must trip
+// `core-determinism` exactly once, so `HashMap` is named exactly once.
+// This file is not a module of the crate.
+
+pub fn tally(xs: &[u32]) -> usize {
+    let mut seen: std::collections::HashMap<u32, usize> = Default::default();
+    for &x in xs {
+        *seen.entry(x).or_default() += 1;
+    }
+    seen.len()
+}

@@ -1,0 +1,9 @@
+// Known-bad fixture: an `Ordering::Relaxed` with no justifying pragma.
+// Must trip `relaxed-justified` exactly once. This file is not a module
+// of the crate.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn snapshot(counter: &AtomicUsize) -> usize {
+    counter.load(Ordering::Relaxed)
+}

@@ -1,0 +1,521 @@
+//! Hand-rolled Rust lexer for `repolint` — no `syn` in the vendored
+//! crate set, and the rules only need token/comment streams, not ASTs.
+//!
+//! The lexer understands exactly the lexical features that can make a
+//! naive `grep` lie about Rust source:
+//!
+//! * line comments (`//`, `///`, `//!`) and **nested** block comments
+//!   (`/* /* */ */`), captured separately from the token stream;
+//! * string literals (`"..."` with escapes, multi-line), raw strings
+//!   (`r"..."`, `r#"..."#`, any number of `#`s), byte strings (`b"..."`,
+//!   `br#"..."#`) — their *contents* never appear as tokens, so the word
+//!   `unsafe` inside a diagnostic message cannot trip a rule;
+//! * char and byte-char literals (`'a'`, `'\n'`, `'\u{1F600}'`, `b'x'`)
+//!   disambiguated from lifetimes (`'env`, `'static`) and loop labels;
+//! * identifiers (maximal munch: `unsafe_op_in_unsafe_fn` is one ident,
+//!   not the keyword `unsafe`), numbers (with exponent/suffix), and
+//!   single-character punctuation.
+//!
+//! Everything the rules consume is line-addressed so diagnostics and
+//! pragmas can be exact.
+
+/// One lexical token that survives into the rule-visible stream.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Tok {
+    /// Identifier or keyword (maximal munch).
+    Ident(String),
+    /// String / raw-string / byte-string literal *contents*.
+    Str(String),
+    /// Any single non-ident, non-literal character (`!`, `.`, `{`, …).
+    Punct(char),
+    /// A lifetime or loop label (`'env`); the name is not needed.
+    Lifetime,
+    /// A numeric literal; the value is not needed.
+    Number,
+    /// A char or byte-char literal; the value is not needed.
+    CharLit,
+}
+
+/// A token with the 1-based line it starts on.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Token {
+    pub line: usize,
+    pub tok: Tok,
+}
+
+/// A comment with its text (delimiters stripped) and line span.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Comment {
+    /// 1-based line the comment starts on.
+    pub line: usize,
+    /// 1-based line the comment ends on (== `line` for `//` comments).
+    pub end_line: usize,
+    /// Text without the `//` / `/* */` delimiters.
+    pub text: String,
+}
+
+/// Lexed source: tokens and comments in file order.
+#[derive(Clone, Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+impl Lexed {
+    /// True iff some token starts on `line`.
+    pub fn line_has_code(&self, line: usize) -> bool {
+        // Tokens are in file order; a binary search would work, but the
+        // rule set only calls this on short adjacency windows.
+        self.tokens.iter().any(|t| t.line == line)
+    }
+
+    /// First line strictly after `line` that carries a token, if any.
+    pub fn next_code_line(&self, line: usize) -> Option<usize> {
+        self.tokens
+            .iter()
+            .map(|t| t.line)
+            .filter(|&l| l > line)
+            .min()
+    }
+}
+
+/// Lex `src`. Never panics on any input: unterminated literals and
+/// comments are closed implicitly at end of file (good enough for a
+/// linter — `rustc` itself is the authority on well-formedness).
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1usize;
+
+    // Advance over `chars[from..to)` counting newlines.
+    fn count_lines(chars: &[char], from: usize, to: usize) -> usize {
+        chars[from..to].iter().filter(|&&c| c == '\n').count()
+    }
+
+    while i < chars.len() {
+        let c = chars[i];
+        let c1 = chars.get(i + 1).copied();
+
+        // ---- whitespace ---------------------------------------------
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+
+        // ---- comments -----------------------------------------------
+        if c == '/' && c1 == Some('/') {
+            let start = i + 2;
+            let mut j = start;
+            while j < chars.len() && chars[j] != '\n' {
+                j += 1;
+            }
+            out.comments.push(Comment {
+                line,
+                end_line: line,
+                text: chars[start..j].iter().collect(),
+            });
+            i = j; // the '\n' (or EOF) is handled by the main loop
+            continue;
+        }
+        if c == '/' && c1 == Some('*') {
+            let start_line = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            let text_start = j;
+            while j < chars.len() && depth > 0 {
+                if chars[j] == '/' && chars.get(j + 1) == Some(&'*') {
+                    depth += 1;
+                    j += 2;
+                } else if chars[j] == '*' && chars.get(j + 1) == Some(&'/')
+                {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            let text_end = j.saturating_sub(2).max(text_start);
+            line += count_lines(&chars, i, j);
+            out.comments.push(Comment {
+                line: start_line,
+                end_line: line,
+                text: chars[text_start..text_end].iter().collect(),
+            });
+            i = j;
+            continue;
+        }
+
+        // ---- raw / byte string prefixes -----------------------------
+        // Handled before plain idents: `r`, `b`, `br`, `rb` is invalid
+        // Rust so only the first three matter. A prefix only counts when
+        // followed by `"` or (for raw forms) `#`s then `"`.
+        if c == 'r' || c == 'b' {
+            let (plen, raw) = match (c, c1) {
+                ('r', Some('"')) | ('r', Some('#')) => (1, true),
+                ('b', Some('r')) => match chars.get(i + 2) {
+                    Some('"') | Some('#') => (2, true),
+                    _ => (0, false),
+                },
+                ('b', Some('"')) => (1, false),
+                ('b', Some('\'')) => {
+                    // byte-char literal b'x'
+                    let start_line = line;
+                    let mut j = i + 2;
+                    while j < chars.len() && chars[j] != '\'' {
+                        if chars[j] == '\\' {
+                            j += 1;
+                        }
+                        j += 1;
+                    }
+                    j = (j + 1).min(chars.len());
+                    line += count_lines(&chars, i, j);
+                    out.tokens.push(Token {
+                        line: start_line,
+                        tok: Tok::CharLit,
+                    });
+                    i = j;
+                    continue;
+                }
+                _ => (0, false),
+            };
+            if plen > 0 && raw {
+                // r#*" ... "#*  — count the hashes, find the matching
+                // closer `"` + same number of hashes.
+                let mut j = i + plen;
+                let mut hashes = 0usize;
+                while chars.get(j) == Some(&'#') {
+                    hashes += 1;
+                    j += 1;
+                }
+                if chars.get(j) == Some(&'"') {
+                    let start_line = line;
+                    j += 1;
+                    let content_start = j;
+                    let content_end;
+                    loop {
+                        if j >= chars.len() {
+                            content_end = j;
+                            break;
+                        }
+                        if chars[j] == '"' {
+                            let mut k = 0usize;
+                            while k < hashes
+                                && chars.get(j + 1 + k) == Some(&'#')
+                            {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                content_end = j;
+                                j += 1 + hashes;
+                                break;
+                            }
+                        }
+                        j += 1;
+                    }
+                    line += count_lines(&chars, i, j);
+                    out.tokens.push(Token {
+                        line: start_line,
+                        tok: Tok::Str(
+                            chars[content_start..content_end]
+                                .iter()
+                                .collect(),
+                        ),
+                    });
+                    i = j;
+                    continue;
+                }
+                // `r#` not followed by `"` is a raw identifier (r#type);
+                // fall through to ident lexing below, which will emit
+                // `r` — close enough: raw identifiers are keywords used
+                // as names and must NOT match keyword rules anyway, so
+                // we skip the `r#` and lex the name itself.
+                if c == 'r' && c1 == Some('#') {
+                    i += 2;
+                    continue;
+                }
+            }
+            if plen > 0 && !raw {
+                // b"..." — same body as a plain string, below, with the
+                // prefix consumed first.
+                i += plen;
+                // fall through to the '"' case on the next iteration
+                continue;
+            }
+            // plain identifier starting with r/b: handled below
+        }
+
+        // ---- plain strings ------------------------------------------
+        if c == '"' {
+            let start_line = line;
+            let mut j = i + 1;
+            let content_start = j;
+            while j < chars.len() && chars[j] != '"' {
+                if chars[j] == '\\' {
+                    j += 1; // skip the escaped char (covers \" and \\)
+                }
+                j += 1;
+            }
+            let content_end = j.min(chars.len());
+            j = (j + 1).min(chars.len());
+            line += count_lines(&chars, i, j);
+            out.tokens.push(Token {
+                line: start_line,
+                tok: Tok::Str(
+                    chars[content_start..content_end].iter().collect(),
+                ),
+            });
+            i = j;
+            continue;
+        }
+
+        // ---- char literal vs lifetime -------------------------------
+        if c == '\'' {
+            let nxt = c1;
+            let is_lifetime = match nxt {
+                // `'a'` is a char, `'ab`/`'a ` is a lifetime: decide by
+                // the character after the first identifier char.
+                Some(n) if n == '_' || n.is_alphabetic() => {
+                    chars.get(i + 2) != Some(&'\'')
+                }
+                _ => false,
+            };
+            if is_lifetime {
+                let mut j = i + 1;
+                while j < chars.len()
+                    && (chars[j] == '_' || chars[j].is_alphanumeric())
+                {
+                    j += 1;
+                }
+                out.tokens.push(Token { line, tok: Tok::Lifetime });
+                i = j;
+                continue;
+            }
+            // char literal: scan to the closing quote, honoring escapes.
+            let start_line = line;
+            let mut j = i + 1;
+            while j < chars.len() && chars[j] != '\'' {
+                if chars[j] == '\\' {
+                    j += 1;
+                }
+                j += 1;
+            }
+            j = (j + 1).min(chars.len());
+            line += count_lines(&chars, i, j);
+            out.tokens.push(Token { line: start_line, tok: Tok::CharLit });
+            i = j;
+            continue;
+        }
+
+        // ---- numbers ------------------------------------------------
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < chars.len() {
+                let d = chars[j];
+                if d == '_'
+                    || d.is_alphanumeric()
+                    || (d == '.'
+                        && chars
+                            .get(j + 1)
+                            .is_some_and(|n| n.is_ascii_digit()))
+                {
+                    // exponent sign: 1e-9 / 2.5E+10
+                    j += 1;
+                    if (chars[j - 1] == 'e' || chars[j - 1] == 'E')
+                        && matches!(
+                            chars.get(j),
+                            Some('+') | Some('-')
+                        )
+                        && chars
+                            .get(j + 1)
+                            .is_some_and(|n| n.is_ascii_digit())
+                    {
+                        j += 1;
+                    }
+                } else {
+                    break;
+                }
+            }
+            out.tokens.push(Token { line, tok: Tok::Number });
+            i = j;
+            continue;
+        }
+
+        // ---- identifiers / keywords ---------------------------------
+        if c == '_' || c.is_alphabetic() {
+            let mut j = i + 1;
+            while j < chars.len()
+                && (chars[j] == '_' || chars[j].is_alphanumeric())
+            {
+                j += 1;
+            }
+            out.tokens.push(Token {
+                line,
+                tok: Tok::Ident(chars[i..j].iter().collect()),
+            });
+            i = j;
+            continue;
+        }
+
+        // ---- punctuation --------------------------------------------
+        out.tokens.push(Token { line, tok: Tok::Punct(c) });
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(l: &Lexed) -> Vec<&str> {
+        l.tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Ident(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn keywords_in_strings_and_comments_are_not_tokens() {
+        let src = r##"
+// unsafe in a line comment
+/* unsafe in a block comment */
+let a = "unsafe in a string";
+let b = r#"unsafe in a raw string"#;
+let c = b"unsafe in a byte string";
+"##;
+        let l = lex(src);
+        assert!(!idents(&l).contains(&"unsafe"));
+        assert_eq!(l.comments.len(), 2);
+        assert!(l.comments[0].text.contains("unsafe"));
+    }
+
+    #[test]
+    fn nested_block_comments_terminate_correctly() {
+        let src = "/* outer /* inner */ still comment */ unsafe";
+        let l = lex(src);
+        assert_eq!(idents(&l), vec!["unsafe"]);
+        assert_eq!(l.comments.len(), 1);
+        assert!(l.comments[0].text.contains("inner"));
+    }
+
+    #[test]
+    fn multiline_block_comment_spans_lines() {
+        let src = "/* a\nb\nc */\nunsafe";
+        let l = lex(src);
+        assert_eq!(l.comments[0].line, 1);
+        assert_eq!(l.comments[0].end_line, 3);
+        assert_eq!(l.tokens[0].line, 4);
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_and_quotes() {
+        let src = r###"let s = r#"has "quotes" and // not a comment"#; x"###;
+        let l = lex(src);
+        assert!(l.comments.is_empty());
+        assert!(idents(&l).contains(&"x"));
+        let strs: Vec<&str> = l
+            .tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Str(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(strs.len(), 1);
+        assert!(strs[0].contains("\"quotes\""));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let src = "fn f<'env>(c: char) { let a = 'x'; let b = '\\''; \
+                   let c = '\\u{1F600}'; let d: &'static str = \"s\"; \
+                   'outer: loop { break 'outer; } }";
+        let l = lex(src);
+        let chars =
+            l.tokens.iter().filter(|t| t.tok == Tok::CharLit).count();
+        let lifetimes =
+            l.tokens.iter().filter(|t| t.tok == Tok::Lifetime).count();
+        assert_eq!(chars, 3, "'x', '\\'', '\\u{{1F600}}'");
+        assert_eq!(lifetimes, 4, "'env, 'static, 'outer x2");
+    }
+
+    #[test]
+    fn maximal_munch_keeps_unsafe_op_in_unsafe_fn_whole() {
+        let l = lex("#![deny(unsafe_op_in_unsafe_fn)] unsafe fn g() {}");
+        let ids = idents(&l);
+        assert!(ids.contains(&"unsafe_op_in_unsafe_fn"));
+        assert_eq!(
+            ids.iter().filter(|s| **s == "unsafe").count(),
+            1,
+            "only the real keyword"
+        );
+    }
+
+    #[test]
+    fn strings_with_escapes_do_not_leak() {
+        let src = r#"let s = "he said \"unsafe\\"; let t = 2; unwrap"#;
+        let l = lex(src);
+        let ids = idents(&l);
+        assert!(ids.contains(&"unwrap"));
+        assert!(!ids.contains(&"unsafe"));
+    }
+
+    #[test]
+    fn numbers_with_suffixes_and_exponents() {
+        let l = lex("let x = 1_000u64 + 0xFFusize + 1e-9 + 2.5E+10 + 1.0f32;");
+        assert!(idents(&l).iter().all(|s| *s == "let" || *s == "x"));
+        let nums =
+            l.tokens.iter().filter(|t| t.tok == Tok::Number).count();
+        assert_eq!(nums, 5);
+    }
+
+    #[test]
+    fn line_numbers_are_exact() {
+        let src = "a\nb\n\n  c // trailing\nd";
+        let l = lex(src);
+        let lines: Vec<(String, usize)> = l
+            .tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Ident(s) => Some((s.clone(), t.line)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(
+            lines,
+            vec![
+                ("a".into(), 1),
+                ("b".into(), 2),
+                ("c".into(), 4),
+                ("d".into(), 5)
+            ]
+        );
+        assert_eq!(l.comments[0].line, 4);
+    }
+
+    #[test]
+    fn next_code_line_skips_blank_and_comment_lines() {
+        let src = "a\n// c\n\nb";
+        let l = lex(src);
+        assert_eq!(l.next_code_line(1), Some(4));
+        assert!(l.line_has_code(1));
+        assert!(!l.line_has_code(2));
+    }
+
+    #[test]
+    fn unterminated_literals_do_not_panic() {
+        lex("let s = \"never closed");
+        lex("let s = r#\"never closed");
+        lex("/* never closed");
+        lex("let c = 'x");
+    }
+}

@@ -1,0 +1,173 @@
+//! Repo-invariant static analysis: the `repolint` pass.
+//!
+//! The protocol core's guarantees — bit-exact aggregates under any
+//! executor/steal order, typed-error-never-panic ingest of hostile
+//! frames, bit-exact journal replay — are enforced dynamically by the
+//! test tiers. This module enforces them *syntactically*, so a future
+//! change cannot quietly reintroduce a nondeterminism source or a
+//! panicking decode path that the current tests happen not to hit.
+//! The `repolint` binary (`src/bin/repolint.rs`) walks `src/`,
+//! `tests/`, and `benches/` and applies the rules below; CI runs it as
+//! the named `Repo lint` gate.
+//!
+//! # Rule catalog
+//!
+//! | id | scope | invariant |
+//! |----|-------|-----------|
+//! | `safety-comment` | everywhere | every `unsafe` token has an adjacent `// SAFETY:` comment stating the proof obligation |
+//! | `decode-no-panic` | `protocol/wire.rs`, `journal/`, `transport/` | no `.unwrap()` / `.expect()` / `panic!`-family macros outside `#[cfg(test)]`: hostile bytes must surface as typed errors |
+//! | `core-determinism` | protocol core (see below) | no `HashMap`/`HashSet`/`RandomState`/`DefaultHasher` (random iteration order), `Instant`/`SystemTime` (wall clock), or `thread_rng` (OS randomness) outside `#[cfg(test)]` |
+//! | `relaxed-justified` | `exec/`, `journal/` | every `Ordering::Relaxed` carries a pragma explaining why no happens-before edge is needed |
+//! | `cross-reference` | repo-level | every `wire::Tag` and `journal::Record` kind appears by name in `tests/wire_fuzz.rs`; every `FlConfig` knob maps to a `config.rs` `KNOWN` key (== a `--key` CLI flag, since `cmd_run` merges arbitrary flags) and vice versa, with `exec_mode` ↔ `executor` aliased |
+//! | `pragma` | everywhere | pragmas are well-formed and justified |
+//!
+//! The **protocol core** for `core-determinism` is `protocol/`, `prg/`,
+//! `field/`, `shamir/`, `dh/`, `masking/`, `quantize/`, `sparsify/`,
+//! `exec/`, `journal/`, `transport/`, `netsim/`, `network/`, and
+//! `coordinator/` — everything on the bit-exact replay path.
+//! `metrics/` is deliberately outside it: [`crate::metrics::Stopwatch`]
+//! is the one sanctioned home of wall-clock time, and the core stays
+//! syntactically time-free by importing it rather than `Instant`.
+//! `cli`/`config`/`main` (flag plumbing), `fl`/`runtime`/`data`
+//! (training driver, artifact loading), `testutil`/`adversary`, and
+//! `tests/` + `benches/` (wall-time measurement is their job) are also
+//! out of scope.
+//!
+//! # Pragma syntax
+//!
+//! ```text
+//! // lint: allow(<rule-id>) — <justification>
+//! ```
+//!
+//! A pragma covers the line it starts on (trailing form) and the first
+//! code line after it (preceding form). The justification is
+//! mandatory: a pragma without one still suppresses its target (to
+//! avoid double-reporting) but emits a `pragma` diagnostic, so the
+//! tree does not pass until the why is written down. Unknown rule
+//! names are diagnosed the same way.
+//!
+//! # Self-test gate
+//!
+//! Known-bad fixtures live in `src/analysis/fixtures/` — one file per
+//! rule, each tripping its rule **exactly once**, plus a known-good
+//! file that must lint clean. The `fixtures_trip_each_rule_exactly_once`
+//! test below fails if a rule stops firing (silent rot) or starts
+//! over-firing. The fixtures are not part of the crate (never declared
+//! as modules) and the default `repolint` walk skips the directory;
+//! `repolint <path>` lints them explicitly with every file-local rule,
+//! which is how CI demonstrates the nonzero-exit contract.
+//! `cross-reference` is repo-level rather than file-local, so its
+//! self-tests are synthetic-source unit tests in [`rules`].
+//!
+//! # Relation to the executor model checker
+//!
+//! The one `unsafe` in the tree (the lifetime transmute in
+//! [`crate::exec`]) rests on a *temporal* invariant no lint can see:
+//! `pending` reaches 0 only after every spawned task has completed or
+//! been abandoned via the panic path. That invariant is checked by the
+//! bounded interleaving model checker in [`crate::exec::model`] (CI
+//! gate `Executor model check`); `safety-comment` merely ensures the
+//! prose obligation next to the `unsafe` stays present and points at
+//! the machine-checked model. The model is exhaustive only within its
+//! bounds (≤ 4 workers, ≤ 6 tasks, no spurious wakeups — see its
+//! module doc for why each bound is sound to rely on).
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{
+    crossref, lint_file, rules_for_path, CrossrefInput, Diag, RuleSet,
+    CATALOG,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::rules::{
+        lint_file, RuleSet, RULE_DECODE, RULE_DETERMINISM, RULE_PRAGMA,
+        RULE_RELAXED, RULE_SAFETY,
+    };
+    use std::path::PathBuf;
+
+    fn fixtures_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("src/analysis/fixtures")
+    }
+
+    /// filename prefix -> the one rule the fixture must trip; `g_`
+    /// fixtures must be clean.
+    fn expected_rule(name: &str) -> Option<&'static str> {
+        for (prefix, rule) in [
+            ("r1_", RULE_SAFETY),
+            ("r2_", RULE_DECODE),
+            ("r3_", RULE_DETERMINISM),
+            ("r4_", RULE_RELAXED),
+            ("pragma_", RULE_PRAGMA),
+        ] {
+            if name.starts_with(prefix) {
+                return Some(rule);
+            }
+        }
+        None
+    }
+
+    #[test]
+    fn fixtures_trip_each_rule_exactly_once() {
+        let all = RuleSet { decode: true, determinism: true, relaxed: true };
+        let mut entries: Vec<PathBuf> = std::fs::read_dir(fixtures_dir())
+            .expect("fixtures dir exists")
+            .map(|e| e.expect("readable entry").path())
+            .filter(|p| p.extension().is_some_and(|x| x == "rs"))
+            .collect();
+        entries.sort();
+        assert!(!entries.is_empty(), "fixtures directory is empty");
+
+        let mut tripped: Vec<&'static str> = Vec::new();
+        for path in &entries {
+            let name = path.file_name().unwrap().to_string_lossy();
+            let src = std::fs::read_to_string(path).unwrap();
+            let diags = lint_file(&path.to_string_lossy(), &src, all);
+            match expected_rule(&name) {
+                Some(rule) => {
+                    assert_eq!(
+                        diags.len(),
+                        1,
+                        "{name}: expected exactly one diagnostic, got \
+                         {diags:?}"
+                    );
+                    assert_eq!(
+                        diags[0].rule, rule,
+                        "{name}: tripped the wrong rule: {diags:?}"
+                    );
+                    assert!(diags[0].line > 0, "{name}: no line number");
+                    tripped.push(rule);
+                }
+                None => {
+                    assert!(
+                        name.starts_with("g_"),
+                        "{name}: fixture names must start with r1_..r4_, \
+                         pragma_, or g_"
+                    );
+                    assert!(
+                        diags.is_empty(),
+                        "{name}: known-good fixture must lint clean, \
+                         got {diags:?}"
+                    );
+                }
+            }
+        }
+        // Every file-local rule must be demonstrated by some fixture —
+        // deleting a fixture may not silently retire a rule.
+        for rule in [
+            RULE_SAFETY,
+            RULE_DECODE,
+            RULE_DETERMINISM,
+            RULE_RELAXED,
+            RULE_PRAGMA,
+        ] {
+            assert!(
+                tripped.contains(&rule),
+                "no fixture demonstrates rule `{rule}`"
+            );
+        }
+    }
+}

@@ -1,0 +1,952 @@
+//! The `repolint` rule set: repo invariants as token-level checks.
+//!
+//! See the module doc in [`crate::analysis`] for the full rule catalog
+//! and pragma syntax. Each rule here works on the [`lexer`] output —
+//! tokens and comments with exact line numbers — so diagnostics are
+//! `file:line` addressable and string/comment contents can never trip
+//! a rule.
+
+use super::lexer::{lex, Lexed, Tok};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Rule identifiers. These are the names accepted by
+/// `// lint: allow(<rule>) — justification` pragmas.
+pub const RULE_SAFETY: &str = "safety-comment";
+pub const RULE_DECODE: &str = "decode-no-panic";
+pub const RULE_DETERMINISM: &str = "core-determinism";
+pub const RULE_RELAXED: &str = "relaxed-justified";
+pub const RULE_CROSSREF: &str = "cross-reference";
+pub const RULE_PRAGMA: &str = "pragma";
+
+/// `(id, summary)` for `repolint --list`.
+pub const CATALOG: &[(&str, &str)] = &[
+    (RULE_SAFETY, "every `unsafe` carries an adjacent // SAFETY: comment"),
+    (RULE_DECODE, "no panic-capable calls in untrusted-input decode paths"),
+    (RULE_DETERMINISM, "no wall-clock / random-order sources in the protocol core"),
+    (RULE_RELAXED, "every Ordering::Relaxed in exec/ and journal/ is pragma-justified"),
+    (RULE_CROSSREF, "wire/journal kinds have fuzz cases; FlConfig knobs have CLI flags"),
+    (RULE_PRAGMA, "lint pragmas are well-formed and carry a justification"),
+];
+
+/// One diagnostic, addressed to a repo-relative file and 1-based line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diag {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl Diag {
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Which file-local rules apply to a path (relative to `rust/`,
+/// `/`-separated). [`RULE_PRAGMA`] and [`RULE_SAFETY`] always apply;
+/// the others are scoped:
+///
+/// * `decode-no-panic` — the untrusted-input surfaces: the wire codec,
+///   the journal (records are read back from disk that may have been
+///   torn by a crash), and the transport frame path.
+/// * `core-determinism` — every module on the bit-exact replay path.
+///   Deliberately **excluded**: `cli`/`config`/`main` (flag plumbing),
+///   `fl`/`runtime`/`data` (training driver and artifact loading),
+///   `metrics` (the one sanctioned home of wall-clock time),
+///   `testutil`/`adversary` (test-side harnesses), and `tests/` +
+///   `benches/` (benches measure wall time by design).
+/// * `relaxed-justified` — `exec/` and `journal/`, where a stale
+///   relaxed load could unsound the scope protocol or the WAL.
+///
+/// Fixture files under `analysis/fixtures/` get **all** rules so each
+/// can demonstrate exactly one violation.
+#[derive(Clone, Copy, Debug)]
+pub struct RuleSet {
+    pub decode: bool,
+    pub determinism: bool,
+    pub relaxed: bool,
+}
+
+const CORE_DIRS: &[&str] = &[
+    "src/protocol/",
+    "src/prg/",
+    "src/field/",
+    "src/shamir/",
+    "src/dh/",
+    "src/masking/",
+    "src/quantize/",
+    "src/sparsify/",
+    "src/exec/",
+    "src/journal/",
+    "src/transport/",
+    "src/netsim/",
+    "src/network/",
+    "src/coordinator/",
+];
+
+pub fn rules_for_path(path: &str) -> RuleSet {
+    let p = path.replace('\\', "/");
+    if p.contains("analysis/fixtures/") {
+        return RuleSet { decode: true, determinism: true, relaxed: true };
+    }
+    let decode = p.ends_with("src/protocol/wire.rs")
+        || p.contains("src/journal/")
+        || p.contains("src/transport/");
+    let determinism = CORE_DIRS.iter().any(|d| p.contains(d));
+    let relaxed = p.contains("src/exec/") || p.contains("src/journal/");
+    RuleSet { decode, determinism, relaxed }
+}
+
+// ---------------------------------------------------------------------
+// Pragmas
+// ---------------------------------------------------------------------
+
+/// Parsed pragma state for one file: which lines each rule is allowed
+/// on, plus diagnostics for malformed pragmas.
+struct Pragmas {
+    /// rule id -> set of covered lines.
+    allowed: BTreeMap<&'static str, BTreeSet<usize>>,
+    diags: Vec<Diag>,
+}
+
+/// Parse `// lint: allow(rule) — justification` comments.
+///
+/// A pragma covers the line the comment starts on (so trailing pragmas
+/// work) **and** the first code line after the comment ends (so a
+/// pragma on its own line covers exactly the next statement). A pragma
+/// with an unknown rule name or an empty justification still suppresses
+/// its target — double-reporting would bury the actionable message —
+/// but emits a [`RULE_PRAGMA`] diagnostic of its own.
+fn parse_pragmas(file: &str, lexed: &Lexed) -> Pragmas {
+    let mut out = Pragmas { allowed: BTreeMap::new(), diags: Vec::new() };
+    for c in &lexed.comments {
+        let text = c.text.trim();
+        let Some(rest) = text.strip_prefix("lint:") else { continue };
+        let rest = rest.trim_start();
+        let bad = |msg: String| Diag {
+            file: file.to_string(),
+            line: c.line,
+            rule: RULE_PRAGMA,
+            msg,
+        };
+        let Some(inner) = rest.strip_prefix("allow(") else {
+            out.diags.push(bad(format!(
+                "malformed pragma (expected `lint: allow(<rule>) — \
+                 justification`): `{text}`"
+            )));
+            continue;
+        };
+        let Some(close) = inner.find(')') else {
+            out.diags.push(bad("pragma missing `)`".to_string()));
+            continue;
+        };
+        let rule_name = inner[..close].trim();
+        let justification = inner[close + 1..]
+            .trim_start_matches(|ch: char| {
+                ch.is_whitespace() || ch == '—' || ch == '-' || ch == ':'
+            })
+            .trim();
+        let known = CATALOG.iter().find(|(id, _)| *id == rule_name);
+        let rule_id = match known {
+            Some((id, _)) => *id,
+            None => {
+                out.diags.push(bad(format!(
+                    "pragma names unknown rule `{rule_name}`"
+                )));
+                continue;
+            }
+        };
+        if justification.is_empty() {
+            out.diags.push(bad(format!(
+                "pragma allow({rule_id}) has no justification — say why \
+                 the exception is sound"
+            )));
+        }
+        let lines = out.allowed.entry(rule_id).or_default();
+        lines.insert(c.line);
+        if let Some(next) = lexed.next_code_line(c.end_line) {
+            lines.insert(next);
+        }
+    }
+    out
+}
+
+impl Pragmas {
+    fn allows(&self, rule: &str, line: usize) -> bool {
+        self.allowed.get(rule).is_some_and(|s| s.contains(&line))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Test-region detection
+// ---------------------------------------------------------------------
+
+/// Token-index ranges covered by `#[cfg(test)]` / `#[test]` items.
+/// Rules that police production code skip these: tests may unwrap,
+/// measure wall time, and use relaxed counters freely.
+///
+/// Heuristic on the token stream (no AST): an attribute counts as a
+/// test marker when it is exactly `test` (`#[test]`, covering the
+/// common case) or is a `cfg(...)` that mentions `test` without `not`
+/// (`#[cfg(test)]`, `#[cfg(all(test, ...))]` — but not
+/// `#[cfg(not(test))]`). The region runs through the attributed item's
+/// body: to the matching `}` of its first brace, or to the first `;`
+/// for braceless items.
+fn test_regions(lexed: &Lexed) -> Vec<(usize, usize)> {
+    let toks = &lexed.tokens;
+    let mut regions = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].tok != Tok::Punct('#')
+            || toks.get(i + 1).map(|t| &t.tok) != Some(&Tok::Punct('['))
+        {
+            i += 1;
+            continue;
+        }
+        // Collect the attribute tokens up to the matching `]`.
+        let attr_start = i;
+        let mut j = i + 2;
+        let mut depth = 1usize;
+        let mut idents: Vec<&str> = Vec::new();
+        while j < toks.len() && depth > 0 {
+            match &toks[j].tok {
+                Tok::Punct('[') => depth += 1,
+                Tok::Punct(']') => depth -= 1,
+                Tok::Ident(s) => idents.push(s.as_str()),
+                _ => {}
+            }
+            j += 1;
+        }
+        let is_test_attr = idents == ["test"]
+            || (idents.first() == Some(&"cfg")
+                && idents.contains(&"test")
+                && !idents.contains(&"not"));
+        if !is_test_attr {
+            i = j;
+            continue;
+        }
+        // Skip any further attributes on the same item, then span the
+        // item body.
+        while j + 1 < toks.len()
+            && toks[j].tok == Tok::Punct('#')
+            && toks[j + 1].tok == Tok::Punct('[')
+        {
+            let mut d = 1usize;
+            j += 2;
+            while j < toks.len() && d > 0 {
+                match toks[j].tok {
+                    Tok::Punct('[') => d += 1,
+                    Tok::Punct(']') => d -= 1,
+                    _ => {}
+                }
+                j += 1;
+            }
+        }
+        while j < toks.len()
+            && toks[j].tok != Tok::Punct('{')
+            && toks[j].tok != Tok::Punct(';')
+        {
+            j += 1;
+        }
+        if j < toks.len() && toks[j].tok == Tok::Punct('{') {
+            let mut d = 1usize;
+            j += 1;
+            while j < toks.len() && d > 0 {
+                match toks[j].tok {
+                    Tok::Punct('{') => d += 1,
+                    Tok::Punct('}') => d -= 1,
+                    _ => {}
+                }
+                j += 1;
+            }
+        }
+        regions.push((attr_start, j));
+        i = j;
+    }
+    regions
+}
+
+fn in_regions(regions: &[(usize, usize)], idx: usize) -> bool {
+    regions.iter().any(|&(a, b)| idx >= a && idx < b)
+}
+
+// ---------------------------------------------------------------------
+// File-local rules
+// ---------------------------------------------------------------------
+
+/// Lint one file with the given rule set. `file` is used verbatim in
+/// diagnostics.
+pub fn lint_file(file: &str, src: &str, rules: RuleSet) -> Vec<Diag> {
+    let lexed = lex(src);
+    let pragmas = parse_pragmas(file, &lexed);
+    let regions = test_regions(&lexed);
+    let mut diags = pragmas.diags.clone();
+
+    let mut report = |rule: &'static str, line: usize, msg: String| {
+        if !pragmas.allows(rule, line) {
+            diags.push(Diag { file: file.to_string(), line, rule, msg });
+        }
+    };
+
+    let toks = &lexed.tokens;
+    for (idx, t) in toks.iter().enumerate() {
+        let Tok::Ident(name) = &t.tok else { continue };
+        let tested = in_regions(&regions, idx);
+
+        // R1 safety-comment — applies everywhere, tests included: an
+        // unsafe block is an obligation wherever it lives.
+        if name == "unsafe" && !has_adjacent_safety_comment(&lexed, t.line)
+        {
+            report(
+                RULE_SAFETY,
+                t.line,
+                "`unsafe` without an adjacent `// SAFETY:` comment \
+                 stating the proof obligation"
+                    .to_string(),
+            );
+        }
+        if tested {
+            continue;
+        }
+
+        // R2 decode-no-panic.
+        if rules.decode {
+            let prev_is_dot = idx > 0
+                && toks[idx - 1].tok == Tok::Punct('.');
+            let next_is_bang = toks.get(idx + 1).map(|n| &n.tok)
+                == Some(&Tok::Punct('!'));
+            if prev_is_dot && (name == "unwrap" || name == "expect") {
+                report(
+                    RULE_DECODE,
+                    t.line,
+                    format!(
+                        ".{name}() in an untrusted-input decode path — \
+                         hostile bytes must surface as typed errors, \
+                         never panics"
+                    ),
+                );
+            }
+            const PANIC_MACROS: &[&str] = &[
+                "panic",
+                "assert",
+                "assert_eq",
+                "assert_ne",
+                "unreachable",
+                "todo",
+                "unimplemented",
+                "debug_assert",
+                "debug_assert_eq",
+                "debug_assert_ne",
+            ];
+            if next_is_bang && PANIC_MACROS.contains(&name.as_str()) {
+                report(
+                    RULE_DECODE,
+                    t.line,
+                    format!(
+                        "{name}! in an untrusted-input decode path — \
+                         hostile bytes must surface as typed errors, \
+                         never panics"
+                    ),
+                );
+            }
+        }
+
+        // R3 core-determinism.
+        if rules.determinism {
+            const NONDET: &[(&str, &str)] = &[
+                ("HashMap", "random-seeded iteration order"),
+                ("HashSet", "random-seeded iteration order"),
+                ("RandomState", "random hasher seed"),
+                ("DefaultHasher", "random hasher seed"),
+                ("Instant", "wall-clock time"),
+                ("SystemTime", "wall-clock time"),
+                ("thread_rng", "OS-seeded randomness"),
+            ];
+            if let Some((_, why)) =
+                NONDET.iter().find(|(n, _)| n == name)
+            {
+                report(
+                    RULE_DETERMINISM,
+                    t.line,
+                    format!(
+                        "`{name}` ({why}) in the protocol core breaks \
+                         bit-exact replay — use BTreeMap/BTreeSet, \
+                         seeded PRGs, or metrics::Stopwatch outside \
+                         the core"
+                    ),
+                );
+            }
+        }
+
+        // R4 relaxed-justified: every Ordering::Relaxed needs a pragma
+        // spelling out why the relaxation is sound.
+        if rules.relaxed
+            && name == "Relaxed"
+            && idx >= 3
+            && toks[idx - 1].tok == Tok::Punct(':')
+            && toks[idx - 2].tok == Tok::Punct(':')
+            && toks[idx - 3].tok == Tok::Ident("Ordering".to_string())
+        {
+            report(
+                RULE_RELAXED,
+                t.line,
+                "Ordering::Relaxed without a `// lint: \
+                 allow(relaxed-justified)` pragma — state why no \
+                 happens-before edge is needed here"
+                    .to_string(),
+            );
+        }
+    }
+    diags
+}
+
+/// R1 helper: is there a comment containing `SAFETY:` that either sits
+/// on the same line as the `unsafe` token (trailing or preceding) or
+/// ends on an earlier line with nothing but blank/comment lines in
+/// between?
+fn has_adjacent_safety_comment(lexed: &Lexed, unsafe_line: usize) -> bool {
+    lexed.comments.iter().any(|c| {
+        if !c.text.contains("SAFETY:") {
+            return false;
+        }
+        c.line == unsafe_line
+            || c.end_line == unsafe_line
+            || (c.end_line < unsafe_line
+                && lexed.next_code_line(c.end_line) == Some(unsafe_line))
+    })
+}
+
+// ---------------------------------------------------------------------
+// R5 cross-reference
+// ---------------------------------------------------------------------
+
+/// Inputs for the repo-level cross-reference rule: `(path, source)`
+/// pairs for the five files that define or exercise the enumerable
+/// surfaces.
+pub struct CrossrefInput<'a> {
+    /// `src/protocol/wire.rs` — defines `enum Tag` (wire message kinds).
+    pub wire: (&'a str, &'a str),
+    /// `src/journal/mod.rs` — defines `enum Record` (journal records).
+    pub journal: (&'a str, &'a str),
+    /// `tests/wire_fuzz.rs` — must exercise every kind by name.
+    pub fuzz: (&'a str, &'a str),
+    /// `src/config.rs` — defines the `KNOWN` config-key list, which is
+    /// exactly the set of `--key` CLI flags `cmd_run` accepts (main.rs
+    /// merges arbitrary `--key value` flags into the config, so KNOWN
+    /// membership *is* CLI addressability).
+    pub config: (&'a str, &'a str),
+    /// `src/fl/mod.rs` — defines `struct FlConfig` (the knobs).
+    pub fl: (&'a str, &'a str),
+}
+
+/// Field-name <-> config-key aliases: `FlConfig.exec_mode` is set by
+/// the `--executor` flag.
+const KNOB_ALIASES: &[(&str, &str)] = &[("exec_mode", "executor")];
+
+pub fn crossref(input: &CrossrefInput<'_>) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    let wire = lex(input.wire.1);
+    let journal = lex(input.journal.1);
+    let fuzz = lex(input.fuzz.1);
+    let config = lex(input.config.1);
+    let fl = lex(input.fl.1);
+
+    let fuzz_idents: BTreeSet<&str> = fuzz
+        .tokens
+        .iter()
+        .filter_map(|t| match &t.tok {
+            Tok::Ident(s) => Some(s.as_str()),
+            _ => None,
+        })
+        .collect();
+
+    let mut check_variants =
+        |file: &str, lexed: &Lexed, enum_name: &str, what: &str| {
+            let variants = enum_variants(lexed, enum_name);
+            if variants.is_empty() {
+                diags.push(Diag {
+                    file: file.to_string(),
+                    line: 1,
+                    rule: RULE_CROSSREF,
+                    msg: format!(
+                        "could not find `enum {enum_name}` — the \
+                         cross-reference extractor needs updating"
+                    ),
+                });
+            }
+            for (name, line) in variants {
+                if !fuzz_idents.contains(name.as_str()) {
+                    diags.push(Diag {
+                        file: file.to_string(),
+                        line,
+                        rule: RULE_CROSSREF,
+                        msg: format!(
+                            "{what} `{name}` has no fuzz case: the name \
+                             never appears in {}",
+                            input.fuzz.0
+                        ),
+                    });
+                }
+            }
+        };
+    check_variants(input.wire.0, &wire, "Tag", "wire message kind");
+    check_variants(input.journal.0, &journal, "Record", "journal record kind");
+
+    // FlConfig knobs <-> config KNOWN keys (== CLI flags), both ways.
+    let fields = struct_fields(&fl, "FlConfig");
+    let known = known_config_keys(&config);
+    if fields.is_empty() {
+        diags.push(Diag {
+            file: input.fl.0.to_string(),
+            line: 1,
+            rule: RULE_CROSSREF,
+            msg: "could not find `struct FlConfig` — the cross-reference \
+                  extractor needs updating"
+                .to_string(),
+        });
+    }
+    if known.is_empty() {
+        diags.push(Diag {
+            file: input.config.0.to_string(),
+            line: 1,
+            rule: RULE_CROSSREF,
+            msg: "could not find the `KNOWN` key list — the \
+                  cross-reference extractor needs updating"
+                .to_string(),
+        });
+    }
+    let known_names: BTreeSet<&str> =
+        known.iter().map(|(k, _)| k.as_str()).collect();
+    let field_names: BTreeSet<&str> =
+        fields.iter().map(|(f, _)| f.as_str()).collect();
+    for (field, line) in &fields {
+        let key = KNOB_ALIASES
+            .iter()
+            .find(|(f, _)| f == field)
+            .map(|(_, k)| *k)
+            .unwrap_or(field.as_str());
+        if !known_names.contains(key) {
+            diags.push(Diag {
+                file: input.fl.0.to_string(),
+                line: *line,
+                rule: RULE_CROSSREF,
+                msg: format!(
+                    "FlConfig knob `{field}` has no CLI flag: `{key}` \
+                     is not in config.rs KNOWN"
+                ),
+            });
+        }
+    }
+    for (key, line) in &known {
+        let field = KNOB_ALIASES
+            .iter()
+            .find(|(_, k)| k == key)
+            .map(|(f, _)| *f)
+            .unwrap_or(key.as_str());
+        if !field_names.contains(field) {
+            diags.push(Diag {
+                file: input.config.0.to_string(),
+                line: *line,
+                rule: RULE_CROSSREF,
+                msg: format!(
+                    "config key `{key}` maps to no FlConfig knob \
+                     `{field}` — stale entry or missing field"
+                ),
+            });
+        }
+    }
+    diags
+}
+
+/// Extract `(variant_name, line)` pairs from `enum <name> { ... }`.
+/// Handles unit, tuple, struct, and discriminant (`= N`) variants and
+/// skips `#[...]` attributes; doc comments are not tokens and need no
+/// handling.
+fn enum_variants(lexed: &Lexed, name: &str) -> Vec<(String, usize)> {
+    collect_braced_names(lexed, "enum", name, false)
+}
+
+/// Extract `(field_name, line)` pairs from `struct <name> { ... }`.
+fn struct_fields(lexed: &Lexed, name: &str) -> Vec<(String, usize)> {
+    collect_braced_names(lexed, "struct", name, true)
+}
+
+fn collect_braced_names(
+    lexed: &Lexed,
+    kind: &str,
+    name: &str,
+    fields: bool,
+) -> Vec<(String, usize)> {
+    let toks = &lexed.tokens;
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    // Find `<kind> <name>`, then its `{`.
+    while i + 1 < toks.len() {
+        if toks[i].tok == Tok::Ident(kind.to_string())
+            && toks[i + 1].tok == Tok::Ident(name.to_string())
+        {
+            break;
+        }
+        i += 1;
+    }
+    if i + 1 >= toks.len() {
+        return out;
+    }
+    while i < toks.len() && toks[i].tok != Tok::Punct('{') {
+        i += 1;
+    }
+    let mut depth = 1usize;
+    let mut expecting = true; // at `{` and after each depth-1 `,`
+    i += 1;
+    while i < toks.len() && depth > 0 {
+        match &toks[i].tok {
+            Tok::Punct('{') => depth += 1,
+            Tok::Punct('}') => depth -= 1,
+            Tok::Punct(',') if depth == 1 => expecting = true,
+            Tok::Punct('#') if depth == 1 => {
+                // Skip `#[...]` attribute on a variant/field.
+                if toks.get(i + 1).map(|t| &t.tok)
+                    == Some(&Tok::Punct('['))
+                {
+                    let mut d = 1usize;
+                    i += 2;
+                    while i < toks.len() && d > 0 {
+                        match toks[i].tok {
+                            Tok::Punct('[') => d += 1,
+                            Tok::Punct(']') => d -= 1,
+                            _ => {}
+                        }
+                        i += 1;
+                    }
+                    continue;
+                }
+            }
+            Tok::Ident(s) if depth == 1 && expecting => {
+                if s == "pub" {
+                    // visibility qualifier; `pub(crate)` parens are
+                    // skipped naturally (not idents, depth unchanged).
+                } else if fields {
+                    // A field name is the ident followed by a single
+                    // `:` (not the `::` of a path type).
+                    let next = toks.get(i + 1).map(|t| &t.tok);
+                    let next2 = toks.get(i + 2).map(|t| &t.tok);
+                    if next == Some(&Tok::Punct(':'))
+                        && next2 != Some(&Tok::Punct(':'))
+                    {
+                        out.push((s.clone(), toks[i].line));
+                        expecting = false;
+                    }
+                } else {
+                    out.push((s.clone(), toks[i].line));
+                    expecting = false;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Extract `(key, line)` pairs from config.rs's
+/// `const KNOWN: &[&str] = &[ "...", ... ];`.
+fn known_config_keys(lexed: &Lexed) -> Vec<(String, usize)> {
+    let toks = &lexed.tokens;
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len()
+        && toks[i].tok != Tok::Ident("KNOWN".to_string())
+    {
+        i += 1;
+    }
+    while i < toks.len() && toks[i].tok != Tok::Punct('=') {
+        i += 1;
+    }
+    while i < toks.len() && toks[i].tok != Tok::Punct(';') {
+        if let Tok::Str(s) = &toks[i].tok {
+            out.push((s.clone(), toks[i].line));
+        }
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALL: RuleSet =
+        RuleSet { decode: true, determinism: true, relaxed: true };
+
+    fn rules_of(diags: &[Diag]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn unsafe_without_safety_fires_and_with_safety_does_not() {
+        let bad = "fn f(p: *const u8) -> u8 { unsafe { *p } }";
+        assert_eq!(rules_of(&lint_file("x.rs", bad, ALL)), [RULE_SAFETY]);
+        let good = "// SAFETY: p is valid for reads by contract.\n\
+                    fn f(p: *const u8) -> u8 { unsafe { *p } }";
+        assert!(lint_file("x.rs", good, ALL).is_empty());
+        let trailing = "fn f(p: *const u8) -> u8 { unsafe { *p } } \
+                        // SAFETY: contract.";
+        assert!(lint_file("x.rs", trailing, ALL).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_must_be_adjacent() {
+        let gap = "// SAFETY: stale, about something else.\n\
+                   fn g() {}\n\
+                   fn f(p: *const u8) -> u8 { unsafe { *p } }";
+        assert_eq!(rules_of(&lint_file("x.rs", gap, ALL)), [RULE_SAFETY]);
+        let blank_ok = "// SAFETY: p valid by contract.\n\n\
+                        fn f(p: *const u8) -> u8 { unsafe { *p } }";
+        assert!(lint_file("x.rs", blank_ok, ALL).is_empty());
+    }
+
+    #[test]
+    fn decode_rule_catches_unwrap_expect_and_panic_macros() {
+        let src = "fn d(b: &[u8]) { let _ = b.first().unwrap(); }";
+        assert_eq!(rules_of(&lint_file("x.rs", src, ALL)), [RULE_DECODE]);
+        let src = "fn d(v: Option<u8>) { v.expect(\"boom\"); }";
+        assert_eq!(rules_of(&lint_file("x.rs", src, ALL)), [RULE_DECODE]);
+        let src = "fn d() { panic!(\"no\"); }";
+        assert_eq!(rules_of(&lint_file("x.rs", src, ALL)), [RULE_DECODE]);
+        // `std::panic::catch_unwind` is not the macro.
+        let src = "fn d(f: fn()) { let _ = std::panic::catch_unwind(f); }";
+        assert!(lint_file("x.rs", src, ALL).is_empty());
+        // A local fn named `unwrap` (no receiver dot) is not flagged.
+        let src = "fn unwrap() {} fn d() { unwrap(); }";
+        assert!(lint_file("x.rs", src, ALL).is_empty());
+    }
+
+    #[test]
+    fn determinism_rule_catches_each_source() {
+        for (frag, ident) in [
+            ("let m: std::collections::HashMap<u8, u8>;", "HashMap"),
+            ("let s: std::collections::HashSet<u8>;", "HashSet"),
+            ("let t = std::time::Instant::now();", "Instant"),
+            ("let t = std::time::SystemTime::now();", "SystemTime"),
+            ("let r = thread_rng();", "thread_rng"),
+        ] {
+            let src = format!("fn f() {{ {frag} }}");
+            let diags = lint_file("x.rs", &src, ALL);
+            assert!(
+                diags.iter().all(|d| d.rule == RULE_DETERMINISM)
+                    && !diags.is_empty(),
+                "{ident}: {diags:?}"
+            );
+        }
+        // BTreeMap and seeded PRGs pass.
+        let src = "fn f() { let m: std::collections::BTreeMap<u8, u8> = \
+                   Default::default(); let _ = m; }";
+        assert!(lint_file("x.rs", src, ALL).is_empty());
+    }
+
+    #[test]
+    fn relaxed_rule_requires_pragma_with_justification() {
+        let bare = "fn f(c: &std::sync::atomic::AtomicUsize) -> usize {\n\
+                    c.load(std::sync::atomic::Ordering::Relaxed)\n}";
+        assert_eq!(rules_of(&lint_file("x.rs", bare, ALL)), [RULE_RELAXED]);
+        let ok = "fn f(c: &std::sync::atomic::AtomicUsize) -> usize {\n\
+                  // lint: allow(relaxed-justified) — monotonic counter.\n\
+                  c.load(std::sync::atomic::Ordering::Relaxed)\n}";
+        assert!(lint_file("x.rs", ok, ALL).is_empty());
+        // `Relaxed` as a stray ident (no Ordering:: path) is ignored.
+        let stray = "fn f() { let relaxed_mode = 1; let _ = relaxed_mode; }";
+        assert!(lint_file("x.rs", stray, ALL).is_empty());
+    }
+
+    #[test]
+    fn pragma_without_justification_reports_but_still_suppresses() {
+        let src = "fn f() {\n\
+                   // lint: allow(core-determinism)\n\
+                   let m: std::collections::HashMap<u8, u8> = \
+                   Default::default(); let _ = m;\n}";
+        let diags = lint_file("x.rs", src, ALL);
+        assert_eq!(rules_of(&diags), [RULE_PRAGMA], "{diags:?}");
+    }
+
+    #[test]
+    fn pragma_unknown_rule_and_malformed_pragmas_report() {
+        let src = "// lint: allow(no-such-rule) — because\nfn f() {}";
+        assert_eq!(rules_of(&lint_file("x.rs", src, ALL)), [RULE_PRAGMA]);
+        let src = "// lint: disallow(safety-comment)\nfn f() {}";
+        assert_eq!(rules_of(&lint_file("x.rs", src, ALL)), [RULE_PRAGMA]);
+    }
+
+    #[test]
+    fn pragma_covers_only_the_next_code_line() {
+        let src = "fn f() {\n\
+                   // lint: allow(core-determinism) — first only.\n\
+                   let a: std::collections::HashMap<u8, u8> = \
+                   Default::default();\n\
+                   let b: std::collections::HashMap<u8, u8> = \
+                   Default::default();\n\
+                   let _ = (a, b);\n}";
+        let diags = lint_file("x.rs", src, ALL);
+        assert_eq!(rules_of(&diags), [RULE_DETERMINISM]);
+        assert_eq!(diags[0].line, 4);
+    }
+
+    #[test]
+    fn trailing_pragma_covers_its_own_line() {
+        let src = "fn f(c: &std::sync::atomic::AtomicUsize) -> usize {\n\
+                   c.load(std::sync::atomic::Ordering::Relaxed) \
+                   // lint: allow(relaxed-justified) — counter.\n}";
+        assert!(lint_file("x.rs", src, ALL).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_regions_are_exempt_from_scoped_rules() {
+        let src = "fn prod() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   #[test]\n\
+                   fn t() { None::<u8>.unwrap(); let _ = \
+                   std::time::Instant::now(); }\n\
+                   }";
+        assert!(lint_file("x.rs", src, ALL).is_empty());
+        // ...but cfg(not(test)) is production code.
+        let src = "#[cfg(not(test))]\n\
+                   fn prod() { None::<u8>.unwrap(); }";
+        assert_eq!(rules_of(&lint_file("x.rs", src, ALL)), [RULE_DECODE]);
+    }
+
+    #[test]
+    fn path_scoping_matches_the_documented_surfaces() {
+        let wire = rules_for_path("src/protocol/wire.rs");
+        assert!(wire.decode && wire.determinism && !wire.relaxed);
+        let secagg = rules_for_path("src/protocol/secagg.rs");
+        assert!(!secagg.decode && secagg.determinism);
+        let exec = rules_for_path("src/exec/mod.rs");
+        assert!(!exec.decode && exec.determinism && exec.relaxed);
+        let journal = rules_for_path("src/journal/mod.rs");
+        assert!(journal.decode && journal.relaxed);
+        let cli = rules_for_path("src/cli.rs");
+        assert!(!cli.decode && !cli.determinism && !cli.relaxed);
+        let bench = rules_for_path("benches/bench_micro.rs");
+        assert!(!bench.determinism);
+        let fixture =
+            rules_for_path("src/analysis/fixtures/r1_bad.rs");
+        assert!(fixture.decode && fixture.determinism && fixture.relaxed);
+    }
+
+    // ---- R5 on synthetic inputs ------------------------------------
+
+    fn synth<'a>(
+        wire: &'a str,
+        journal: &'a str,
+        fuzz: &'a str,
+        config: &'a str,
+        fl: &'a str,
+    ) -> CrossrefInput<'a> {
+        CrossrefInput {
+            wire: ("wire.rs", wire),
+            journal: ("journal.rs", journal),
+            fuzz: ("fuzz.rs", fuzz),
+            config: ("config.rs", config),
+            fl: ("fl.rs", fl),
+        }
+    }
+
+    const WIRE_OK: &str =
+        "pub enum Tag { AdvertiseKeys = 1, Roster = 2 }";
+    const JOURNAL_OK: &str =
+        "pub enum Record { Meta { v: u32 }, RoundStart { r: u64 } }";
+    const FUZZ_OK: &str =
+        "fn f() { AdvertiseKeys; Roster; Record::Meta; \
+         Record::RoundStart; }";
+    const CONFIG_OK: &str =
+        "const KNOWN: &[&str] = &[\"users\", \"executor\"];";
+    const FL_OK: &str =
+        "pub struct FlConfig { pub users: usize, pub exec_mode: String }";
+
+    #[test]
+    fn crossref_passes_when_everything_lines_up() {
+        let diags = crossref(&synth(
+            WIRE_OK, JOURNAL_OK, FUZZ_OK, CONFIG_OK, FL_OK,
+        ));
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn crossref_flags_unfuzzed_wire_and_journal_kinds() {
+        let wire = "pub enum Tag { AdvertiseKeys = 1, Ghost = 9 }";
+        let diags =
+            crossref(&synth(wire, JOURNAL_OK, FUZZ_OK, CONFIG_OK, FL_OK));
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].msg.contains("Ghost"), "{diags:?}");
+
+        let journal =
+            "pub enum Record { Meta { v: u32 }, Phantom { x: u8 } }";
+        let diags =
+            crossref(&synth(WIRE_OK, journal, FUZZ_OK, CONFIG_OK, FL_OK));
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].msg.contains("Phantom"), "{diags:?}");
+    }
+
+    #[test]
+    fn crossref_flags_knob_gaps_in_both_directions() {
+        // Field with no CLI key.
+        let fl = "pub struct FlConfig { pub users: usize, \
+                  pub exec_mode: String, pub secret_knob: f64 }";
+        let diags =
+            crossref(&synth(WIRE_OK, JOURNAL_OK, FUZZ_OK, CONFIG_OK, fl));
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].msg.contains("secret_knob"), "{diags:?}");
+
+        // Stale CLI key with no field.
+        let config =
+            "const KNOWN: &[&str] = &[\"users\", \"executor\", \"ghost\"];";
+        let diags =
+            crossref(&synth(WIRE_OK, JOURNAL_OK, FUZZ_OK, config, FL_OK));
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].msg.contains("ghost"), "{diags:?}");
+    }
+
+    #[test]
+    fn crossref_alias_maps_exec_mode_to_executor() {
+        // Break the alias: remove `executor` from KNOWN.
+        let config = "const KNOWN: &[&str] = &[\"users\"];";
+        let diags =
+            crossref(&synth(WIRE_OK, JOURNAL_OK, FUZZ_OK, config, FL_OK));
+        assert_eq!(diags.len(), 1);
+        assert!(
+            diags[0].msg.contains("exec_mode")
+                && diags[0].msg.contains("executor"),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn crossref_reports_extractor_rot() {
+        let diags = crossref(&synth(
+            "pub struct NotAnEnum;",
+            JOURNAL_OK,
+            FUZZ_OK,
+            CONFIG_OK,
+            FL_OK,
+        ));
+        assert!(
+            diags.iter().any(|d| d.msg.contains("enum Tag")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn field_extractor_handles_paths_tuples_and_generics() {
+        let src = "pub struct FlConfig { \
+                   pub crash_plan: Option<crash::CrashPlan>, \
+                   pub pair: (u32, f64), \
+                   pub map: std::collections::BTreeMap<String, u32> }";
+        let l = lex(src);
+        let fields: Vec<String> = struct_fields(&l, "FlConfig")
+            .into_iter()
+            .map(|(f, _)| f)
+            .collect();
+        assert_eq!(fields, ["crash_plan", "pair", "map"]);
+    }
+}

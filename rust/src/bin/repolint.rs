@@ -1,0 +1,139 @@
+//! `repolint` — repo-invariant static analysis gate.
+//!
+//! Usage:
+//!
+//! * `repolint` — walk `src/`, `tests/`, `benches/` (relative to the
+//!   crate manifest), apply each file's scoped rule set plus the
+//!   repo-level cross-reference rule, print `file:line: [rule] msg`
+//!   diagnostics, and exit nonzero if any fire. The known-bad fixtures
+//!   under `src/analysis/fixtures/` are skipped by this walk (they
+//!   exist to fail).
+//! * `repolint <path>...` — lint the given files with **every**
+//!   file-local rule regardless of path (no cross-reference). This is
+//!   how CI demonstrates the fixtures exit nonzero.
+//! * `repolint --list` — print the rule catalog.
+//!
+//! See the module doc of `sparsesecagg::analysis` for the rule catalog
+//! and pragma syntax.
+
+use sparsesecagg::analysis::{
+    crossref, lint_file, rules_for_path, CrossrefInput, Diag, RuleSet,
+    CATALOG,
+};
+use std::path::{Path, PathBuf};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--list") {
+        for (id, summary) in CATALOG {
+            println!("{id:20} {summary}");
+        }
+        return;
+    }
+    let diags = if args.is_empty() {
+        lint_repo()
+    } else {
+        lint_explicit(&args)
+    };
+    match diags {
+        Ok(diags) if diags.is_empty() => {
+            println!("repolint: clean");
+        }
+        Ok(mut diags) => {
+            diags.sort_by(|a, b| {
+                (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule))
+            });
+            for d in &diags {
+                eprintln!("{}", d.render());
+            }
+            eprintln!("repolint: {} diagnostic(s)", diags.len());
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("repolint: error: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Lint explicitly named files with every file-local rule.
+fn lint_explicit(paths: &[String]) -> anyhow::Result<Vec<Diag>> {
+    let all = RuleSet { decode: true, determinism: true, relaxed: true };
+    let mut diags = Vec::new();
+    for p in paths {
+        let src = std::fs::read_to_string(p)
+            .map_err(|e| anyhow::anyhow!("{p}: {e}"))?;
+        diags.extend(lint_file(p, &src, all));
+    }
+    Ok(diags)
+}
+
+/// The default repo walk plus the cross-reference rule.
+fn lint_repo() -> anyhow::Result<Vec<Diag>> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut files: Vec<PathBuf> = Vec::new();
+    for top in ["src", "tests", "benches"] {
+        walk(&root.join(top), &mut files)?;
+    }
+    // Deterministic order (and a tidy report) regardless of readdir
+    // order — repolint holds itself to its own determinism rule.
+    files.sort();
+
+    let mut diags = Vec::new();
+    let mut checked = 0usize;
+    for path in &files {
+        let rel = rel_name(&root, path);
+        if rel.contains("analysis/fixtures/") {
+            continue; // known-bad by design; linted via explicit paths
+        }
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("{rel}: {e}"))?;
+        diags.extend(lint_file(&rel, &src, rules_for_path(&rel)));
+        checked += 1;
+    }
+
+    let read = |rel: &str| -> anyhow::Result<String> {
+        std::fs::read_to_string(root.join(rel))
+            .map_err(|e| anyhow::anyhow!("{rel}: {e} (cross-reference \
+                rule needs this file)"))
+    };
+    let wire = read("src/protocol/wire.rs")?;
+    let journal = read("src/journal/mod.rs")?;
+    let fuzz = read("tests/wire_fuzz.rs")?;
+    let config = read("src/config.rs")?;
+    let fl = read("src/fl/mod.rs")?;
+    diags.extend(crossref(&CrossrefInput {
+        wire: ("src/protocol/wire.rs", &wire),
+        journal: ("src/journal/mod.rs", &journal),
+        fuzz: ("tests/wire_fuzz.rs", &fuzz),
+        config: ("src/config.rs", &config),
+        fl: ("src/fl/mod.rs", &fl),
+    }));
+
+    println!("repolint: checked {checked} files + cross-reference");
+    Ok(diags)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    let entries = std::fs::read_dir(dir).map_err(|e| {
+        anyhow::anyhow!("{}: {e}", dir.display())
+    })?;
+    for entry in entries {
+        let path = entry
+            .map_err(|e| anyhow::anyhow!("{}: {e}", dir.display()))?
+            .path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn rel_name(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .to_string_lossy()
+        .replace('\\', "/")
+}

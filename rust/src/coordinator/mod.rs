@@ -56,7 +56,7 @@ use crate::protocol::shard::{ShardConfig, DEFAULT_SHARD_SIZE};
 use crate::protocol::{secagg, sparse, wire, FinishError, Params};
 use crate::transport::{InMemoryBus, RateLimiter, Transport};
 use anyhow::Result;
-use std::time::Instant;
+use crate::metrics::Stopwatch;
 
 /// Default cap on exclude-and-re-solicit passes per round.
 pub const DEFAULT_MAX_RETRIES: usize = 3;
@@ -798,7 +798,7 @@ impl Coordinator {
                         ledger.record_reject(&e);
                     }
                 }
-                let ts = Instant::now();
+                let ts = Stopwatch::start();
                 let capture = adv.is_some();
                 if let Some(snap) = &rp_uploads_closed {
                     // The collecting phase was durably sealed pre-crash:
@@ -815,10 +815,10 @@ impl Coordinator {
                     let live: Vec<bool> = (0..n)
                         .map(|i| active[i] && !already[i])
                         .collect();
-                    let t0 = Instant::now();
+                    let t0 = Stopwatch::start();
                     let (uploads, cstats) = compute_sparse_uploads(
                         users, exec, params, round, ys, betas, &live);
-                    ledger.client_compute_s += t0.elapsed().as_secs_f64();
+                    ledger.client_compute_s += t0.elapsed_s();
                     ledger.record_client_phase(cstats.tasks, cstats.steals);
                     // --- MaskedInput frames onto the transport. The
                     // `honest` capture (replay/spoof material for the
@@ -881,7 +881,7 @@ impl Coordinator {
                     params, kind, n, shard_cfg, mode, exec, round,
                     max_retries, wave_budget, resp_waves,
                     journal, rp_waves, rp_completed);
-                ledger.server_compute_s += ts.elapsed().as_secs_f64();
+                ledger.server_compute_s += ts.elapsed_s();
                 (agg, upload_bytes, resp_waves)
             }
             Cohort::SecAgg { users, server } => {
@@ -898,7 +898,7 @@ impl Coordinator {
                         ledger.record_reject(&e);
                     }
                 }
-                let ts = Instant::now();
+                let ts = Stopwatch::start();
                 let capture = adv.is_some();
                 if let Some(snap) = &rp_uploads_closed {
                     for (b, &s) in upload_bytes.iter_mut().zip(snap) {
@@ -908,10 +908,10 @@ impl Coordinator {
                     let live: Vec<bool> = (0..n)
                         .map(|i| active[i] && !already[i])
                         .collect();
-                    let t0 = Instant::now();
+                    let t0 = Stopwatch::start();
                     let (uploads, cstats) = compute_secagg_uploads(
                         users, exec, params, round, ys, betas, &live);
-                    ledger.client_compute_s += t0.elapsed().as_secs_f64();
+                    ledger.client_compute_s += t0.elapsed_s();
                     ledger.record_client_phase(cstats.tasks, cstats.steals);
                     let mut honest: Vec<(usize, Vec<u8>)> = Vec::new();
                     for up in uploads.into_iter().flatten() {
@@ -961,7 +961,7 @@ impl Coordinator {
                     params, kind, n, shard_cfg, mode, exec, round,
                     max_retries, wave_budget, resp_waves,
                     journal, rp_waves, rp_completed);
-                ledger.server_compute_s += ts.elapsed().as_secs_f64();
+                ledger.server_compute_s += ts.elapsed_s();
                 (agg, upload_bytes, resp_waves)
             }
         };
@@ -1154,14 +1154,14 @@ impl Coordinator {
         let (agg, upload_bytes, response_bytes) = match cohort {
             Cohort::Sparse { users, server } => {
                 server.begin_round();
-                let t0 = Instant::now();
+                let t0 = Stopwatch::start();
                 let (uploads, cstats) = compute_sparse_uploads(
                     users, exec, params, round, ys, betas, &active);
-                ledger.client_compute_s += t0.elapsed().as_secs_f64();
+                ledger.client_compute_s += t0.elapsed_s();
                 ledger.record_client_phase(cstats.tasks, cstats.steals);
 
                 let mut upload_bytes = vec![0usize; n];
-                let ts = Instant::now();
+                let ts = Stopwatch::start();
                 for up in uploads.into_iter().flatten() {
                     // Round-trip through the real wire codec: the ledger
                     // counts encoded frame bytes, and the server decodes
@@ -1191,19 +1191,19 @@ impl Coordinator {
                 let agg = finish_round_dispatch!(server, ledger, shard_cfg,
                                                  mode, exec, round,
                                                  &responses);
-                ledger.server_compute_s += ts.elapsed().as_secs_f64();
+                ledger.server_compute_s += ts.elapsed_s();
                 (agg, upload_bytes, response_bytes)
             }
             Cohort::SecAgg { users, server } => {
                 server.begin_round();
-                let t0 = Instant::now();
+                let t0 = Stopwatch::start();
                 let (uploads, cstats) = compute_secagg_uploads(
                     users, exec, params, round, ys, betas, &active);
-                ledger.client_compute_s += t0.elapsed().as_secs_f64();
+                ledger.client_compute_s += t0.elapsed_s();
                 ledger.record_client_phase(cstats.tasks, cstats.steals);
 
                 let mut upload_bytes = vec![0usize; n];
-                let ts = Instant::now();
+                let ts = Stopwatch::start();
                 for up in uploads.into_iter().flatten() {
                     let buf = wire::encode_dense_upload(&up);
                     debug_assert_eq!(buf.len(), up.wire_bytes());
@@ -1229,7 +1229,7 @@ impl Coordinator {
                 let agg = finish_round_dispatch!(server, ledger, shard_cfg,
                                                  mode, exec, round,
                                                  &responses);
-                ledger.server_compute_s += ts.elapsed().as_secs_f64();
+                ledger.server_compute_s += ts.elapsed_s();
                 (agg, upload_bytes, response_bytes)
             }
         };
@@ -1291,20 +1291,20 @@ impl Coordinator {
             if dropped.contains(&u.id) {
                 continue;
             }
-            let t0 = Instant::now();
+            let t0 = Stopwatch::start();
             let plan = u.mask_plan(round, &params, &mut scratch);
             let (y_pad, rand, masksum, select) =
                 u.kernel_inputs(round, &ys[u.id], &params, &plan, qm.dpad);
             let dense = qm.run(&y_pad, &rand, &masksum, &select,
                                params.scale(betas[u.id]), params.c)?;
             let up = u.upload_from_kernel(plan, &dense, params.d);
-            max_user_s = max_user_s.max(t0.elapsed().as_secs_f64());
+            max_user_s = max_user_s.max(t0.elapsed_s());
             upload_bytes[up.id] = up.wire_bytes();
             server.receive_upload(up);
         }
         ledger.client_compute_s += max_user_s;
 
-        let ts = Instant::now();
+        let ts = Stopwatch::start();
         let req = server.unmask_request();
         let req_bytes = req.wire_bytes();
         let responses: Vec<UnmaskResponse> = users
@@ -1318,7 +1318,7 @@ impl Coordinator {
         }
         let agg = finish_round_dispatch!(server, ledger, shard_cfg, mode,
                                          exec, round, &responses);
-        ledger.server_compute_s += ts.elapsed().as_secs_f64();
+        ledger.server_compute_s += ts.elapsed_s();
 
         for (u, &b) in upload_bytes.iter().enumerate() {
             ledger.record_upload(u, b);

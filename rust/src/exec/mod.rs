@@ -48,8 +48,16 @@
 //! only released after the task (or its panic handler) has finished
 //! running. Worker panics are captured and re-raised on the scoping
 //! thread.
+//!
+//! That invariant is not just prose: [`model`] transcribes the
+//! synchronization below one atomic step at a time and exhaustively
+//! model-checks every bounded interleaving for pending-drain soundness
+//! and lost-wakeup freedom (CI gate `Executor model check`). Touch
+//! `submit`/`worker_loop`/`task_done`/`wait_idle` and you must update
+//! the model to match — that is the point.
 
 pub mod jobs;
+pub mod model;
 
 use std::cell::Cell;
 use std::collections::VecDeque;
@@ -190,6 +198,9 @@ impl Shared {
         let i = if own != usize::MAX {
             own
         } else {
+            // lint: allow(relaxed-justified) — load-balancing cursor
+            // only: any interleaving of increments yields a valid queue
+            // index; no other memory depends on its order.
             self.rr.fetch_add(1, Ordering::Relaxed) % self.queues.len()
         };
         self.queues[i].lock().unwrap().push_back(task);
@@ -216,6 +227,9 @@ impl Shared {
         for k in 1..n {
             let j = (me + k) % n;
             if let Some(t) = self.queues[j].lock().unwrap().pop_front() {
+                // lint: allow(relaxed-justified) — monotonic stat
+                // counter; read only at scope quiescence (after
+                // wait_idle's SeqCst pending handshake).
                 self.steals.fetch_add(1, Ordering::Relaxed);
                 return Some(t);
             }
@@ -255,6 +269,8 @@ fn worker_loop(shared: Arc<Shared>, me: usize) {
             return;
         }
         if let Some(task) = shared.find_task(me) {
+            // lint: allow(relaxed-justified) — monotonic stat counter;
+            // read only at scope quiescence (see `Executor::scope`).
             shared.tasks.fetch_add(1, Ordering::Relaxed);
             let result = panic::catch_unwind(AssertUnwindSafe(|| {
                 task(&scope, &mut scratch)
@@ -319,6 +335,10 @@ impl<'env> Scope<'env> {
         // in the scope closure itself, so no `'env` borrow outlives its
         // referent. The transmute only erases lifetimes; the fat-pointer
         // layout of `Box<dyn FnOnce(..)>` is lifetime-independent.
+        // The pending-drain property this rests on is machine-checked:
+        // `exec::model` exhaustively explores every bounded interleaving
+        // of this spawn/submit/sleep/wait protocol (tests/exec_model.rs,
+        // CI gate `Executor model check`).
         let task: Task = unsafe { std::mem::transmute(task) };
         self.shared.submit(task);
     }
@@ -382,7 +402,10 @@ impl Executor {
     where
         F: FnOnce(&Scope<'env>) -> R,
     {
+        // lint: allow(relaxed-justified) — stat snapshot; phases run one
+        // at a time per pool, so no concurrent writers matter here.
         let tasks0 = self.shared.tasks.load(Ordering::Relaxed);
+        // lint: allow(relaxed-justified) — same stat-snapshot argument.
         let steals0 = self.shared.steals.load(Ordering::Relaxed);
         let scope: Scope<'env> = Scope {
             shared: self.shared.clone(),
@@ -397,7 +420,11 @@ impl Executor {
             panic::resume_unwind(e);
         }
         let stats = ExecStats {
+            // lint: allow(relaxed-justified) — read after wait_idle's
+            // SeqCst pending handshake ordered every worker's counter
+            // bumps before this point.
             tasks: self.shared.tasks.load(Ordering::Relaxed) - tasks0,
+            // lint: allow(relaxed-justified) — same post-quiescence read.
             steals: self.shared.steals.load(Ordering::Relaxed) - steals0,
         };
         match out {

@@ -1,0 +1,1089 @@
+//! Bounded interleaving model checker for the executor's scope
+//! protocol.
+//!
+//! The one `unsafe` in this crate — the lifetime transmute in
+//! [`super::Scope::spawn`] — is sound iff a *temporal* property holds:
+//! **`pending` reaches 0 only after every spawned task has completed or
+//! been abandoned via the panic path**, so that
+//! [`super::Executor::scope`]'s `wait_idle()` cannot return while a
+//! `'env` borrow is still reachable from a queue or a running worker.
+//! The prose SAFETY comment argues this; this module *checks* it, by
+//! exhaustive DFS over every interleaving of a faithful per-atomic-step
+//! transcription of the real synchronization code.
+//!
+//! # What is modeled
+//!
+//! Each thread is a program counter whose value names the **next**
+//! atomic action it will take; one transition = one thread executing
+//! that action. The steps mirror `exec/mod.rs` one atomic operation at
+//! a time:
+//!
+//! * `Scope::spawn` / `Shared::submit`: `pending.fetch_add` →
+//!   queue push (own deque for workers, round-robin for the scoping
+//!   thread) → `sleepers` load → (if > 0) work-mutex lock → unlock →
+//!   `notify_one`. The notify happens *after* the unlock, as in the
+//!   real code.
+//! * `worker_loop` / `find_task`: pop own deque from the back → steal
+//!   scan `(me+k)%n` from the front → run the task (a task either
+//!   spawns its children or panics — the panic-slot store is collapsed
+//!   to one step; that mutex is never held across a wait so it cannot
+//!   contribute to a deadlock) → `task_done` (`fetch_sub(1) == 1` is
+//!   one atomic step: mark done + decrement) → if it hit zero,
+//!   idle-mutex lock → unlock → `notify_all`.
+//! * the sleep path: work-mutex lock → `sleepers.fetch_add` →
+//!   per-queue emptiness scan in index order (each queue has its own
+//!   lock, so the scan interleaves with pushes, exactly as in
+//!   `has_any_task`) → either `sleepers.fetch_sub` + unlock (found
+//!   work), or condvar wait (atomic unlock + sleep). On wakeup:
+//!   re-acquire → unlock → `sleepers.fetch_sub`.
+//! * `wait_idle`: idle-mutex lock → `pending` check → condvar wait
+//!   (atomic unlock + sleep) → re-acquire → re-check, or unlock and
+//!   return.
+//!
+//! # Checked invariants (at every reachable state)
+//!
+//! 1. **Exact pending accounting** — `pending` equals queued tasks +
+//!    running tasks + threads between their `fetch_add` and their
+//!    queue push. This is the inductive form of the SAFETY property:
+//!    it implies `pending` cannot be 0 while any task is queued or
+//!    running.
+//! 2. **Scope-return soundness** — when the scoping thread's
+//!    `wait_idle` has returned, `pending == 0`, every queue is empty,
+//!    and every task is either completed or was never spawned because
+//!    its parent panicked first (the abandonment path). Without a
+//!    panic, *every* task must have completed.
+//! 3. **No lost wakeup** — every state with no enabled transition is
+//!    the unique quiescent terminal: scope returned, all workers
+//!    parked on the condvar. Any other stuck state (e.g. a task queued
+//!    while all workers sleep and the scoping thread waits) is
+//!    reported as a deadlock with a full state dump.
+//! 4. Bookkeeping self-checks: `sleepers` matches the set of workers
+//!    inside the publish/unpublish window, lock owners match pcs, and
+//!    queue contents match the set of queued tasks.
+//!
+//! # Bounds and their justification
+//!
+//! * **≤ 4 workers, ≤ 8 tasks, ≤ 4 children per task** — the protocol
+//!   is symmetric in workers and tasks beyond small counts; the
+//!   shipped scenarios cover 3 workers / 4 tasks (the acceptance
+//!   bound), spawn-from-task chains, and panic schedules.
+//! * **No spurious condvar wakeups** — a spurious wakeup only re-runs
+//!   the re-check loops, which the model already explores via real
+//!   wakeups; modeling them would also make "deadlock = no successor"
+//!   meaningless (every waiting state would have a successor).
+//! * **Panic in the scope closure** — after `catch_unwind`, `scope`
+//!   runs the same `wait_idle`; the only observable difference is a
+//!   truncated spawn sequence, so it is modeled by scenarios whose
+//!   external spawn list is a prefix (see `closure_panic_3w`).
+//! * **State cap** — exploration aborts loudly (an `Err`, failing the
+//!   CI gate) if a scenario exceeds its state budget; it never
+//!   silently samples.
+//!
+//! The checker dogfoods the repo's own determinism rule: visited-set
+//! and work-stack are `BTreeSet`/`Vec` over a canonical byte encoding,
+//! so a run is bit-reproducible.
+
+use std::collections::BTreeSet;
+
+/// What one task does when a worker runs it.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    /// Task ids this task spawns, in order, when it runs…
+    pub spawns: Vec<usize>,
+    /// …unless it panics, in which case it spawns nothing and its
+    /// children are abandoned (never spawned) — the panic path.
+    pub panics: bool,
+}
+
+/// A bounded schedule universe: worker count, the externally-spawned
+/// task ids (what the scope closure submits), and every task's spec.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub workers: usize,
+    /// Task ids the scoping thread spawns, in order. A scope closure
+    /// that panics midway is exactly a shorter external list.
+    pub external: Vec<usize>,
+    pub tasks: Vec<TaskSpec>,
+}
+
+/// Deliberate bugs injected into the step function, used by the
+/// negative self-tests to prove the checker actually detects both
+/// invariant classes (it must not silently rot any more than the lint
+/// rules may).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mutation {
+    /// Faithful transcription of the real code.
+    None,
+    /// Submitters never notify the condvar: plants a lost wakeup.
+    SkipNotify,
+    /// `spawn` skips `pending.fetch_add`: breaks the accounting the
+    /// transmute's soundness rests on.
+    SkipPendingInc,
+}
+
+/// Exploration statistics for a passing run.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub states: usize,
+    pub transitions: usize,
+}
+
+// ---------------------------------------------------------------------
+// State
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SubmitStep {
+    Inc,
+    Push,
+    CheckSleepers,
+    Lock,
+    Unlock,
+    Notify,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum MainPc {
+    /// Spawning `external[i]`; `step` is the next submit action.
+    Spawn { i: usize, step: SubmitStep },
+    /// `wait_idle`: acquire the idle mutex.
+    WaitLock,
+    /// Holding the idle mutex: check `pending`.
+    WaitCheck,
+    /// Parked on `idle_cv` (mutex released atomically by the wait).
+    WaitWait,
+    /// Notified: re-acquire the idle mutex.
+    WaitReacquire,
+    /// `pending == 0` observed: release the idle mutex and return.
+    WaitUnlock,
+    /// `wait_idle` returned — the scope believes all borrows are dead.
+    Done,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum WorkerPc {
+    /// `find_task`: pop own deque from the back.
+    PopOwn,
+    /// `find_task`: try to steal from `(me+k)%n`'s front.
+    Steal { k: usize },
+    /// Running task `t`, about to perform submit-step `step` of its
+    /// `j`-th child spawn.
+    Run { t: usize, j: usize, step: SubmitStep },
+    /// Task `t` panicked: store into the panic slot (collapsed).
+    PanicStore { t: usize },
+    /// `task_done`: mark `t` complete and `pending.fetch_sub(1)`.
+    DoneDec { t: usize },
+    /// `pending` hit 0: lock the idle mutex…
+    DoneLockIdle,
+    /// …release it…
+    DoneUnlockIdle,
+    /// …and `notify_all` the idle condvar.
+    DoneNotifyIdle,
+    /// Sleep path: acquire the work mutex.
+    SleepLock,
+    /// Holding work: publish intent via `sleepers.fetch_add`.
+    SleepInc,
+    /// Holding work: check queue `j` for work (`has_any_task` scan).
+    SleepScan { j: usize },
+    /// Scan found work: `sleepers.fetch_sub`…
+    SleepFoundDec,
+    /// …release the work mutex and go back to `find_task`.
+    SleepFoundUnlock,
+    /// Parked on `work_cv` (work mutex released atomically).
+    Waiting,
+    /// Notified: re-acquire the work mutex.
+    Reacquire,
+    /// Release the work mutex (the real code drops the guard)…
+    PostWaitUnlock,
+    /// …then `sleepers.fetch_sub`, back to `find_task`.
+    PostWaitDec,
+}
+
+/// Who holds a mutex in the model. The scoping thread never touches
+/// the work mutex and workers never hold the idle mutex across steps,
+/// but one owner type keeps the encoding uniform.
+const OWNER_NONE: u8 = 0xFE;
+const OWNER_MAIN: u8 = 0xFF;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum TState {
+    /// Not yet spawned (initial; final only for abandoned children of a
+    /// panicked parent).
+    Unspawned,
+    /// In some deque.
+    Queued,
+    /// Popped by a worker, not yet counted done.
+    Running,
+    /// `task_done` ran for it.
+    Done,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct State {
+    main: MainPc,
+    workers: Vec<WorkerPc>,
+    /// Deque contents per worker: own pops take the *last* element,
+    /// steals take the *first*.
+    queues: Vec<Vec<usize>>,
+    tasks: Vec<TState>,
+    /// i32 so an injected accounting bug underflows visibly instead of
+    /// wrapping.
+    pending: i32,
+    sleepers: usize,
+    /// Round-robin cursor, stored mod `workers` (only the residue is
+    /// ever observed).
+    rr: usize,
+    work_lock: u8,
+    idle_lock: u8,
+    panicked: bool,
+}
+
+impl State {
+    fn init(sc: &Scenario) -> State {
+        State {
+            main: if sc.external.is_empty() {
+                MainPc::WaitLock
+            } else {
+                MainPc::Spawn { i: 0, step: SubmitStep::Inc }
+            },
+            workers: vec![WorkerPc::PopOwn; sc.workers],
+            queues: vec![Vec::new(); sc.workers],
+            tasks: vec![TState::Unspawned; sc.tasks.len()],
+            pending: 0,
+            sleepers: 0,
+            rr: 0,
+            work_lock: OWNER_NONE,
+            idle_lock: OWNER_NONE,
+            panicked: false,
+        }
+    }
+
+    // -- canonical byte encoding (visited set + work stack) ----------
+
+    fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(24 + 4 * self.workers.len());
+        b.push(match self.main {
+            MainPc::Spawn { i, step } => (i * 8 + step as usize) as u8,
+            MainPc::WaitLock => 200,
+            MainPc::WaitCheck => 201,
+            MainPc::WaitWait => 202,
+            MainPc::WaitReacquire => 203,
+            MainPc::WaitUnlock => 204,
+            MainPc::Done => 205,
+        });
+        b.push((self.pending + 16) as u8);
+        b.push(self.sleepers as u8);
+        b.push(self.rr as u8);
+        b.push(self.work_lock);
+        b.push(self.idle_lock);
+        b.push(self.panicked as u8);
+        for w in &self.workers {
+            let (kind, p1, p2, p3): (u8, u8, u8, u8) = match *w {
+                WorkerPc::PopOwn => (0, 0, 0, 0),
+                WorkerPc::Steal { k } => (1, k as u8, 0, 0),
+                WorkerPc::Run { t, j, step } => {
+                    (2, t as u8, j as u8, step as u8)
+                }
+                WorkerPc::PanicStore { t } => (3, t as u8, 0, 0),
+                WorkerPc::DoneDec { t } => (4, t as u8, 0, 0),
+                WorkerPc::DoneLockIdle => (5, 0, 0, 0),
+                WorkerPc::DoneUnlockIdle => (6, 0, 0, 0),
+                WorkerPc::DoneNotifyIdle => (7, 0, 0, 0),
+                WorkerPc::SleepLock => (8, 0, 0, 0),
+                WorkerPc::SleepInc => (9, 0, 0, 0),
+                WorkerPc::SleepScan { j } => (10, j as u8, 0, 0),
+                WorkerPc::SleepFoundDec => (11, 0, 0, 0),
+                WorkerPc::SleepFoundUnlock => (12, 0, 0, 0),
+                WorkerPc::Waiting => (13, 0, 0, 0),
+                WorkerPc::Reacquire => (14, 0, 0, 0),
+                WorkerPc::PostWaitUnlock => (15, 0, 0, 0),
+                WorkerPc::PostWaitDec => (16, 0, 0, 0),
+            };
+            b.extend_from_slice(&[kind, p1, p2, p3]);
+        }
+        for t in &self.tasks {
+            b.push(*t as u8);
+        }
+        for q in &self.queues {
+            b.push(q.len() as u8);
+            for &t in q {
+                b.push(t as u8);
+            }
+        }
+        b
+    }
+
+    fn decode(buf: &[u8], sc: &Scenario) -> State {
+        let mut i = 0usize;
+        let mut next = || {
+            let v = buf[i];
+            i += 1;
+            v
+        };
+        let step_of = |v: u8| match v {
+            0 => SubmitStep::Inc,
+            1 => SubmitStep::Push,
+            2 => SubmitStep::CheckSleepers,
+            3 => SubmitStep::Lock,
+            4 => SubmitStep::Unlock,
+            _ => SubmitStep::Notify,
+        };
+        let main = match next() {
+            200 => MainPc::WaitLock,
+            201 => MainPc::WaitCheck,
+            202 => MainPc::WaitWait,
+            203 => MainPc::WaitReacquire,
+            204 => MainPc::WaitUnlock,
+            205 => MainPc::Done,
+            v => MainPc::Spawn {
+                i: v as usize / 8,
+                step: step_of(v % 8),
+            },
+        };
+        let pending = next() as i32 - 16;
+        let sleepers = next() as usize;
+        let rr = next() as usize;
+        let work_lock = next();
+        let idle_lock = next();
+        let panicked = next() != 0;
+        let mut workers = Vec::with_capacity(sc.workers);
+        for _ in 0..sc.workers {
+            let (kind, p1, p2, p3) = (next(), next(), next(), next());
+            workers.push(match kind {
+                0 => WorkerPc::PopOwn,
+                1 => WorkerPc::Steal { k: p1 as usize },
+                2 => WorkerPc::Run {
+                    t: p1 as usize,
+                    j: p2 as usize,
+                    step: step_of(p3),
+                },
+                3 => WorkerPc::PanicStore { t: p1 as usize },
+                4 => WorkerPc::DoneDec { t: p1 as usize },
+                5 => WorkerPc::DoneLockIdle,
+                6 => WorkerPc::DoneUnlockIdle,
+                7 => WorkerPc::DoneNotifyIdle,
+                8 => WorkerPc::SleepLock,
+                9 => WorkerPc::SleepInc,
+                10 => WorkerPc::SleepScan { j: p1 as usize },
+                11 => WorkerPc::SleepFoundDec,
+                12 => WorkerPc::SleepFoundUnlock,
+                13 => WorkerPc::Waiting,
+                14 => WorkerPc::Reacquire,
+                15 => WorkerPc::PostWaitUnlock,
+                _ => WorkerPc::PostWaitDec,
+            });
+        }
+        let mut tasks = Vec::with_capacity(sc.tasks.len());
+        for _ in 0..sc.tasks.len() {
+            tasks.push(match next() {
+                0 => TState::Unspawned,
+                1 => TState::Queued,
+                2 => TState::Running,
+                _ => TState::Done,
+            });
+        }
+        let mut queues = Vec::with_capacity(sc.workers);
+        for _ in 0..sc.workers {
+            let len = next() as usize;
+            let mut q = Vec::with_capacity(len);
+            for _ in 0..len {
+                q.push(next() as usize);
+            }
+            queues.push(q);
+        }
+        State {
+            main,
+            workers,
+            queues,
+            tasks,
+            pending,
+            sleepers,
+            rr,
+            work_lock,
+            idle_lock,
+            panicked,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Transitions
+// ---------------------------------------------------------------------
+
+/// The entry point into running a just-popped task: panic, finish
+/// immediately, or start spawning children.
+fn run_entry(sc: &Scenario, t: usize) -> WorkerPc {
+    let spec = &sc.tasks[t];
+    if spec.panics {
+        WorkerPc::PanicStore { t }
+    } else if spec.spawns.is_empty() {
+        WorkerPc::DoneDec { t }
+    } else {
+        WorkerPc::Run { t, j: 0, step: SubmitStep::Inc }
+    }
+}
+
+/// `notify_one(work_cv)`: one successor per parked worker (the runtime
+/// may wake any of them), or a single no-op successor if none is
+/// parked. `base` is the state with the notifier already advanced.
+fn notify_one_work(base: &State, out: &mut Vec<State>) {
+    let parked: Vec<usize> = base
+        .workers
+        .iter()
+        .enumerate()
+        .filter(|(_, w)| **w == WorkerPc::Waiting)
+        .map(|(i, _)| i)
+        .collect();
+    if parked.is_empty() {
+        out.push(base.clone());
+        return;
+    }
+    for v in parked {
+        let mut n = base.clone();
+        n.workers[v] = WorkerPc::Reacquire;
+        out.push(n);
+    }
+}
+
+/// One submit step (shared by the scoping thread and spawning workers).
+/// `queue_at` is where a push lands; `advance` produces the pc after
+/// the submit completes its final step. Returns successor states.
+#[allow(clippy::too_many_arguments)]
+fn submit_step<FA, FS>(
+    s: &State,
+    mutation: Mutation,
+    step: SubmitStep,
+    task: usize,
+    queue_at: usize,
+    lock_owner: u8,
+    set_pc: FS,
+    advance: FA,
+    out: &mut Vec<State>,
+) where
+    FA: Fn(&mut State),
+    FS: Fn(&mut State, SubmitStep),
+{
+    match step {
+        SubmitStep::Inc => {
+            let mut n = s.clone();
+            if mutation != Mutation::SkipPendingInc {
+                n.pending += 1;
+            }
+            set_pc(&mut n, SubmitStep::Push);
+            out.push(n);
+        }
+        SubmitStep::Push => {
+            let mut n = s.clone();
+            n.queues[queue_at].push(task);
+            n.tasks[task] = TState::Queued;
+            set_pc(&mut n, SubmitStep::CheckSleepers);
+            out.push(n);
+        }
+        SubmitStep::CheckSleepers => {
+            let mut n = s.clone();
+            if n.sleepers > 0 && mutation != Mutation::SkipNotify {
+                set_pc(&mut n, SubmitStep::Lock);
+            } else {
+                advance(&mut n);
+            }
+            out.push(n);
+        }
+        SubmitStep::Lock => {
+            if s.work_lock == OWNER_NONE {
+                let mut n = s.clone();
+                n.work_lock = lock_owner;
+                set_pc(&mut n, SubmitStep::Unlock);
+                out.push(n);
+            }
+        }
+        SubmitStep::Unlock => {
+            let mut n = s.clone();
+            n.work_lock = OWNER_NONE;
+            set_pc(&mut n, SubmitStep::Notify);
+            out.push(n);
+        }
+        SubmitStep::Notify => {
+            let mut base = s.clone();
+            advance(&mut base);
+            notify_one_work(&base, out);
+        }
+    }
+}
+
+fn step_main(s: &State, sc: &Scenario, mutation: Mutation, out: &mut Vec<State>) {
+    match s.main {
+        MainPc::Spawn { i, step } => {
+            let task = sc.external[i];
+            let queue_at = s.rr;
+            let nworkers = sc.workers;
+            let nexternal = sc.external.len();
+            submit_step(
+                s,
+                mutation,
+                step,
+                task,
+                queue_at,
+                OWNER_MAIN,
+                |n, st| {
+                    // The real `submit` does `rr.fetch_add` *as part of*
+                    // picking the queue; folding it into the push step is
+                    // faithful because no other thread reads `rr`.
+                    if st == SubmitStep::CheckSleepers {
+                        n.rr = (n.rr + 1) % nworkers;
+                    }
+                    n.main = MainPc::Spawn { i, step: st };
+                },
+                |n| {
+                    n.main = if i + 1 < nexternal {
+                        MainPc::Spawn { i: i + 1, step: SubmitStep::Inc }
+                    } else {
+                        MainPc::WaitLock
+                    };
+                },
+                out,
+            );
+        }
+        MainPc::WaitLock | MainPc::WaitReacquire => {
+            if s.idle_lock == OWNER_NONE {
+                let mut n = s.clone();
+                n.idle_lock = OWNER_MAIN;
+                n.main = MainPc::WaitCheck;
+                out.push(n);
+            }
+        }
+        MainPc::WaitCheck => {
+            let mut n = s.clone();
+            if n.pending != 0 {
+                // Condvar wait: release the mutex and park atomically.
+                n.idle_lock = OWNER_NONE;
+                n.main = MainPc::WaitWait;
+            } else {
+                n.main = MainPc::WaitUnlock;
+            }
+            out.push(n);
+        }
+        MainPc::WaitWait => {} // parked; woken by DoneNotifyIdle
+        MainPc::WaitUnlock => {
+            let mut n = s.clone();
+            n.idle_lock = OWNER_NONE;
+            n.main = MainPc::Done;
+            out.push(n);
+        }
+        MainPc::Done => {}
+    }
+}
+
+fn step_worker(
+    s: &State,
+    sc: &Scenario,
+    mutation: Mutation,
+    w: usize,
+    out: &mut Vec<State>,
+) {
+    let nw = sc.workers;
+    match s.workers[w] {
+        WorkerPc::PopOwn => {
+            let mut n = s.clone();
+            if let Some(t) = n.queues[w].pop() {
+                n.tasks[t] = TState::Running;
+                n.workers[w] = run_entry(sc, t);
+            } else if nw > 1 {
+                n.workers[w] = WorkerPc::Steal { k: 1 };
+            } else {
+                n.workers[w] = WorkerPc::SleepLock;
+            }
+            out.push(n);
+        }
+        WorkerPc::Steal { k } => {
+            let mut n = s.clone();
+            let j = (w + k) % nw;
+            if !n.queues[j].is_empty() {
+                let t = n.queues[j].remove(0); // steal from the front
+                n.tasks[t] = TState::Running;
+                n.workers[w] = run_entry(sc, t);
+            } else if k + 1 < nw {
+                n.workers[w] = WorkerPc::Steal { k: k + 1 };
+            } else {
+                n.workers[w] = WorkerPc::SleepLock;
+            }
+            out.push(n);
+        }
+        WorkerPc::Run { t, j, step } => {
+            let task = sc.tasks[t].spawns[j];
+            let nspawns = sc.tasks[t].spawns.len();
+            submit_step(
+                s,
+                mutation,
+                step,
+                task,
+                w, // workers push to their own deque
+                w as u8,
+                |n, st| n.workers[w] = WorkerPc::Run { t, j, step: st },
+                |n| {
+                    n.workers[w] = if j + 1 < nspawns {
+                        WorkerPc::Run { t, j: j + 1, step: SubmitStep::Inc }
+                    } else {
+                        WorkerPc::DoneDec { t }
+                    };
+                },
+                out,
+            );
+        }
+        WorkerPc::PanicStore { t } => {
+            let mut n = s.clone();
+            n.panicked = true;
+            n.workers[w] = WorkerPc::DoneDec { t };
+            out.push(n);
+        }
+        WorkerPc::DoneDec { t } => {
+            // `pending.fetch_sub(1) == 1`: mark + decrement + observe,
+            // one atomic step (the linearization point of task_done).
+            let mut n = s.clone();
+            n.tasks[t] = TState::Done;
+            n.pending -= 1;
+            n.workers[w] = if n.pending == 0 {
+                WorkerPc::DoneLockIdle
+            } else {
+                WorkerPc::PopOwn
+            };
+            out.push(n);
+        }
+        WorkerPc::DoneLockIdle => {
+            if s.idle_lock == OWNER_NONE {
+                let mut n = s.clone();
+                n.idle_lock = w as u8;
+                n.workers[w] = WorkerPc::DoneUnlockIdle;
+                out.push(n);
+            }
+        }
+        WorkerPc::DoneUnlockIdle => {
+            let mut n = s.clone();
+            n.idle_lock = OWNER_NONE;
+            n.workers[w] = WorkerPc::DoneNotifyIdle;
+            out.push(n);
+        }
+        WorkerPc::DoneNotifyIdle => {
+            // notify_all(idle_cv): the only possible waiter is the
+            // scoping thread.
+            let mut n = s.clone();
+            if n.main == MainPc::WaitWait {
+                n.main = MainPc::WaitReacquire;
+            }
+            n.workers[w] = WorkerPc::PopOwn;
+            out.push(n);
+        }
+        WorkerPc::SleepLock => {
+            if s.work_lock == OWNER_NONE {
+                let mut n = s.clone();
+                n.work_lock = w as u8;
+                n.workers[w] = WorkerPc::SleepInc;
+                out.push(n);
+            }
+        }
+        WorkerPc::SleepInc => {
+            // Publish intent to sleep BEFORE the emptiness re-check —
+            // the submit-side pairing that rules out lost wakeups.
+            let mut n = s.clone();
+            n.sleepers += 1;
+            n.workers[w] = WorkerPc::SleepScan { j: 0 };
+            out.push(n);
+        }
+        WorkerPc::SleepScan { j } => {
+            let mut n = s.clone();
+            if !n.queues[j].is_empty() {
+                n.workers[w] = WorkerPc::SleepFoundDec;
+            } else if j + 1 < nw {
+                n.workers[w] = WorkerPc::SleepScan { j: j + 1 };
+            } else {
+                // Condvar wait: release the work mutex and park, one
+                // atomic step (no notify can slip into the gap).
+                n.work_lock = OWNER_NONE;
+                n.workers[w] = WorkerPc::Waiting;
+            }
+            out.push(n);
+        }
+        WorkerPc::SleepFoundDec => {
+            let mut n = s.clone();
+            n.sleepers -= 1;
+            n.workers[w] = WorkerPc::SleepFoundUnlock;
+            out.push(n);
+        }
+        WorkerPc::SleepFoundUnlock => {
+            let mut n = s.clone();
+            n.work_lock = OWNER_NONE;
+            n.workers[w] = WorkerPc::PopOwn;
+            out.push(n);
+        }
+        WorkerPc::Waiting => {} // parked; woken by notify_one_work
+        WorkerPc::Reacquire => {
+            if s.work_lock == OWNER_NONE {
+                let mut n = s.clone();
+                n.work_lock = w as u8;
+                n.workers[w] = WorkerPc::PostWaitUnlock;
+                out.push(n);
+            }
+        }
+        WorkerPc::PostWaitUnlock => {
+            let mut n = s.clone();
+            n.work_lock = OWNER_NONE;
+            n.workers[w] = WorkerPc::PostWaitDec;
+            out.push(n);
+        }
+        WorkerPc::PostWaitDec => {
+            let mut n = s.clone();
+            n.sleepers -= 1;
+            n.workers[w] = WorkerPc::PopOwn;
+            out.push(n);
+        }
+    }
+}
+
+fn successors(s: &State, sc: &Scenario, mutation: Mutation) -> Vec<State> {
+    let mut out = Vec::new();
+    step_main(s, sc, mutation, &mut out);
+    for w in 0..sc.workers {
+        step_worker(s, sc, mutation, w, &mut out);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Invariants
+// ---------------------------------------------------------------------
+
+fn check_invariants(s: &State) -> Result<(), String> {
+    let fail = |msg: String| Err(format!("{msg}\nstate: {s:?}"));
+
+    if s.pending < 0 {
+        return fail("pending underflowed below zero".to_string());
+    }
+
+    // 1. Exact pending accounting — the inductive SAFETY property.
+    let queued =
+        s.tasks.iter().filter(|t| **t == TState::Queued).count() as i32;
+    let running =
+        s.tasks.iter().filter(|t| **t == TState::Running).count() as i32;
+    let mut in_flight_pushes = 0i32;
+    if matches!(s.main, MainPc::Spawn { step: SubmitStep::Push, .. }) {
+        in_flight_pushes += 1;
+    }
+    for w in &s.workers {
+        if matches!(w, WorkerPc::Run { step: SubmitStep::Push, .. }) {
+            in_flight_pushes += 1;
+        }
+    }
+    if s.pending != queued + running + in_flight_pushes {
+        return fail(format!(
+            "pending accounting broken: pending={} but queued={queued} \
+             running={running} in-flight-pushes={in_flight_pushes}",
+            s.pending
+        ));
+    }
+
+    // 2. Scope-return soundness.
+    if s.main == MainPc::Done {
+        if s.pending != 0 {
+            return fail(format!(
+                "scope returned with pending={}",
+                s.pending
+            ));
+        }
+        if s.queues.iter().any(|q| !q.is_empty()) {
+            return fail(
+                "scope returned with a task still queued".to_string(),
+            );
+        }
+        for (t, st) in s.tasks.iter().enumerate() {
+            match st {
+                TState::Done => {}
+                TState::Unspawned if s.panicked => {} // abandoned
+                other => {
+                    return fail(format!(
+                        "scope returned but task {t} is {other:?} \
+                         (panicked={})",
+                        s.panicked
+                    ));
+                }
+            }
+        }
+    }
+
+    // 4. Bookkeeping self-checks (model consistency).
+    let sleeping = s
+        .workers
+        .iter()
+        .filter(|w| {
+            matches!(
+                w,
+                WorkerPc::SleepScan { .. }
+                    | WorkerPc::SleepFoundDec
+                    | WorkerPc::Waiting
+                    | WorkerPc::Reacquire
+                    | WorkerPc::PostWaitUnlock
+                    | WorkerPc::PostWaitDec
+            )
+        })
+        .count();
+    if s.sleepers != sleeping {
+        return fail(format!(
+            "sleepers counter {} disagrees with worker pcs ({sleeping})",
+            s.sleepers
+        ));
+    }
+    let mut queued_ids: Vec<usize> =
+        s.queues.iter().flatten().copied().collect();
+    queued_ids.sort_unstable();
+    let mut marked: Vec<usize> = s
+        .tasks
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| **t == TState::Queued)
+        .map(|(i, _)| i)
+        .collect();
+    marked.sort_unstable();
+    if queued_ids != marked {
+        return fail("queue contents disagree with task states".to_string());
+    }
+    for (w, pc) in s.workers.iter().enumerate() {
+        let holds_work = matches!(
+            pc,
+            WorkerPc::SleepInc
+                | WorkerPc::SleepScan { .. }
+                | WorkerPc::SleepFoundDec
+                | WorkerPc::SleepFoundUnlock
+                | WorkerPc::PostWaitUnlock
+        );
+        if holds_work && s.work_lock != w as u8 {
+            return fail(format!(
+                "worker {w} at {pc:?} should hold the work mutex"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// A state with no enabled transition must be the quiescent accept
+/// state; anything else is a deadlock (e.g. a lost wakeup).
+fn check_terminal(s: &State) -> Result<(), String> {
+    let quiescent = s.main == MainPc::Done
+        && s.workers.iter().all(|w| *w == WorkerPc::Waiting)
+        && s.pending == 0
+        && s.queues.iter().all(|q| q.is_empty());
+    if quiescent {
+        Ok(())
+    } else {
+        Err(format!(
+            "deadlock: no thread can make progress outside the \
+             quiescent terminal (lost wakeup?)\nstate: {s:?}"
+        ))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Exploration
+// ---------------------------------------------------------------------
+
+/// Exhaustively explore every interleaving of `sc` (up to `max_states`
+/// distinct states) and check all invariants. `mutation` injects a
+/// known bug for the negative self-tests; use [`Mutation::None`] for
+/// the real protocol.
+pub fn check_scenario_with(
+    sc: &Scenario,
+    mutation: Mutation,
+    max_states: usize,
+) -> Result<Stats, String> {
+    assert!(sc.workers >= 1 && sc.workers <= 4, "model bound: 1–4 workers");
+    assert!(sc.tasks.len() <= 8, "model bound: ≤ 8 tasks");
+    for t in &sc.tasks {
+        assert!(t.spawns.len() <= 4, "model bound: ≤ 4 children");
+    }
+
+    let init = State::init(sc);
+    let mut visited: BTreeSet<Vec<u8>> = BTreeSet::new();
+    let mut stack: Vec<Vec<u8>> = Vec::new();
+    visited.insert(init.encode());
+    stack.push(init.encode());
+    let mut transitions = 0usize;
+
+    while let Some(buf) = stack.pop() {
+        let s = State::decode(&buf, sc);
+        debug_assert_eq!(s.encode(), buf, "encode/decode roundtrip");
+        check_invariants(&s).map_err(|e| format!("[{}] {e}", sc.name))?;
+        let succs = successors(&s, sc, mutation);
+        if succs.is_empty() {
+            check_terminal(&s).map_err(|e| format!("[{}] {e}", sc.name))?;
+            continue;
+        }
+        for n in succs {
+            transitions += 1;
+            let e = n.encode();
+            if visited.insert(e.clone()) {
+                if visited.len() > max_states {
+                    return Err(format!(
+                        "[{}] state bound exceeded ({max_states}): the \
+                         scenario no longer fits its budget — shrink it \
+                         or raise the bound deliberately",
+                        sc.name
+                    ));
+                }
+                stack.push(e);
+            }
+        }
+    }
+    Ok(Stats { states: visited.len(), transitions })
+}
+
+/// [`check_scenario_with`] for the faithful (unmutated) protocol.
+pub fn check_scenario(sc: &Scenario, max_states: usize) -> Result<Stats, String> {
+    check_scenario_with(sc, Mutation::None, max_states)
+}
+
+/// The shipped schedule universes. Together they cover the acceptance
+/// bound (≥ 3 workers / ≥ 4 tasks), spawn-from-task (tier-2 from
+/// tier-1), a spawn chain, worker-panic abandonment, the truncated
+/// spawn list of a panicking scope closure, and the 1-worker edge case.
+pub fn scenarios() -> Vec<Scenario> {
+    let plain = |spawns: Vec<usize>| TaskSpec { spawns, panics: false };
+    vec![
+        Scenario {
+            name: "ext_fanout_3w4t",
+            workers: 3,
+            external: vec![0, 1, 2, 3],
+            tasks: (0..4).map(|_| plain(vec![])).collect(),
+        },
+        Scenario {
+            name: "spawn_from_task_3w4t",
+            workers: 3,
+            external: vec![0],
+            tasks: vec![
+                plain(vec![1, 2, 3]),
+                plain(vec![]),
+                plain(vec![]),
+                plain(vec![]),
+            ],
+        },
+        Scenario {
+            name: "panic_abandons_children_2w",
+            workers: 2,
+            external: vec![0, 1],
+            tasks: vec![
+                TaskSpec { spawns: vec![2, 3], panics: true },
+                plain(vec![]),
+                plain(vec![]), // abandoned
+                plain(vec![]), // abandoned
+            ],
+        },
+        Scenario {
+            // A scope closure that panics after 2 of its intended
+            // spawns: catch_unwind still runs wait_idle, so the model
+            // is exactly a truncated external list with tasks in
+            // flight (one of which spawns).
+            name: "closure_panic_3w",
+            workers: 3,
+            external: vec![0, 1],
+            tasks: vec![
+                plain(vec![2]),
+                plain(vec![3]),
+                plain(vec![]),
+                plain(vec![]),
+            ],
+        },
+        Scenario {
+            name: "deep_chain_2w",
+            workers: 2,
+            external: vec![0],
+            tasks: vec![
+                plain(vec![1]),
+                plain(vec![2]),
+                plain(vec![3]),
+                plain(vec![]),
+            ],
+        },
+        Scenario {
+            name: "single_worker_4t",
+            workers: 1,
+            external: vec![0, 1],
+            tasks: vec![
+                plain(vec![2]),
+                plain(vec![3]),
+                plain(vec![]),
+                plain(vec![]),
+            ],
+        },
+    ]
+}
+
+/// Default per-scenario state budget. Sized with slack above the
+/// largest shipped scenario; exceeding it is a hard error, never a
+/// silent truncation of coverage.
+pub const DEFAULT_MAX_STATES: usize = 5_000_000;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip_on_initial_states() {
+        for sc in scenarios() {
+            let s = State::init(&sc);
+            assert_eq!(State::decode(&s.encode(), &sc), s, "{}", sc.name);
+        }
+    }
+
+    #[test]
+    fn tiny_scenario_passes_quickly() {
+        let sc = Scenario {
+            name: "tiny_1w1t",
+            workers: 1,
+            external: vec![0],
+            tasks: vec![TaskSpec { spawns: vec![], panics: false }],
+        };
+        let stats = check_scenario(&sc, 100_000).expect("tiny passes");
+        assert!(stats.states > 10, "exploration actually ran");
+    }
+
+    #[test]
+    fn lost_wakeup_bug_is_detected_as_deadlock() {
+        let sc = Scenario {
+            name: "mutated_skip_notify",
+            workers: 2,
+            external: vec![0],
+            tasks: vec![TaskSpec { spawns: vec![], panics: false }],
+        };
+        let err = check_scenario_with(&sc, Mutation::SkipNotify, 1_000_000)
+            .expect_err("a submit that never notifies must deadlock");
+        assert!(err.contains("deadlock"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn pending_accounting_bug_is_detected() {
+        let sc = Scenario {
+            name: "mutated_skip_inc",
+            workers: 1,
+            external: vec![0],
+            tasks: vec![TaskSpec { spawns: vec![], panics: false }],
+        };
+        let err =
+            check_scenario_with(&sc, Mutation::SkipPendingInc, 1_000_000)
+                .expect_err("skipping the pending increment must break \
+                             the accounting invariant");
+        assert!(err.contains("pending"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn state_bound_fails_loudly() {
+        let sc = Scenario {
+            name: "bounded",
+            workers: 2,
+            external: vec![0, 1],
+            tasks: vec![
+                TaskSpec { spawns: vec![], panics: false },
+                TaskSpec { spawns: vec![], panics: false },
+            ],
+        };
+        let err = check_scenario(&sc, 10)
+            .expect_err("a 10-state budget cannot hold this scenario");
+        assert!(err.contains("state bound"), "unexpected error: {err}");
+    }
+}

@@ -11,7 +11,7 @@ use crate::data::{self, Dataset, DatasetKind, UserShard};
 use crate::network::draw_dropouts;
 use crate::protocol::Params;
 use anyhow::Result;
-use std::time::Instant;
+use crate::metrics::Stopwatch;
 pub use trainer::Trainer;
 
 /// Full configuration of a federated training run.
@@ -389,11 +389,11 @@ pub fn run_fl(cfg: &FlConfig, trainer: &Trainer) -> Result<FlRun> {
                 ys[u] = vec![0f32; m.d];
                 continue;
             }
-            let t0 = Instant::now();
+            let t0 = Stopwatch::start();
             let (local, loss) = trainer.local_train(
                 &global, &train, &shards[u], cfg.local_epochs, cfg.lr,
                 cfg.momentum, cfg.seed ^ ((round as u64) << 20) ^ u as u64)?;
-            max_train_s = max_train_s.max(t0.elapsed().as_secs_f64());
+            max_train_s = max_train_s.max(t0.elapsed_s());
             loss_sum += loss;
             loss_cnt += 1;
             // y_i = w_global − w_local  (Σ of lr-weighted local grads).

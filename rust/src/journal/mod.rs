@@ -267,9 +267,11 @@ impl<'a> Jr<'a> {
         Ok(self.take(1)?[0])
     }
     fn u32(&mut self) -> Result<u32, JournalError> {
+        // lint: allow(decode-no-panic) — take(4) returned exactly 4 bytes
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
     fn u64(&mut self) -> Result<u64, JournalError> {
+        // lint: allow(decode-no-panic) — take(8) returned exactly 8 bytes
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
     /// Read a count and reject it unless `count * elem_bytes` fits in
@@ -445,11 +447,13 @@ pub fn decode_stream(
     let mut pos = 0usize;
     while buf.len() - pos >= FRAME {
         let len = u32::from_le_bytes(
+            // lint: allow(decode-no-panic) — 4-byte slice, FRAME-length loop guard above
             buf[pos..pos + 4].try_into().unwrap()) as usize;
         if len > MAX_RECORD || buf.len() - pos - FRAME < len {
             break;
         }
         let crc = u32::from_le_bytes(
+            // lint: allow(decode-no-panic) — 4-byte slice, FRAME-length loop guard above
             buf[pos + 4..pos + 8].try_into().unwrap());
         let payload = &buf[pos + FRAME..pos + FRAME + len];
         if crc32(payload) != crc {

@@ -18,8 +18,22 @@
 //! At runtime Python is never on the path: [`runtime`] loads
 //! `artifacts/*.hlo.txt` through the PJRT CPU client and the coordinator
 //! drives everything from Rust.
+//!
+//! Repo-wide invariants beyond what rustc checks (SAFETY comments on
+//! `unsafe`, panic-free decode paths, a time- and hash-free protocol
+//! core) are enforced by the [`analysis`] lint pass via the `repolint`
+//! binary — see `src/analysis/` for the rule catalog.
+
+// `unsafe fn` bodies get no implicit unsafe block: every unsafe
+// operation must sit in an explicit `unsafe { }` with its own
+// `// SAFETY:` comment (enforced by the `safety-comment` lint rule).
+#![deny(unsafe_op_in_unsafe_fn)]
+// Items that are `pub` but unreachable from outside the crate usually
+// mean a forgotten re-export or an over-broad visibility; advisory.
+#![warn(unreachable_pub)]
 
 pub mod adversary;
+pub mod analysis;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -7,6 +7,34 @@
 //!   honest user — Fig. 4(b), 5(c)).
 //! * [`Table`] — fixed-width table / CSV emitters for the bench harnesses
 //!   (no serde in the vendored crate set).
+//! * [`Stopwatch`] — the one sanctioned home of wall-clock time outside
+//!   `tests/` and `benches/`.
+
+/// Wall-clock stopwatch for ledger reporting (`client_compute_s`,
+/// `server_compute_s`, training wall time).
+///
+/// This is deliberately the only production wrapper around
+/// `std::time::Instant`: wall-clock readings are *reporting*, never
+/// protocol state — they are excluded from the bit-exact replay
+/// contract (journal recovery compares aggregates, ledgers' byte
+/// counts, and the simulated clock, not wall time). The protocol core
+/// stays syntactically time-free (`core-determinism` lint rule) by
+/// importing this type instead of `Instant`; if a timing ever needs to
+/// influence protocol behavior, it must come from the simulated clock,
+/// not from here.
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Stopwatch {
+        Stopwatch(std::time::Instant::now())
+    }
+
+    /// Seconds elapsed since [`Stopwatch::start`].
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
 
 /// Per-coordinate selection counts for one round.
 pub struct PrivacySample {

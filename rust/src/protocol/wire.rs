@@ -121,6 +121,7 @@ impl<'a> R<'a> {
     fn u32(&mut self) -> Result<u32> {
         ensure!(self.pos + 4 <= self.buf.len(), "truncated frame");
         let v = u32::from_le_bytes(
+            // lint: allow(decode-no-panic) — slice is exactly 4 bytes, the ensure above guarantees it
             self.buf[self.pos..self.pos + 4].try_into().unwrap());
         self.pos += 4;
         Ok(v)
@@ -129,6 +130,7 @@ impl<'a> R<'a> {
     fn u64(&mut self) -> Result<u64> {
         ensure!(self.pos + 8 <= self.buf.len(), "truncated frame");
         let v = u64::from_le_bytes(
+            // lint: allow(decode-no-panic) — slice is exactly 8 bytes, the ensure above guarantees it
             self.buf[self.pos..self.pos + 8].try_into().unwrap());
         self.pos += 8;
         Ok(v)

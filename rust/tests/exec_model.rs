@@ -1,0 +1,66 @@
+//! Named CI gate `Executor model check`: exhaustively verify the
+//! executor scope protocol's soundness invariants over every bounded
+//! interleaving (see `sparsesecagg::exec::model` for what is modeled
+//! and why the bounds are sound to rely on).
+//!
+//! The full sweep — including the ≥ 3 worker / ≥ 4 task scenarios the
+//! acceptance bound names — runs in release builds (the CI gate runs
+//! `cargo test --release --test exec_model`) or when
+//! `EXEC_MODEL_FULL=1` is set. Plain debug `cargo test` runs the ≤ 2
+//! worker scenarios only, keeping the tier-1 suite fast; that subset
+//! still covers spawn-from-task chains and panic abandonment.
+
+use sparsesecagg::exec::model::{
+    check_scenario, scenarios, DEFAULT_MAX_STATES,
+};
+
+fn run_full() -> bool {
+    cfg!(not(debug_assertions)) || std::env::var("EXEC_MODEL_FULL").is_ok()
+}
+
+#[test]
+fn scope_protocol_invariants_hold_over_all_bounded_schedules() {
+    let full = run_full();
+    let mut ran = 0usize;
+    for sc in scenarios() {
+        if !full && sc.workers >= 3 {
+            eprintln!(
+                "exec_model: [{}] skipped in debug build (run with \
+                 --release or EXEC_MODEL_FULL=1)",
+                sc.name
+            );
+            continue;
+        }
+        let stats = check_scenario(&sc, DEFAULT_MAX_STATES)
+            .unwrap_or_else(|e| panic!("model check failed: {e}"));
+        eprintln!(
+            "exec_model: [{}] ok — {} states, {} transitions \
+             ({} workers, {} tasks)",
+            sc.name,
+            stats.states,
+            stats.transitions,
+            sc.workers,
+            sc.tasks.len()
+        );
+        ran += 1;
+    }
+    assert!(ran >= 3, "scenario list shrank unexpectedly");
+}
+
+#[test]
+fn scenario_list_covers_the_acceptance_bound() {
+    // ≥ 3 workers and ≥ 4 tasks must be covered by at least one
+    // scenario, and the panic/abandonment and spawn-from-task shapes
+    // must stay represented — deleting a scenario may not silently
+    // narrow the checked envelope.
+    let all = scenarios();
+    assert!(all
+        .iter()
+        .any(|s| s.workers >= 3 && s.tasks.len() >= 4));
+    assert!(all
+        .iter()
+        .any(|s| s.tasks.iter().any(|t| t.panics)));
+    assert!(all
+        .iter()
+        .any(|s| s.tasks.iter().any(|t| !t.spawns.is_empty())));
+}
