@@ -14,8 +14,9 @@
 //! aggregate bit-for-bit) under the `"journal"` key.
 
 use sparsesecagg::adversary::{Adversary, TwoFaced};
-use sparsesecagg::coordinator::Coordinator;
+use sparsesecagg::coordinator::{Coordinator, GroupedCoordinator};
 use sparsesecagg::exec::{jobs as exec_jobs, Executor};
+use sparsesecagg::protocol::group::GroupLayout;
 use sparsesecagg::field::vecops;
 use sparsesecagg::journal::Journal;
 use sparsesecagg::masking::{self, PairSeeds, STREAM_ADDITIVE};
@@ -87,8 +88,22 @@ struct JournalRow {
     journal_bytes: usize,
 }
 
+/// The grouped-vs-flat A/B measurement (one flat N-user round vs the
+/// G-group tree over the same roster; `groups = 1` bit-exact flat).
+struct GroupedRow {
+    n: usize,
+    d: usize,
+    group_size: usize,
+    groups: usize,
+    flat_ms: f64,
+    grouped_ms: f64,
+    flat_max_up: usize,
+    grouped_max_up: usize,
+}
+
 fn write_bench_json(rows: &[ExecRow], rec: &RecoveryRow, jr: &JournalRow,
-                    threads: usize) -> std::io::Result<()> {
+                    gr: &GroupedRow, threads: usize)
+                    -> std::io::Result<()> {
     use std::fmt::Write as _;
     let mut s = String::new();
     s.push_str("{\n  \"bench\": \"bench_micro/two-tier-executor\",\n");
@@ -124,9 +139,19 @@ fn write_bench_json(rows: &[ExecRow], rec: &RecoveryRow, jr: &JournalRow,
         s,
         "  \"journal\": {{\"n\": {}, \"d\": {}, \"plain_ms\": {:.3}, \
          \"journal_ms\": {:.3}, \"journal_overhead_x\": {:.3}, \
-         \"journal_bytes\": {}}}",
+         \"journal_bytes\": {}}},",
         jr.n, jr.d, jr.plain_ms, jr.journal_ms,
         jr.journal_ms / jr.plain_ms.max(1e-9), jr.journal_bytes,
+    );
+    let _ = writeln!(
+        s,
+        "  \"grouped\": {{\"n\": {}, \"d\": {}, \"group_size\": {}, \
+         \"groups\": {}, \"flat_ms\": {:.3}, \"grouped_ms\": {:.3}, \
+         \"flat_max_up_bytes\": {}, \"grouped_max_up_bytes\": {}, \
+         \"per_user_upload_reduction_x\": {:.3}}}",
+        gr.n, gr.d, gr.group_size, gr.groups, gr.flat_ms, gr.grouped_ms,
+        gr.flat_max_up, gr.grouped_max_up,
+        gr.flat_max_up as f64 / gr.grouped_max_up.max(1) as f64,
     );
     s.push_str("}\n");
     // Zero-clobber guard + repo-root path resolution live in testutil
@@ -249,11 +274,13 @@ fn exec_bench(smoke: bool) -> anyhow::Result<()> {
     println!("{}", t.render());
     let rec = recovery_bench(smoke, reps)?;
     let jr = journal_bench(smoke, reps)?;
+    let gr = grouped_bench(smoke, reps)?;
     if smoke {
         println!("BENCH_SMOKE: bit-equality of all three engines asserted \
                   over {} cases; recovery-path A/B equality (honest vs \
                   byzantine-with-recovery) asserted; journal-on == \
-                  journal-off equality asserted; timings/JSON \
+                  journal-off equality asserted; grouped groups=1 == \
+                  flat equality asserted; timings/JSON \
                   skipped", rows.len());
     } else {
         if let Some(r) = rows.iter().find(|r| r.name == "many-short-sparse") {
@@ -263,7 +290,7 @@ fn exec_bench(smoke: bool) -> anyhow::Result<()> {
                           r.steal_ms, r.win_ms);
             }
         }
-        write_bench_json(&rows, &rec, &jr, threads)
+        write_bench_json(&rows, &rec, &jr, &gr, threads)
             .map_err(|e| anyhow::anyhow!("writing BENCH_round.json: {e}"))?;
     }
     Ok(())
@@ -320,6 +347,75 @@ fn journal_bench(smoke: bool, reps: usize) -> anyhow::Result<JournalRow> {
         journal_ms / plain_ms.max(1e-9)
     );
     Ok(JournalRow { n, d, plain_ms, journal_ms, journal_bytes })
+}
+
+/// Grouped-vs-flat A/B over the round driver: the same roster run as
+/// one flat N-user round and as a G-group tree (`group_size`-user
+/// groups, cleartext partial sums tree-reduced). The smoke gate is the
+/// refactor's identity anchor: `groups = 1` must be **bit-exactly**
+/// the flat round. The measured payoff — per-user upload bytes
+/// tracking n = group_size instead of N — is only visible where the
+/// O(n) share traffic dominates the O(d) upload frame, so the A/B runs
+/// a small-d / large-N regime; timings and the per-user byte reduction
+/// land under the `"grouped"` key of `BENCH_round.json` otherwise.
+/// (The strict ≤2× scaling bound is CI-gated in
+/// `tests/group_differential.rs`, not here.)
+fn grouped_bench(smoke: bool, reps: usize) -> anyhow::Result<GroupedRow> {
+    let (n, d, gsize) = if smoke { (16usize, 1usize << 9, 4usize) }
+                        else { (256, 1 << 10, 16) };
+    let p = Params { n, d, alpha: 0.2, theta: 0.0, c: 1024.0 };
+    let mut rng = ChaCha20Rng::from_seed_u64(0x96f0);
+    let ys: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..d).map(|_| rng.next_f32() - 0.5).collect())
+        .collect();
+    let betas = vec![1.0 / n as f64; n];
+
+    let mut flat = Coordinator::new_sparse(p, 7);
+    let mut want: Vec<f32> = Vec::new();
+    let mut flat_max_up = 0usize;
+    let flat_ms = median_time(reps, || {
+        let (agg, lg) = flat.run_round(0, &ys, &betas, &[]).unwrap();
+        flat_max_up = lg.max_up();
+        want = agg;
+    }) * 1e3;
+
+    // groups = 1 is the flat round verbatim — the identity gate.
+    let mut one =
+        GroupedCoordinator::new_sparse(p, 7, GroupLayout::groups(n, 1));
+    let out1 = one.run_round(0, &ys, &betas, &[]).unwrap();
+    let bits = |v: &[f32]| -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    };
+    assert_eq!(bits(&out1.aggregate), bits(&want),
+               "groups=1 diverged from the flat round");
+
+    let mut grouped = GroupedCoordinator::new_sparse(
+        p, 7, GroupLayout::of_size(n, gsize));
+    let groups = grouped.layout().count();
+    let mut grouped_max_up = 0usize;
+    let grouped_ms = median_time(reps, || {
+        let out = grouped.run_round(0, &ys, &betas, &[]).unwrap();
+        assert!(out.failed.is_empty());
+        assert_eq!(out.aggregate.len(), d);
+        grouped_max_up = out.ledger.max_up();
+    }) * 1e3;
+    println!(
+        "grouped A/B (N={n}, d={d}, group_size={gsize}, G={groups}): \
+         flat {flat_ms:.2} ms / {flat_max_up} B max per-user upload, \
+         grouped {grouped_ms:.2} ms / {grouped_max_up} B \
+         ({:.2}x fewer upload bytes per user) — groups=1 bit-exact",
+        flat_max_up as f64 / grouped_max_up.max(1) as f64
+    );
+    Ok(GroupedRow {
+        n,
+        d,
+        group_size: gsize,
+        groups,
+        flat_ms,
+        grouped_ms,
+        flat_max_up,
+        grouped_max_up,
+    })
 }
 
 /// Recovery-path A/B over the frame-driven coordinator: the same

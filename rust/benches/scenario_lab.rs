@@ -19,11 +19,13 @@
 //! (`failed`), the smoke matrix is chosen so none can occur.
 
 use sparsesecagg::adversary::{Adversary, TwoFaced};
-use sparsesecagg::coordinator::{Coordinator, PhaseDeadlines};
+use sparsesecagg::coordinator::{Coordinator, GroupedCoordinator,
+                                PhaseDeadlines};
 use sparsesecagg::metrics::Table;
 use sparsesecagg::netsim::{LinkProfile, NetSim, NetSimConfig};
 use sparsesecagg::network::draw_dropouts;
 use sparsesecagg::prg::ChaCha20Rng;
+use sparsesecagg::protocol::group::GroupLayout;
 use sparsesecagg::protocol::Params;
 use sparsesecagg::testutil;
 use std::time::Instant;
@@ -258,6 +260,79 @@ fn run_cell(spec: &CellSpec, rounds: usize, d: usize, smoke: bool)
     res
 }
 
+/// One grouped-scaling cell: a clean grouped round at cohort size `n`
+/// with fixed `group_size`, recording the measured per-user upload
+/// bytes. The claim these cells pin across the N sweep: per-user cost
+/// tracks n = group_size, not N — the share/response traffic per user
+/// is a constant of n_g, and only the seeded sparse-support draw
+/// (a few values per upload frame) jitters between users.
+struct GroupedCell {
+    n: usize,
+    group_size: usize,
+    groups: usize,
+    d: usize,
+    max_up_bytes: usize,
+    total_up_bytes: usize,
+    bus_clock_s: f64,
+    wall_ms: f64,
+}
+
+fn run_grouped_cell(n: usize, gsize: usize, d: usize) -> GroupedCell {
+    let p = Params { n, d, alpha: 0.2, theta: 0.0, c: 1024.0 };
+    let mut gc = GroupedCoordinator::new_sparse(
+        p, 0x5ca1e, GroupLayout::of_size(n, gsize));
+    let ys = grads(n, d, 0x44);
+    let betas = vec![1.0 / n as f64; n];
+    let t0 = Instant::now();
+    let out = gc
+        .run_round(0, &ys, &betas, &[])
+        .expect("clean grouped round");
+    assert!(out.failed.is_empty());
+    assert_eq!(out.aggregate.len(), d);
+    GroupedCell {
+        n,
+        group_size: gsize,
+        groups: gc.layout().count(),
+        d,
+        max_up_bytes: out.ledger.max_up(),
+        total_up_bytes: out.ledger.total_up(),
+        bus_clock_s: gc.bus_clock_s(),
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+    }
+}
+
+/// The grouped-scaling sweep (full mode: the ISSUE's N = 2^10..2^14
+/// ladder; smoke: a two-point ladder cheap enough for CI). Every cell
+/// shares (group_size, d), so the per-user byte invariance across N is
+/// asserted here — the sweep is a gate, not just a table.
+fn run_grouped_scaling(smoke: bool) -> Vec<GroupedCell> {
+    let (sizes, gsize, d): (&[usize], usize, usize) = if smoke {
+        (&[64, 256], 16, 1 << 9)
+    } else {
+        (&[1 << 10, 1 << 12, 1 << 14], 64, 1 << 10)
+    };
+    let cells: Vec<GroupedCell> = sizes
+        .iter()
+        .map(|&n| run_grouped_cell(n, gsize, d))
+        .collect();
+    // The gate: per-user upload bytes must not grow with N at fixed
+    // group_size. Exact equality would be wrong — the seeded sparse
+    // support size is a per-user binomial draw, so the max over more
+    // users wanders up by a few values' worth of bytes — but a flat
+    // cohort's per-user share/response traffic grows linearly in N,
+    // so any real regression blows through a 2x ceiling immediately.
+    assert!(cells[0].max_up_bytes > 0);
+    for c in &cells[1..] {
+        assert!(
+            c.max_up_bytes <= 2 * cells[0].max_up_bytes,
+            "per-user upload bytes must not grow with N at fixed \
+             group_size (N={}: {} B vs N={}: {} B)",
+            c.n, c.max_up_bytes, cells[0].n, cells[0].max_up_bytes
+        );
+    }
+    cells
+}
+
 /// The CI smoke matrix: 4 cells chosen so every round is recoverable by
 /// construction (θ = 0 wherever stragglers/byzantines eat into the
 /// margin), 1 round each, equality-only.
@@ -297,7 +372,8 @@ fn full_matrix() -> Vec<CellSpec> {
     cells
 }
 
-fn write_scenarios_json(cells: &[CellResult]) -> std::io::Result<()> {
+fn write_scenarios_json(cells: &[CellResult], grouped: &[GroupedCell])
+                        -> std::io::Result<()> {
     use std::fmt::Write as _;
     let mut s = String::new();
     s.push_str("{\n  \"bench\": \"scenario_lab/degradation-matrix\",\n");
@@ -313,6 +389,20 @@ fn write_scenarios_json(cells: &[CellResult]) -> std::io::Result<()> {
         base_link().bandwidth_bps, STRAGGLER_LATENCY_S,
         COLLECT_DEADLINE_S, WAVE_DEADLINE_S,
     );
+    s.push_str("  \"grouped_scaling\": [\n");
+    for (i, g) in grouped.iter().enumerate() {
+        let _ = writeln!(
+            s,
+            "    {{\"n\": {}, \"group_size\": {}, \"groups\": {}, \
+             \"d\": {}, \"max_up_bytes_per_user\": {}, \
+             \"total_up_bytes\": {}, \"bus_clock_s\": {:.6}, \
+             \"wall_ms\": {:.3}}}{}",
+            g.n, g.group_size, g.groups, g.d, g.max_up_bytes,
+            g.total_up_bytes, g.bus_clock_s, g.wall_ms,
+            if i + 1 == grouped.len() { "" } else { "," },
+        );
+    }
+    s.push_str("  ],\n");
     s.push_str("  \"cells\": [\n");
     for (i, c) in cells.iter().enumerate() {
         let _ = writeln!(
@@ -383,6 +473,27 @@ fn main() {
     }
     println!("{}", t.render());
 
+    // Grouped-scaling sweep: fixed (group_size, d), growing N — the
+    // per-user byte invariance is asserted inside.
+    let grouped = run_grouped_scaling(smoke);
+    let mut gt = Table::new(
+        "grouped scaling (per-user upload bytes track group_size, not N)",
+        &["N", "group_size", "G", "max up B/user", "total up B",
+          "sim_clock_s", "wall_ms"],
+    );
+    for g in &grouped {
+        gt.row(&[
+            g.n.to_string(),
+            g.group_size.to_string(),
+            g.groups.to_string(),
+            g.max_up_bytes.to_string(),
+            g.total_up_bytes.to_string(),
+            format!("{:.4}", g.bus_clock_s),
+            format!("{:.1}", g.wall_ms),
+        ]);
+    }
+    println!("{}", gt.render());
+
     if smoke {
         // The gate: every smoke round completed bit-exactly (asserted
         // in-cell), and each cell exercised its intended path.
@@ -399,7 +510,10 @@ fn main() {
                    "byzantine cell must recover every round");
         assert!(results.iter().all(|r| !r.phases.is_empty()));
         println!("SMOKE PASS: {} cells, per-phase breakdowns present, \
-                  equality checked every round", results.len());
+                  equality checked every round; grouped per-user bytes \
+                  stay within 2x across N ({} B at group_size {})",
+                 results.len(), grouped[0].max_up_bytes,
+                 grouped[0].group_size);
         return;
     }
 
@@ -407,7 +521,7 @@ fn main() {
     let total: usize = results.iter().map(|r| r.rounds).sum();
     println!("# {failed}/{total} rounds failed cleanly (harsh draws \
               below quorum/identification radius — counted as data)");
-    if let Err(e) = write_scenarios_json(&results) {
+    if let Err(e) = write_scenarios_json(&results, &grouped) {
         eprintln!("could not write BENCH_scenarios.json: {e}");
     }
 }

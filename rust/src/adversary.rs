@@ -117,15 +117,23 @@ pub enum TwoFaced {
     PoisonGeometry,
 }
 
-/// Seeded byzantine frame generator. The first `⌊frac·n⌋` user ids are
-/// byzantine (fixed-prefix assignment is WLOG under the uniform model,
-/// mirroring [`crate::coordinator::Coordinator::honest_mask`]; floor,
-/// so an accepted `frac < 0.5` can never round up to a quorum-breaking
-/// exact half). Each byzantine user cycles deterministically through
+/// Seeded byzantine frame generator. By default the first `⌊frac·n⌋`
+/// user ids are byzantine (fixed-prefix assignment is WLOG under the
+/// uniform *flat* model, mirroring
+/// [`crate::coordinator::Coordinator::honest_mask`]; floor, so an
+/// accepted `frac < 0.5` can never round up to a quorum-breaking exact
+/// half). Under a grouped roster the prefix rule is *not* WLOG — all
+/// byzantines would land in group 0 — so [`Adversary::with_ids`]
+/// accepts an explicit id set instead, fed by the seeded placement of
+/// [`crate::protocol::group::place_byzantine`] (concentrated vs spread
+/// across groups). Each byzantine user cycles deterministically through
 /// `catalog`.
 pub struct Adversary {
     pub frac: f64,
     pub seed: u64,
+    /// Explicit byzantine id set overriding the `⌊frac·n⌋`-prefix rule
+    /// (`None` = prefix). Ids outside the roster are ignored.
+    pub ids: Option<Vec<usize>>,
     pub catalog: Vec<Attack>,
     /// Frames injected so far (across phases and rounds) — lets tests
     /// assert the attack surface was actually exercised.
@@ -157,6 +165,7 @@ impl Adversary {
         Adversary {
             frac,
             seed,
+            ids: None,
             catalog: catalog.to_vec(),
             injected: 0,
             two_faced: Vec::new(),
@@ -166,9 +175,30 @@ impl Adversary {
         }
     }
 
+    /// Full-catalog adversary over an explicit byzantine id set —
+    /// placement-aware rosters (one [`Adversary`] per group, ids in
+    /// group-local space from
+    /// [`crate::protocol::group::place_byzantine`]) instead of the flat
+    /// prefix rule.
+    pub fn with_ids(ids: Vec<usize>, seed: u64) -> Self {
+        let mut a = Self::with_catalog(0.0, seed, FULL_CATALOG);
+        a.ids = Some(ids);
+        a
+    }
+
     /// `mask[i]` ⇔ user `i` is byzantine (frame injector *or*
-    /// two-faced).
+    /// two-faced): the explicit [`Adversary::ids`] set when present,
+    /// the `⌊frac·n⌋` prefix otherwise.
     pub fn byzantine_set(&self, n: usize) -> Vec<bool> {
+        if let Some(ids) = &self.ids {
+            let mut m = vec![false; n];
+            for &i in ids {
+                if i < n {
+                    m[i] = true;
+                }
+            }
+            return m;
+        }
         let a = (self.frac * n as f64).floor() as usize;
         (0..n).map(|i| i < a).collect()
     }
@@ -435,6 +465,15 @@ mod tests {
         assert!(m[0] && m[1] && !m[2]);
         assert_eq!(Adversary::new(0.0, 1).byzantine_set(8),
                    vec![false; 8]);
+    }
+
+    #[test]
+    fn explicit_ids_override_prefix() {
+        let a = Adversary::with_ids(vec![5, 2, 9], 1);
+        let m = a.byzantine_set(8); // id 9 out of roster: ignored
+        assert_eq!(m, vec![false, false, true, false, false, true,
+                           false, false]);
+        assert!(a.silenced_set(8)[2] && !a.silenced_set(8)[0]);
     }
 
     #[test]

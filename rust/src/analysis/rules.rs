@@ -853,16 +853,19 @@ mod tests {
     }
 
     const WIRE_OK: &str =
-        "pub enum Tag { AdvertiseKeys = 1, Roster = 2 }";
+        "pub enum Tag { AdvertiseKeys = 1, Roster = 2, \
+         GroupAggregate = 8 }";
     const JOURNAL_OK: &str =
         "pub enum Record { Meta { v: u32 }, RoundStart { r: u64 } }";
     const FUZZ_OK: &str =
-        "fn f() { AdvertiseKeys; Roster; Record::Meta; \
+        "fn f() { AdvertiseKeys; Roster; GroupAggregate; Record::Meta; \
          Record::RoundStart; }";
     const CONFIG_OK: &str =
-        "const KNOWN: &[&str] = &[\"users\", \"executor\"];";
+        "const KNOWN: &[&str] = &[\"users\", \"executor\", \"groups\", \
+         \"group_size\"];";
     const FL_OK: &str =
-        "pub struct FlConfig { pub users: usize, pub exec_mode: String }";
+        "pub struct FlConfig { pub users: usize, pub exec_mode: String, \
+         pub groups: usize, pub group_size: usize }";
 
     #[test]
     fn crossref_passes_when_everything_lines_up() {
@@ -919,6 +922,39 @@ mod tests {
                 && diags[0].msg.contains("executor"),
             "{diags:?}"
         );
+    }
+
+    /// The grouped-aggregation surfaces are ordinary crossref citizens:
+    /// a reduce-layer frame kind with no fuzz case, or a grouping knob
+    /// reachable from config files but not FlConfig (and vice versa),
+    /// must fire like any other gap.
+    #[test]
+    fn crossref_covers_grouped_aggregation_surfaces() {
+        // GroupAggregate dropped from the fuzz suite: flagged.
+        let fuzz = "fn f() { AdvertiseKeys; Roster; Record::Meta; \
+                    Record::RoundStart; }";
+        let diags =
+            crossref(&synth(WIRE_OK, JOURNAL_OK, fuzz, CONFIG_OK, FL_OK));
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].msg.contains("GroupAggregate"), "{diags:?}");
+
+        // `group_size` missing from KNOWN: the knob is not
+        // CLI-addressable, flagged on the FlConfig side.
+        let config = "const KNOWN: &[&str] = &[\"users\", \"executor\", \
+                      \"groups\"];";
+        let diags =
+            crossref(&synth(WIRE_OK, JOURNAL_OK, FUZZ_OK, config, FL_OK));
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].msg.contains("group_size"), "{diags:?}");
+
+        // `groups` key with no FlConfig field: stale entry, flagged on
+        // the config side.
+        let fl = "pub struct FlConfig { pub users: usize, \
+                  pub exec_mode: String, pub group_size: usize }";
+        let diags =
+            crossref(&synth(WIRE_OK, JOURNAL_OK, FUZZ_OK, CONFIG_OK, fl));
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].msg.contains("`groups`"), "{diags:?}");
     }
 
     #[test]

@@ -81,7 +81,7 @@ impl Config {
             "byzantine", "max_retries", "rate_limit", "net_latency_s",
             "net_jitter_s", "net_loss", "net_bandwidth_bps",
             "phase_deadline_s", "journal_dir", "journal_snapshot_every",
-            "crash_plan",
+            "crash_plan", "groups", "group_size",
         ];
         for k in self.values.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -176,6 +176,15 @@ impl Config {
                 }
                 p
             },
+            groups: {
+                let g: usize = self.parse("groups", d.groups)?;
+                if g == 0 {
+                    bail!("config key groups=0: want ≥ 1 (1 = the flat \
+                           single-cohort round)");
+                }
+                g
+            },
+            group_size: self.parse("group_size", d.group_size)?,
         })
     }
 }
@@ -302,6 +311,27 @@ mod tests {
         assert!(c.to_fl_config().is_err());
         let mut c = Config::default();
         c.set("journal_snapshot_every", "often");
+        assert!(c.to_fl_config().is_err());
+    }
+
+    #[test]
+    fn grouping_knobs_parse_with_defaults_and_bounds() {
+        let fl = Config::default().to_fl_config().unwrap();
+        assert_eq!(fl.groups, 1); // flat single-cohort round
+        assert_eq!(fl.group_size, 0); // 0 = derive G from `groups`
+        let mut c = Config::default();
+        c.set("groups", "8");
+        c.set("group_size", "64");
+        let fl = c.to_fl_config().unwrap();
+        assert_eq!(fl.groups, 8);
+        assert_eq!(fl.group_size, 64);
+        // A zero group count has no flat meaning: rejected at config
+        // time (group_size = 0 stays legal — it means "use groups").
+        let mut c = Config::default();
+        c.set("groups", "0");
+        assert!(c.to_fl_config().is_err());
+        let mut c = Config::default();
+        c.set("group_size", "some");
         assert!(c.to_fl_config().is_err());
     }
 

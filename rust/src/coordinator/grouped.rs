@@ -1,0 +1,546 @@
+//! Grouped round driver: G concurrent flat group rounds plus a
+//! frame-driven tree reduce — the coordinator half of hierarchical
+//! grouped aggregation ([`crate::protocol::group`], ROADMAP item 2).
+//!
+//! A [`GroupedCoordinator`] partitions the roster by a
+//! [`GroupLayout`] and owns one complete flat [`Coordinator`] per
+//! group: its own cohort (group-local DH graph and Shamir roster with
+//! threshold t(n_g)), its own [`crate::transport::Transport`] instance
+//! (group-local endpoints `0..n_g`), its own validating ingest,
+//! deadlines, rate limiter, and recovery loop — the flat round code is
+//! reused *unchanged*, which is what keeps every existing lock
+//! (differential suites, adversarial catalog, netsim, journal) green.
+//! Each round fans the G group rounds out as tier-1 jobs on a
+//! [`crate::exec`] pool (groups are independent servers, so they run
+//! concurrently), then reduces the per-group cleartext aggregates up
+//! the fixed binary tree of [`tree_reduce`]. The reduce layer is
+//! frame-driven too: every surviving group server's partial sum
+//! crosses the [`crate::protocol::wire`] codec as a
+//! [`GroupAggregate`] frame (f32 bit patterns, so the reduce is
+//! bit-exact across the wire) and is billed to the ledger as the
+//! `"reduce"` phase — server-to-server backbone traffic, clocked but
+//! never attributed to any user's byte totals, which is what keeps the
+//! measured per-user cost scaling with n_g and not N.
+//!
+//! # `groups = 1` is the flat path
+//!
+//! With a single group the driver *delegates verbatim* to the flat
+//! [`Coordinator::run_round`] — no reduce phase, no ledger merge, the
+//! group entropy equals the flat entropy — so `groups = 1` is
+//! bit-exactly the pre-refactor flat round (aggregate, per-user byte
+//! ledger, simulated clock; pinned across both protocols and all three
+//! unmask executors by `tests/group_differential.rs`).
+//!
+//! # Failure confinement
+//!
+//! A group that fails its round (quorum lost, retry budget exhausted,
+//! unattributable poisoning) drops out of the reduce as a unit and is
+//! reported in [`GroupedRound::failed`]; every other group's subtree
+//! is untouched. The grouped round only errors when *all* groups fail.
+//!
+//! # Privacy delta
+//!
+//! The intermediate per-group aggregate this driver materializes (and
+//! ships as a [`GroupAggregate`]) is exactly the object whose leakage
+//! is analyzed in the [`crate::protocol::group`] module docs: an
+//! anonymity set of n_g instead of N, Theorem 2's multiplier dropping
+//! from (1−γ)·N·p to (1−γ)·n·p.
+
+use super::{default_threads, Coordinator, ProtocolKind};
+use crate::adversary::Adversary;
+use crate::exec::Executor;
+use crate::network::{LinkModel, RoundLedger};
+use crate::protocol::group::{place_byzantine, tree_reduce, GroupLayout,
+                             Placement};
+use crate::protocol::messages::GroupAggregate;
+use crate::protocol::{wire, Params};
+use crate::transport::{InMemoryBus, Transport};
+use anyhow::Result;
+
+/// Odd multiplier deriving group g's setup entropy from the global
+/// entropy. g = 0 maps to the global entropy itself, which is what
+/// makes the single-group cohort state-identical to the flat one.
+const GROUP_ENTROPY_STRIDE: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// Group g's setup entropy (pub so the differential suite can build
+/// the flat per-group reference cohorts).
+pub fn group_entropy(entropy: u64, g: usize) -> u64 {
+    entropy.wrapping_add((g as u64).wrapping_mul(GROUP_ENTROPY_STRIDE))
+}
+
+/// One grouped round's outcome.
+#[derive(Clone, Debug)]
+pub struct GroupedRound {
+    /// Tree-reduced global aggregate over the surviving groups.
+    pub aggregate: Vec<f32>,
+    /// Cohort-wide ledger: per-user bytes scattered from the group
+    /// rounds ([`RoundLedger::merge_groups`]) plus the `"reduce"`
+    /// backbone phase.
+    pub ledger: RoundLedger,
+    /// `(group index, error)` for groups whose round failed — confined
+    /// failures, excluded from the aggregate. Empty on the honest path.
+    pub failed: Vec<(usize, String)>,
+}
+
+/// Drives a two-level group tree: G flat per-group [`Coordinator`]s
+/// fanned out concurrently, tree-reduced into the global aggregate.
+pub struct GroupedCoordinator {
+    layout: GroupLayout,
+    /// Global parameters (`n` = the full roster size N). Per-group
+    /// cohorts run `Params { n: n_g, ..params }`.
+    pub params: Params,
+    /// Backbone link the `"reduce"` phase is clocked over (defaults to
+    /// the paper user link; group-server uplinks are at least as fast
+    /// in the paper's topology, so this is conservative).
+    pub link: LinkModel,
+    /// Merged one-time key-setup traffic across all groups, in global
+    /// user-id space.
+    pub setup_ledger: RoundLedger,
+    groups: Vec<Coordinator>,
+    /// Fan-out pool for the G concurrent group rounds (distinct from
+    /// each group's own round-compute pool).
+    exec: Option<Executor>,
+}
+
+impl GroupedCoordinator {
+    /// SparseSecAgg cohorts on per-group in-memory buses.
+    pub fn new_sparse(params: Params, entropy: u64,
+                      layout: GroupLayout) -> Self {
+        Self::new_sparse_on(params, entropy, layout,
+                            |_, n| Box::new(InMemoryBus::new(n)))
+    }
+
+    /// SecAgg (baseline) cohorts on per-group in-memory buses.
+    pub fn new_secagg(params: Params, entropy: u64,
+                      layout: GroupLayout) -> Self {
+        Self::new_secagg_on(params, entropy, layout,
+                            |_, n| Box::new(InMemoryBus::new(n)))
+    }
+
+    /// [`Self::new_sparse`] on caller-supplied transports:
+    /// `mk_bus(g, n_g)` builds group g's bus wiring its n_g local
+    /// endpoints — how the scenario lab gives every group server its
+    /// own impaired [`crate::netsim::NetSim`].
+    pub fn new_sparse_on(
+        params: Params, entropy: u64, layout: GroupLayout,
+        mk_bus: impl FnMut(usize, usize) -> Box<dyn Transport>,
+    ) -> Self {
+        Self::build(params, entropy, layout, ProtocolKind::Sparse, mk_bus)
+    }
+
+    /// [`Self::new_secagg`] on caller-supplied transports.
+    pub fn new_secagg_on(
+        params: Params, entropy: u64, layout: GroupLayout,
+        mk_bus: impl FnMut(usize, usize) -> Box<dyn Transport>,
+    ) -> Self {
+        Self::build(params, entropy, layout, ProtocolKind::SecAgg, mk_bus)
+    }
+
+    fn build(
+        params: Params, entropy: u64, layout: GroupLayout,
+        kind: ProtocolKind,
+        mut mk_bus: impl FnMut(usize, usize) -> Box<dyn Transport>,
+    ) -> Self {
+        assert_eq!(layout.n_total(), params.n,
+                   "group layout does not partition the roster");
+        let mut groups = Vec::with_capacity(layout.count());
+        for g in 0..layout.count() {
+            let n_g = layout.len(g);
+            let p_g = Params { n: n_g, ..params };
+            let e_g = group_entropy(entropy, g);
+            let bus = mk_bus(g, n_g);
+            groups.push(match kind {
+                ProtocolKind::Sparse => {
+                    Coordinator::new_sparse_on(p_g, e_g, bus)
+                }
+                ProtocolKind::SecAgg => {
+                    Coordinator::new_secagg_on(p_g, e_g, bus)
+                }
+            });
+        }
+        let parts: Vec<(usize, &RoundLedger)> = groups
+            .iter()
+            .enumerate()
+            .map(|(g, c)| (layout.start(g), &c.setup_ledger))
+            .collect();
+        let setup_ledger = RoundLedger::merge_groups(params.n, &parts);
+        GroupedCoordinator {
+            layout,
+            params,
+            link: LinkModel::paper_user_link(),
+            setup_ledger,
+            groups,
+            exec: None,
+        }
+    }
+
+    pub fn kind(&self) -> ProtocolKind {
+        self.groups[0].kind()
+    }
+
+    pub fn layout(&self) -> &GroupLayout {
+        &self.layout
+    }
+
+    /// Apply a knob closure to every per-group coordinator (shard
+    /// size, exec mode, retry budget, rate limit, deadlines — the flat
+    /// knobs, uniform across groups).
+    pub fn for_each_group(&mut self, mut f: impl FnMut(&mut Coordinator)) {
+        for c in &mut self.groups {
+            f(c);
+        }
+    }
+
+    /// Group g's flat coordinator (tests/diagnostics).
+    pub fn group(&self, g: usize) -> &Coordinator {
+        &self.groups[g]
+    }
+
+    /// Thread budget: `groups = 1` passes `threads` straight through
+    /// (the flat behavior); with G > 1 each group's round-compute pool
+    /// gets `max(1, threads / G)` workers so the G concurrent rounds
+    /// cannot oversubscribe the host by a factor of G.
+    pub fn set_threads(&mut self, threads: usize) {
+        let g = self.layout.count();
+        let per = if g > 1 { (threads / g).max(1) } else { threads };
+        for c in &mut self.groups {
+            c.threads = per;
+        }
+    }
+
+    /// Max simulated transport clock across the group buses (groups
+    /// deliver concurrently; the slowest gates the round).
+    pub fn bus_clock_s(&self) -> f64 {
+        self.groups.iter().map(|c| c.bus_clock_s()).fold(0.0, f64::max)
+    }
+
+    /// Honest mask over the *grouped* roster: `⌈γN⌋` byzantine ids
+    /// drawn by the seeded placement of [`place_byzantine`]
+    /// (concentrated in one group vs spread across all), instead of
+    /// the flat prefix rule of [`Coordinator::honest_mask`] — under a
+    /// group layout a fixed prefix is not WLOG (it would pack every
+    /// byzantine into group 0).
+    pub fn honest_mask(&self, gamma: f64, placement: Placement,
+                       seed: u64) -> Vec<bool> {
+        let n = self.params.n;
+        let count = (gamma * n as f64).round() as usize;
+        let per = place_byzantine(&self.layout, count, placement, seed);
+        let mut mask = vec![true; n];
+        for (g, locals) in per.iter().enumerate() {
+            for &l in locals {
+                mask[self.layout.global_id(g, l)] = false;
+            }
+        }
+        mask
+    }
+
+    /// Seeded per-group adversaries for a byzantine budget of
+    /// `⌊frac·N⌋` ids under `placement`: one full-catalog
+    /// [`Adversary::with_ids`] per group that drew at least one id
+    /// (ids in group-local space), `None` for clean groups. Feeds
+    /// [`Self::run_round_adversarial`].
+    pub fn adversaries(&self, frac: f64, placement: Placement,
+                       seed: u64) -> Vec<Option<Adversary>> {
+        let count = (frac * self.params.n as f64).floor() as usize;
+        place_byzantine(&self.layout, count, placement, seed)
+            .into_iter()
+            .enumerate()
+            .map(|(g, ids)| {
+                (!ids.is_empty()).then(|| Adversary::with_ids(
+                    ids, seed ^ ((g as u64) << 8) ^ 0xad5a))
+            })
+            .collect()
+    }
+
+    /// Run one grouped aggregation round. `ys`/`betas` are in global
+    /// user-id space (length N), `dropped` is a global id set —
+    /// localized per group by the layout. See the module docs for the
+    /// `groups = 1` identity and the failure-confinement contract.
+    pub fn run_round(&mut self, round: u32, ys: &[Vec<f32>],
+                     betas: &[f64], dropped: &[usize])
+                     -> Result<GroupedRound> {
+        self.run_round_impl(round, ys, betas, dropped, None)
+    }
+
+    /// [`Self::run_round`] under attack: one optional adversary per
+    /// group (see [`Self::adversaries`]), each confined to its group's
+    /// transport — a byzantine id can only ever hit its own group
+    /// server, by construction of the per-group endpoints.
+    pub fn run_round_adversarial(&mut self, round: u32, ys: &[Vec<f32>],
+                                 betas: &[f64], dropped: &[usize],
+                                 advs: &mut [Option<Adversary>])
+                                 -> Result<GroupedRound> {
+        anyhow::ensure!(advs.len() == self.layout.count(),
+                        "one adversary slot per group: got {}, need {}",
+                        advs.len(), self.layout.count());
+        self.run_round_impl(round, ys, betas, dropped, Some(advs))
+    }
+
+    fn run_round_impl(&mut self, round: u32, ys: &[Vec<f32>],
+                      betas: &[f64], dropped: &[usize],
+                      advs: Option<&mut [Option<Adversary>]>)
+                      -> Result<GroupedRound> {
+        let n = self.params.n;
+        anyhow::ensure!(ys.len() == n && betas.len() == n,
+                        "ys/betas must cover the full roster of {n}");
+        let g_count = self.layout.count();
+
+        // --- groups = 1: exactly the flat path, verbatim (the
+        // bit-exactness anchor — no merge, no reduce phase).
+        if g_count == 1 {
+            let coord = &mut self.groups[0];
+            let adv0 = advs.and_then(|a| a[0].as_mut());
+            let (aggregate, ledger) = match adv0 {
+                Some(a) => coord.run_round_adversarial(
+                    round, ys, betas, dropped, a)?,
+                None => coord.run_round(round, ys, betas, dropped)?,
+            };
+            return Ok(GroupedRound {
+                aggregate,
+                ledger,
+                failed: Vec::new(),
+            });
+        }
+
+        // --- fan out: one tier-1 job per group round. Disjoint
+        // &mut borrows via the zip of groups/result slots; per-group
+        // inputs are slices of the global arrays.
+        let local_dropped = self.layout.localize(dropped);
+        self.ensure_executor();
+        let GroupedCoordinator { layout, groups, exec, .. } = &mut *self;
+        let exec = exec.as_ref().expect("executor initialized");
+        let adv_refs: Vec<Option<&mut Adversary>> = match advs {
+            Some(advs) => advs.iter_mut().map(|a| a.as_mut()).collect(),
+            None => (0..g_count).map(|_| None).collect(),
+        };
+        let mut results: Vec<Option<Result<(Vec<f32>, RoundLedger)>>> =
+            Vec::new();
+        results.resize_with(g_count, || None);
+        let ((), _stats) = exec.scope(|scope| {
+            let jobs = groups
+                .iter_mut()
+                .zip(results.iter_mut())
+                .zip(local_dropped.iter())
+                .zip(adv_refs)
+                .enumerate();
+            for (g, (((coord, slot), dropped_g), adv_g)) in jobs {
+                let start = layout.start(g);
+                let n_g = layout.len(g);
+                let ys_g = &ys[start..start + n_g];
+                let betas_g = &betas[start..start + n_g];
+                scope.spawn(move |_, _| {
+                    *slot = Some(match adv_g {
+                        Some(a) => coord.run_round_adversarial(
+                            round, ys_g, betas_g, dropped_g, a),
+                        None => coord.run_round(
+                            round, ys_g, betas_g, dropped_g),
+                    });
+                });
+            }
+        });
+
+        // --- collect: failures stay confined to their group.
+        let mut parts: Vec<Option<Vec<f32>>> = Vec::with_capacity(g_count);
+        let mut ledgers: Vec<Option<RoundLedger>> =
+            Vec::with_capacity(g_count);
+        let mut failed: Vec<(usize, String)> = Vec::new();
+        for (g, res) in results.into_iter().enumerate() {
+            match res.expect("every group job ran") {
+                Ok((agg, lg)) => {
+                    parts.push(Some(agg));
+                    ledgers.push(Some(lg));
+                }
+                Err(e) => {
+                    parts.push(None);
+                    ledgers.push(None);
+                    failed.push((g, format!("{e:#}")));
+                }
+            }
+        }
+        if failed.len() == g_count {
+            let (g0, e0) = &failed[0];
+            anyhow::bail!(
+                "all {g_count} groups failed; first: group {g0}: {e0}");
+        }
+        let merge_parts: Vec<(usize, &RoundLedger)> = ledgers
+            .iter()
+            .enumerate()
+            .filter_map(|(g, l)| {
+                l.as_ref().map(|l| (self.layout.start(g), l))
+            })
+            .collect();
+        let mut ledger = RoundLedger::merge_groups(n, &merge_parts);
+
+        // --- the reduce layer: each surviving group server reports its
+        // partial sum as a GroupAggregate frame through the real codec
+        // (f32 bit patterns — bit-exact across the wire), billed as one
+        // parallel backbone phase. Server-to-server traffic: clocked,
+        // never attributed to per-user byte totals.
+        let mut reduce_parts: Vec<Option<Vec<f32>>> = vec![None; g_count];
+        let mut reduce_sizes = Vec::with_capacity(g_count);
+        for (g, part) in parts.into_iter().enumerate() {
+            let Some(values) = part else { continue };
+            let m = GroupAggregate {
+                group: g,
+                values: values.iter().map(|v| v.to_bits()).collect(),
+            };
+            let buf = wire::encode_group_aggregate(&m);
+            debug_assert_eq!(buf.len(), m.wire_bytes());
+            reduce_sizes.push(buf.len());
+            let back = wire::decode_group_aggregate(&buf)?;
+            reduce_parts[back.group] = Some(
+                back.values.iter().map(|&b| f32::from_bits(b)).collect());
+        }
+        ledger.advance_named_phase("reduce", &self.link, &reduce_sizes,
+                                   0, 0);
+        let aggregate = tree_reduce(reduce_parts)
+            .expect("at least one group survived");
+
+        Ok(GroupedRound { aggregate, ledger, failed })
+    }
+
+    /// (Re)build the fan-out pool: one worker per group, capped at the
+    /// host parallelism. Distinct from the per-group round pools.
+    fn ensure_executor(&mut self) {
+        let want = default_threads(self.layout.count());
+        if self.exec.as_ref().map_or(true, |e| e.threads() != want) {
+            self.exec = Some(Executor::new(want));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(n: usize, d: usize, alpha: f64) -> Params {
+        Params { n, d, alpha, theta: 0.0, c: 1024.0 }
+    }
+
+    fn grads(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = crate::prg::ChaCha20Rng::from_seed_u64(seed);
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.next_f32() - 0.5).collect())
+            .collect()
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// groups = 1 must be the flat path verbatim: same aggregate bits,
+    /// same ledger bytes, same clock (the full executor × protocol
+    /// matrix lives in tests/group_differential.rs).
+    #[test]
+    fn single_group_is_flat_bit_exact() {
+        let p = params(8, 400, 0.4);
+        let ys = grads(p.n, p.d, 3);
+        let betas = vec![1.0 / p.n as f64; p.n];
+        let dropped = vec![2usize, 5];
+        let mut flat = Coordinator::new_sparse(p, 77);
+        let (fa, fl) = flat.run_round(1, &ys, &betas, &dropped).unwrap();
+        let mut grouped = GroupedCoordinator::new_sparse(
+            p, 77, GroupLayout::groups(p.n, 1));
+        let out = grouped.run_round(1, &ys, &betas, &dropped).unwrap();
+        assert!(out.failed.is_empty());
+        assert_eq!(bits(&out.aggregate), bits(&fa));
+        assert_eq!(out.ledger.up_bytes, fl.up_bytes);
+        assert_eq!(out.ledger.down_bytes, fl.down_bytes);
+        assert_eq!(out.ledger.comm_time_s.to_bits(),
+                   fl.comm_time_s.to_bits());
+    }
+
+    /// The grouped round must be bit-exactly tree_reduce over the G
+    /// independent flat group rounds — the G > 1 determinism anchor.
+    #[test]
+    fn grouped_equals_tree_reduced_flat_group_rounds() {
+        let p = params(12, 300, 0.5);
+        let layout = GroupLayout::groups(p.n, 3);
+        let ys = grads(p.n, p.d, 9);
+        let betas = vec![1.0 / p.n as f64; p.n];
+        let dropped = vec![1usize, 7];
+        let mut grouped = GroupedCoordinator::new_sparse(p, 21, layout);
+        let out = grouped.run_round(0, &ys, &betas, &dropped).unwrap();
+        assert!(out.failed.is_empty());
+        let layout = GroupLayout::groups(p.n, 3);
+        let locals = layout.localize(&dropped);
+        let mut parts = Vec::new();
+        for g in 0..layout.count() {
+            let (s, l) = (layout.start(g), layout.len(g));
+            let mut flat = Coordinator::new_sparse(
+                Params { n: l, ..p }, group_entropy(21, g));
+            let (agg, _) = flat
+                .run_round(0, &ys[s..s + l], &betas[s..s + l], &locals[g])
+                .unwrap();
+            parts.push(Some(agg));
+        }
+        let reference = tree_reduce(parts).unwrap();
+        assert_eq!(bits(&out.aggregate), bits(&reference));
+        // The reduce phase is billed, backbone-only (no user bytes).
+        let reduce = out.ledger.phases.iter()
+            .find(|ph| ph.name == "reduce").unwrap();
+        assert_eq!(reduce.up_bytes, 0);
+        assert_eq!(reduce.down_bytes, 0);
+        assert!(reduce.comm_time_s > 0.0);
+    }
+
+    /// A group that loses quorum fails alone: the round still returns
+    /// an aggregate over the surviving groups, with the failure
+    /// reported and confined.
+    #[test]
+    fn quorum_loss_is_confined_to_the_failing_group() {
+        let p = params(12, 200, 0.5);
+        let layout = GroupLayout::groups(p.n, 3); // groups of 4, t = 2
+        let mut grouped = GroupedCoordinator::new_sparse(p, 5, layout);
+        let ys = grads(p.n, p.d, 4);
+        let betas = vec![1.0 / p.n as f64; p.n];
+        // Drop 2 of group 1's 4 users (global ids 4..8): 2 responders
+        // is exactly t, one short of the t+1 = 3 needed.
+        let dropped = vec![4usize, 5];
+        let out = grouped.run_round(0, &ys, &betas, &dropped).unwrap();
+        assert_eq!(out.failed.len(), 1, "failed: {:?}", out.failed);
+        assert_eq!(out.failed[0].0, 1);
+        assert_eq!(out.aggregate.len(), p.d);
+        // The failed group's users billed their uploads (bandwidth is
+        // spent even when the round dies), but groups 0 and 2 ran to
+        // completion — their broadcast phase bytes are present.
+        assert!(out.ledger.phases.iter().any(|ph| ph.name == "broadcast"
+            && ph.down_bytes > 0));
+    }
+
+    /// Concentrated placement leaves every other group's round clean;
+    /// the hit group absorbs the whole catalog.
+    #[test]
+    fn adversaries_follow_placement() {
+        let p = params(16, 100, 0.5);
+        let grouped = GroupedCoordinator::new_sparse(
+            p, 1, GroupLayout::groups(p.n, 4));
+        let advs = grouped.adversaries(
+            0.25, Placement::Concentrated { group: 2 }, 11);
+        assert_eq!(advs.len(), 4);
+        assert!(advs[0].is_none() && advs[1].is_none()
+                && advs[3].is_none());
+        let a = advs[2].as_ref().unwrap();
+        assert_eq!(a.byzantine_set(4).iter().filter(|&&b| b).count(), 4);
+        let mask = grouped.honest_mask(
+            0.25, Placement::Concentrated { group: 2 }, 11);
+        assert_eq!(mask.iter().filter(|&&h| !h).count(), 4);
+        assert!(mask[..8].iter().all(|&h| h)
+                && mask[12..].iter().all(|&h| h));
+    }
+
+    /// Setup traffic merges per-group: a grouped user pays the n_g-user
+    /// setup cost, not the N-user cost.
+    #[test]
+    fn grouped_setup_cost_scales_with_group_size() {
+        let p = params(32, 50, 0.5);
+        let grouped = GroupedCoordinator::new_sparse(
+            p, 2, GroupLayout::of_size(p.n, 8));
+        let flat8 = Coordinator::new_sparse(params(8, 50, 0.5), 2);
+        assert_eq!(grouped.setup_ledger.max_up(),
+                   flat8.setup_ledger.max_up());
+        let flat32 = Coordinator::new_sparse(p, 2);
+        assert!(grouped.setup_ledger.max_up()
+                < flat32.setup_ledger.max_up());
+    }
+}

@@ -47,6 +47,9 @@
 //! transport-level [`RateLimiter`] ([`Coordinator::rate_limit`]) sheds
 //! per-sender frame floods before they reach the decoder.
 
+pub mod grouped;
+pub use grouped::{GroupedCoordinator, GroupedRound};
+
 use crate::adversary::Adversary;
 use crate::exec::{ExecMode, Executor};
 use crate::journal::{Journal, Record, RoundReplay};
@@ -646,7 +649,10 @@ impl Coordinator {
     }
 
     /// Per-user ids of the honest set given γ (the first γN users are
-    /// adversarial — a fixed assignment is WLOG under the uniform model).
+    /// adversarial — a fixed assignment is WLOG under the uniform model
+    /// over a *flat* roster; grouped rosters use the seeded,
+    /// placement-aware [`GroupedCoordinator::honest_mask`] instead,
+    /// since a prefix would pack every adversary into group 0).
     pub fn honest_mask(&self, gamma: f64) -> Vec<bool> {
         let n = self.params.n;
         let a = (gamma * n as f64).round() as usize;

@@ -6,7 +6,7 @@
 pub mod experiments;
 pub mod trainer;
 
-use crate::coordinator::{Coordinator, ProtocolKind};
+use crate::coordinator::{Coordinator, GroupedCoordinator, ProtocolKind};
 use crate::data::{self, Dataset, DatasetKind, UserShard};
 use crate::network::draw_dropouts;
 use crate::protocol::Params;
@@ -116,6 +116,19 @@ pub struct FlConfig {
     /// run dies at that journal site with a typed error, leaving a
     /// resumable journal behind.
     pub crash_plan: String,
+    /// Number of groups G for hierarchical grouped aggregation
+    /// ([`crate::coordinator::GroupedCoordinator`]): the roster splits
+    /// into G contiguous groups that each run the complete flat
+    /// protocol against their own group server, and the cleartext
+    /// group aggregates are tree-reduced into the global sum. 1 = the
+    /// flat single-cohort round, bit-exactly the pre-grouping path.
+    /// See [`crate::protocol::group`] for the privacy delta of the
+    /// intermediate group aggregate.
+    pub groups: usize,
+    /// Target group size n; when > 0 it takes precedence over `groups`
+    /// and the roster splits into ⌈N/n⌉ even groups, so per-user round
+    /// bytes scale with n instead of N. 0 = use `groups`.
+    pub group_size: usize,
 }
 
 impl Default for FlConfig {
@@ -156,6 +169,28 @@ impl Default for FlConfig {
             journal_dir: String::new(),
             journal_snapshot_every: 0,
             crash_plan: String::new(),
+            groups: 1,
+            group_size: 0,
+        }
+    }
+}
+
+/// The round-driving half of a run: the flat single-cohort coordinator
+/// (`groups = 1`, bit-exactly the historical path — constructed and
+/// knobbed by exactly the pre-grouping code) or the hierarchical
+/// grouped driver fanning G flat group rounds out concurrently.
+enum RoundDriver {
+    Flat(Coordinator),
+    Grouped(GroupedCoordinator),
+}
+
+impl RoundDriver {
+    /// Journal sync is a flat-only concern: grouped runs refuse
+    /// `journal_dir` at construction time, so there is never a journal
+    /// to flush behind the grouped arm.
+    fn sync_journal(&mut self) {
+        if let RoundDriver::Flat(c) = self {
+            c.sync_journal();
         }
     }
 }
@@ -250,58 +285,118 @@ pub fn run_fl(cfg: &FlConfig, trainer: &Trainer) -> Result<FlRun> {
         || cfg.net_jitter_s > 0.0
         || cfg.net_loss > 0.0
         || cfg.net_bandwidth_bps > 0.0;
-    let bus: Box<dyn crate::transport::Transport> = if impaired {
-        let link = crate::netsim::LinkProfile {
-            latency_s: cfg.net_latency_s,
-            jitter_s: cfg.net_jitter_s,
-            bandwidth_bps: if cfg.net_bandwidth_bps > 0.0 {
-                cfg.net_bandwidth_bps
-            } else {
-                f64::INFINITY
-            },
-            loss: cfg.net_loss,
-            die_after: None,
-        };
-        Box::new(crate::netsim::NetSim::over_bus(
-            n,
-            crate::netsim::NetSimConfig::uniform(cfg.seed ^ 0x7e75, link),
-        ))
+    let link = crate::netsim::LinkProfile {
+        latency_s: cfg.net_latency_s,
+        jitter_s: cfg.net_jitter_s,
+        bandwidth_bps: if cfg.net_bandwidth_bps > 0.0 {
+            cfg.net_bandwidth_bps
+        } else {
+            f64::INFINITY
+        },
+        loss: cfg.net_loss,
+        die_after: None,
+    };
+    // Group layout: `group_size > 0` wins (⌈N/n⌉ even groups), else the
+    // explicit group count. Both collapse to the flat path at G = 1.
+    let layout = if cfg.group_size > 0 {
+        crate::protocol::group::GroupLayout::of_size(n, cfg.group_size)
     } else {
-        Box::new(crate::transport::InMemoryBus::new(n))
+        crate::protocol::group::GroupLayout::groups(n, cfg.groups.max(1))
     };
-    let mut coord = match cfg.protocol {
-        ProtocolKind::Sparse => {
-            Coordinator::new_sparse_on(params, cfg.seed, bus)
+    let mut driver = if layout.count() > 1 {
+        // The grouped driver is frame-driven end to end and the durable
+        // journal is single-cohort — refuse the incompatible knobs
+        // loudly instead of silently running something else.
+        anyhow::ensure!(
+            !cfg.use_hlo_quantmask,
+            "groups > 1 runs the frame-driven grouped driver; it is \
+             incompatible with use_hlo_quantmask");
+        anyhow::ensure!(
+            cfg.journal_dir.is_empty(),
+            "journal_dir requires the flat single-cohort round \
+             (grouped journaling is a planned follow-up)");
+        let mk_bus = |g: usize, n_g: usize|
+                     -> Box<dyn crate::transport::Transport> {
+            if impaired {
+                // Per-group netsim seed: group 0 keeps the flat seed,
+                // later groups fold the group index in, so each group
+                // server sees its own independent impairment schedule.
+                Box::new(crate::netsim::NetSim::over_bus(
+                    n_g,
+                    crate::netsim::NetSimConfig::uniform(
+                        cfg.seed ^ 0x7e75 ^ ((g as u64) << 16), link),
+                ))
+            } else {
+                Box::new(crate::transport::InMemoryBus::new(n_g))
+            }
+        };
+        let mut gc = match cfg.protocol {
+            ProtocolKind::Sparse => GroupedCoordinator::new_sparse_on(
+                params, cfg.seed, layout, mk_bus),
+            ProtocolKind::SecAgg => GroupedCoordinator::new_secagg_on(
+                params, cfg.seed, layout, mk_bus),
+        };
+        gc.for_each_group(|c| {
+            c.shard_size = cfg.shard_size;
+            c.exec_mode = cfg.exec_mode;
+            c.max_retries = cfg.max_retries;
+            c.rate_limit = cfg.rate_limit;
+            if cfg.phase_deadline_s > 0.0 {
+                c.deadlines = Some(
+                    crate::coordinator::PhaseDeadlines::uniform(
+                        cfg.phase_deadline_s));
+            }
+        });
+        if cfg.threads > 0 {
+            gc.set_threads(cfg.threads);
         }
-        ProtocolKind::SecAgg => {
-            Coordinator::new_secagg_on(params, cfg.seed, bus)
+        RoundDriver::Grouped(gc)
+    } else {
+        let bus: Box<dyn crate::transport::Transport> = if impaired {
+            Box::new(crate::netsim::NetSim::over_bus(
+                n,
+                crate::netsim::NetSimConfig::uniform(
+                    cfg.seed ^ 0x7e75, link),
+            ))
+        } else {
+            Box::new(crate::transport::InMemoryBus::new(n))
+        };
+        let mut coord = match cfg.protocol {
+            ProtocolKind::Sparse => {
+                Coordinator::new_sparse_on(params, cfg.seed, bus)
+            }
+            ProtocolKind::SecAgg => {
+                Coordinator::new_secagg_on(params, cfg.seed, bus)
+            }
+        };
+        coord.shard_size = cfg.shard_size;
+        coord.exec_mode = cfg.exec_mode;
+        coord.max_retries = cfg.max_retries;
+        coord.rate_limit = cfg.rate_limit;
+        if cfg.phase_deadline_s > 0.0 {
+            coord.deadlines = Some(
+                crate::coordinator::PhaseDeadlines::uniform(
+                    cfg.phase_deadline_s,
+                ));
         }
+        if cfg.threads > 0 {
+            coord.threads = cfg.threads;
+        }
+        if !cfg.journal_dir.is_empty() {
+            let mut j = crate::journal::Journal::create(
+                std::path::Path::new(&cfg.journal_dir))
+                .map_err(|e| anyhow::anyhow!(
+                    "creating journal in {}: {e}", cfg.journal_dir))?;
+            j.snapshot_every = cfg.journal_snapshot_every;
+            if !cfg.crash_plan.is_empty() {
+                j.set_crash_plan(
+                    crate::journal::CrashPlan::parse(&cfg.crash_plan)
+                        .map_err(|e| anyhow::anyhow!("crash_plan: {e}"))?);
+            }
+            coord.attach_journal(j)?;
+        }
+        RoundDriver::Flat(coord)
     };
-    coord.shard_size = cfg.shard_size;
-    coord.exec_mode = cfg.exec_mode;
-    coord.max_retries = cfg.max_retries;
-    coord.rate_limit = cfg.rate_limit;
-    if cfg.phase_deadline_s > 0.0 {
-        coord.deadlines = Some(crate::coordinator::PhaseDeadlines::uniform(
-            cfg.phase_deadline_s,
-        ));
-    }
-    if cfg.threads > 0 {
-        coord.threads = cfg.threads;
-    }
-    if !cfg.journal_dir.is_empty() {
-        let mut j = crate::journal::Journal::create(
-            std::path::Path::new(&cfg.journal_dir))
-            .map_err(|e| anyhow::anyhow!(
-                "creating journal in {}: {e}", cfg.journal_dir))?;
-        j.snapshot_every = cfg.journal_snapshot_every;
-        if !cfg.crash_plan.is_empty() {
-            j.set_crash_plan(
-                crate::journal::CrashPlan::parse(&cfg.crash_plan)
-                    .map_err(|e| anyhow::anyhow!("crash_plan: {e}"))?);
-        }
-        coord.attach_journal(j)?;
-    }
 
     let mut global = trainer.init_params(cfg.seed ^ 0x1417);
     let mut history = Vec::new();
@@ -320,26 +415,48 @@ pub fn run_fl(cfg: &FlConfig, trainer: &Trainer) -> Result<FlRun> {
         "byzantine > 0 requires the frame-driven round driver; it is \
          incompatible with use_hlo_quantmask"
     );
-    let mut adversary = (cfg.byzantine > 0.0).then(|| {
-        let mut a = crate::adversary::Adversary::new(cfg.byzantine,
-                                                     cfg.seed ^ 0xbad_f00d);
-        // With ≥ 2 byzantine users, the last one turns two-faced:
-        // honest upload, then geometry-poisoned shares — identified at
-        // ingest and excluded by the recovery loop every round.
-        // Geometry (not value) poisoning keeps identification
-        // independent of response-set redundancy, so enabling the
-        // byzantine knob never costs availability beyond what a silent
-        // byzantine already costs (an excluded survivor contributes
-        // exactly as many responses as one that never uploaded: none).
-        let nbyz = (cfg.byzantine * cfg.users as f64).floor() as usize;
-        if nbyz >= 2 && cfg.max_retries > 0 {
-            a.two_faced = vec![(
-                nbyz - 1,
-                crate::adversary::TwoFaced::PoisonGeometry,
-            )];
+    let (mut adversary, mut grouped_advs) = match &driver {
+        RoundDriver::Flat(_) => {
+            let adv = (cfg.byzantine > 0.0).then(|| {
+                let mut a = crate::adversary::Adversary::new(
+                    cfg.byzantine, cfg.seed ^ 0xbad_f00d);
+                // With ≥ 2 byzantine users, the last one turns
+                // two-faced: honest upload, then geometry-poisoned
+                // shares — identified at ingest and excluded by the
+                // recovery loop every round. Geometry (not value)
+                // poisoning keeps identification independent of
+                // response-set redundancy, so enabling the byzantine
+                // knob never costs availability beyond what a silent
+                // byzantine already costs (an excluded survivor
+                // contributes exactly as many responses as one that
+                // never uploaded: none).
+                let nbyz =
+                    (cfg.byzantine * cfg.users as f64).floor() as usize;
+                if nbyz >= 2 && cfg.max_retries > 0 {
+                    a.two_faced = vec![(
+                        nbyz - 1,
+                        crate::adversary::TwoFaced::PoisonGeometry,
+                    )];
+                }
+                a
+            });
+            (adv, None)
         }
-        a
-    });
+        RoundDriver::Grouped(gc) => {
+            // Grouped training default: the byzantine budget spreads
+            // across the roster by the seeded placement draw, one
+            // catalog adversary per hit group. (The concentrated
+            // placement and the two-faced refinement are exercised by
+            // the grouped differential suite, not the trainer.)
+            let advs = (cfg.byzantine > 0.0).then(|| {
+                gc.adversaries(
+                    cfg.byzantine,
+                    crate::protocol::group::Placement::Spread,
+                    cfg.seed ^ 0xbad_f00d)
+            });
+            (None, advs)
+        }
+    };
 
     // DP noise calibration uses the Thm-2 privacy guarantee T with the
     // conservative γ = 1/3 colluder bound.
@@ -356,7 +473,7 @@ pub fn run_fl(cfg: &FlConfig, trainer: &Trainer) -> Result<FlRun> {
         // Cooperative interrupt: stop at the round boundary with the
         // journal durably synced, never mid-append.
         if shutdown_requested() {
-            coord.sync_journal();
+            driver.sync_journal();
             halted = Some("interrupted");
             break;
         }
@@ -410,17 +527,34 @@ pub fn run_fl(cfg: &FlConfig, trainer: &Trainer) -> Result<FlRun> {
         }
 
         // --- secure aggregation round.
-        let round_result = if cfg.use_hlo_quantmask {
-            coord.run_round_hlo(round as u32, &ys, &betas, &dropped,
-                                trainer.quantmask()?)
-        } else if let Some(adv) = adversary.as_mut() {
-            // Hostile-cohort training: byzantine users inject catalog
-            // frames instead of honest uploads; the hardened ingest
-            // sheds them and the round proceeds on honest survivors.
-            coord.run_round_adversarial(round as u32, &ys, &betas,
-                                        &dropped, adv)
-        } else {
-            coord.run_round(round as u32, &ys, &betas, &dropped)
+        let round_result = match &mut driver {
+            RoundDriver::Flat(coord) => {
+                if cfg.use_hlo_quantmask {
+                    coord.run_round_hlo(round as u32, &ys, &betas,
+                                        &dropped, trainer.quantmask()?)
+                } else if let Some(adv) = adversary.as_mut() {
+                    // Hostile-cohort training: byzantine users inject
+                    // catalog frames instead of honest uploads; the
+                    // hardened ingest sheds them and the round proceeds
+                    // on honest survivors.
+                    coord.run_round_adversarial(round as u32, &ys,
+                                                &betas, &dropped, adv)
+                } else {
+                    coord.run_round(round as u32, &ys, &betas, &dropped)
+                }
+            }
+            RoundDriver::Grouped(gc) => {
+                // Group failures are confined: the aggregate covers the
+                // surviving groups and the round only errors when every
+                // group fails.
+                let r = if let Some(advs) = grouped_advs.as_mut() {
+                    gc.run_round_adversarial(round as u32, &ys, &betas,
+                                             &dropped, advs)
+                } else {
+                    gc.run_round(round as u32, &ys, &betas, &dropped)
+                };
+                r.map(|gr| (gr.aggregate, gr.ledger))
+            }
         };
         let (agg, mut ledger) = match round_result {
             Ok(v) => v,
@@ -429,7 +563,7 @@ pub fn run_fl(cfg: &FlConfig, trainer: &Trainer) -> Result<FlRun> {
                 // injected crash, unrecoverable quorum loss): leave the
                 // journal durably synced so the round stays resumable,
                 // then surface the typed error.
-                coord.sync_journal();
+                driver.sync_journal();
                 return Err(e);
             }
         };

@@ -28,6 +28,10 @@
 //!                    --crash_plan wave-closed:0:torn
 //!                                      # seeded crash injection (exit 3);
 //!                                      # the journal stays resumable
+//!   sparsesecagg run --users 1024 --group_size 64
+//!                                      # hierarchical grouped aggregation:
+//!                                      # 16 group servers, per-user cost
+//!                                      # scales with n=64, not N=1024
 //!   sparsesecagg comm --users 100 --alpha 0.1 --executor windowed
 //!   sparsesecagg privacy --users 100 --gamma 0.333 --theta 0.3
 

@@ -263,6 +263,99 @@ impl RoundLedger {
         self.retries += 1;
     }
 
+    /// Merge per-group round ledgers into one cohort-wide ledger — the
+    /// accounting half of hierarchical grouped aggregation
+    /// ([`crate::coordinator::GroupedCoordinator`]). Each entry of
+    /// `parts` is `(start, ledger)`: the group's first global user id
+    /// and its own n_g-user ledger. Per-user byte arrays scatter to the
+    /// global id space unchanged, which is exactly what makes the
+    /// per-user cost provably scale with n and not N (a user's bytes
+    /// come only from its own group's round). Groups run concurrently
+    /// on independent servers, so:
+    ///
+    /// * compute seconds take the **max** across groups,
+    /// * phases with the same `(name, occurrence)` are merged into one
+    ///   breakdown entry whose bytes are summed and whose clock is the
+    ///   **max** across groups (the barrier-synchronized approximation:
+    ///   groups advance phases in lockstep, the slowest group gates
+    ///   each phase), and `comm_time_s` is the sum of those merged
+    ///   phases — so the phases-sum-to-totals invariant holds by
+    ///   construction,
+    /// * scheduling/reject/retry counters sum, scratch peaks take the
+    ///   max, and `excluded_users` are translated to global ids.
+    pub fn merge_groups(n_total: usize, parts: &[(usize, &RoundLedger)])
+                        -> RoundLedger {
+        use std::collections::BTreeMap;
+        let mut out = RoundLedger::new(n_total);
+        for &(start, lg) in parts {
+            for (i, &b) in lg.up_bytes.iter().enumerate() {
+                out.up_bytes[start + i] += b;
+            }
+            for (i, &b) in lg.down_bytes.iter().enumerate() {
+                out.down_bytes[start + i] += b;
+            }
+            out.client_compute_s =
+                out.client_compute_s.max(lg.client_compute_s);
+            out.server_compute_s =
+                out.server_compute_s.max(lg.server_compute_s);
+            out.unmask_jobs += lg.unmask_jobs;
+            out.unmask_shards += lg.unmask_shards;
+            out.unmask_steals += lg.unmask_steals;
+            out.unmask_peak_scratch_bytes = out
+                .unmask_peak_scratch_bytes
+                .max(lg.unmask_peak_scratch_bytes);
+            out.client_tasks += lg.client_tasks;
+            out.client_steals += lg.client_steals;
+            out.rejected_frames += lg.rejected_frames;
+            out.rate_limited_frames += lg.rate_limited_frames;
+            out.retries += lg.retries;
+            out.journal_bytes += lg.journal_bytes;
+            out.replayed_frames += lg.replayed_frames;
+            for &e in &lg.excluded_users {
+                out.excluded_users.push(start + e);
+            }
+        }
+        out.excluded_users.sort_unstable();
+        // Phase buckets keyed by (name, k-th occurrence of that name in
+        // the group's own phase list) — so every group's first
+        // "recovery_wave" merges with every other group's first, etc.
+        // (up, down, clock max, max position) per bucket; output order
+        // is by the latest position the bucket held in any group, ties
+        // by first appearance (stable sort) — protocol order.
+        let mut buckets: BTreeMap<(&'static str, usize),
+                                  (usize, usize, f64, usize)> =
+            BTreeMap::new();
+        let mut order: Vec<(&'static str, usize)> = Vec::new();
+        for &(_, lg) in parts {
+            let mut occ: BTreeMap<&'static str, usize> = BTreeMap::new();
+            for (pos, ph) in lg.phases.iter().enumerate() {
+                let k = occ.entry(ph.name).or_insert(0);
+                let key = (ph.name, *k);
+                *k += 1;
+                let e = buckets.entry(key).or_insert_with(|| {
+                    order.push(key);
+                    (0, 0, 0.0, 0)
+                });
+                e.0 += ph.up_bytes;
+                e.1 += ph.down_bytes;
+                e.2 = e.2.max(ph.comm_time_s);
+                e.3 = e.3.max(pos);
+            }
+        }
+        order.sort_by_key(|k| buckets[k].3);
+        for key in order {
+            let (up, down, t, _) = buckets[&key];
+            out.phases.push(PhaseBreakdown {
+                name: key.0,
+                up_bytes: up,
+                down_bytes: down,
+                comm_time_s: t,
+            });
+            out.comm_time_s += t;
+        }
+        out
+    }
+
     /// Total upload bytes across users.
     pub fn total_up(&self) -> usize {
         self.up_bytes.iter().sum()
@@ -384,6 +477,75 @@ mod tests {
         ledger.record_client_phase(8, 0);
         assert_eq!(ledger.client_tasks, 18);
         assert_eq!(ledger.client_steals, 3);
+    }
+
+    /// Group merge: per-user bytes scatter by offset, compute takes the
+    /// max, counters sum, excluded ids globalize, and same-occurrence
+    /// phases merge with summed bytes / maxed clock — with the
+    /// phases-sum-to-totals invariant intact even when one group ran a
+    /// recovery wave the other did not.
+    #[test]
+    fn merge_groups_scatters_and_buckets_phases() {
+        let link = LinkModel { bandwidth_bps: 8e6, latency_s: 0.0 };
+        let mut a = RoundLedger::new(2);
+        a.record_upload(0, 100);
+        a.record_upload(1, 50);
+        a.record_download(1, 10);
+        a.client_compute_s = 2.0;
+        a.retries = 1;
+        a.excluded_users.push(1);
+        a.advance_named_phase("collecting", &link, &[100, 50], 150, 0);
+        a.advance_named_phase("unmasking", &link, &[8_000_000], 30, 0);
+        a.advance_named_phase("recovery_wave", &link, &[500], 20, 5);
+        a.advance_named_phase("broadcast", &link, &[40], 0, 40);
+        let mut b = RoundLedger::new(3);
+        b.record_upload(2, 7);
+        b.client_compute_s = 3.0;
+        b.advance_named_phase("collecting", &link, &[7], 7, 0);
+        b.advance_named_phase("unmasking", &link, &[1_000], 9, 0);
+        b.advance_named_phase("broadcast", &link, &[16_000_000], 0, 60);
+        let m = RoundLedger::merge_groups(5, &[(0, &a), (2, &b)]);
+        assert_eq!(m.up_bytes, vec![100, 50, 7, 0, 0]);
+        assert_eq!(m.down_bytes, vec![0, 10, 0, 0, 0]);
+        assert_eq!(m.client_compute_s, 3.0);
+        assert_eq!(m.retries, 1);
+        assert_eq!(m.excluded_users, vec![1]);
+        let names: Vec<&str> = m.phases.iter().map(|p| p.name).collect();
+        assert_eq!(names, ["collecting", "unmasking", "recovery_wave",
+                           "broadcast"]);
+        // Bytes summed across groups per bucket…
+        assert_eq!(m.phases[0].up_bytes, 157);
+        assert_eq!(m.phases[3].down_bytes, 100);
+        // …clock maxed per bucket (a's unmasking is slower; b's
+        // broadcast is slower)…
+        assert_eq!(m.phases[1].comm_time_s.to_bits(),
+                   a.phases[1].comm_time_s.to_bits());
+        assert_eq!(m.phases[3].comm_time_s.to_bits(),
+                   b.phases[2].comm_time_s.to_bits());
+        // …and the invariant: phases sum to the round totals.
+        assert_eq!(m.phases.iter().map(|p| p.up_bytes).sum::<usize>(),
+                   m.total_up());
+        assert_eq!(m.phases.iter().map(|p| p.down_bytes).sum::<usize>(),
+                   m.total_down());
+        let clock: f64 = m.phases.iter().map(|p| p.comm_time_s).sum();
+        assert!((clock - m.comm_time_s).abs() < 1e-15);
+    }
+
+    /// A single offset-0 part merges to itself (the groups=1 anchor at
+    /// the accounting layer).
+    #[test]
+    fn merge_groups_single_part_is_identity() {
+        let link = LinkModel::paper_user_link();
+        let mut a = RoundLedger::new(3);
+        a.record_upload(0, 9);
+        a.record_download(2, 4);
+        a.advance_named_phase("collecting", &link, &[9], 9, 0);
+        a.advance_named_phase("broadcast", &link, &[4], 0, 4);
+        let m = RoundLedger::merge_groups(3, &[(0, &a)]);
+        assert_eq!(m.up_bytes, a.up_bytes);
+        assert_eq!(m.down_bytes, a.down_bytes);
+        assert_eq!(m.comm_time_s.to_bits(), a.comm_time_s.to_bits());
+        assert_eq!(m.phases.len(), 2);
     }
 
     #[test]

@@ -1,0 +1,356 @@
+//! Hierarchical grouped aggregation: the group-tree layer over the flat
+//! per-group round (SwiftAgg+ direction; ROADMAP item 2).
+//!
+//! Flat SecAgg/SparseSecAgg cost per user grows with the cohort size N
+//! (N−1 pairwise DH masks, Shamir shares to the whole roster), so the
+//! paper's communication savings evaporate at fleet scale. This module
+//! partitions the roster into G contiguous groups of n ≪ N users; each
+//! group runs the complete, unmodified flat protocol — its own DH
+//! graph, its own Shamir roster with threshold t(n) = ⌊n/2⌋, its own
+//! dropout/Byzantine recovery — against its own group server, and the
+//! per-group *cleartext* aggregates (already unmasked field-decoded
+//! f32 vectors) are reduced up a fixed binary tree to the global sum.
+//! Per-user bytes then scale with the group size n, not N: a user in an
+//! N = 4096 cohort at `group_size = 64` pays exactly what a user in a
+//! flat N = 64 cohort pays (pinned by `tests/group_differential.rs`).
+//! Failures stay confined: a group that loses quorum or exhausts its
+//! retry budget drops out of the reduce as a unit, exactly like a
+//! whole-group dropout — no other group's round is touched.
+//!
+//! # Privacy delta of the intermediate group aggregate
+//!
+//! Grouping surfaces the paper's privacy/communication trade-off at a
+//! second layer. The flat protocol hides each update inside the sum of
+//! all N−D survivors; the grouped protocol additionally *materializes*
+//! each group's partial sum at the group server before the tree
+//! reduce. Whoever observes that intermediate value (the group server,
+//! or the parent it reports to) learns the sum over only the n_g − D_g
+//! survivors of one group — an anonymity set of n, not N. Concretely,
+//! for SparseSecAgg the per-coordinate privacy guarantee of Theorem 2
+//! is driven by T, the expected number of *non-colluding* users
+//! selecting a coordinate: T grows like (1−γ)·N·p with
+//! p = 1 − (1−α/(N−1))^(N−1) ≈ 1 − e^{−α}. Inside a group the same
+//! expression reads (1−γ)·n·p_n with p_n ≈ 1 − e^{−α} — the selection
+//! probability is roughly α-determined and survives grouping, but the
+//! population multiplier drops from N to n. An honest-but-curious group
+//! server therefore sees each coordinate blended across ~n·p
+//! contributions instead of ~N·p: the guarantee weakens by the factor
+//! N/n exactly where communication improves by the factor N/n. The
+//! α knob still trades the two *within* a group; choosing n trades
+//! them *between* layers. Mitigations (outside this PR's scope, noted
+//! for item 1/4 follow-ups): semi-honest relays that only forward
+//! masked partial sums, or per-group DP noise calibrated to n instead
+//! of N (`protocol::dp` already takes T as an input).
+//!
+//! # Determinism
+//!
+//! f32 addition is not associative, so the grouped global aggregate is
+//! *not* bit-equal to the flat N-user aggregate in general (and cannot
+//! be: per-group quantization scales depend on n). The deterministic
+//! anchors the differential suite pins instead: `groups = 1` is
+//! bit-exactly the flat path (same entropy, same frames, same ledger,
+//! same clock), and for G > 1 the grouped round is bit-exactly
+//! [`tree_reduce`] applied to the G independent flat group rounds.
+//! [`tree_reduce`] itself is a fixed-shape binary tree over the group
+//! index, so the reduce order never depends on scheduling.
+
+use crate::prg::ChaCha20Rng;
+
+/// Contiguous partition of a roster of `n_total` users into groups.
+/// Group `g` owns global user ids `start(g) .. start(g) + len(g)`;
+/// within a group, users are addressed by their *local* id
+/// `0 .. len(g)` (the group's transport endpoints and Shamir
+/// evaluation points are group-local, so every group runs the
+/// unmodified flat protocol).
+///
+/// Sizing: `groups(n_total, g)` splits as evenly as possible (the
+/// first `n_total % g` groups get one extra user);
+/// `of_size(n_total, size)` makes ⌈n_total/size⌉ groups the same way.
+/// Every group is non-empty.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GroupLayout {
+    /// Start offset of each group in global user-id space, ascending,
+    /// with a final sentinel equal to `n_total`.
+    starts: Vec<usize>,
+}
+
+impl GroupLayout {
+    /// Split `n_total` users into `g` groups (clamped to `1..=n_total`),
+    /// as evenly as possible.
+    pub fn groups(n_total: usize, g: usize) -> Self {
+        assert!(n_total > 0, "empty roster");
+        let g = g.clamp(1, n_total);
+        let base = n_total / g;
+        let extra = n_total % g;
+        let mut starts = Vec::with_capacity(g + 1);
+        let mut at = 0usize;
+        for k in 0..g {
+            starts.push(at);
+            at += base + usize::from(k < extra);
+        }
+        starts.push(at);
+        debug_assert_eq!(at, n_total);
+        GroupLayout { starts }
+    }
+
+    /// Split into groups of (at most) `size` users: ⌈n_total/size⌉
+    /// groups, evenly sized.
+    pub fn of_size(n_total: usize, size: usize) -> Self {
+        assert!(n_total > 0, "empty roster");
+        let size = size.clamp(1, n_total);
+        Self::groups(n_total, n_total.div_ceil(size))
+    }
+
+    /// Number of groups G.
+    pub fn count(&self) -> usize {
+        self.starts.len() - 1
+    }
+
+    /// Total roster size N.
+    pub fn n_total(&self) -> usize {
+        *self.starts.last().expect("layout has a sentinel")
+    }
+
+    /// First global user id of group `g`.
+    pub fn start(&self, g: usize) -> usize {
+        self.starts[g]
+    }
+
+    /// Size n_g of group `g`.
+    pub fn len(&self, g: usize) -> usize {
+        self.starts[g + 1] - self.starts[g]
+    }
+
+    /// True iff some group is empty (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Which group a global user id belongs to.
+    pub fn group_of(&self, uid: usize) -> usize {
+        debug_assert!(uid < self.n_total());
+        // starts is ascending; partition_point returns the first index
+        // whose start exceeds uid, i.e. 1 + the owning group.
+        self.starts.partition_point(|&s| s <= uid) - 1
+    }
+
+    /// Global id of local user `local` in group `g`.
+    pub fn global_id(&self, g: usize, local: usize) -> usize {
+        debug_assert!(local < self.len(g));
+        self.starts[g] + local
+    }
+
+    /// Split a set of *global* user ids into per-group *local* id
+    /// lists (ascending within each group) — how a global dropout set
+    /// is confined to the groups it actually hits.
+    pub fn localize(&self, global_ids: &[usize]) -> Vec<Vec<usize>> {
+        let mut per: Vec<Vec<usize>> = vec![Vec::new(); self.count()];
+        let mut sorted: Vec<usize> = global_ids.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        for uid in sorted {
+            let g = self.group_of(uid);
+            per[g].push(uid - self.start(g));
+        }
+        per
+    }
+}
+
+/// Deterministic fixed-shape binary-tree reduction of per-group
+/// aggregates (`None` = failed/absent group, skipped as a unit). The
+/// tree pairs adjacent present vectors by group index and halves until
+/// one remains, so the float summation order is a pure function of
+/// which groups are present — never of scheduling. With exactly one
+/// present group the input vector is returned verbatim (bit-exact),
+/// which is what makes `groups = 1` a true identity path.
+pub fn tree_reduce(parts: Vec<Option<Vec<f32>>>) -> Option<Vec<f32>> {
+    let mut level: Vec<Vec<f32>> = parts.into_iter().flatten().collect();
+    if level.is_empty() {
+        return None;
+    }
+    while level.len() > 1 {
+        let mut next: Vec<Vec<f32>> = Vec::with_capacity(
+            level.len().div_ceil(2));
+        let mut it = level.into_iter();
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                debug_assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter_mut().zip(&b) {
+                    *x += y;
+                }
+            }
+            next.push(a);
+        }
+        level = next;
+    }
+    level.pop()
+}
+
+/// Where a byzantine budget sits in the group tree — the placement
+/// dimension the grouped soak sweeps (an attacker owning one group
+/// looks nothing like the same budget diluted across all of them).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// All byzantine ids packed into one group (that group fights an
+    /// internal fraction of count/n_g; every other group is honest).
+    Concentrated { group: usize },
+    /// Byzantine ids scattered across the whole roster by a seeded
+    /// draw (each group sees roughly count/G of them).
+    Spread,
+}
+
+/// Seeded byzantine-id placement over a group layout: draw `count`
+/// distinct *global* ids under `placement` and return them as
+/// per-group *local* id lists (ascending), ready to feed one
+/// [`crate::adversary::Adversary::with_ids`] per group. Deterministic
+/// in `(layout, count, placement, seed)`.
+pub fn place_byzantine(layout: &GroupLayout, count: usize,
+                       placement: Placement, seed: u64)
+                       -> Vec<Vec<usize>> {
+    let mut rng = ChaCha20Rng::from_seed_u64(seed ^ 0xb12a_ce00);
+    let mut chosen: Vec<usize> = Vec::with_capacity(count);
+    let mut draw = |lo: usize, hi: usize, want: usize,
+                    chosen: &mut Vec<usize>| {
+        let want = want.min(hi - lo);
+        while chosen.len() < want {
+            let id = lo + (rng.next_u32() as usize) % (hi - lo);
+            if !chosen.contains(&id) {
+                chosen.push(id);
+            }
+        }
+    };
+    match placement {
+        Placement::Concentrated { group } => {
+            let g = group.min(layout.count() - 1);
+            let lo = layout.start(g);
+            draw(lo, lo + layout.len(g), count, &mut chosen);
+        }
+        Placement::Spread => {
+            draw(0, layout.n_total(), count, &mut chosen);
+        }
+    }
+    layout.localize(&chosen)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_partitions_exactly() {
+        for n in [1usize, 2, 7, 64, 100] {
+            for g in [1usize, 2, 3, 7, 200] {
+                let l = GroupLayout::groups(n, g);
+                assert!(l.count() >= 1 && l.count() <= n);
+                let mut seen = 0usize;
+                for k in 0..l.count() {
+                    assert!(l.len(k) >= 1, "n={n} g={g} group {k} empty");
+                    for local in 0..l.len(k) {
+                        let uid = l.global_id(k, local);
+                        assert_eq!(uid, seen);
+                        assert_eq!(l.group_of(uid), k);
+                        seen += 1;
+                    }
+                }
+                assert_eq!(seen, n);
+                // Even split: sizes differ by at most one.
+                let sizes: Vec<usize> =
+                    (0..l.count()).map(|k| l.len(k)).collect();
+                let (mn, mx) = (sizes.iter().min().unwrap(),
+                                sizes.iter().max().unwrap());
+                assert!(mx - mn <= 1, "uneven split {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn of_size_caps_group_size() {
+        let l = GroupLayout::of_size(100, 16);
+        assert_eq!(l.count(), 7);
+        for g in 0..l.count() {
+            assert!(l.len(g) <= 16);
+        }
+        // size ≥ n collapses to one flat group.
+        assert_eq!(GroupLayout::of_size(10, 64).count(), 1);
+        // size 0 is clamped to 1 user per group.
+        assert_eq!(GroupLayout::of_size(5, 0).count(), 5);
+    }
+
+    #[test]
+    fn localize_confines_and_dedups() {
+        let l = GroupLayout::groups(12, 3); // groups of 4
+        let per = l.localize(&[0, 5, 5, 11, 4]);
+        assert_eq!(per, vec![vec![0], vec![0, 1], vec![3]]);
+        assert_eq!(l.localize(&[]), vec![vec![]; 3]);
+    }
+
+    #[test]
+    fn tree_reduce_matches_reference_sum() {
+        // Small integer-valued parts: float order cannot matter, so
+        // the tree must equal the naive fold exactly.
+        let parts: Vec<Option<Vec<f32>>> = (0..5)
+            .map(|g| Some(vec![g as f32, 2.0 * g as f32]))
+            .collect();
+        let out = tree_reduce(parts).unwrap();
+        assert_eq!(out, vec![10.0, 20.0]);
+    }
+
+    #[test]
+    fn tree_reduce_single_part_is_identity_and_skips_failures() {
+        let v = vec![0.1f32, -0.7, 3.25];
+        let out = tree_reduce(vec![None, Some(v.clone()), None]).unwrap();
+        // Bit-exact identity — the groups=1 anchor.
+        assert_eq!(out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                   v.iter().map(|x| x.to_bits()).collect::<Vec<_>>());
+        assert!(tree_reduce(vec![None, None]).is_none());
+    }
+
+    #[test]
+    fn tree_reduce_is_fixed_shape() {
+        // The summation order is a function of the present set only:
+        // same parts, same result bits, run twice.
+        let parts = || -> Vec<Option<Vec<f32>>> {
+            (0..7).map(|g| {
+                (g != 3).then(|| vec![0.1f32 * g as f32 + 0.01, 1e-3])
+            }).collect()
+        };
+        let a = tree_reduce(parts()).unwrap();
+        let b = tree_reduce(parts()).unwrap();
+        assert_eq!(a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                   b.iter().map(|x| x.to_bits()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn placement_concentrated_stays_in_one_group() {
+        let l = GroupLayout::groups(64, 4);
+        let per = place_byzantine(&l, 5, Placement::Concentrated {
+            group: 2,
+        }, 7);
+        assert_eq!(per[0], Vec::<usize>::new());
+        assert_eq!(per[1], Vec::<usize>::new());
+        assert_eq!(per[2].len(), 5);
+        assert_eq!(per[3], Vec::<usize>::new());
+        assert!(per[2].iter().all(|&i| i < l.len(2)));
+        // Deterministic per seed.
+        assert_eq!(per, place_byzantine(&l, 5, Placement::Concentrated {
+            group: 2,
+        }, 7));
+        assert_ne!(per, place_byzantine(&l, 5, Placement::Concentrated {
+            group: 2,
+        }, 8));
+    }
+
+    #[test]
+    fn placement_spread_covers_several_groups() {
+        let l = GroupLayout::groups(64, 4);
+        let per = place_byzantine(&l, 12, Placement::Spread, 9);
+        assert_eq!(per.iter().map(|v| v.len()).sum::<usize>(), 12);
+        let touched = per.iter().filter(|v| !v.is_empty()).count();
+        assert!(touched >= 2, "seeded spread landed in one group");
+        // Budget larger than a group cannot overflow Concentrated.
+        let packed = place_byzantine(&l, 999, Placement::Concentrated {
+            group: 0,
+        }, 3);
+        assert_eq!(packed[0].len(), l.len(0));
+    }
+}

@@ -126,6 +126,26 @@ impl UnmaskResponse {
     }
 }
 
+/// Group aggregate (group server → parent in the group tree): one
+/// group's already-unmasked partial sum, d dense f32 parameters
+/// carried as their raw bit patterns so the tree reduce is bit-exact
+/// across the wire. The frame's sender slot carries the *group* index
+/// (group servers are the endpoints of the reduce layer, not users).
+#[derive(Clone, Debug)]
+pub struct GroupAggregate {
+    /// Index of the reporting group in the [`crate::protocol::group`]
+    /// layout.
+    pub group: usize,
+    /// The group's dequantized aggregate, as f32 bit patterns.
+    pub values: Vec<u32>,
+}
+
+impl GroupAggregate {
+    pub fn wire_bytes(&self) -> usize {
+        FRAME_BYTES + 4 + 4 * self.values.len()
+    }
+}
+
 /// Global-model broadcast (server → each user): d dense f32 parameters.
 #[derive(Clone, Debug)]
 pub struct ModelBroadcast {

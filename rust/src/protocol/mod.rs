@@ -8,6 +8,9 @@
 //!   byte-exact communication accounting behind Table I / Figs. 3, 5, 6.
 //! * [`shard`] — the sharded streaming unmask pipeline both servers run
 //!   their Unmask hot path on (bit-exact to the monolithic path).
+//! * [`group`] — the hierarchical group-tree layer: roster partitioning,
+//!   deterministic tree reduction of per-group aggregates, and seeded
+//!   byzantine placement across groups (privacy delta documented there).
 //!
 //! Both protocols follow the Bonawitz phase structure:
 //! `AdvertiseKeys → ShareKeys → MaskedInput → Unmask`. Key advertisement
@@ -63,6 +66,7 @@
 //! already-validated state is always sound.
 
 pub mod dp;
+pub mod group;
 pub mod messages;
 pub mod secagg;
 pub mod shard;

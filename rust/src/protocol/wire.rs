@@ -56,6 +56,7 @@ pub enum Tag {
     DenseMaskedUpload = 5,
     UnmaskRequest = 6,
     UnmaskResponse = 7,
+    GroupAggregate = 8,
 }
 
 impl Tag {
@@ -68,6 +69,7 @@ impl Tag {
             5 => Tag::DenseMaskedUpload,
             6 => Tag::UnmaskRequest,
             7 => Tag::UnmaskResponse,
+            8 => Tag::GroupAggregate,
             other => bail!("unknown message tag {other}"),
         })
     }
@@ -257,6 +259,17 @@ pub fn encode_unmask_response(m: &UnmaskResponse) -> Vec<u8> {
     w.finish()
 }
 
+/// Group aggregate: the sender slot carries the *group* index (the
+/// reduce layer's endpoints are group servers, not users).
+pub fn encode_group_aggregate(m: &GroupAggregate) -> Vec<u8> {
+    let mut w = W::frame(m.group as u32, Tag::GroupAggregate);
+    w.u32(m.values.len() as u32);
+    for &v in &m.values {
+        w.u32(v);
+    }
+    w.finish()
+}
+
 // ---- decoders ---------------------------------------------------------
 
 fn payload(buf: &[u8], want: Tag) -> Result<(u32, R<'_>)> {
@@ -367,6 +380,17 @@ pub fn decode_unmask_response(buf: &[u8]) -> Result<UnmaskResponse> {
     Ok(UnmaskResponse { id: sender as usize, dh_shares, seed_shares })
 }
 
+pub fn decode_group_aggregate(buf: &[u8]) -> Result<GroupAggregate> {
+    let (group, mut r) = payload(buf, Tag::GroupAggregate)?;
+    let n = r.count(4)?;
+    let mut values = Vec::with_capacity(n);
+    for _ in 0..n {
+        values.push(r.u32()?);
+    }
+    ensure!(r.pos == buf.len(), "trailing bytes in group aggregate");
+    Ok(GroupAggregate { group: group as usize, values })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -459,6 +483,32 @@ mod tests {
         assert_eq!(out.id, 2);
         assert_eq!(out.dh_shares, resp.dh_shares);
         assert_eq!(out.seed_shares, resp.seed_shares);
+    }
+
+    #[test]
+    fn group_aggregate_roundtrip_size_and_strictness() {
+        let m = GroupAggregate {
+            group: 3,
+            values: vec![0.5f32.to_bits(), (-1.25f32).to_bits(), 0],
+        };
+        let buf = encode_group_aggregate(&m);
+        assert_eq!(buf.len(), m.wire_bytes(), "size accounting mismatch");
+        let out = decode_group_aggregate(&buf).unwrap();
+        assert_eq!(out.group, 3);
+        assert_eq!(out.values, m.values);
+        // Count field lying high (hostile allocation) and trailing
+        // bytes (count lying low) both rejected.
+        let mut high = buf.clone();
+        high[FRAME_BYTES..FRAME_BYTES + 4]
+            .copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_group_aggregate(&high).is_err());
+        let mut long = buf.clone();
+        long.extend_from_slice(&7u32.to_le_bytes());
+        let len = (long.len() - FRAME_BYTES) as u32;
+        long[8..12].copy_from_slice(&len.to_le_bytes());
+        assert!(decode_group_aggregate(&long).is_err());
+        // Wrong tag cross-decode fails.
+        assert!(decode_dense_upload(&buf).is_err());
     }
 
     #[test]

@@ -103,6 +103,23 @@ pub fn prop_shrink<C: Clone + std::fmt::Debug>(
     }
 }
 
+/// Shrink candidates along the group dimension of a grouped-round case
+/// ([`crate::protocol::group::GroupLayout`]): merge everything into one
+/// flat group first (the most aggressive candidate — it removes the
+/// group tree from the repro entirely), then halve the group count —
+/// the same aggressive-first ladder the scalar dimensions use
+/// (halve, then decrement). Candidates are strictly smaller than
+/// `groups` and never zero, so a `groups = 1` case is already minimal
+/// along this dimension and proposes nothing.
+pub fn shrink_groups(groups: usize) -> Vec<usize> {
+    let mut out: Vec<usize> = [1, groups / 2]
+        .into_iter()
+        .filter(|&g| (1..groups).contains(&g))
+        .collect();
+    out.dedup(); // groups = 2 proposes 1 twice
+    out
+}
+
 /// Resolve where a bench trajectory file lives. `cargo bench` runs from
 /// the package root (`rust/`) while the trajectory files sit at the
 /// repository root next to `ROADMAP.md`; probe for that anchor and fall
@@ -204,6 +221,15 @@ mod tests {
             |_| vec![0],
             |&v| assert!(v < 100),
         );
+    }
+
+    #[test]
+    fn shrink_groups_proposes_merge_then_halve() {
+        assert_eq!(shrink_groups(8), vec![1, 4]);
+        assert_eq!(shrink_groups(3), vec![1]);
+        assert_eq!(shrink_groups(2), vec![1]); // deduped
+        assert_eq!(shrink_groups(1), Vec::<usize>::new()); // minimal
+        assert_eq!(shrink_groups(0), Vec::<usize>::new());
     }
 
     #[test]

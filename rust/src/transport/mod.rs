@@ -48,7 +48,20 @@
 use std::collections::VecDeque;
 
 /// Frame mover between N client endpoints and one server endpoint.
-pub trait Transport {
+///
+/// # Group-server endpoint addressing
+///
+/// The grouped round driver ([`crate::coordinator::GroupedCoordinator`])
+/// gives every group *its own* transport instance: group `g`'s server
+/// owns one bus wiring its n_g local endpoints `0..n_g` (user local id
+/// = endpoint id, exactly the flat convention), so a group round is
+/// indistinguishable from a flat n_g-user round at this seam and no
+/// frame can cross groups by construction. `Send` is a supertrait
+/// because those G buses ride inside the per-group coordinators that
+/// the grouped driver fans out across executor workers; both
+/// implementations ([`InMemoryBus`], [`crate::netsim::NetSim`]) are
+/// plain owned state.
+pub trait Transport: Send {
     /// Queue `frame` from client endpoint `from` toward the server.
     fn to_server(&mut self, from: usize, frame: Vec<u8>);
 

@@ -2,15 +2,16 @@
 //! needed): random cohort sizes, compression ratios, dropout sets —
 //! exact mask cancellation and metric invariants must hold for all.
 
-use sparsesecagg::coordinator::Coordinator;
+use sparsesecagg::coordinator::{Coordinator, GroupedCoordinator};
 use sparsesecagg::field;
 use sparsesecagg::metrics;
 use sparsesecagg::network::draw_dropouts;
 use sparsesecagg::prg::ChaCha20Rng;
+use sparsesecagg::protocol::group::GroupLayout;
 use sparsesecagg::protocol::messages::UnmaskResponse;
 use sparsesecagg::protocol::{secagg, sparse, Params};
 use sparsesecagg::quantize;
-use sparsesecagg::testutil::prop_shrink;
+use sparsesecagg::testutil::{prop_shrink, shrink_groups};
 
 fn random_grads(rng: &mut ChaCha20Rng, n: usize, d: usize) -> Vec<Vec<f32>> {
     (0..n)
@@ -421,6 +422,109 @@ fn dropout_storm_at_threshold_secagg() {
             .map(|u| u.respond_unmask(&req))
             .collect();
         assert!(server.finish_round(1, &starved).is_err());
+    });
+}
+
+/// One grouped dropout-storm scenario: a roster of `groups` even
+/// groups, with the `target` group squeezed down to its own recovery
+/// threshold. Fully determined by its fields; on failure the shrinker
+/// walks the group dimension too ([`shrink_groups`]: merge to one flat
+/// group, halve the group count) alongside the model dimension.
+#[derive(Clone, Copy, Debug)]
+struct GroupedStormCase {
+    n: usize,
+    groups: usize,
+    d: usize,
+    alpha: f64,
+    target: usize,
+    seed: u64,
+}
+
+fn gen_grouped_storm(rng: &mut ChaCha20Rng) -> GroupedStormCase {
+    let groups = 2 + (rng.next_u32() as usize % 3); // 2..=4
+    let per = 3 + (rng.next_u32() as usize % 4); // 3..=6 users/group
+    GroupedStormCase {
+        n: groups * per,
+        groups,
+        d: 120 + (rng.next_u32() as usize % 300),
+        alpha: 0.3 + 0.4 * rng.next_f32() as f64,
+        target: rng.next_u32() as usize % groups,
+        seed: rng.next_u64(),
+    }
+}
+
+fn shrink_grouped_storm(c: &GroupedStormCase) -> Vec<GroupedStormCase> {
+    let mut out: Vec<GroupedStormCase> = shrink_groups(c.groups)
+        .into_iter()
+        .map(|g| GroupedStormCase {
+            groups: g,
+            target: c.target.min(g - 1),
+            ..*c
+        })
+        .collect();
+    if c.d > 80 {
+        out.push(GroupedStormCase { d: c.d / 2, ..*c });
+    }
+    out
+}
+
+/// Grouped dropout storm: any single group squeezed to exactly
+/// t(n_g)+1 responders still recovers its round (the grouped round
+/// completes with no failed group), and one responder fewer fails
+/// *only that group's subtree* — the rest of the tree aggregates and
+/// the failure is reported, confined, never garbage. When the shrinker
+/// merges everything into one flat group, below-threshold becomes a
+/// whole-round error (there is no other subtree to survive), which is
+/// exactly the flat contract.
+#[test]
+fn grouped_dropout_storm_confines_threshold_failures() {
+    prop_shrink(10, gen_grouped_storm, shrink_grouped_storm,
+                |c: &GroupedStormCase| {
+        let GroupedStormCase { n, groups, d, alpha, target, seed } = *c;
+        let params = Params { n, d, alpha, theta: 0.3, c: 1024.0 };
+        let layout = GroupLayout::groups(n, groups);
+        let g = target.min(layout.count() - 1);
+        let (start, n_g) = (layout.start(g), layout.len(g));
+        let quorum = n_g / 2 + 1; // t(n_g) + 1
+        let betas = vec![1.0 / n as f64; n];
+        let rng = &mut ChaCha20Rng::from_seed_u64(seed);
+        let ys = random_grads(rng, n, d);
+
+        // --- at threshold: exactly t+1 responders in the target group.
+        let dropped: Vec<usize> =
+            (start..start + (n_g - quorum)).collect();
+        let mut coord = GroupedCoordinator::new_sparse(
+            params, seed ^ 0x9001, GroupLayout::groups(n, groups));
+        let out = coord
+            .run_round(0, &ys, &betas, &dropped)
+            .unwrap_or_else(|e| {
+                panic!("threshold grouped recovery failed (n={n}, \
+                        groups={groups}, target={g}, n_g={n_g}): {e:#}")
+            });
+        assert!(out.failed.is_empty(),
+                "group at t+1 responders must recover: {:?}", out.failed);
+        assert_eq!(out.aggregate.len(), d);
+
+        // --- one fewer responder: only the target subtree fails.
+        let starved: Vec<usize> =
+            (start..start + (n_g - quorum + 1)).collect();
+        let mut coord = GroupedCoordinator::new_sparse(
+            params, seed ^ 0x9001, GroupLayout::groups(n, groups));
+        if layout.count() == 1 {
+            assert!(coord.run_round(0, &ys, &betas, &starved).is_err(),
+                    "flat round below threshold must fail");
+        } else {
+            let out = coord
+                .run_round(0, &ys, &betas, &starved)
+                .unwrap_or_else(|e| {
+                    panic!("confined failure escalated to a whole-round \
+                            error (n={n}, groups={groups}): {e:#}")
+                });
+            assert_eq!(out.failed.len(), 1,
+                       "exactly the target group fails: {:?}", out.failed);
+            assert_eq!(out.failed[0].0, g);
+            assert_eq!(out.aggregate.len(), d);
+        }
     });
 }
 

@@ -113,6 +113,18 @@ fn encode_decode_identity_all_message_types() {
         assert_eq!(got.id, resp.id);
         assert_eq!(got.dh_shares, resp.dh_shares);
         assert_eq!(got.seed_shares, resp.seed_shares);
+
+        let ga = GroupAggregate {
+            group: rng.next_u32() as usize % 64,
+            values: (0..rng.next_u32() as usize % 400)
+                .map(|_| rng.next_u32())
+                .collect(),
+        };
+        let buf = wire::encode_group_aggregate(&ga);
+        assert_eq!(buf.len(), ga.wire_bytes());
+        let got = wire::decode_group_aggregate(&buf).unwrap();
+        assert_eq!(got.group, ga.group);
+        assert_eq!(got.values, ga.values);
     });
 }
 
@@ -125,6 +137,7 @@ fn run_all_decoders(buf: &[u8]) {
     let _ = wire::decode_dense_upload(buf);
     let _ = wire::decode_unmask_request(buf);
     let _ = wire::decode_unmask_response(buf);
+    let _ = wire::decode_group_aggregate(buf);
 }
 
 #[test]
@@ -142,7 +155,7 @@ fn random_bytes_never_panic_any_decoder() {
 fn valid_header_garbage_payload_never_panics() {
     let mut rng = ChaCha20Rng::from_seed_u64(0xfa23);
     for round in 0..3000 {
-        let tag = 1 + round % 8; // includes one invalid tag value (8)
+        let tag = 1 + round % 9; // includes one invalid tag value (9)
         let len = (rng.next_u32() as usize) % 300;
         let mut buf = Vec::with_capacity(12 + len);
         buf.extend_from_slice(&(rng.next_u32() % 64).to_le_bytes());
@@ -159,7 +172,7 @@ fn valid_header_garbage_payload_never_panics() {
 /// upload whose header claims 2^32−1 values in a 20-byte payload.
 #[test]
 fn hostile_counts_rejected_without_allocation() {
-    for tag in [5u32, 6, 7] {
+    for tag in [5u32, 6, 7, 8] {
         let mut buf = Vec::new();
         buf.extend_from_slice(&1u32.to_le_bytes());
         buf.extend_from_slice(&tag.to_le_bytes());
@@ -169,6 +182,7 @@ fn hostile_counts_rejected_without_allocation() {
         assert!(wire::decode_dense_upload(&buf).is_err());
         assert!(wire::decode_unmask_request(&buf).is_err());
         assert!(wire::decode_unmask_response(&buf).is_err());
+        assert!(wire::decode_group_aggregate(&buf).is_err());
     }
 }
 
