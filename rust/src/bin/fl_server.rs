@@ -1,0 +1,114 @@
+//! `fl_server` — long-running multi-cohort round service over a real
+//! TCP session socket (see [`sparsesecagg::service`] for the lifecycle
+//! and deadline semantics).
+//!
+//! Examples:
+//!   fl_server --cohorts 3 --users 16 --rounds 5
+//!   fl_server --listen_addr 127.0.0.1:7700 --heartbeat_s 2 \
+//!             --collect_window_s 0.5
+//!                               # hold each round's membership window
+//!                               # open half a second for live clients
+//!   fl_server --journal_dir srv/journal --cohorts 2
+//!                               # durable per-cohort journals
+//!                               # (srv/journal/cohort-<i>/); kill the
+//!                               # process mid-round and rerun with the
+//!                               # same flags to resume every cohort
+//!   fl_server --journal_dir srv/journal --crash_plan wave-closed:0:torn
+//!                               # seeded kill-mid-round (exit 3), then
+//!                               # rerun without --crash_plan to recover
+//!
+//! Knobs come from the same config-file + `--key value` override chain
+//! as `sparsesecagg run`; `--d` sets the synthetic gradient dimension
+//! and `--collect_window_s` the wall-clock membership window (both
+//! service-local, not config-file keys).
+
+use anyhow::Result;
+use sparsesecagg::cli::Args;
+use sparsesecagg::config::Config;
+use sparsesecagg::journal;
+use sparsesecagg::metrics::Table;
+use sparsesecagg::service::{RoundService, ServiceConfig};
+
+/// Flags the service consumes directly rather than through the config
+/// layer's known-key check.
+const LOCAL_FLAGS: &[&str] = &["config", "d", "collect_window_s"];
+
+fn main() {
+    match real_main() {
+        Ok(0) => {}
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn real_main() -> Result<i32> {
+    let args = Args::from_env()?;
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::default(),
+    };
+    let overrides: std::collections::HashMap<String, String> = args
+        .flags
+        .iter()
+        .filter(|(k, _)| !LOCAL_FLAGS.contains(&k.as_str()))
+        .map(|(k, v)| (k.clone(), v.clone()))
+        .collect();
+    cfg.merge(&overrides);
+    let fl = cfg.to_fl_config()?;
+    let d = args.parse_flag("d", 256usize)?;
+    let mut sc = ServiceConfig::from_fl(&fl, d);
+    sc.collect_window_s = args.parse_flag("collect_window_s", 0.0f64)?;
+
+    // Auto-resume: any existing cohort namespace under the journal
+    // root means a previous server died with rounds in flight.
+    let resume = !sc.journal_root.is_empty()
+        && !journal::list_namespaces(std::path::Path::new(&sc.journal_root))
+            .map_err(|e| anyhow::anyhow!(
+                "listing {}: {e}", sc.journal_root))?
+            .is_empty();
+    let mut svc = if resume {
+        println!("# resuming cohorts from {}", sc.journal_root);
+        RoundService::resume(sc)?
+    } else {
+        RoundService::start(sc)?
+    };
+    println!("# fl_server listening on {}", svc.local_addr());
+
+    let report = svc.run_to_completion()?;
+
+    let mut t = Table::new(
+        "round outcomes",
+        &["cohort", "round", "dropped", "retries", "resumed", "agg[0]"],
+    );
+    for o in &report.outcomes {
+        t.row(&[
+            o.cohort.to_string(),
+            o.round.to_string(),
+            o.dropped.to_string(),
+            o.retries.to_string(),
+            if o.resumed { "yes".into() } else { "-".into() },
+            format!("{:.5}", o.aggregate.first().copied().unwrap_or(0.0)),
+        ]);
+    }
+    println!("{}", t.render());
+    if report.malformed_session_frames > 0 {
+        println!("# dropped {} malformed session frame(s)",
+                 report.malformed_session_frames);
+    }
+    for c in &report.paused {
+        println!("# cohort {c} paused (journal flushed, resumable)");
+    }
+    let mut code = 0;
+    for (c, why) in &report.failed {
+        eprintln!("cohort {c} failed: {why}");
+        // An injected crash (--crash_plan) is the simulated kill: the
+        // namespaced journal is valid up to the last synced record, so
+        // the whole server is resumable — same exit status as the
+        // `sparsesecagg run` crash path.
+        code = if why.contains("injected crash") { 3 } else { 1 };
+    }
+    Ok(code)
+}

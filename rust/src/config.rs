@@ -81,7 +81,8 @@ impl Config {
             "byzantine", "max_retries", "rate_limit", "net_latency_s",
             "net_jitter_s", "net_loss", "net_bandwidth_bps",
             "phase_deadline_s", "journal_dir", "journal_snapshot_every",
-            "crash_plan", "groups", "group_size",
+            "crash_plan", "groups", "group_size", "listen_addr",
+            "cohorts", "heartbeat_s",
         ];
         for k in self.values.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -185,6 +186,26 @@ impl Config {
                 g
             },
             group_size: self.parse("group_size", d.group_size)?,
+            listen_addr: self
+                .get("listen_addr")
+                .unwrap_or(&d.listen_addr)
+                .to_string(),
+            cohorts: {
+                let c: usize = self.parse("cohorts", d.cohorts)?;
+                if c == 0 {
+                    bail!("config key cohorts=0: want ≥ 1 (the round \
+                           service hosts at least one cohort)");
+                }
+                c
+            },
+            heartbeat_s: {
+                let h: f64 = self.parse("heartbeat_s", d.heartbeat_s)?;
+                if !h.is_finite() || h < 0.0 {
+                    bail!("config key heartbeat_s={h}: want a finite \
+                           interval ≥ 0 (0 = heartbeat aging off)");
+                }
+                h
+            },
         })
     }
 }
@@ -332,6 +353,33 @@ mod tests {
         assert!(c.to_fl_config().is_err());
         let mut c = Config::default();
         c.set("group_size", "some");
+        assert!(c.to_fl_config().is_err());
+    }
+
+    #[test]
+    fn service_knobs_parse_with_defaults_and_bounds() {
+        let fl = Config::default().to_fl_config().unwrap();
+        assert_eq!(fl.listen_addr, ""); // service default 127.0.0.1:0
+        assert_eq!(fl.cohorts, 1);
+        assert_eq!(fl.heartbeat_s, 0.0); // heartbeat aging off
+        let mut c = Config::default();
+        c.set("listen_addr", "127.0.0.1:7700");
+        c.set("cohorts", "3");
+        c.set("heartbeat_s", "2.5");
+        let fl = c.to_fl_config().unwrap();
+        assert_eq!(fl.listen_addr, "127.0.0.1:7700");
+        assert_eq!(fl.cohorts, 3);
+        assert!((fl.heartbeat_s - 2.5).abs() < 1e-12);
+        // A zero-cohort service has nothing to drive: rejected at
+        // config time, as are negative or non-finite heartbeats.
+        let mut c = Config::default();
+        c.set("cohorts", "0");
+        assert!(c.to_fl_config().is_err());
+        let mut c = Config::default();
+        c.set("heartbeat_s", "-1");
+        assert!(c.to_fl_config().is_err());
+        let mut c = Config::default();
+        c.set("heartbeat_s", "inf");
         assert!(c.to_fl_config().is_err());
     }
 

@@ -196,6 +196,34 @@ impl GroupedCoordinator {
         &self.groups[g]
     }
 
+    /// Attach one namespaced durable journal per group under `root`:
+    /// group g logs to `root/group-<g>/round.journal` (see the
+    /// multi-cohort namespacing contract in [`crate::journal`] — each
+    /// group's log is a complete flat journal, so
+    /// [`Coordinator::from_journal`] on `root/group-<g>` rebuilds that
+    /// group's cohort independently). Namespacing is what makes G > 1
+    /// journaling safe: G journals never share a directory, so the
+    /// exclusive-ownership cleanup in [`crate::journal::Journal::open`]
+    /// and the in-process double-attach guard both keep holding.
+    pub fn attach_journals(&mut self, root: &std::path::Path,
+                           snapshot_every: u32) -> Result<()> {
+        for (g, c) in self.groups.iter_mut().enumerate() {
+            let mut j = crate::journal::Journal::create_namespaced(
+                root, &format!("group-{g}"))?;
+            j.snapshot_every = snapshot_every;
+            c.attach_journal(j)?;
+        }
+        Ok(())
+    }
+
+    /// Best-effort fsync of every group's journal — the grouped arm of
+    /// the graceful-shutdown contract ([`Coordinator::sync_journal`]).
+    pub fn sync_journals(&mut self) {
+        for c in &mut self.groups {
+            c.sync_journal();
+        }
+    }
+
     /// Thread budget: `groups = 1` passes `threads` straight through
     /// (the flat behavior); with G > 1 each group's round-compute pool
     /// gets `max(1, threads / G)` workers so the G concurrent rounds
@@ -527,6 +555,39 @@ mod tests {
         assert_eq!(mask.iter().filter(|&&h| !h).count(), 4);
         assert!(mask[..8].iter().all(|&h| h)
                 && mask[12..].iter().all(|&h| h));
+    }
+
+    /// Per-group namespaced journals: a grouped run leaves G complete,
+    /// independently reopenable flat journals under one root — the
+    /// contract that lifted the `groups > 1 ⇒ no journal_dir` refusal.
+    #[test]
+    fn grouped_journals_namespace_per_group() {
+        let p = params(8, 60, 0.5);
+        let root = std::env::temp_dir().join(format!(
+            "ssa_grouped_journal_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let mut grouped = GroupedCoordinator::new_sparse(
+            p, 13, GroupLayout::groups(p.n, 2));
+        grouped.attach_journals(&root, 0).unwrap();
+        let ys = grads(p.n, p.d, 2);
+        let betas = vec![1.0 / p.n as f64; p.n];
+        let out = grouped.run_round(0, &ys, &betas, &[]).unwrap();
+        assert!(out.failed.is_empty());
+        grouped.sync_journals();
+        // Release the in-process attach guard before reopening.
+        drop(grouped);
+        let ns = crate::journal::list_namespaces(&root).unwrap();
+        assert_eq!(ns, vec!["group-0".to_string(),
+                            "group-1".to_string()]);
+        for n in &ns {
+            let (c, replay) =
+                Coordinator::from_journal(&root.join(n)).unwrap();
+            assert_eq!(c.params.n, 4);
+            // The round completed durably in every group's log.
+            assert!(replay.is_none()
+                    || replay.as_ref().unwrap().completed);
+        }
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     /// Setup traffic merges per-group: a grouped user pays the n_g-user

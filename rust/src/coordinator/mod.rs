@@ -134,6 +134,16 @@ pub struct Coordinator {
     /// default) waits for all traffic, exactly the pre-deadline
     /// behavior. See [`PhaseDeadlines`].
     pub deadlines: Option<PhaseDeadlines>,
+    /// Cooperative shutdown poll, checked at each durable phase seal
+    /// (`UploadsClosed`, `WaveClosed`): when armed and it returns
+    /// `true`, the round stops with a typed [`ShutdownAtSeal`] error
+    /// after fsyncing the journal, leaving a bit-exactly resumable log
+    /// behind. `None` (the default) changes nothing — the historical
+    /// round-boundary-only polling. A plain `fn` pointer rather than a
+    /// closure so the hook is state-free and `Send`;
+    /// [`crate::fl::run_fl`] arms it with its process-wide flag and the
+    /// round service arms it per cohort.
+    pub shutdown_poll: Option<fn() -> bool>,
     /// Lazily-built persistent worker pool, reused across rounds.
     exec: Option<Executor>,
     /// The byte bus every protocol frame travels on (setup and rounds).
@@ -145,6 +155,29 @@ pub struct Coordinator {
     /// Durable round journal ([`crate::journal`]); `None` = off.
     journal: Option<Journal>,
 }
+
+/// Typed error for a cooperative shutdown honored at a durable phase
+/// seal ([`Coordinator::shutdown_poll`]). The journal (if attached) was
+/// fsynced before this surfaced, so [`Coordinator::from_journal`]
+/// resumes the interrupted round bit-exactly — the seal record is the
+/// replay boundary. `phase` names the seal the round stopped at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShutdownAtSeal {
+    /// Which durable seal honored the request: `"collecting"`
+    /// (`UploadsClosed`) or `"unmasking"` (`WaveClosed`).
+    pub phase: &'static str,
+}
+
+impl std::fmt::Display for ShutdownAtSeal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f,
+               "shutdown requested: round interrupted at the {} phase \
+                seal (journal synced, resumable)",
+               self.phase)
+    }
+}
+
+impl std::error::Error for ShutdownAtSeal {}
 
 fn default_threads(n: usize) -> usize {
     std::thread::available_parallelism()
@@ -235,7 +268,8 @@ macro_rules! run_unmask_with_recovery {
      $limiter:expr, $capture:expr, $params:expr, $kind:expr, $n:expr,
      $shard_cfg:expr, $mode:expr, $exec:expr, $round:expr,
      $max_retries:expr, $wave_budget:expr, $resp_waves:expr,
-     $journal:expr, $rp_waves:expr, $rp_completed:expr) => {{
+     $journal:expr, $rp_waves:expr, $rp_completed:expr,
+     $shutdown:expr) => {{
         $server.close_uploads();
         let mut retries = 0usize;
         let mut first_wave = true;
@@ -370,6 +404,19 @@ macro_rules! run_unmask_with_recovery {
                         j.sync()?;
                     }
                     $resp_waves.push((wave_down, wave_sizes));
+                    // Cooperative shutdown at the wave seal: the
+                    // `WaveClosed` record above is durably synced, so
+                    // the resumed round replays this wave's responses
+                    // and re-enters the recovery decision exactly
+                    // where the interrupted run stopped.
+                    if $shutdown.is_some_and(|f| f()) {
+                        if let Some(j) = $journal.as_mut() {
+                            let _ = j.sync();
+                        }
+                        return Err(ShutdownAtSeal {
+                            phase: "unmasking",
+                        }.into());
+                    }
                     $server.take_responses()
                 }
             };
@@ -540,6 +587,7 @@ impl Coordinator {
             max_retries: DEFAULT_MAX_RETRIES,
             rate_limit: 0,
             deadlines: None,
+            shutdown_poll: None,
             exec: None,
             bus,
             entropy,
@@ -624,6 +672,7 @@ impl Coordinator {
             max_retries: DEFAULT_MAX_RETRIES,
             rate_limit: 0,
             deadlines: None,
+            shutdown_poll: None,
             exec: None,
             bus,
             entropy,
@@ -754,6 +803,9 @@ impl Coordinator {
         let active: Vec<bool> = (0..n)
             .map(|i| !dropped.contains(&i) && !silenced[i])
             .collect();
+        // Copied out before the destructuring borrow: the seal-point
+        // shutdown polls below run while `self` is split into fields.
+        let shutdown_poll = self.shutdown_poll;
         let Coordinator { cohort, exec, bus, journal, .. } = &mut *self;
         let exec = exec.as_ref().expect("executor initialized");
         let bus: &mut dyn Transport = bus.as_mut();
@@ -880,13 +932,25 @@ impl Coordinator {
                         j.sync()?;
                     }
                 }
+                // Cooperative shutdown at the collecting seal: the
+                // `UploadsClosed` snapshot (live path) or the replayed
+                // seal is the durable boundary the resumed round
+                // re-enters the unmask phase from.
+                if shutdown_poll.is_some_and(|f| f()) {
+                    if let Some(j) = journal.as_mut() {
+                        let _ = j.sync();
+                    }
+                    return Err(ShutdownAtSeal {
+                        phase: "collecting",
+                    }.into());
+                }
                 // --- Unmask with equivocator-exclusion recovery.
                 let mut resp_waves: Vec<(usize, Vec<usize>)> = Vec::new();
                 let agg = run_unmask_with_recovery!(
                     server, users, bus, ledger, adv, limiter, capture,
                     params, kind, n, shard_cfg, mode, exec, round,
                     max_retries, wave_budget, resp_waves,
-                    journal, rp_waves, rp_completed);
+                    journal, rp_waves, rp_completed, shutdown_poll);
                 ledger.server_compute_s += ts.elapsed_s();
                 (agg, upload_bytes, resp_waves)
             }
@@ -961,12 +1025,20 @@ impl Coordinator {
                         j.sync()?;
                     }
                 }
+                if shutdown_poll.is_some_and(|f| f()) {
+                    if let Some(j) = journal.as_mut() {
+                        let _ = j.sync();
+                    }
+                    return Err(ShutdownAtSeal {
+                        phase: "collecting",
+                    }.into());
+                }
                 let mut resp_waves: Vec<(usize, Vec<usize>)> = Vec::new();
                 let agg = run_unmask_with_recovery!(
                     server, users, bus, ledger, adv, limiter, capture,
                     params, kind, n, shard_cfg, mode, exec, round,
                     max_retries, wave_budget, resp_waves,
-                    journal, rp_waves, rp_completed);
+                    journal, rp_waves, rp_completed, shutdown_poll);
                 ledger.server_compute_s += ts.elapsed_s();
                 (agg, upload_bytes, resp_waves)
             }

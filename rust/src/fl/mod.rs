@@ -6,7 +6,8 @@
 pub mod experiments;
 pub mod trainer;
 
-use crate::coordinator::{Coordinator, GroupedCoordinator, ProtocolKind};
+use crate::coordinator::{Coordinator, GroupedCoordinator, ProtocolKind,
+                         ShutdownAtSeal};
 use crate::data::{self, Dataset, DatasetKind, UserShard};
 use crate::network::draw_dropouts;
 use crate::protocol::Params;
@@ -129,6 +130,20 @@ pub struct FlConfig {
     /// and the roster splits into ⌈N/n⌉ even groups, so per-user round
     /// bytes scale with n instead of N. 0 = use `groups`.
     pub group_size: usize,
+    /// TCP listen address for the long-running round service
+    /// ([`crate::service`] / the `fl_server` binary): `host:port`,
+    /// port 0 = OS-assigned. Ignored by the in-process [`run_fl`]
+    /// path; empty = the service default `127.0.0.1:0`.
+    pub listen_addr: String,
+    /// Number of concurrent cohorts the round service hosts, each an
+    /// independent [`Coordinator`] with its own namespaced journal
+    /// (`cohort-<i>`). Must be ≥ 1. Ignored by [`run_fl`].
+    pub cohorts: usize,
+    /// Wall-clock heartbeat interval for service clients, seconds: a
+    /// connected client silent for 3 intervals is aged out (treated as
+    /// departed — the dropout path, never a stalled quorum). 0 =
+    /// heartbeat aging off. Ignored by [`run_fl`].
+    pub heartbeat_s: f64,
 }
 
 impl Default for FlConfig {
@@ -171,6 +186,9 @@ impl Default for FlConfig {
             crash_plan: String::new(),
             groups: 1,
             group_size: 0,
+            listen_addr: String::new(),
+            cohorts: 1,
+            heartbeat_s: 0.0,
         }
     }
 }
@@ -185,12 +203,13 @@ enum RoundDriver {
 }
 
 impl RoundDriver {
-    /// Journal sync is a flat-only concern: grouped runs refuse
-    /// `journal_dir` at construction time, so there is never a journal
-    /// to flush behind the grouped arm.
+    /// Flush every journal behind the driver: the flat coordinator's
+    /// single journal, or each group's namespaced one
+    /// (`<journal_dir>/group-<g>/`) behind the grouped arm.
     fn sync_journal(&mut self) {
-        if let RoundDriver::Flat(c) = self {
-            c.sync_journal();
+        match self {
+            RoundDriver::Flat(c) => c.sync_journal(),
+            RoundDriver::Grouped(gc) => gc.sync_journals(),
         }
     }
 }
@@ -225,9 +244,13 @@ pub struct FlRun {
 }
 
 /// Cooperative shutdown flag for [`run_fl`]. The round loop polls it at
-/// every round boundary and exits gracefully — journal flushed and
-/// fsynced, typed `halted` marker in the result — instead of tearing
-/// down mid-append. The vendored crate set has no signal-handling
+/// every round boundary AND — through
+/// [`crate::coordinator::Coordinator::shutdown_poll`] — at every
+/// durable phase seal inside a round (`UploadsClosed` / `WaveClosed`),
+/// so a request during a long Collecting phase exits at the next seal
+/// with the journal flushed and fsynced instead of waiting for the
+/// round to complete. Either way the run exits gracefully — typed
+/// `halted` marker in the result — never tearing down mid-append. The vendored crate set has no signal-handling
 /// dependency, so the embedder is expected to wire its SIGINT/SIGTERM
 /// handler to [`request_shutdown`]; the "signal during append" case is
 /// covered by the crash injector's `Torn` mode, which models exactly a
@@ -235,7 +258,9 @@ pub struct FlRun {
 static SHUTDOWN: std::sync::atomic::AtomicBool =
     std::sync::atomic::AtomicBool::new(false);
 
-/// Ask the running [`run_fl`] loop to stop at the next round boundary.
+/// Ask the running [`run_fl`] loop to stop at the next durable
+/// boundary: the next round boundary, or the next phase seal of the
+/// round in flight (flat driver), whichever comes first.
 pub fn request_shutdown() {
     SHUTDOWN.store(true, std::sync::atomic::Ordering::SeqCst);
 }
@@ -304,17 +329,18 @@ pub fn run_fl(cfg: &FlConfig, trainer: &Trainer) -> Result<FlRun> {
         crate::protocol::group::GroupLayout::groups(n, cfg.groups.max(1))
     };
     let mut driver = if layout.count() > 1 {
-        // The grouped driver is frame-driven end to end and the durable
-        // journal is single-cohort — refuse the incompatible knobs
-        // loudly instead of silently running something else.
+        // The grouped driver is frame-driven end to end — refuse the
+        // incompatible knobs loudly instead of silently running
+        // something else. (`journal_dir` IS compatible: each group
+        // gets its own namespaced journal below.)
         anyhow::ensure!(
             !cfg.use_hlo_quantmask,
             "groups > 1 runs the frame-driven grouped driver; it is \
              incompatible with use_hlo_quantmask");
         anyhow::ensure!(
-            cfg.journal_dir.is_empty(),
-            "journal_dir requires the flat single-cohort round \
-             (grouped journaling is a planned follow-up)");
+            cfg.crash_plan.is_empty(),
+            "crash_plan injects faults into the single flat journal; \
+             with groups > 1 run the flat driver");
         let mk_bus = |g: usize, n_g: usize|
                      -> Box<dyn crate::transport::Transport> {
             if impaired {
@@ -350,6 +376,17 @@ pub fn run_fl(cfg: &FlConfig, trainer: &Trainer) -> Result<FlRun> {
         if cfg.threads > 0 {
             gc.set_threads(cfg.threads);
         }
+        if !cfg.journal_dir.is_empty() {
+            // One namespaced journal per group under the shared root:
+            // `<journal_dir>/group-<g>/round.journal`. Each is a
+            // complete flat journal, so a crashed grouped run leaves G
+            // independently resumable logs behind.
+            gc.attach_journals(std::path::Path::new(&cfg.journal_dir),
+                               cfg.journal_snapshot_every)
+                .map_err(|e| anyhow::anyhow!(
+                    "creating per-group journals in {}: {e}",
+                    cfg.journal_dir))?;
+        }
         RoundDriver::Grouped(gc)
     } else {
         let bus: Box<dyn crate::transport::Transport> = if impaired {
@@ -382,6 +419,12 @@ pub fn run_fl(cfg: &FlConfig, trainer: &Trainer) -> Result<FlRun> {
         if cfg.threads > 0 {
             coord.threads = cfg.threads;
         }
+        // Seal-point shutdown polling: a [`request_shutdown`] during a
+        // long round is honored at the next durable phase seal
+        // (`UploadsClosed` / `WaveClosed`) instead of waiting for the
+        // round to complete — the typed [`ShutdownAtSeal`] the round
+        // surfaces is converted to a graceful `halted` below.
+        coord.shutdown_poll = Some(shutdown_requested);
         if !cfg.journal_dir.is_empty() {
             let mut j = crate::journal::Journal::create(
                 std::path::Path::new(&cfg.journal_dir))
@@ -562,8 +605,15 @@ pub fn run_fl(cfg: &FlConfig, trainer: &Trainer) -> Result<FlRun> {
                 // Graceful teardown on any round failure (fatal finish,
                 // injected crash, unrecoverable quorum loss): leave the
                 // journal durably synced so the round stays resumable,
-                // then surface the typed error.
+                // then surface the typed error. A shutdown honored at a
+                // phase seal is not a failure — the round stopped at a
+                // durable boundary with the journal already fsynced, so
+                // the run halts gracefully instead of erroring.
                 driver.sync_journal();
+                if e.downcast_ref::<ShutdownAtSeal>().is_some() {
+                    halted = Some("interrupted");
+                    break;
+                }
                 return Err(e);
             }
         };

@@ -73,10 +73,27 @@
 //! with a typed [`JournalError::Crashed`]; the crash-restart
 //! differential suite (`tests/crash_recovery.rs`) pins every site to a
 //! bit-exact resume.
+//!
+//! # Multi-cohort namespacing
+//!
+//! A journal **owns its directory**: open/create delete the compaction
+//! scratch file unconditionally and compaction renames over the log, so
+//! two journals in one directory would destroy each other's files. Two
+//! guards enforce that exclusivity. First, every attach registers the
+//! canonical journal path in an in-process registry and a second
+//! create/open of a path that is still attached is refused loudly with
+//! [`JournalError::Busy`] — a host cannot accidentally point two live
+//! cohorts at one log. Second, hosts that drive many cohorts give each
+//! one its own namespace *subdirectory* under a shared root
+//! ([`Journal::create_namespaced`] / [`Journal::open_namespaced`], one
+//! `root/<ns>/round.journal` per cohort); [`list_namespaces`] rediscovers
+//! them on restart so a killed multi-cohort server can resume every
+//! in-flight cohort from its own log.
 
 use std::fs::{self, File, OpenOptions};
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
+use std::sync::{Mutex, PoisonError};
 
 use crate::protocol::Params;
 
@@ -118,6 +135,10 @@ pub enum JournalError {
     Corrupt(String),
     /// Injected crash from the armed [`CrashPlan`].
     Crashed,
+    /// The journal at this path is already attached by a live
+    /// [`Journal`] in this process — a second attach would let two
+    /// cohorts truncate and compact over each other's log.
+    Busy(PathBuf),
 }
 
 impl std::fmt::Display for JournalError {
@@ -128,6 +149,11 @@ impl std::fmt::Display for JournalError {
             JournalError::Crashed => {
                 write!(f, "injected crash: process model killed at the \
                            armed journal site (journal left resumable)")
+            }
+            JournalError::Busy(p) => {
+                write!(f, "journal busy: {} is already attached in this \
+                           process — give each cohort its own namespaced \
+                           journal directory", p.display())
             }
         }
     }
@@ -472,8 +498,59 @@ pub fn decode_stream(
 // The journal file
 // ---------------------------------------------------------------------
 
+/// In-process attach registry (canonical journal file paths with a live
+/// [`Journal`]). The exclusivity guard of the module-level namespacing
+/// contract: attach is create/open, release is [`Drop`].
+static ATTACHED: Mutex<Vec<PathBuf>> = Mutex::new(Vec::new());
+
+fn registry() -> std::sync::MutexGuard<'static, Vec<PathBuf>> {
+    // Poison can only come from a panic between two plain Vec ops in
+    // attach/detach below; the Vec itself is structurally intact.
+    ATTACHED.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn attach_path(path: &Path) -> Result<(), JournalError> {
+    let mut reg = registry();
+    if reg.iter().any(|p| p == path) {
+        return Err(JournalError::Busy(path.to_path_buf()));
+    }
+    reg.push(path.to_path_buf());
+    Ok(())
+}
+
+fn detach_path(path: &Path) {
+    let mut reg = registry();
+    if let Some(i) = reg.iter().position(|p| p == path) {
+        reg.swap_remove(i);
+    }
+}
+
+/// List the namespace subdirectories under `root` that hold a journal
+/// file, sorted (deterministic resume order). A missing root is an
+/// empty host, not an error.
+pub fn list_namespaces(root: &Path) -> Result<Vec<String>, JournalError> {
+    let entries = match fs::read_dir(root) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(Vec::new())
+        }
+        Err(e) => return Err(e.into()),
+    };
+    let mut out = Vec::new();
+    for entry in entries {
+        let entry = entry?;
+        if entry.path().join(FILE_NAME).is_file() {
+            if let Ok(name) = entry.file_name().into_string() {
+                out.push(name);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
 /// Append-only journal over `dir/round.journal`. See the module docs
-/// for the durability model.
+/// for the durability model and the multi-cohort namespacing contract.
 pub struct Journal {
     path: PathBuf,
     file: File,
@@ -488,60 +565,98 @@ pub struct Journal {
 
 impl Journal {
     /// Create a fresh (empty) journal in `dir`, creating the directory
-    /// and truncating any previous journal there.
+    /// and truncating any previous journal there. Refuses with
+    /// [`JournalError::Busy`] while another live [`Journal`] is
+    /// attached to the same path — the refusal comes *before* the
+    /// truncate, so a double-attach can never destroy the live log.
     pub fn create(dir: &Path) -> Result<Journal, JournalError> {
         fs::create_dir_all(dir)?;
-        let _ = fs::remove_file(dir.join(TMP_NAME));
-        let path = dir.join(FILE_NAME);
-        let file = OpenOptions::new()
-            .create(true)
-            .write(true)
-            .truncate(true)
-            .open(&path)?;
-        Ok(Journal {
-            path,
-            file,
-            snapshot_every: 0,
-            plan: None,
-            round_bytes: 0,
-        })
+        let path = fs::canonicalize(dir)?.join(FILE_NAME);
+        attach_path(&path)?;
+        let built = (|| {
+            let _ = fs::remove_file(path.with_file_name(TMP_NAME));
+            let file = OpenOptions::new()
+                .create(true)
+                .write(true)
+                .truncate(true)
+                .open(&path)?;
+            Ok(Journal {
+                path: path.clone(),
+                file,
+                snapshot_every: 0,
+                plan: None,
+                round_bytes: 0,
+            })
+        })();
+        if built.is_err() {
+            detach_path(&path);
+        }
+        built
+    }
+
+    /// [`Journal::create`] in the `ns` namespace subdirectory of a
+    /// shared `root` — one cohort's log on a multi-cohort host.
+    pub fn create_namespaced(
+        root: &Path,
+        ns: &str,
+    ) -> Result<Journal, JournalError> {
+        Self::create(&root.join(ns))
     }
 
     /// Open an existing journal for resume: scan the stream, truncate
     /// any torn tail back to the last valid record boundary, and return
     /// the journal (positioned to append), the surviving records, and
     /// how many torn bytes were dropped. A CRC-valid but undecodable
-    /// record is [`JournalError::Corrupt`] — tampering, not tearing.
+    /// record is [`JournalError::Corrupt`] — tampering, not tearing —
+    /// and a path with a live [`Journal`] attached is
+    /// [`JournalError::Busy`] before any file is touched.
     pub fn open(
         dir: &Path,
     ) -> Result<(Journal, Vec<Record>, usize), JournalError> {
-        // An orphaned compaction tmp means the crash hit between tmp
-        // write and rename: the original journal is still authoritative.
-        let _ = fs::remove_file(dir.join(TMP_NAME));
-        let path = dir.join(FILE_NAME);
-        let buf = fs::read(&path)?;
-        let (recs, valid_end, err) = decode_stream(&buf);
-        if let Some(e) = err {
-            return Err(e);
+        let path = fs::canonicalize(dir)?.join(FILE_NAME);
+        attach_path(&path)?;
+        let built = (|| {
+            // An orphaned compaction tmp means the crash hit between
+            // tmp write and rename: the original journal is still
+            // authoritative. Safe to delete exactly because the attach
+            // guard proves no live sibling owns this directory.
+            let _ = fs::remove_file(path.with_file_name(TMP_NAME));
+            let buf = fs::read(&path)?;
+            let (recs, valid_end, err) = decode_stream(&buf);
+            if let Some(e) = err {
+                return Err(e);
+            }
+            let torn = buf.len() - valid_end;
+            if torn > 0 {
+                let f = OpenOptions::new().write(true).open(&path)?;
+                f.set_len(valid_end as u64)?;
+                f.sync_all()?;
+            }
+            let file = OpenOptions::new().append(true).open(&path)?;
+            Ok((
+                Journal {
+                    path: path.clone(),
+                    file,
+                    snapshot_every: 0,
+                    plan: None,
+                    round_bytes: 0,
+                },
+                recs,
+                torn,
+            ))
+        })();
+        if built.is_err() {
+            detach_path(&path);
         }
-        let torn = buf.len() - valid_end;
-        if torn > 0 {
-            let f = OpenOptions::new().write(true).open(&path)?;
-            f.set_len(valid_end as u64)?;
-            f.sync_all()?;
-        }
-        let file = OpenOptions::new().append(true).open(&path)?;
-        Ok((
-            Journal {
-                path,
-                file,
-                snapshot_every: 0,
-                plan: None,
-                round_bytes: 0,
-            },
-            recs,
-            torn,
-        ))
+        built
+    }
+
+    /// [`Journal::open`] in the `ns` namespace subdirectory of `root`.
+    pub fn open_namespaced(
+        root: &Path,
+        ns: &str,
+    ) -> Result<(Journal, Vec<Record>, usize), JournalError> {
+        Self::open(&root.join(ns))
     }
 
     /// Arm a crash plan. Tests and the `crash_plan` config knob only.
@@ -629,6 +744,12 @@ impl Journal {
     /// Drain the bytes-appended counter (per-round ledger accounting).
     pub fn take_round_bytes(&mut self) -> usize {
         std::mem::take(&mut self.round_bytes)
+    }
+}
+
+impl Drop for Journal {
+    fn drop(&mut self) {
+        detach_path(&self.path);
     }
 }
 
@@ -1098,6 +1219,71 @@ mod tests {
             Record::SetupComplete { roster: vec![1, 2] },
         ];
         assert!(parse_state(&bad).is_err());
+    }
+
+    /// Double-attach is refused loudly, and — critically — *before*
+    /// the truncating open, so the live journal's bytes survive the
+    /// refused attempt. Drop releases the path for reattach.
+    #[test]
+    fn double_attach_refused_without_destroying_the_log() {
+        let dir = tdir("double-attach");
+        let mut j = Journal::create(&dir).unwrap();
+        j.append(&Record::RoundStart { round: 0 }).unwrap();
+        j.sync().unwrap();
+        let len_before = fs::metadata(dir.join(FILE_NAME)).unwrap().len();
+        assert!(len_before > 0);
+        // A second create AND a second open are both refused...
+        assert!(matches!(Journal::create(&dir),
+                         Err(JournalError::Busy(_))));
+        assert!(matches!(Journal::open(&dir),
+                         Err(JournalError::Busy(_))));
+        // ...and the live log was not truncated by the attempts.
+        assert_eq!(fs::metadata(dir.join(FILE_NAME)).unwrap().len(),
+                   len_before);
+        drop(j);
+        // Release on drop: open succeeds and sees the record.
+        let (_, recs, _) = Journal::open(&dir).unwrap();
+        assert_eq!(recs, vec![Record::RoundStart { round: 0 }]);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Namespaced journals under one root are fully isolated: both can
+    /// be live at once, compaction scratch files cannot collide, and
+    /// restart rediscovers every namespace.
+    #[test]
+    fn namespaced_journals_share_a_root_without_interference() {
+        let root = tdir("namespaced");
+        let mut a = Journal::create_namespaced(&root, "cohort-0").unwrap();
+        let mut b = Journal::create_namespaced(&root, "cohort-1").unwrap();
+        a.append(&Record::RoundStart { round: 0 }).unwrap();
+        b.append(&Record::RoundStart { round: 7 }).unwrap();
+        // Cohort 0 compacts while cohort 1 is live: its tmp/rename
+        // cycle must not touch cohort 1's files.
+        let meta = Record::Meta {
+            kind: 0, n: 2, d: 8, alpha: 1.0, theta: 0.0, c: 64.0,
+            entropy: 1,
+        };
+        let setup = Record::SetupComplete { roster: vec![1, 2] };
+        let prefix = vec![
+            meta, setup, Record::Snapshot { through_round: 0 },
+        ];
+        a.compact(&prefix).unwrap();
+        b.sync().unwrap();
+        drop(a);
+        drop(b);
+        assert_eq!(list_namespaces(&root).unwrap(),
+                   vec!["cohort-0".to_string(), "cohort-1".to_string()]);
+        let (_, recs_b, _) = Journal::open_namespaced(&root, "cohort-1")
+            .unwrap();
+        assert_eq!(recs_b, vec![Record::RoundStart { round: 7 }]);
+        let (_, recs_a, _) = Journal::open_namespaced(&root, "cohort-0")
+            .unwrap();
+        assert_eq!(recs_a, prefix);
+        // A root with no journals (or no directory at all) is empty.
+        assert_eq!(
+            list_namespaces(&tdir("namespaced-missing")).unwrap(),
+            Vec::<String>::new());
+        fs::remove_dir_all(&root).unwrap();
     }
 
     #[test]

@@ -51,6 +51,7 @@ pub mod prg;
 pub mod protocol;
 pub mod quantize;
 pub mod runtime;
+pub mod service;
 pub mod shamir;
 pub mod sparsify;
 pub mod testutil;

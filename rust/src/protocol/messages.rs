@@ -158,6 +158,61 @@ impl ModelBroadcast {
     }
 }
 
+// ---- service-lifecycle frames (no protocol payload) -------------------
+//
+// The round service (`crate::service`) runs many cohorts behind one
+// listener; these frames carry the *session* half of the conversation —
+// which cohort a connection belongs to, whether it is still alive, and
+// whether it left on purpose. They never enter the round state machine:
+// the coordinator sees their effects only as membership (late/absent ⇒
+// dropout), so the simulated differential suites are untouched.
+
+/// Join (client → server): bind this connection to `cohort` as user
+/// `id`. Re-sent on reconnect; the service re-binds the endpoint and the
+/// in-flight round continues treating the user by its roster identity.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Join {
+    pub id: usize,
+    /// Cohort index on the hosting service.
+    pub cohort: u32,
+}
+
+impl Join {
+    pub fn wire_bytes(&self) -> usize {
+        FRAME_BYTES + 4
+    }
+}
+
+/// Heartbeat (client → server): liveness beacon. `seq` increases per
+/// beacon so a late-reordered heartbeat can never resurrect a connection
+/// the service already aged out.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Heartbeat {
+    pub id: usize,
+    pub seq: u64,
+}
+
+impl Heartbeat {
+    pub fn wire_bytes(&self) -> usize {
+        FRAME_BYTES + 8
+    }
+}
+
+/// Leave (client → server): graceful departure from `cohort`. The
+/// service treats it as an immediate, *intentional* dropout — same
+/// degradation path as a missed deadline, just without waiting for one.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Leave {
+    pub id: usize,
+    pub cohort: u32,
+}
+
+impl Leave {
+    pub fn wire_bytes(&self) -> usize {
+        FRAME_BYTES + 4
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -57,6 +57,11 @@ pub enum Tag {
     UnmaskRequest = 6,
     UnmaskResponse = 7,
     GroupAggregate = 8,
+    // Service-lifecycle frames (session membership, not round payload;
+    // see `super::messages` and `crate::service`).
+    Heartbeat = 9,
+    Join = 10,
+    Leave = 11,
 }
 
 impl Tag {
@@ -70,6 +75,9 @@ impl Tag {
             6 => Tag::UnmaskRequest,
             7 => Tag::UnmaskResponse,
             8 => Tag::GroupAggregate,
+            9 => Tag::Heartbeat,
+            10 => Tag::Join,
+            11 => Tag::Leave,
             other => bail!("unknown message tag {other}"),
         })
     }
@@ -270,6 +278,24 @@ pub fn encode_group_aggregate(m: &GroupAggregate) -> Vec<u8> {
     w.finish()
 }
 
+pub fn encode_join(m: &Join) -> Vec<u8> {
+    let mut w = W::frame(m.id as u32, Tag::Join);
+    w.u32(m.cohort);
+    w.finish()
+}
+
+pub fn encode_heartbeat(m: &Heartbeat) -> Vec<u8> {
+    let mut w = W::frame(m.id as u32, Tag::Heartbeat);
+    w.u64(m.seq);
+    w.finish()
+}
+
+pub fn encode_leave(m: &Leave) -> Vec<u8> {
+    let mut w = W::frame(m.id as u32, Tag::Leave);
+    w.u32(m.cohort);
+    w.finish()
+}
+
 // ---- decoders ---------------------------------------------------------
 
 fn payload(buf: &[u8], want: Tag) -> Result<(u32, R<'_>)> {
@@ -389,6 +415,27 @@ pub fn decode_group_aggregate(buf: &[u8]) -> Result<GroupAggregate> {
     }
     ensure!(r.pos == buf.len(), "trailing bytes in group aggregate");
     Ok(GroupAggregate { group: group as usize, values })
+}
+
+pub fn decode_join(buf: &[u8]) -> Result<Join> {
+    let (sender, mut r) = payload(buf, Tag::Join)?;
+    let cohort = r.u32()?;
+    ensure!(r.pos == buf.len(), "trailing bytes in join");
+    Ok(Join { id: sender as usize, cohort })
+}
+
+pub fn decode_heartbeat(buf: &[u8]) -> Result<Heartbeat> {
+    let (sender, mut r) = payload(buf, Tag::Heartbeat)?;
+    let seq = r.u64()?;
+    ensure!(r.pos == buf.len(), "trailing bytes in heartbeat");
+    Ok(Heartbeat { id: sender as usize, seq })
+}
+
+pub fn decode_leave(buf: &[u8]) -> Result<Leave> {
+    let (sender, mut r) = payload(buf, Tag::Leave)?;
+    let cohort = r.u32()?;
+    ensure!(r.pos == buf.len(), "trailing bytes in leave");
+    Ok(Leave { id: sender as usize, cohort })
 }
 
 #[cfg(test)]
@@ -574,6 +621,36 @@ mod tests {
         let len = (long.len() - FRAME_BYTES) as u32;
         long[8..12].copy_from_slice(&len.to_le_bytes());
         assert!(decode_sparse_upload(&long).is_err());
+    }
+
+    #[test]
+    fn service_frames_roundtrip_and_size() {
+        let j = Join { id: 11, cohort: 3 };
+        let buf = encode_join(&j);
+        assert_eq!(buf.len(), j.wire_bytes(), "size accounting mismatch");
+        assert_eq!(decode_join(&buf).unwrap(), j);
+
+        let h = Heartbeat { id: 11, seq: u64::MAX - 1 };
+        let buf = encode_heartbeat(&h);
+        assert_eq!(buf.len(), h.wire_bytes(), "size accounting mismatch");
+        assert_eq!(decode_heartbeat(&buf).unwrap(), h);
+
+        let l = Leave { id: 11, cohort: 3 };
+        let buf = encode_leave(&l);
+        assert_eq!(buf.len(), l.wire_bytes(), "size accounting mismatch");
+        assert_eq!(decode_leave(&buf).unwrap(), l);
+
+        // Join and Leave share a payload shape but not a tag: the
+        // cross-decode must fail on the tag check, never alias.
+        assert!(decode_leave(&encode_join(&j)).is_err());
+        assert!(decode_join(&encode_leave(&l)).is_err());
+
+        // Trailing bytes rejected (exact-consumption check).
+        let mut long = encode_heartbeat(&h);
+        long.extend_from_slice(&9u32.to_le_bytes());
+        let len = (long.len() - FRAME_BYTES) as u32;
+        long[8..12].copy_from_slice(&len.to_le_bytes());
+        assert!(decode_heartbeat(&long).is_err());
     }
 
     /// Bitmap padding bits beyond `d` must be zero — a hostile frame

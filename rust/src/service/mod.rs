@@ -1,0 +1,1045 @@
+//! Long-running round service: many concurrent cohorts, each driven
+//! through the existing validating [`Coordinator`] state machine, with
+//! a real socket session layer on top (ROADMAP item 1).
+//!
+//! The in-process drivers ([`crate::fl::run_fl`], the differential
+//! suites) run one cohort for a fixed number of rounds and exit. A
+//! deployment looks different: a server process hosts several cohorts
+//! at once, clients connect and disconnect over real sockets, rounds
+//! start on wall-clock schedules, and the process must survive being
+//! killed at any instant. This module is that half: an event-driven
+//! service loop multiplexing C cohorts, each a complete flat
+//! [`Coordinator`] with its own namespaced durable journal
+//! (`<root>/cohort-<i>/`, see the multi-cohort namespacing contract in
+//! [`crate::journal`]) — a killed server resumes *every* in-flight
+//! cohort bit-exactly via [`Coordinator::from_journal`].
+//!
+//! # Lifecycle: the per-cohort phase state machine
+//!
+//! ```text
+//!        ┌────── rounds exhausted ──────────────────► Complete
+//!        │
+//! Idle ──┴─► Collecting ──window closes──► Unmasking ─► (Recovery) ─┐
+//!  ▲                                          │                     │
+//!  │               round error ───────────────┴─► Failed            │
+//!  │               pause/stop at a phase seal ───► Paused           │
+//!  └────────────────── round complete ──────────────────────────────┘
+//! ```
+//!
+//! * **Idle** — between rounds. A stop request parks the cohort in
+//!   `Paused`; exhausted round budgets move it to `Complete`.
+//! * **Collecting** — the wall-clock membership window is open:
+//!   session clients join, heartbeat, and leave. The window *always*
+//!   closes when its deadline fires — a missing member can never stall
+//!   the quorum; it degrades to the dropout path instead (below).
+//! * **Unmasking / Recovery** — the frame-driven round body: uploads,
+//!   unmask solicitation waves, equivocator-exclusion retries. These
+//!   run inside [`Coordinator::run_round`] within one service step;
+//!   `Recovery` is recorded in the [`RoundOutcome`] (`retries > 0`).
+//! * **Complete / Failed** — terminal. Failures are confined to their
+//!   cohort; every other cohort keeps running.
+//! * **Paused** — a graceful stop honored at a durable boundary. A
+//!   stop request ([`request_stop`]) reaches in-flight rounds through
+//!   [`Coordinator::shutdown_poll`], which fires at the next phase
+//!   seal (`UploadsClosed` / `WaveClosed`) with the journal fsynced —
+//!   the typed [`ShutdownAtSeal`] is converted into `Paused`, never
+//!   `Failed`. [`RoundService::resume_cohort`] rebuilds an
+//!   interrupted cohort from its journal and replays the round from
+//!   the seal.
+//!
+//! # Deadline semantics: two clocks
+//!
+//! The service deliberately runs **two deadline layers**:
+//!
+//! 1. **Wall-clock, session layer** (`collect_window_s`,
+//!    `heartbeat_s`): real time, measured with
+//!    [`crate::metrics::Stopwatch`]. A member that established a
+//!    session and then went silent for 3 heartbeat intervals (or
+//!    left) by the time the Collecting window closes is *late ⇒
+//!    dropped* for that round — exactly the existing dropout
+//!    degradation path, so quorum math, recovery, and billing are
+//!    unchanged. Users with no session at all stay simulation-driven
+//!    (deterministic dropouts from the seed), which keeps mixed
+//!    fleets and pure-simulation services both well-defined.
+//! 2. **Simulated, transport layer** (`phase_deadline_s` →
+//!    [`PhaseDeadlines`]): the per-phase delivery budgets of the
+//!    netsim/deadline machinery, measured on the transport's
+//!    *simulated* clock. The service never maps wall time onto the
+//!    simulated clock — the two layers compose but never mix, which
+//!    is what keeps resumed rounds bit-exact (wall-clock membership
+//!    decisions affect only *which* users upload; everything after
+//!    that is deterministic).
+//!
+//! # Determinism and resume
+//!
+//! Round inputs (gradients, weights, base dropouts) are deterministic
+//! functions of `(seed, cohort, round)` — never journaled, exactly the
+//! crash-recovery contract of [`Coordinator::resume_round`]. Session
+//! -derived dropouts apply only to rounds started live: a *resumed*
+//! round replays the journaled traffic, and a member who was dropped
+//! live simply has no journaled upload — the same absence, replayed.
+//!
+//! # Session frames
+//!
+//! The session socket speaks length-prefixed frames
+//! ([`crate::transport::tcp`]) carrying the `Join` / `Heartbeat` /
+//! `Leave` wire messages ([`crate::protocol::wire`]). Session ids are
+//! global: cohort `k`'s user `u` is session id `k·n + u`, so a
+//! heartbeat names its cohort without a lookup table. Session frames
+//! are membership-only: they never enter the round state machine, and
+//! a malformed or hostile frame is counted and dropped, never
+//! decoded into round state. Per-(cohort, round) session budgets
+//! ([`crate::transport::CohortLimiters`]) confine a flooding client
+//! to its own cohort's budget for the round — a flood against cohort
+//! 0 cannot starve cohort 1's joins.
+
+use crate::coordinator::{Coordinator, PhaseDeadlines, ProtocolKind,
+                         ShutdownAtSeal};
+use crate::journal::{self, CrashPlan, Journal, RoundReplay};
+use crate::metrics::Stopwatch;
+use crate::network::draw_dropouts;
+use crate::protocol::messages::{Heartbeat, Join, Leave};
+use crate::protocol::wire::{self, Tag};
+use crate::protocol::Params;
+use crate::transport::tcp::{read_frame, write_frame};
+use crate::transport::CohortLimiters;
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::thread;
+use std::time::Duration;
+
+/// Accept-loop poll interval (the listener socket is non-blocking so
+/// the thread can observe shutdown).
+const ACCEPT_NAP: Duration = Duration::from_micros(500);
+
+/// Heartbeat aging factor: a member is aged out after this many
+/// silent heartbeat intervals.
+const HEARTBEAT_GRACE: f64 = 3.0;
+
+/// Entropy stride separating cohort setups (odd, distinct from the
+/// grouped driver's stride so a service cohort never aliases a group).
+const COHORT_ENTROPY_STRIDE: u64 = 0xa24b_aed4_963e_e407;
+
+/// Cohort i's setup entropy (pub so differential tests can build flat
+/// reference cohorts).
+pub fn cohort_entropy(seed: u64, cohort: usize) -> u64 {
+    seed.wrapping_add((cohort as u64).wrapping_mul(COHORT_ENTROPY_STRIDE))
+}
+
+/// Process-wide cooperative stop flag for [`RoundService`]. In-flight
+/// rounds observe it at their next durable phase seal (via
+/// [`Coordinator::shutdown_poll`]); idle cohorts observe it at the
+/// next round boundary. Either way every cohort parks in
+/// [`Phase::Paused`] with its journal fsynced.
+static STOP: AtomicBool = AtomicBool::new(false);
+
+/// Ask every running [`RoundService`] loop to park at the next durable
+/// boundary (the embedder's SIGINT/SIGTERM hook, like
+/// [`crate::fl::request_shutdown`] for in-process runs).
+pub fn request_stop() {
+    STOP.store(true, Ordering::SeqCst);
+}
+
+/// Clear the stop flag (tests; a fresh service after a handled stop).
+pub fn clear_stop() {
+    STOP.store(false, Ordering::SeqCst);
+}
+
+fn stop_requested() -> bool {
+    STOP.load(Ordering::SeqCst)
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // A session-reader panic mid-push cannot corrupt a VecDeque of
+    // owned events; recover the guard rather than poisoning the
+    // service loop.
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Service configuration — the service-facing subset of
+/// [`crate::fl::FlConfig`] plus the synthetic-round shape.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// TCP listen address for the session socket; empty = the default
+    /// `127.0.0.1:0` (OS-assigned port, reported by
+    /// [`RoundService::local_addr`]).
+    pub listen_addr: String,
+    /// Number of concurrent cohorts; each is an independent flat
+    /// [`Coordinator`] with namespace `cohort-<i>`.
+    pub cohorts: usize,
+    /// Users per cohort.
+    pub users: usize,
+    /// Gradient dimension of the synthetic rounds.
+    pub d: usize,
+    /// Compression ratio α (sparse protocol only).
+    pub alpha: f64,
+    /// Simulated dropout rate θ for the deterministic base dropouts.
+    pub theta: f64,
+    /// Quantization level c.
+    pub c: f32,
+    pub protocol: ProtocolKind,
+    /// Rounds to drive per cohort before `Complete`.
+    pub rounds: u32,
+    pub seed: u64,
+    /// Journal root; each cohort journals under
+    /// `<journal_root>/cohort-<i>/`. Empty = journaling off (a killed
+    /// server then has nothing to resume).
+    pub journal_root: String,
+    /// Wall-clock heartbeat interval for session members, seconds;
+    /// a member silent for [`HEARTBEAT_GRACE`] intervals is aged out.
+    /// 0 = aging off (joined members stay fresh until they leave).
+    pub heartbeat_s: f64,
+    /// Wall-clock Collecting window, seconds: how long each round's
+    /// membership window stays open. 0 = close immediately (pure
+    /// simulation; the differential default).
+    pub collect_window_s: f64,
+    /// Per-phase simulated delivery budget ([`PhaseDeadlines`]);
+    /// 0 = off.
+    pub phase_deadline_s: f64,
+    /// Per-(cohort, round) session-frame budget per sender
+    /// ([`CohortLimiters`]); 0 = unlimited.
+    pub session_budget: usize,
+    /// Crash-fault injection (`site:ordinal:mode`,
+    /// [`crate::journal::CrashPlan`]) armed on every *fresh* cohort
+    /// journal — the kill-mid-round test knob. Resumed journals are
+    /// never re-armed. Empty = off.
+    pub crash_plan: String,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            listen_addr: String::new(),
+            cohorts: 1,
+            users: 8,
+            d: 64,
+            alpha: 0.5,
+            theta: 0.0,
+            c: 1024.0,
+            protocol: ProtocolKind::Sparse,
+            rounds: 2,
+            seed: 7,
+            journal_root: String::new(),
+            heartbeat_s: 0.0,
+            collect_window_s: 0.0,
+            phase_deadline_s: 0.0,
+            session_budget: 64,
+            crash_plan: String::new(),
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// Lift the service-facing knobs out of an [`crate::fl::FlConfig`]
+    /// (the config-file / CLI path of the `fl_server` binary). `d` is
+    /// the synthetic gradient dimension — the service drives rounds,
+    /// not training, so it never loads model artifacts.
+    pub fn from_fl(cfg: &crate::fl::FlConfig, d: usize) -> Self {
+        ServiceConfig {
+            listen_addr: cfg.listen_addr.clone(),
+            cohorts: cfg.cohorts.max(1),
+            users: cfg.users,
+            d,
+            alpha: cfg.alpha,
+            theta: cfg.theta,
+            c: cfg.c,
+            protocol: cfg.protocol,
+            rounds: cfg.rounds as u32,
+            seed: cfg.seed,
+            journal_root: cfg.journal_dir.clone(),
+            heartbeat_s: cfg.heartbeat_s,
+            collect_window_s: 0.0,
+            phase_deadline_s: cfg.phase_deadline_s,
+            session_budget: cfg.rate_limit,
+            crash_plan: cfg.crash_plan.clone(),
+        }
+    }
+}
+
+/// Per-cohort lifecycle phase (see the module docs for the machine).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Idle,
+    Collecting,
+    Unmasking,
+    Recovery,
+    Complete,
+    Paused,
+    Failed,
+}
+
+/// A decoded session-layer event (membership-only; never round state).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SessionEvent {
+    Join { cohort: u32, id: usize },
+    Heartbeat { id: usize, seq: u64 },
+    Leave { cohort: u32, id: usize },
+}
+
+/// Decode one framed session message; `None` for anything else —
+/// malformed bytes, hostile counts, or round-protocol frames, which
+/// never ride the session socket.
+fn decode_session_frame(buf: &[u8]) -> Option<SessionEvent> {
+    let (_, tag, _) = wire::peek_header(buf).ok()?;
+    match tag {
+        Tag::Join => wire::decode_join(buf)
+            .ok()
+            .map(|m| SessionEvent::Join { cohort: m.cohort, id: m.id }),
+        Tag::Heartbeat => wire::decode_heartbeat(buf)
+            .ok()
+            .map(|m| SessionEvent::Heartbeat { id: m.id, seq: m.seq }),
+        Tag::Leave => wire::decode_leave(buf)
+            .ok()
+            .map(|m| SessionEvent::Leave { cohort: m.cohort, id: m.id }),
+        _ => None,
+    }
+}
+
+/// Shared state between the service loop and its listener threads.
+struct Hub {
+    events: Mutex<VecDeque<SessionEvent>>,
+    closed: AtomicBool,
+    malformed: AtomicU64,
+}
+
+struct SessionListener {
+    hub: Arc<Hub>,
+    addr: SocketAddr,
+}
+
+impl SessionListener {
+    fn spawn(addr: &str) -> Result<SessionListener> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding session socket {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let hub = Arc::new(Hub {
+            events: Mutex::new(VecDeque::new()),
+            closed: AtomicBool::new(false),
+            malformed: AtomicU64::new(0),
+        });
+        let h = Arc::clone(&hub);
+        thread::spawn(move || {
+            while !h.closed.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        spawn_session_reader(Arc::clone(&h), stream);
+                    }
+                    Err(ref e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock =>
+                    {
+                        thread::sleep(ACCEPT_NAP);
+                    }
+                    Err(_) => thread::sleep(ACCEPT_NAP),
+                }
+            }
+        });
+        Ok(SessionListener { hub, addr: local })
+    }
+}
+
+/// One blocking reader per session connection: framed reads until the
+/// peer disconnects (or the frame layer rejects its bytes). The
+/// thread holds only an `Arc<Hub>`, so a reader outliving the service
+/// parks on a dead queue and exits at the next peer close.
+fn spawn_session_reader(hub: Arc<Hub>, mut stream: TcpStream) {
+    thread::spawn(move || {
+        let _ = stream.set_nonblocking(false);
+        loop {
+            if hub.closed.load(Ordering::SeqCst) {
+                return;
+            }
+            let frame = match read_frame(&mut stream) {
+                Ok(f) => f,
+                // EOF, reset, or a hostile length prefix: the
+                // connection is done either way.
+                Err(_) => return,
+            };
+            match decode_session_frame(&frame) {
+                Some(ev) => lock(&hub.events).push_back(ev),
+                None => {
+                    hub.malformed.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+        }
+    });
+}
+
+/// A minimal session-side client (tests and examples; a real client
+/// SDK is the ROADMAP follow-up). Writes framed `Join` / `Heartbeat` /
+/// `Leave` messages on one TCP connection. `id` is the *global*
+/// session id (`cohort · users + user`).
+pub struct SessionClient {
+    stream: TcpStream,
+    id: usize,
+    seq: u64,
+}
+
+impl SessionClient {
+    pub fn connect(addr: SocketAddr, id: usize) -> Result<SessionClient> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting session client to {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(SessionClient { stream, id, seq: 0 })
+    }
+
+    pub fn join(&mut self, cohort: u32) -> Result<()> {
+        let buf = wire::encode_join(&Join { id: self.id, cohort });
+        write_frame(&mut self.stream, &buf)
+    }
+
+    /// Send the next heartbeat (monotonic `seq`, so a reordered stale
+    /// heartbeat can never resurrect an aged-out member).
+    pub fn heartbeat(&mut self) -> Result<()> {
+        self.seq += 1;
+        let buf = wire::encode_heartbeat(&Heartbeat {
+            id: self.id,
+            seq: self.seq,
+        });
+        write_frame(&mut self.stream, &buf)
+    }
+
+    pub fn leave(&mut self, cohort: u32) -> Result<()> {
+        let buf = wire::encode_leave(&Leave { id: self.id, cohort });
+        write_frame(&mut self.stream, &buf)
+    }
+
+    /// Ship arbitrary bytes as one frame (hostile-input tests).
+    pub fn send_raw(&mut self, frame: &[u8]) -> Result<()> {
+        write_frame(&mut self.stream, frame)
+    }
+}
+
+/// Session-layer state for one cohort member.
+#[derive(Clone, Copy, Debug, Default)]
+struct Member {
+    joined: bool,
+    ever_joined: bool,
+    last_seen_s: f64,
+    last_seq: u64,
+}
+
+struct CohortSlot {
+    /// `None` only transiently while an interrupted cohort is being
+    /// rebuilt from its journal.
+    coord: Option<Coordinator>,
+    phase: Phase,
+    /// Next round to start (== the interrupted round while
+    /// `pending_replay` is set).
+    round: u32,
+    pending_replay: Option<RoundReplay>,
+    members: Vec<Member>,
+    collect: Option<Stopwatch>,
+    /// A stop/pause was honored mid-round at a phase seal: the
+    /// in-memory cohort is mid-phase and must be rebuilt from its
+    /// journal before the round can continue.
+    interrupted: bool,
+    error: Option<String>,
+}
+
+/// One completed round, as observed by the service.
+#[derive(Clone, Debug)]
+pub struct RoundOutcome {
+    pub cohort: usize,
+    pub round: u32,
+    pub aggregate: Vec<f32>,
+    /// Equivocator-exclusion retries the round spent (> 0 means the
+    /// lifecycle passed through [`Phase::Recovery`]).
+    pub retries: usize,
+    /// Users dropped this round (base simulation + session-derived).
+    pub dropped: usize,
+    /// The round replayed journaled state ([`Coordinator::resume_round`]).
+    pub resumed: bool,
+}
+
+/// Final report from [`RoundService::run_to_completion`] /
+/// [`RoundService::shutdown`].
+#[derive(Clone, Debug, Default)]
+pub struct ServiceReport {
+    pub outcomes: Vec<RoundOutcome>,
+    /// `(cohort, error)` for cohorts that ended in [`Phase::Failed`].
+    pub failed: Vec<(usize, String)>,
+    /// Cohorts parked in [`Phase::Paused`] (resumable).
+    pub paused: Vec<usize>,
+    /// Session frames dropped undecoded (malformed or non-session).
+    pub malformed_session_frames: u64,
+}
+
+/// The multi-cohort round service. Single-threaded driver: call
+/// [`Self::tick`] from your event loop, or [`Self::run_to_completion`]
+/// to drive every cohort to a terminal phase.
+pub struct RoundService {
+    cfg: ServiceConfig,
+    params: Params,
+    slots: Vec<CohortSlot>,
+    listener: SessionListener,
+    limiters: CohortLimiters,
+    /// Service epoch for member freshness timestamps.
+    clock: Stopwatch,
+    outcomes: Vec<RoundOutcome>,
+}
+
+impl RoundService {
+    /// Start a fresh service: builds `cohorts` independent cohorts
+    /// (per-cohort entropy [`cohort_entropy`]), attaches namespaced
+    /// journals when `journal_root` is set, and binds the session
+    /// socket.
+    pub fn start(cfg: ServiceConfig) -> Result<RoundService> {
+        Self::launch(cfg, false)
+    }
+
+    /// Restart after a kill: every cohort with an existing
+    /// `cohort-<i>` namespace under `journal_root` is rebuilt via
+    /// [`Coordinator::from_journal`] and its in-flight round (if any)
+    /// is replayed on first tick; cohorts with no namespace start
+    /// fresh.
+    pub fn resume(cfg: ServiceConfig) -> Result<RoundService> {
+        Self::launch(cfg, true)
+    }
+
+    fn launch(cfg: ServiceConfig, resume: bool) -> Result<RoundService> {
+        anyhow::ensure!(cfg.cohorts >= 1, "service needs >= 1 cohort");
+        anyhow::ensure!(cfg.users >= 1, "service cohorts need >= 1 user");
+        let params = Params {
+            n: cfg.users,
+            d: cfg.d,
+            alpha: if cfg.protocol == ProtocolKind::Sparse {
+                cfg.alpha
+            } else {
+                1.0
+            },
+            theta: cfg.theta,
+            c: cfg.c,
+        };
+        let bind = if cfg.listen_addr.is_empty() {
+            "127.0.0.1:0"
+        } else {
+            cfg.listen_addr.as_str()
+        };
+        let listener = SessionListener::spawn(bind)?;
+        let root = (!cfg.journal_root.is_empty())
+            .then(|| PathBuf::from(&cfg.journal_root));
+        let existing: Vec<String> = match (&root, resume) {
+            (Some(r), true) => journal::list_namespaces(r)
+                .map_err(|e| anyhow::anyhow!(
+                    "listing journal namespaces in {}: {e}",
+                    cfg.journal_root))?,
+            _ => Vec::new(),
+        };
+        let mut slots = Vec::with_capacity(cfg.cohorts);
+        for ci in 0..cfg.cohorts {
+            let ns = format!("cohort-{ci}");
+            let (mut coord, replay) = if existing.iter().any(|e| e == &ns) {
+                let dir = root.as_ref().expect("resume implies root").join(&ns);
+                Coordinator::from_journal(&dir).with_context(|| {
+                    format!("resuming cohort {ci} from {}", dir.display())
+                })?
+            } else {
+                let e = cohort_entropy(cfg.seed, ci);
+                let mut c = match cfg.protocol {
+                    ProtocolKind::Sparse => Coordinator::new_sparse(params, e),
+                    ProtocolKind::SecAgg => Coordinator::new_secagg(params, e),
+                };
+                if let Some(r) = &root {
+                    let mut j = Journal::create_namespaced(r, &ns)
+                        .map_err(|e| anyhow::anyhow!(
+                            "creating journal {}/{ns}: {e}",
+                            cfg.journal_root))?;
+                    if !cfg.crash_plan.is_empty() {
+                        j.set_crash_plan(
+                            CrashPlan::parse(&cfg.crash_plan)
+                                .map_err(|e| anyhow::anyhow!(
+                                    "crash_plan: {e}"))?);
+                    }
+                    c.attach_journal(j)?;
+                }
+                (c, None)
+            };
+            Self::arm_cohort(&mut coord, &cfg);
+            // Next round: the in-flight (or durably completed) round
+            // replays first; a fresh namespace starts at round 0.
+            let round = replay.as_ref().map_or(0, |rp| rp.round);
+            slots.push(CohortSlot {
+                coord: Some(coord),
+                phase: Phase::Idle,
+                round,
+                pending_replay: replay,
+                members: vec![Member::default(); cfg.users],
+                collect: None,
+                interrupted: false,
+                error: None,
+            });
+        }
+        let limiters = CohortLimiters::new(cfg.session_budget.max(1));
+        Ok(RoundService {
+            cfg,
+            params,
+            slots,
+            listener,
+            limiters,
+            clock: Stopwatch::start(),
+            outcomes: Vec::new(),
+        })
+    }
+
+    /// The per-service knobs every cohort coordinator carries.
+    fn arm_cohort(coord: &mut Coordinator, cfg: &ServiceConfig) {
+        if cfg.phase_deadline_s > 0.0 {
+            coord.deadlines =
+                Some(PhaseDeadlines::uniform(cfg.phase_deadline_s));
+        }
+        coord.shutdown_poll = Some(stop_requested);
+    }
+
+    /// The bound session-socket address (for clients; the port is
+    /// OS-assigned under the default `127.0.0.1:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener.addr
+    }
+
+    /// The per-cohort protocol parameters (differential tests build
+    /// their flat reference cohorts from these).
+    pub fn params(&self) -> Params {
+        self.params
+    }
+
+    pub fn phase(&self, cohort: usize) -> Phase {
+        self.slots[cohort].phase
+    }
+
+    /// Whether `user` of `cohort` currently holds a joined session.
+    pub fn member_joined(&self, cohort: usize, user: usize) -> bool {
+        self.slots[cohort].members[user].joined
+    }
+
+    pub fn outcomes(&self) -> &[RoundOutcome] {
+        &self.outcomes
+    }
+
+    pub fn last_error(&self, cohort: usize) -> Option<&str> {
+        self.slots[cohort].error.as_deref()
+    }
+
+    /// Session frames dropped undecoded so far.
+    pub fn malformed_session_frames(&self) -> u64 {
+        self.listener.hub.malformed.load(Ordering::SeqCst)
+    }
+
+    /// Global session id → (cohort, local user).
+    fn locate(&self, session_id: usize) -> Option<(usize, usize)> {
+        let n = self.cfg.users.max(1);
+        let (c, u) = (session_id / n, session_id % n);
+        (c < self.slots.len()).then_some((c, u))
+    }
+
+    /// One event-loop iteration: drain the session queue, then advance
+    /// every cohort's state machine one step.
+    pub fn tick(&mut self) -> Result<()> {
+        self.drain_session_events();
+        for ci in 0..self.slots.len() {
+            self.step_cohort(ci);
+        }
+        Ok(())
+    }
+
+    fn drain_session_events(&mut self) {
+        let events: Vec<SessionEvent> = {
+            let mut q = lock(&self.listener.hub.events);
+            q.drain(..).collect()
+        };
+        let now = self.clock.elapsed_s();
+        for ev in events {
+            let (sid, cohort_hint) = match &ev {
+                SessionEvent::Join { cohort, id } => (*id, Some(*cohort)),
+                SessionEvent::Leave { cohort, id } => (*id, Some(*cohort)),
+                SessionEvent::Heartbeat { id, .. } => (*id, None),
+            };
+            // Out-of-range ids and mismatched cohort claims are
+            // dropped: the id *is* the routing key, so a frame whose
+            // claimed cohort disagrees with its id is hostile or
+            // confused either way.
+            let Some((ci, u)) = self.locate(sid) else { continue };
+            if cohort_hint.is_some_and(|h| h as usize != ci) {
+                continue;
+            }
+            // Per-(cohort, round) session budget: a flooder spends its
+            // own cohort's budget for the current round, nobody
+            // else's. Replenishes when the cohort's round advances.
+            if self.cfg.session_budget > 0 {
+                let round = self.slots[ci].round;
+                let rl = self.limiters.arm(ci, round, self.cfg.users);
+                if !rl.admit(u) {
+                    continue;
+                }
+            }
+            let slot = &mut self.slots[ci];
+            match ev {
+                SessionEvent::Join { .. } => {
+                    slot.members[u].joined = true;
+                    slot.members[u].ever_joined = true;
+                    slot.members[u].last_seen_s = now;
+                    slot.members[u].last_seq = 0;
+                }
+                SessionEvent::Heartbeat { seq, .. } => {
+                    let m = &mut slot.members[u];
+                    // Only a *joined* member with a *fresh* sequence
+                    // number refreshes: a reordered stale heartbeat
+                    // (or one arriving after Leave) cannot resurrect.
+                    if m.joined && seq > m.last_seq {
+                        m.last_seq = seq;
+                        m.last_seen_s = now;
+                    }
+                }
+                SessionEvent::Leave { .. } => {
+                    slot.members[u].joined = false;
+                }
+            }
+        }
+    }
+
+    fn step_cohort(&mut self, ci: usize) {
+        match self.slots[ci].phase {
+            Phase::Complete | Phase::Failed | Phase::Paused => {}
+            Phase::Idle => {
+                if stop_requested() {
+                    // Round boundary: already durable, just park.
+                    if let Some(c) = self.slots[ci].coord.as_mut() {
+                        c.sync_journal();
+                    }
+                    self.slots[ci].phase = Phase::Paused;
+                    return;
+                }
+                if self.slots[ci].pending_replay.is_none()
+                    && self.slots[ci].round >= self.cfg.rounds
+                {
+                    self.slots[ci].phase = Phase::Complete;
+                    return;
+                }
+                self.slots[ci].collect = Some(Stopwatch::start());
+                self.slots[ci].phase = Phase::Collecting;
+            }
+            Phase::Collecting => {
+                let open = self.slots[ci]
+                    .collect
+                    .as_ref()
+                    .map_or(0.0, |s| s.elapsed_s())
+                    < self.cfg.collect_window_s;
+                if open {
+                    // The window is still open for joins/heartbeats.
+                    // It always closes when the deadline fires — late
+                    // members degrade to dropouts below, so a missing
+                    // member can never stall the quorum.
+                    return;
+                }
+                self.run_cohort_round(ci);
+            }
+            // The round body is synchronous within one step; these are
+            // only ever observed transiently (or via RoundOutcome).
+            Phase::Unmasking | Phase::Recovery => {}
+        }
+    }
+
+    /// Deterministic round inputs — functions of (seed, cohort, round)
+    /// only, exactly the resume contract of
+    /// [`Coordinator::resume_round`].
+    fn round_inputs(&self, ci: usize, round: u32)
+                    -> (Vec<Vec<f32>>, Vec<f64>, Vec<usize>) {
+        let n = self.cfg.users;
+        let e = cohort_entropy(self.cfg.seed, ci);
+        let mut rng = crate::prg::ChaCha20Rng::from_seed_u64(
+            e ^ ((round as u64) << 32) ^ 0x5eed);
+        let ys: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                (0..self.cfg.d).map(|_| rng.next_f32() - 0.5).collect()
+            })
+            .collect();
+        let betas = vec![1.0 / n as f64; n];
+        let dropped = draw_dropouts(n, self.cfg.theta, round, e, true);
+        (ys, betas, dropped)
+    }
+
+    fn run_cohort_round(&mut self, ci: usize) {
+        let replaying = self.slots[ci].pending_replay.is_some();
+        let round = match &self.slots[ci].pending_replay {
+            Some(rp) => rp.round,
+            None => self.slots[ci].round,
+        };
+        let (ys, betas, mut dropped) = self.round_inputs(ci, round);
+        if !replaying {
+            // Session-derived degradation (live rounds only; a resumed
+            // round replays journaled traffic): a member that
+            // established a session but is gone or silent when the
+            // window closes is late ⇒ dropped. Users with no session
+            // stay simulation-driven.
+            let now = self.clock.elapsed_s();
+            let age_limit = HEARTBEAT_GRACE * self.cfg.heartbeat_s;
+            for (u, m) in self.slots[ci].members.iter().enumerate() {
+                if !m.ever_joined {
+                    continue;
+                }
+                let fresh = m.joined
+                    && (self.cfg.heartbeat_s <= 0.0
+                        || now - m.last_seen_s <= age_limit);
+                if !fresh && !dropped.contains(&u) {
+                    dropped.push(u);
+                }
+            }
+        }
+        let slot = &mut self.slots[ci];
+        let Some(coord) = slot.coord.as_mut() else {
+            slot.error = Some("cohort lost its coordinator".into());
+            slot.phase = Phase::Failed;
+            return;
+        };
+        slot.phase = Phase::Unmasking;
+        let replay = slot.pending_replay.take();
+        let res = match replay {
+            Some(rp) => coord.resume_round(rp, &ys, &betas, &dropped),
+            None => coord.run_round(round, &ys, &betas, &dropped),
+        };
+        match res {
+            Ok((aggregate, ledger)) => {
+                if ledger.retries > 0 {
+                    slot.phase = Phase::Recovery;
+                }
+                self.outcomes.push(RoundOutcome {
+                    cohort: ci,
+                    round,
+                    aggregate,
+                    retries: ledger.retries,
+                    dropped: dropped.len(),
+                    resumed: replaying,
+                });
+                slot.round = round + 1;
+                slot.collect = None;
+                slot.phase = Phase::Idle;
+            }
+            Err(e) => {
+                // Journal durably synced behind every exit path
+                // (seal-point contract); then classify.
+                coord.sync_journal();
+                slot.collect = None;
+                if e.downcast_ref::<ShutdownAtSeal>().is_some() {
+                    // A stop honored at a phase seal: resumable, not
+                    // failed. The in-memory cohort is mid-phase — mark
+                    // it so resume_cohort rebuilds from the journal.
+                    slot.interrupted = true;
+                    slot.phase = Phase::Paused;
+                } else {
+                    slot.error = Some(format!("{e:#}"));
+                    slot.phase = Phase::Failed;
+                }
+            }
+        }
+    }
+
+    /// Park a cohort at its next durable boundary. Between rounds this
+    /// is immediate; a cohort mid-round parks when its in-flight round
+    /// hits the next phase seal (stop flag) or completes.
+    pub fn pause(&mut self, cohort: usize) {
+        let slot = &mut self.slots[cohort];
+        if matches!(slot.phase, Phase::Idle | Phase::Collecting) {
+            if let Some(c) = slot.coord.as_mut() {
+                c.sync_journal();
+            }
+            slot.collect = None;
+            slot.phase = Phase::Paused;
+        }
+    }
+
+    /// Un-park a paused cohort. A cohort paused between rounds resumes
+    /// in place; one interrupted mid-round (stop at a phase seal) is
+    /// rebuilt from its namespaced journal and replays the interrupted
+    /// round from the seal on its next step.
+    pub fn resume_cohort(&mut self, cohort: usize) -> Result<()> {
+        anyhow::ensure!(
+            self.slots[cohort].phase == Phase::Paused,
+            "cohort {cohort} is not paused");
+        if self.slots[cohort].interrupted {
+            anyhow::ensure!(
+                !self.cfg.journal_root.is_empty(),
+                "cohort {cohort} was interrupted mid-round without a \
+                 journal; its round state is unrecoverable in-process");
+            let dir = PathBuf::from(&self.cfg.journal_root)
+                .join(format!("cohort-{cohort}"));
+            // Drop the interrupted coordinator first: it still holds
+            // the in-process attach guard on this journal directory.
+            self.slots[cohort].coord = None;
+            let (mut coord, replay) = Coordinator::from_journal(&dir)
+                .with_context(|| format!(
+                    "rebuilding interrupted cohort {cohort} from {}",
+                    dir.display()))?;
+            Self::arm_cohort(&mut coord, &self.cfg);
+            let slot = &mut self.slots[cohort];
+            slot.round = replay.as_ref().map_or(slot.round, |rp| rp.round);
+            slot.pending_replay = replay;
+            slot.coord = Some(coord);
+            slot.interrupted = false;
+        }
+        self.slots[cohort].phase = Phase::Idle;
+        Ok(())
+    }
+
+    /// Drive every cohort to a terminal phase (`Complete`, `Failed`,
+    /// or `Paused`), then shut down. Collecting windows are wall-clock
+    /// — the loop naps briefly while any window is open instead of
+    /// spinning.
+    pub fn run_to_completion(&mut self) -> Result<ServiceReport> {
+        loop {
+            self.tick()?;
+            let done = self.slots.iter().all(|s| {
+                matches!(s.phase,
+                         Phase::Complete | Phase::Failed | Phase::Paused)
+            });
+            if done {
+                break;
+            }
+            if self.cfg.collect_window_s > 0.0
+                && self.slots.iter().any(|s| s.phase == Phase::Collecting)
+            {
+                thread::sleep(Duration::from_millis(1));
+            }
+        }
+        Ok(self.shutdown())
+    }
+
+    /// Graceful shutdown: stop accepting sessions, fsync every
+    /// cohort's journal, and return the report. In-flight work is not
+    /// interrupted (tick-synchronous rounds have already returned);
+    /// use [`request_stop`] first to park in-flight rounds at their
+    /// next phase seal.
+    pub fn shutdown(&mut self) -> ServiceReport {
+        self.listener.hub.closed.store(true, Ordering::SeqCst);
+        for s in &mut self.slots {
+            if let Some(c) = s.coord.as_mut() {
+                c.sync_journal();
+            }
+        }
+        ServiceReport {
+            outcomes: std::mem::take(&mut self.outcomes),
+            failed: self
+                .slots
+                .iter()
+                .enumerate()
+                .filter_map(|(i, s)| {
+                    s.error.clone().map(|e| (i, e))
+                })
+                .collect(),
+            paused: self
+                .slots
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.phase == Phase::Paused)
+                .map(|(i, _)| i)
+                .collect(),
+            malformed_session_frames: self
+                .listener
+                .hub
+                .malformed
+                .load(Ordering::SeqCst),
+        }
+    }
+
+    /// Tick until `pred` holds or `max_ms` of wall clock elapse
+    /// (tests: session traffic lands asynchronously).
+    pub fn tick_until(&mut self, max_ms: u64,
+                      pred: impl Fn(&RoundService) -> bool) -> bool {
+        let t = Stopwatch::start();
+        loop {
+            let _ = self.tick();
+            if pred(self) {
+                return true;
+            }
+            if t.elapsed_s() * 1000.0 > max_ms as f64 {
+                return false;
+            }
+            thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+impl Drop for RoundService {
+    fn drop(&mut self) {
+        // A dropped service (including one "killed" by a test) must
+        // stop its accept loop; journals detach via Journal's Drop.
+        self.listener.hub.closed.store(true, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_ids_route_by_cohort_arithmetic() {
+        let cfg = ServiceConfig {
+            cohorts: 2,
+            users: 4,
+            rounds: 0,
+            ..ServiceConfig::default()
+        };
+        let svc = RoundService::start(cfg).unwrap();
+        assert_eq!(svc.locate(0), Some((0, 0)));
+        assert_eq!(svc.locate(3), Some((0, 3)));
+        assert_eq!(svc.locate(4), Some((1, 0)));
+        assert_eq!(svc.locate(7), Some((1, 3)));
+        assert_eq!(svc.locate(8), None);
+    }
+
+    #[test]
+    fn session_frame_decode_rejects_non_session_traffic() {
+        let join = wire::encode_join(&Join { id: 3, cohort: 1 });
+        assert_eq!(decode_session_frame(&join),
+                   Some(SessionEvent::Join { cohort: 1, id: 3 }));
+        let hb = wire::encode_heartbeat(&Heartbeat { id: 2, seq: 9 });
+        assert_eq!(decode_session_frame(&hb),
+                   Some(SessionEvent::Heartbeat { id: 2, seq: 9 }));
+        // A round-protocol frame on the session socket is dropped.
+        let ad = wire::encode_advertise(
+            &crate::protocol::messages::AdvertiseKeys {
+                id: 0,
+                public: 1,
+            });
+        assert_eq!(decode_session_frame(&ad), None);
+        // Garbage too.
+        assert_eq!(decode_session_frame(&[0u8; 5]), None);
+        assert_eq!(decode_session_frame(&[0xff; 64]), None);
+    }
+
+    #[test]
+    fn cohort_entropies_are_distinct() {
+        let e: Vec<u64> = (0..8).map(|i| cohort_entropy(42, i)).collect();
+        for i in 0..e.len() {
+            for j in i + 1..e.len() {
+                assert_ne!(e[i], e[j]);
+            }
+        }
+        // Cohort 0 keeps the raw seed (the flat-reference anchor).
+        assert_eq!(cohort_entropy(42, 0), 42);
+    }
+
+    #[test]
+    fn from_fl_lifts_the_service_knobs() {
+        let mut fl = crate::fl::FlConfig {
+            listen_addr: "127.0.0.1:7700".into(),
+            cohorts: 3,
+            heartbeat_s: 2.0,
+            ..crate::fl::FlConfig::default()
+        };
+        fl.users = 12;
+        fl.journal_dir = "jroot".into();
+        fl.rate_limit = 9;
+        let sc = ServiceConfig::from_fl(&fl, 128);
+        assert_eq!(sc.listen_addr, "127.0.0.1:7700");
+        assert_eq!(sc.cohorts, 3);
+        assert_eq!(sc.users, 12);
+        assert_eq!(sc.d, 128);
+        assert_eq!(sc.journal_root, "jroot");
+        assert_eq!(sc.session_budget, 9);
+        assert!((sc.heartbeat_s - 2.0).abs() < 1e-12);
+    }
+}

@@ -18,6 +18,18 @@
 //! well-formedness. Hostile frames (malformed, replayed, phase-confused)
 //! are expected traffic here — validation is the receiver's job.
 //!
+//! Socket addressing binds the same identity at *connection* time: on
+//! the TCP star ([`tcp::TcpBus`]) a connection's hello declares the
+//! endpoint id it speaks for, the bus routes server→client frames by
+//! that binding, and a reconnect hello-ing the same id re-binds the
+//! endpoint (the re-join path). A socket therefore *is* an endpoint id
+//! for the ingest layer's spoof check — frames arriving on it are
+//! attributed to the bound id regardless of what their headers claim,
+//! exactly as `InMemoryBus` attributes by queue. The long-running
+//! round service ([`crate::service`]) adds session frames
+//! (Join/Heartbeat/Leave) *on top of* this binding; they manage cohort
+//! membership and never enter the round state machine.
+//!
 //! [`InMemoryBus`] is the deterministic reference implementation: FIFO
 //! per-direction queues, no loss, no reordering, so rounds are exactly
 //! reproducible and the adversarial harness can pin byte-exact outcomes.
@@ -44,6 +56,8 @@
 //! deliberately does *not* do is drop the flood's bytes from the
 //! ledger: in a real deployment shed traffic still saturated the NIC,
 //! and the honest way to account a DoS is as spent bandwidth.
+
+pub mod tcp;
 
 use std::collections::VecDeque;
 
@@ -179,6 +193,63 @@ impl RateLimiter {
     }
 }
 
+/// Per-cohort rate-limiter registry for a host driving **concurrent
+/// cohorts** over shared listening infrastructure.
+///
+/// A bare [`RateLimiter`] is per-round state for ONE cohort: the
+/// single-cohort driver constructs a fresh one each round, so its
+/// budgets can never leak across rounds. A multi-cohort host that
+/// naively shared one limiter would break both isolations at once —
+/// cohort A's flood drains the budget of the same-numbered endpoint in
+/// cohort B, and a cohort starting round r+1 inherits counts from a
+/// sibling still in round r. This registry keys budget state by
+/// **(cohort, round)**: each cohort gets its own buckets, and arming a
+/// cohort for a new round (or a changed roster size) replaces them
+/// with a fresh, fully replenished set. The two-cohort flood
+/// regression in this module's tests pins both isolations.
+#[derive(Debug)]
+pub struct CohortLimiters {
+    budget: usize,
+    /// Slot per cohort: (armed round, that cohort's limiter).
+    armed: Vec<Option<(u32, RateLimiter)>>,
+}
+
+impl CohortLimiters {
+    /// A registry issuing `budget` frames per sender per (cohort,
+    /// round); cohort slots are created on first `arm`.
+    pub fn new(budget: usize) -> Self {
+        CohortLimiters { budget: budget.max(1), armed: Vec::new() }
+    }
+
+    /// The limiter for `cohort` in `round`, with `senders` known
+    /// endpoints. First sight of a (cohort, round) pair — or a roster
+    /// resize — installs fresh buckets; re-arming the same pair keeps
+    /// the spent counts (so a mid-round caller cannot accidentally
+    /// refill a flooder's budget).
+    pub fn arm(
+        &mut self,
+        cohort: usize,
+        round: u32,
+        senders: usize,
+    ) -> &mut RateLimiter {
+        if cohort >= self.armed.len() {
+            self.armed.resize_with(cohort + 1, || None);
+        }
+        let budget = self.budget;
+        let slot = &mut self.armed[cohort];
+        let stale = match slot {
+            Some((r, rl)) => *r != round || rl.counts.len() != senders + 1,
+            None => false,
+        };
+        if stale {
+            *slot = None;
+        }
+        let (_, rl) = slot
+            .get_or_insert_with(|| (round, RateLimiter::new(budget, senders)));
+        rl
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -242,5 +313,36 @@ mod tests {
         assert!(rl.admit(99)); // same overflow bucket
         assert!(!rl.admit(1234)); // overflow bucket exhausted
         assert!(rl.admit(0) && rl.admit(1), "real senders unaffected");
+    }
+
+    /// Two-cohort flood regression: a flooder exhausting its budget in
+    /// cohort 0 must not starve the same-numbered endpoint in cohort 1
+    /// (per-cohort bucket isolation), and a cohort arming a new round
+    /// gets replenished buckets while a sibling mid-round keeps its
+    /// spent state (per-(cohort, round) keying).
+    #[test]
+    fn cohort_limiters_isolate_budgets_per_cohort_and_round() {
+        let mut cl = CohortLimiters::new(2);
+        // Endpoint 1 floods cohort 0 round 0 dry.
+        {
+            let rl = cl.arm(0, 0, 3);
+            assert!(rl.admit(1) && rl.admit(1));
+            assert!(!rl.admit(1), "flood sheds in cohort 0");
+        }
+        // Same endpoint number in cohort 1: full budget.
+        {
+            let rl = cl.arm(1, 0, 3);
+            assert!(rl.admit(1) && rl.admit(1), "cohort 1 starved");
+        }
+        // Re-arming the SAME (cohort, round) keeps spent counts: the
+        // flooder cannot refill itself by provoking another arm call.
+        assert!(!cl.arm(0, 0, 3).admit(1), "mid-round re-arm refilled");
+        // Cohort 0 advances to round 1: fresh buckets for it...
+        assert!(cl.arm(0, 1, 3).admit(1), "new round not replenished");
+        // ...while cohort 1, still in round 0, keeps its spent state.
+        let rl = cl.arm(1, 0, 3);
+        assert!(!rl.admit(1), "sibling round state was clobbered");
+        // A roster resize mid-lifetime re-buckets that cohort only.
+        assert!(cl.arm(1, 0, 5).admit(1));
     }
 }

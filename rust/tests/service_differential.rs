@@ -1,0 +1,106 @@
+//! Socket-vs-bus differential: rounds driven over the real localhost
+//! TCP star ([`sparsesecagg::transport::tcp::TcpBus`]) must be
+//! indistinguishable from the deterministic in-memory reference bus —
+//! bit-exact aggregate and identical per-user byte ledgers — across
+//! both protocols. This is the proof that the [`Transport`] trait seam
+//! really is the deployment seam: swapping kernel sockets for the
+//! in-memory queues changes *nothing* the protocol can observe.
+//!
+//! Cross-sender interleaving at the server differs between the two
+//! buses (TCP only preserves per-connection FIFO); the ingest layer
+//! keys state per sender, so every pinned observable is insensitive to
+//! it by construction — which is exactly what these tests pin.
+
+use sparsesecagg::coordinator::Coordinator;
+use sparsesecagg::network::draw_dropouts;
+use sparsesecagg::prg::ChaCha20Rng;
+use sparsesecagg::protocol::Params;
+use sparsesecagg::transport::tcp::TcpBus;
+
+fn grads(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = ChaCha20Rng::from_seed_u64(seed);
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.next_f32() - 0.5).collect())
+        .collect()
+}
+
+/// Two rounds (with drawn dropouts) over real sockets vs the raw bus:
+/// aggregate and per-user byte ledgers must match bit-exactly, and the
+/// validating ingest must reject nothing (well-formed traffic only).
+fn assert_socket_rounds_bit_exact(secagg: bool) {
+    let alpha = if secagg { 1.0 } else { 0.3 };
+    let p = Params { n: 8, d: 400, alpha, theta: 0.2, c: 1024.0 };
+    let ys = grads(p.n, p.d, 0x7c9);
+    let betas = vec![1.0 / p.n as f64; p.n];
+
+    let mut raw = if secagg {
+        Coordinator::new_secagg(p, 42)
+    } else {
+        Coordinator::new_sparse(p, 42)
+    };
+    let bus = Box::new(TcpBus::connect_star(p.n).expect("tcp star"));
+    let mut tcp = if secagg {
+        Coordinator::new_secagg_on(p, 42, bus)
+    } else {
+        Coordinator::new_sparse_on(p, 42, bus)
+    };
+
+    for round in 0..2u32 {
+        let dropped = draw_dropouts(p.n, p.theta, round, 0xd0, true);
+        let (want, lw) = raw
+            .run_round(round, &ys, &betas, &dropped)
+            .expect("in-memory reference round");
+        let (got, lg) = tcp
+            .run_round(round, &ys, &betas, &dropped)
+            .expect("tcp round");
+        let tag = format!("secagg={secagg} round={round}");
+        assert_eq!(got, want, "{tag}: aggregate differs over sockets");
+        assert_eq!(lg.up_bytes, lw.up_bytes,
+                   "{tag}: per-user upload ledger differs");
+        assert_eq!(lg.down_bytes, lw.down_bytes,
+                   "{tag}: per-user download ledger differs");
+        assert_eq!(lg.rejected_frames, 0, "{tag}: spurious rejects");
+        assert_eq!(lg.excluded_users, lw.excluded_users, "{tag}");
+    }
+}
+
+#[test]
+fn tcp_round_is_bit_exact_sparse() {
+    assert_socket_rounds_bit_exact(false);
+}
+
+#[test]
+fn tcp_round_is_bit_exact_secagg() {
+    assert_socket_rounds_bit_exact(true);
+}
+
+/// A client connection severed before the round is *not* declared
+/// dropped to the coordinator: its upload dies on the dead socket, the
+/// server simply never receives it, and the absence degrades through
+/// the standard dropout-recovery path — bit-exact against a reference
+/// round where the same user was dropped up front. Never a stall,
+/// never an exclusion. (Exactness holds regardless of cross-sender
+/// arrival order because aggregation is modular field arithmetic.)
+#[test]
+fn severed_connection_degrades_to_dropout_bit_exact() {
+    let p = Params { n: 8, d: 300, alpha: 0.3, theta: 0.0, c: 1024.0 };
+    let ys = grads(p.n, p.d, 0x5e7);
+    let betas = vec![1.0 / p.n as f64; p.n];
+    let gone = 5usize;
+
+    let mut reference = Coordinator::new_sparse(p, 9);
+    let (want, _) = reference
+        .run_round(0, &ys, &betas, &[gone])
+        .expect("reference with user dropped");
+
+    let mut bus = TcpBus::connect_star(p.n).expect("tcp star");
+    bus.disconnect_client(gone);
+    let mut tcp = Coordinator::new_sparse_on(p, 9, Box::new(bus));
+    let (got, ledger) = tcp
+        .run_round(0, &ys, &betas, &[])
+        .expect("round must survive a severed connection");
+    assert_eq!(got, want, "severed connection must equal a dropout");
+    assert!(ledger.excluded_users.is_empty(),
+            "disconnection is not equivocation");
+    assert_eq!(ledger.retries, 0);
+}

@@ -1,0 +1,343 @@
+//! Service-lifecycle suite: cooperative shutdown at durable phase
+//! seals, multi-cohort kill/restart resume, session-flood confinement,
+//! and session-deadline degradation (see [`sparsesecagg::service`]).
+//!
+//! * **Shutdown-at-seal pinning**: a shutdown requested mid-round is
+//!   honored only at a durable phase seal (`UploadsClosed` /
+//!   `WaveClosed`), with the journal fsynced *before* the typed
+//!   [`ShutdownAtSeal`] surfaces — restart resumes the round from the
+//!   seal bit-exactly. This pins the fix for shutdown requests being
+//!   polled only at round boundaries (and the flush that makes the
+//!   interruption durable).
+//! * **Kill/resume smoke**: a server hosting two concurrent cohorts is
+//!   killed mid-round (seeded crash injection in every cohort's
+//!   namespaced journal); a restarted service resumes *every* cohort
+//!   from `cohort-<i>/` and finishes all rounds bit-exact against an
+//!   uninterrupted reference service.
+//! * **Flood confinement**: session-frame budgets are keyed per
+//!   (cohort, round) — a flooding client exhausts only its own
+//!   cohort's budget for the current round; the same user slot in
+//!   another cohort is untouched. Pins the fix for rate-limit budgets
+//!   shared across concurrent cohorts. (Per-round replenishment is
+//!   unit-tested on `CohortLimiters` itself.)
+
+use sparsesecagg::coordinator::{Coordinator, ShutdownAtSeal};
+use sparsesecagg::journal::Journal;
+use sparsesecagg::prg::ChaCha20Rng;
+use sparsesecagg::protocol::Params;
+use sparsesecagg::service::{clear_stop, request_stop, Phase, RoundService,
+                            ServiceConfig, SessionClient};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+fn tdir(name: &str) -> PathBuf {
+    let p = PathBuf::from(env!("CARGO_TARGET_TMPDIR"))
+        .join(format!("service-lifecycle-{name}"));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+fn grads(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = ChaCha20Rng::from_seed_u64(seed);
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.next_f32() - 0.5).collect())
+        .collect()
+}
+
+/// The service stop flag is process-global; serialize every test that
+/// runs a [`RoundService`] so one test's stop cannot park another
+/// test's cohorts.
+static SERIAL: Mutex<()> = Mutex::new(());
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+// ---------------------------------------------------------------------
+// Shutdown-at-seal (coordinator level)
+// ---------------------------------------------------------------------
+
+fn always_stop() -> bool {
+    true
+}
+
+/// A shutdown pending from the start of the round is honored at the
+/// *first* durable seal — `UploadsClosed` — with the journal flushed:
+/// restart replays the sealed collecting phase and finishes the round
+/// bit-exactly.
+#[test]
+fn shutdown_at_collecting_seal_is_durable_and_resumes_bit_exact() {
+    let dir = tdir("seal-collecting");
+    let p = Params { n: 8, d: 200, alpha: 0.3, theta: 0.0, c: 1024.0 };
+    let ys = grads(p.n, p.d, 0x51de);
+    let betas = vec![1.0 / p.n as f64; p.n];
+
+    let mut reference = Coordinator::new_sparse(p, 7);
+    let (want, _) = reference.run_round(0, &ys, &betas, &[]).unwrap();
+
+    let mut live = Coordinator::new_sparse(p, 7);
+    live.attach_journal(Journal::create(&dir).unwrap()).unwrap();
+    live.shutdown_poll = Some(always_stop);
+    let err = live.run_round(0, &ys, &betas, &[]).unwrap_err();
+    let seal = err
+        .downcast_ref::<ShutdownAtSeal>()
+        .expect("shutdown must surface as the typed seal interruption");
+    assert_eq!(seal.phase, "collecting",
+               "first durable seal is the collecting one");
+    drop(live); // graceful exit: the journal was flushed at the seal
+
+    let (mut resumed, replay) = Coordinator::from_journal(&dir).unwrap();
+    let rp = replay.expect("an interrupted round must replay");
+    assert_eq!(rp.round, 0);
+    assert!(rp.uploads_closed.is_some(),
+            "the UploadsClosed seal must be durable before the \
+             shutdown surfaces — this is the flush the fix pins");
+    assert!(!rp.completed);
+    let (got, ledger) = resumed.resume_round(rp, &ys, &betas, &[]).unwrap();
+    assert_eq!(got, want, "resume from the shutdown seal is bit-exact");
+    assert_eq!(ledger.resumed_phase, Some("unmasking"));
+}
+
+static WAVE_POLLS: AtomicUsize = AtomicUsize::new(0);
+/// False at the collecting seal (call 0), true from the first wave
+/// seal on — exercises the `WaveClosed` shutdown point.
+fn stop_after_collecting() -> bool {
+    WAVE_POLLS.fetch_add(1, Ordering::SeqCst) >= 1
+}
+
+/// A shutdown arriving during the unmasking phase is honored at the
+/// wave seal, *after* `WaveClosed` is durably synced: the restarted
+/// round replays the whole wave (no re-solicitation of already-sealed
+/// traffic) and finishes bit-exactly.
+#[test]
+fn shutdown_at_wave_seal_replays_the_sealed_wave_bit_exact() {
+    WAVE_POLLS.store(0, Ordering::SeqCst);
+    let dir = tdir("seal-wave");
+    let p = Params { n: 8, d: 200, alpha: 0.3, theta: 0.0, c: 1024.0 };
+    let ys = grads(p.n, p.d, 0x5ea1);
+    let betas = vec![1.0 / p.n as f64; p.n];
+
+    let mut reference = Coordinator::new_sparse(p, 21);
+    let (want, _) = reference.run_round(0, &ys, &betas, &[]).unwrap();
+
+    let mut live = Coordinator::new_sparse(p, 21);
+    live.attach_journal(Journal::create(&dir).unwrap()).unwrap();
+    live.shutdown_poll = Some(stop_after_collecting);
+    let err = live.run_round(0, &ys, &betas, &[]).unwrap_err();
+    let seal = err.downcast_ref::<ShutdownAtSeal>().expect("typed seal");
+    assert_eq!(seal.phase, "unmasking");
+    drop(live);
+
+    let (mut resumed, replay) = Coordinator::from_journal(&dir).unwrap();
+    let rp = replay.expect("replay");
+    assert!(rp.uploads_closed.is_some());
+    assert_eq!(rp.waves.len(), 1,
+               "exactly the one sealed wave must be journaled");
+    assert!(!rp.completed);
+    let (got, ledger) = resumed.resume_round(rp, &ys, &betas, &[]).unwrap();
+    assert_eq!(got, want, "wave-seal resume is bit-exact");
+    assert_eq!(ledger.retries, 0);
+}
+
+// ---------------------------------------------------------------------
+// Service level
+// ---------------------------------------------------------------------
+
+fn service_cfg(cohorts: usize, rounds: u32, seed: u64) -> ServiceConfig {
+    ServiceConfig {
+        cohorts,
+        users: 8,
+        d: 96,
+        alpha: 0.3,
+        theta: 0.2,
+        rounds,
+        seed,
+        ..ServiceConfig::default()
+    }
+}
+
+/// A server hosting two concurrent cohorts dies mid-round (seeded
+/// crash in every cohort's namespaced journal); a restarted service
+/// resumes every cohort from `<root>/cohort-<i>/` and finishes all
+/// rounds bit-exact against an uninterrupted reference service.
+#[test]
+fn killed_server_resumes_every_cohort_bit_exact() {
+    let _g = serial();
+    clear_stop();
+    let root = tdir("kill-resume");
+    let mut base = service_cfg(2, 2, 0xfee1);
+    base.journal_root = root.to_string_lossy().into_owned();
+    base.crash_plan = "wave-closed:0:torn".into();
+
+    let mut ref_cfg = service_cfg(2, 2, 0xfee1);
+    ref_cfg.collect_window_s = 0.0;
+    let mut reference = RoundService::start(ref_cfg).unwrap();
+    let ref_report = reference.run_to_completion().unwrap();
+    assert!(ref_report.failed.is_empty());
+    assert_eq!(ref_report.outcomes.len(), 4, "2 cohorts x 2 rounds");
+
+    // The "server": the armed crash kills round 0 in both cohorts.
+    let mut svc = RoundService::start(base.clone()).unwrap();
+    let report = svc.run_to_completion().unwrap();
+    assert_eq!(report.failed.len(), 2,
+               "both cohorts must die at the armed journal site");
+    for (_, why) in &report.failed {
+        assert!(why.contains("injected crash"), "unexpected failure: {why}");
+    }
+    assert!(report.outcomes.is_empty(), "no round completed pre-crash");
+    drop(svc); // the process model dies here
+
+    // Restart: every in-flight cohort resumes from its namespace.
+    let mut resume_cfg = base;
+    resume_cfg.crash_plan.clear();
+    let mut svc2 = RoundService::resume(resume_cfg).unwrap();
+    let report2 = svc2.run_to_completion().unwrap();
+    assert!(report2.failed.is_empty(),
+            "resume must recover cleanly: {:?}", report2.failed);
+    assert_eq!(report2.outcomes.len(), 4,
+               "every round of every cohort completes after restart");
+    for o in &report2.outcomes {
+        let want = ref_report
+            .outcomes
+            .iter()
+            .find(|w| w.cohort == o.cohort && w.round == o.round)
+            .expect("matching reference round");
+        assert_eq!(o.aggregate, want.aggregate,
+                   "cohort {} round {} differs after resume",
+                   o.cohort, o.round);
+        assert_eq!(o.dropped, want.dropped);
+        if o.round == 0 {
+            assert!(o.resumed,
+                    "the interrupted round must replay, not rerun");
+        }
+    }
+}
+
+/// A session flood against one cohort is confined to that cohort's
+/// per-round budget: the flooder's own late frames are shed (its
+/// `Leave` never lands — it stays joined), while the *same user slot*
+/// of the other cohort joins untouched.
+#[test]
+fn session_flood_is_confined_to_its_cohort() {
+    let _g = serial();
+    clear_stop();
+    let cfg = ServiceConfig {
+        cohorts: 2,
+        users: 4,
+        rounds: 0, // membership only; no rounds
+        session_budget: 4,
+        ..ServiceConfig::default()
+    };
+    let mut svc = RoundService::start(cfg).unwrap();
+    let addr = svc.local_addr();
+
+    // Cohort 0, user 0 floods: join + 10 heartbeats is 11 frames
+    // against a budget of 4, so the trailing Leave must be shed. The
+    // garbage frame after it is a drain watermark: per-connection FIFO
+    // means once it is counted, everything before it was processed.
+    let mut flooder = SessionClient::connect(addr, 0).unwrap();
+    flooder.join(0).unwrap();
+    for _ in 0..10 {
+        flooder.heartbeat().unwrap();
+    }
+    flooder.leave(0).unwrap();
+    flooder.send_raw(&[0xde, 0xad]).unwrap();
+
+    // Cohort 1's user 0 — the same local slot — joins on its own
+    // budget.
+    let mut peer = SessionClient::connect(addr, 4).unwrap();
+    peer.join(1).unwrap();
+
+    assert!(
+        svc.tick_until(5000, |s| {
+            s.malformed_session_frames() >= 1 && s.member_joined(1, 0)
+        }),
+        "cohort 1's join must land despite the cohort 0 flood"
+    );
+    svc.tick().unwrap(); // drain anything queued behind the watermark
+    assert!(svc.member_joined(0, 0),
+            "the flooder's Leave was past its cohort's budget and must \
+             have been shed — before the per-cohort fix the shared \
+             budget let cohort 0's flood starve cohort 1 instead");
+    assert_eq!(svc.malformed_session_frames(), 1,
+               "exactly the one garbage frame is counted");
+}
+
+/// A service-level stop lands mid-round at the collecting seal: the
+/// cohort parks in `Paused` (not `Failed`), and `resume_cohort`
+/// rebuilds it from its namespaced journal and replays the round
+/// bit-exactly.
+#[test]
+fn stop_parks_midround_cohort_and_resume_replays_bit_exact() {
+    let _g = serial();
+    clear_stop();
+    let root = tdir("stop-resume");
+    let mut cfg = service_cfg(1, 1, 0x9a5e);
+    cfg.journal_root = root.to_string_lossy().into_owned();
+    cfg.collect_window_s = 0.05;
+
+    let mut ref_cfg = service_cfg(1, 1, 0x9a5e);
+    ref_cfg.collect_window_s = 0.0;
+    let mut reference = RoundService::start(ref_cfg).unwrap();
+    let ref_report = reference.run_to_completion().unwrap();
+    assert_eq!(ref_report.outcomes.len(), 1);
+
+    let mut svc = RoundService::start(cfg).unwrap();
+    svc.tick().unwrap();
+    assert_eq!(svc.phase(0), Phase::Collecting, "window open");
+    request_stop(); // arrives mid-round, before the window closes
+    assert!(svc.tick_until(5000, |s| s.phase(0) == Phase::Paused),
+            "the stop must park the cohort at the collecting seal");
+    assert!(svc.last_error(0).is_none(),
+            "a seal-honored stop is a pause, never a failure");
+
+    clear_stop();
+    svc.resume_cohort(0).unwrap();
+    let report = svc.run_to_completion().unwrap();
+    assert!(report.failed.is_empty());
+    assert_eq!(report.outcomes.len(), 1);
+    assert!(report.outcomes[0].resumed,
+            "the interrupted round replays from the seal");
+    assert_eq!(report.outcomes[0].aggregate,
+               ref_report.outcomes[0].aggregate,
+               "pause/resume must be invisible in the aggregate");
+}
+
+/// Session members that went silent (aged out) or left by the time
+/// the membership window closes degrade to the dropout path — the
+/// window always closes, quorum never stalls on a late member.
+#[test]
+fn stale_and_departed_members_degrade_to_dropouts() {
+    let _g = serial();
+    clear_stop();
+    let cfg = ServiceConfig {
+        cohorts: 1,
+        users: 8,
+        d: 48,
+        rounds: 1,
+        seed: 11,
+        heartbeat_s: 0.02,     // grace = 3 intervals = 60 ms
+        collect_window_s: 1.0, // plenty for the joins to land first
+        ..ServiceConfig::default()
+    };
+    let mut svc = RoundService::start(cfg).unwrap();
+    let addr = svc.local_addr();
+    svc.tick().unwrap(); // open the membership window
+
+    let mut silent = SessionClient::connect(addr, 0).unwrap();
+    silent.join(0).unwrap(); // joins, then never heartbeats
+    let mut leaver = SessionClient::connect(addr, 1).unwrap();
+    leaver.join(0).unwrap();
+    leaver.leave(0).unwrap();
+    assert!(svc.tick_until(5000, |s| s.member_joined(0, 0)),
+            "join must land while the window is open");
+
+    // The window closes on its own wall-clock deadline; by then user 0
+    // is 3 heartbeat intervals silent and user 1 has left.
+    let report = svc.run_to_completion().unwrap();
+    assert!(report.failed.is_empty(), "{:?}", report.failed);
+    assert_eq!(report.outcomes.len(), 1);
+    assert_eq!(report.outcomes[0].dropped, 2,
+               "one aged-out member + one departed member, both on the \
+                dropout path; users with no session stay simulated");
+}

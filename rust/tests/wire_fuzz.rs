@@ -125,6 +125,30 @@ fn encode_decode_identity_all_message_types() {
         let got = wire::decode_group_aggregate(&buf).unwrap();
         assert_eq!(got.group, ga.group);
         assert_eq!(got.values, ga.values);
+
+        let join = Join {
+            id: rng.next_u32() as usize % n,
+            cohort: rng.next_u32() % 16,
+        };
+        let buf = wire::encode_join(&join);
+        assert_eq!(buf.len(), join.wire_bytes());
+        assert_eq!(wire::decode_join(&buf).unwrap(), join);
+
+        let hb = Heartbeat {
+            id: rng.next_u32() as usize % n,
+            seq: rng.next_u64(),
+        };
+        let buf = wire::encode_heartbeat(&hb);
+        assert_eq!(buf.len(), hb.wire_bytes());
+        assert_eq!(wire::decode_heartbeat(&buf).unwrap(), hb);
+
+        let leave = Leave {
+            id: rng.next_u32() as usize % n,
+            cohort: rng.next_u32() % 16,
+        };
+        let buf = wire::encode_leave(&leave);
+        assert_eq!(buf.len(), leave.wire_bytes());
+        assert_eq!(wire::decode_leave(&buf).unwrap(), leave);
     });
 }
 
@@ -138,6 +162,9 @@ fn run_all_decoders(buf: &[u8]) {
     let _ = wire::decode_unmask_request(buf);
     let _ = wire::decode_unmask_response(buf);
     let _ = wire::decode_group_aggregate(buf);
+    let _ = wire::decode_heartbeat(buf);
+    let _ = wire::decode_join(buf);
+    let _ = wire::decode_leave(buf);
 }
 
 #[test]
@@ -155,7 +182,7 @@ fn random_bytes_never_panic_any_decoder() {
 fn valid_header_garbage_payload_never_panics() {
     let mut rng = ChaCha20Rng::from_seed_u64(0xfa23);
     for round in 0..3000 {
-        let tag = 1 + round % 9; // includes one invalid tag value (9)
+        let tag = 1 + round % 12; // includes one invalid tag value (12)
         let len = (rng.next_u32() as usize) % 300;
         let mut buf = Vec::with_capacity(12 + len);
         buf.extend_from_slice(&(rng.next_u32() % 64).to_le_bytes());
@@ -184,6 +211,36 @@ fn hostile_counts_rejected_without_allocation() {
         assert!(wire::decode_unmask_response(&buf).is_err());
         assert!(wire::decode_group_aggregate(&buf).is_err());
     }
+}
+
+/// Strict-decode for the fixed-size service frames: truncation at every
+/// byte, trailing bytes, and count-field garbage (there is no count —
+/// any extra word must be rejected as trailing, never read as one).
+#[test]
+fn service_frames_strict_decode() {
+    let j = wire::encode_join(&Join { id: 4, cohort: 1 });
+    let h = wire::encode_heartbeat(&Heartbeat { id: 4, seq: 99 });
+    let l = wire::encode_leave(&Leave { id: 4, cohort: 1 });
+    for buf in [&j, &h, &l] {
+        for cut in 0..buf.len() {
+            let mut short = buf[..cut].to_vec();
+            if short.len() >= 12 {
+                repatch_len(&mut short);
+            }
+            assert!(wire::decode_join(&short).is_err());
+            assert!(wire::decode_heartbeat(&short).is_err());
+            assert!(wire::decode_leave(&short).is_err());
+        }
+        let mut long = buf.to_vec();
+        long.extend_from_slice(&u32::MAX.to_le_bytes());
+        repatch_len(&mut long);
+        assert!(wire::decode_join(&long).is_err());
+        assert!(wire::decode_heartbeat(&long).is_err());
+        assert!(wire::decode_leave(&long).is_err());
+    }
+    // Join/Leave payloads alias byte-for-byte; the tag must decide.
+    assert!(wire::decode_leave(&j).is_err());
+    assert!(wire::decode_join(&l).is_err());
 }
 
 /// Re-patch a frame's header length field after mutating its payload
